@@ -1,0 +1,80 @@
+//! netlist_pipeline — the automated framework end-to-end (paper §4):
+//! trained weights -> conductances (Eq 16) -> crossbar layout (Alg 1) ->
+//! segmented SPICE netlists -> parallel DC simulation -> functional check.
+//!
+//!   cargo run --release --example netlist_pipeline [layer] [segment_cols]
+//!
+//! Mirrors the paper's Fig 6 block diagram: conversion module (mapper),
+//! layer module (netlist emitter with §4.2 segmentation), model module
+//! (the layer picked from the trained manifest), assessment module (the
+//! MNA solver validating the crossbar against its ideal transfer).
+
+use std::path::Path;
+use std::time::Instant;
+
+use memx::mapper::{self, MapMode};
+use memx::netlist;
+use memx::nn::{Manifest, WeightStore};
+use memx::spice::solve::Ordering;
+use memx::util::pool::par_map;
+use memx::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let layer = std::env::args().nth(1).unwrap_or_else(|| "cls.fc1".into());
+    let segment: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let dir = Path::new("artifacts");
+    let outdir = Path::new("target/netlists");
+
+    // conversion module: weights -> differential quantized conductances
+    let m = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &m)?;
+    let t0 = Instant::now();
+    let cb = mapper::build_fc_crossbar(&m, &ws, &layer, MapMode::Inverted)?;
+    println!(
+        "[convert+layout] {layer}: {}x{} crossbar, {} devices in {:?}",
+        cb.rows,
+        cb.cols,
+        cb.devices.len(),
+        t0.elapsed()
+    );
+
+    // layer module: emit segmented netlist files (construction-time metric)
+    let t0 = Instant::now();
+    let files = netlist::emit_layer_netlists(&m, &ws, &layer, MapMode::Inverted, segment, outdir)?;
+    println!(
+        "[netlist] {} file(s) ({} columns each) in {:?} -> {outdir:?}",
+        files.len(),
+        segment,
+        t0.elapsed()
+    );
+
+    // assessment module: drive a random input vector through every segment
+    // (parsed back from disk — the full framework path) and compare with
+    // the behavioural crossbar
+    let mut rng = Rng::new(2024);
+    let inputs: Vec<f64> = (0..cb.region).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let ideal = cb.eval_ideal(&inputs);
+    let segs = netlist::plan_segments(cb.cols, segment);
+
+    let t0 = Instant::now();
+    let seg_results = par_map(&segs, memx::util::pool::default_workers(), |seg| {
+        let text = netlist::emit_crossbar(&cb, &m.device, seg, Some(&inputs), segs.len());
+        let circuit = netlist::parse(&text).expect("parse emitted netlist");
+        netlist::solve_segment_outputs(&circuit, seg, true, Ordering::Smart)
+            .expect("solve segment")
+    });
+    let wall = t0.elapsed();
+
+    let spice: Vec<f64> = seg_results.into_iter().flatten().collect();
+    let max_err = spice
+        .iter()
+        .zip(&ideal)
+        .fold(0f64, |a, (s, i)| a.max((s - i).abs()));
+    println!(
+        "[assess] {} segments simulated in {wall:?}; max |SPICE - ideal| = {max_err:.3e}",
+        segs.len()
+    );
+    anyhow::ensure!(max_err < 1e-3, "SPICE disagrees with the analog model");
+    println!("netlist pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart — the five-minute tour of the memx public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads the AOT artifacts (run `make artifacts` once), classifies a few
+//! images with the memristor analog model, maps one layer to a crossbar,
+//! emits + simulates its SPICE netlist, and prints the latency/energy
+//! estimates — every major subsystem in ~80 lines.
+
+use std::path::Path;
+
+use memx::coordinator::{accuracy, classify_dataset};
+use memx::mapper::{self, MapMode};
+use memx::netlist;
+use memx::nn::{Manifest, WeightStore};
+use memx::power;
+use memx::runtime::{Engine, Model};
+use memx::spice::solve::Ordering;
+use memx::util::bin::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+
+    // 1. runtime: load + compile the AOT'd memristor model, classify images
+    let engine = Engine::new(dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file))?;
+    let (labels, wall) = classify_dataset(&engine, Model::Analog, &ds, 32)?;
+    let acc = accuracy(&labels, &ds.labels[..labels.len()]);
+    println!("analog model: {:.1}% on {} images in {wall:?}", acc * 100.0, labels.len());
+
+    // 2. mapper: weights -> differential quantized crossbar (paper §3.2)
+    let manifest = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &manifest)?;
+    let cb = mapper::build_fc_crossbar(&manifest, &ws, "cls.fc2", MapMode::Inverted)?;
+    println!(
+        "cls.fc2 crossbar: {}x{} with {} memristors (zero weights omitted)",
+        cb.rows,
+        cb.cols,
+        cb.devices.len()
+    );
+
+    // 3. netlist + SPICE: emit, parse back, DC-solve, compare to the ideal
+    let inputs: Vec<f64> = (0..cb.region).map(|i| ((i as f64) * 0.1).sin() * 0.3).collect();
+    let seg = &netlist::plan_segments(cb.cols, 0)[0];
+    let text = netlist::emit_crossbar(&cb, &manifest.device, seg, Some(&inputs), 1);
+    let circuit = netlist::parse(&text)?;
+    let spice_out = netlist::solve_segment_outputs(&circuit, seg, true, Ordering::Smart)?;
+    let ideal = cb.eval_ideal(&inputs);
+    let err = spice_out
+        .iter()
+        .zip(&ideal)
+        .fold(0f64, |a, (s, i)| a.max((s - i).abs()));
+    println!("SPICE vs ideal crossbar: max error {err:.2e} over {} columns", cb.cols);
+
+    // 4. analytical models: Eq 17 latency + Eq 18 energy
+    let net = mapper::map_network(&manifest, &ws, MapMode::Inverted)?;
+    let t = power::latency(&net, &manifest.device);
+    let e = power::energy(&net, &manifest.device, &t);
+    println!(
+        "mapped network: {} memristors, {} op-amps, {} crossbar stages",
+        net.total_memristors(),
+        net.total_opamps(),
+        net.memristor_stages()
+    );
+    println!(
+        "inference: {:.2} µs sequential / {:.2} µs pipelined, {:.1} µJ",
+        t.total * 1e6,
+        power::latency_pipelined(&net, &manifest.device).total * 1e6,
+        e.total * 1e6
+    );
+    Ok(())
+}

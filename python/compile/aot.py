@@ -1,0 +1,197 @@
+"""AOT exporter — the single build-time python entrypoint.
+
+Lowers the analog (memristor) and digital (baseline) MobileNetV3 forwards to
+HLO **text** artifacts for the rust PJRT runtime, and writes the manifest /
+weights / dataset sidecars the rust mapper and coordinator consume.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+expects) rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Outputs in --outdir:
+  model_b{1,8,32}.hlo.txt    analog memristor forward, weights baked
+  digital_b{1,8,32}.hlo.txt  fp32 reference forward, weights baked
+  manifest.json              arch + layer inventory + artifact index +
+                             device params + weight table (offsets/scales)
+  weights.bin                raw f32 tensors (little-endian, manifest order)
+  dataset.bin                held-out test split (synth-cifar)
+  expected_logits.bin        python-side analog logits for the first 64
+                             test images — runtime cross-validation
+  params.npz                 (input, produced by compile.train)
+"""
+
+import argparse
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import device as dv
+from . import model as M
+
+BATCH_SIZES = (1, 8, 32)
+N_TEST = 2000
+N_EXPECTED = 64
+ANALOG_SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    any sizeable constant as `{...}`, which XLA's text parser silently reads
+    back as ZEROS — every baked weight would vanish (caught by `memx verify`
+    against expected_logits.bin).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_forward(params, width, batch, ctx):
+    """Weights are baked as constants via closure: the artifact is
+    self-contained and the rust hot path feeds images only."""
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fwd(x):
+        return (M.forward(jp, x, ctx, width=width),)
+
+    spec = jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32)
+    return jax.jit(fwd).lower(spec)
+
+
+def export_hlo(params, width, outdir, dev):
+    analog = M.convert_params_analog(params, dev, seed=ANALOG_SEED)
+    index = {}
+    for b in BATCH_SIZES:
+        for mode in ("model", "digital"):
+            # native_conv=False: XLA convolution ops miscompile through the
+            # HLO-text AOT path (DESIGN.md §8) — export the im2col form.
+            # use_kernel=False for the serving artifacts: on CPU-PJRT the
+            # interpret-mode pallas lowering emulates the kernel grid with
+            # while-loops and runs ~38x slower than the identical-numerics
+            # dot form (EXPERIMENTS.md §Perf L2). The pallas kernel is the
+            # TPU hot path; one kernel-path artifact is exported below for
+            # runtime cross-validation.
+            ctx = M.Ctx(analog=analog if mode == "model" else None, dev=dev,
+                        native_conv=False, use_kernel=False)
+            text = to_hlo_text(lower_forward(params, width, b, ctx))
+            name = f"{mode}_b{b}.hlo.txt"
+            with open(f"{outdir}/{name}", "w") as f:
+                f.write(text)
+            index[f"{mode}_b{b}"] = name
+            print(f"[aot] wrote {name} ({len(text)/1e6:.1f} MB)")
+    # kernel-path variant (pallas interpret lowering) at one batch size:
+    # tests assert it matches the served artifact's logits.
+    ctx = M.Ctx(analog=analog, dev=dev, native_conv=False, use_kernel=True)
+    text = to_hlo_text(lower_forward(params, width, 8, ctx))
+    with open(f"{outdir}/model_kernelpath_b8.hlo.txt", "w") as f:
+        f.write(text)
+    index["model_kernelpath_b8"] = "model_kernelpath_b8.hlo.txt"
+    print(f"[aot] wrote model_kernelpath_b8.hlo.txt ({len(text)/1e6:.1f} MB)")
+    return analog, index
+
+
+def export_weights(params, analog, outdir):
+    """weights.bin: concatenated little-endian f32 tensors; the manifest
+    carries (name, shape, offset, len, scale) so rust can reconstruct both
+    the raw weights (Fig 9 histogram, netlists) and the analog scales."""
+    table = []
+    offset = 0
+    blob = bytearray()
+    for name in sorted(params.keys()):
+        arr = np.ascontiguousarray(params[name], dtype="<f4")
+        entry = {
+            "name": name,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "len": int(arr.size),
+        }
+        akey = name if name in analog else None
+        if akey is not None:
+            entry["scale"] = float(analog[akey]["scale"])
+        table.append(entry)
+        blob.extend(arr.tobytes())
+        offset += arr.size
+    with open(f"{outdir}/weights.bin", "wb") as f:
+        f.write(struct.pack("<II", D.MAGIC, len(blob) // 4))
+        f.write(bytes(blob))
+    return table
+
+
+def export_dataset(outdir):
+    xt, yt = D.make_dataset(N_TEST, seed=5678)  # == train.py's test split
+    D.write_dataset_bin(f"{outdir}/dataset.bin", xt, yt)
+    print(f"[aot] wrote dataset.bin ({N_TEST} images)")
+    return xt, yt
+
+
+def export_expected(params, width, analog, dev, xt, outdir):
+    """Analog logits for the first N_EXPECTED test images, computed through
+    the same jit that was lowered — the rust runtime must reproduce these
+    bit-for-bit modulo PJRT scheduling (tolerance 1e-4)."""
+    ctx = M.Ctx(analog=analog, dev=dev)
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    logits = np.asarray(
+        jax.jit(lambda x: M.forward(jp, x, ctx, width=width))(
+            jnp.asarray(xt[:N_EXPECTED])
+        )
+    ).astype("<f4")
+    with open(f"{outdir}/expected_logits.bin", "wb") as f:
+        f.write(struct.pack("<II", logits.shape[0], logits.shape[1]))
+        f.write(logits.tobytes())
+    print(f"[aot] wrote expected_logits.bin {logits.shape}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", default="../artifacts/params.npz")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--untrained", action="store_true",
+                    help="use freshly-initialized weights (CI/smoke only)")
+    args = ap.parse_args()
+
+    dev = dv.DEFAULT_DEVICE
+    if args.untrained:
+        width = 0.4
+        params = M.init_params(0, width)
+        test_acc = -1.0
+    else:
+        npz = np.load(args.params)
+        width = float(npz["__width"])
+        test_acc = float(npz["__test_acc"])
+        params = {k: npz[k] for k in npz.files if not k.startswith("__")}
+    print(f"[aot] width={width} digital test_acc={test_acc:.4f}")
+
+    analog, index = export_hlo(params, width, args.outdir, dev)
+    table = export_weights(params, analog, args.outdir)
+    xt, yt = export_dataset(args.outdir)
+    export_expected(params, width, analog, dev, xt, args.outdir)
+
+    manifest = M.build_manifest(params, width=width)
+    manifest.update(
+        {
+            "digital_test_acc": test_acc,
+            "batch_sizes": list(BATCH_SIZES),
+            "artifacts": index,
+            "device": dev.to_dict(),
+            "analog_seed": ANALOG_SEED,
+            "weights": table,
+            "dataset": {"file": "dataset.bin", "n": N_TEST},
+            "expected_logits": {"file": "expected_logits.bin", "n": N_EXPECTED},
+        }
+    )
+    with open(f"{args.outdir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""synth-cifar: a procedurally generated CIFAR-10-shaped dataset.
+
+The real CIFAR-10 binaries are not available in this offline environment
+(DESIGN.md §3).  This module generates a 10-class, 32x32x3 image
+classification task with the same tensor layout, enough intra-class
+variation to be non-trivial, and a fixed seed so python and rust consume
+identical bytes.
+
+Classes (0..9) are shape x texture archetypes, each with a class palette,
+random position / size / distractors / illumination and additive noise:
+
+  0 filled circle        5 ring (annulus)
+  1 filled square        6 checkerboard
+  2 triangle             7 horizontal stripes
+  3 plus / cross         8 radial gradient blob
+  4 diagonal bar         9 four-dot constellation
+
+The loader in rust/src/dataset/ reads the binary file written by
+``write_dataset_bin`` (format documented there and in DESIGN.md §7).
+"""
+
+import struct
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+CLASS_NAMES = [
+    "circle", "square", "triangle", "cross", "diagonal",
+    "ring", "checker", "stripes", "blob", "dots",
+]
+
+# Per-class base palettes (fg, bg) — perturbed per sample.
+_PALETTES = np.array([
+    [[0.9, 0.2, 0.2], [0.1, 0.1, 0.2]],
+    [[0.2, 0.8, 0.3], [0.15, 0.1, 0.1]],
+    [[0.2, 0.4, 0.9], [0.2, 0.15, 0.05]],
+    [[0.9, 0.8, 0.2], [0.1, 0.2, 0.15]],
+    [[0.8, 0.3, 0.8], [0.1, 0.15, 0.1]],
+    [[0.3, 0.9, 0.9], [0.2, 0.1, 0.15]],
+    [[0.95, 0.55, 0.15], [0.1, 0.1, 0.25]],
+    [[0.6, 0.9, 0.4], [0.25, 0.1, 0.1]],
+    [[0.4, 0.6, 0.95], [0.1, 0.2, 0.1]],
+    [[0.9, 0.9, 0.9], [0.15, 0.15, 0.15]],
+], dtype=np.float32)
+
+
+def _grid():
+    y, x = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    return x, y
+
+
+def _mask_for(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """Binary foreground mask for one sample of class `cls`."""
+    x, y = _grid()
+    cx = rng.uniform(10, 22)
+    cy = rng.uniform(10, 22)
+    r = rng.uniform(6, 11)
+    if cls == 0:  # circle
+        return ((x - cx) ** 2 + (y - cy) ** 2) <= r * r
+    if cls == 1:  # square
+        return (np.abs(x - cx) <= r * 0.8) & (np.abs(y - cy) <= r * 0.8)
+    if cls == 2:  # triangle (upward)
+        return (y - cy <= r * 0.7) & (y - cy >= -r) & (
+            np.abs(x - cx) <= (y - cy + r) * 0.55)
+    if cls == 3:  # plus / cross
+        t = r * rng.uniform(0.28, 0.4)
+        return ((np.abs(x - cx) <= t) & (np.abs(y - cy) <= r)) | (
+            (np.abs(y - cy) <= t) & (np.abs(x - cx) <= r))
+    if cls == 4:  # diagonal bar
+        t = r * rng.uniform(0.3, 0.45)
+        sign = 1.0 if rng.uniform() < 0.5 else -1.0
+        d = np.abs((x - cx) - sign * (y - cy)) / np.sqrt(2.0)
+        inside = (np.abs(x - cx) <= r) & (np.abs(y - cy) <= r)
+        return (d <= t) & inside
+    if cls == 5:  # ring
+        d2 = (x - cx) ** 2 + (y - cy) ** 2
+        return (d2 <= r * r) & (d2 >= (r * rng.uniform(0.45, 0.6)) ** 2)
+    if cls == 6:  # checkerboard
+        p = int(rng.integers(4, 7))
+        return (((x.astype(np.int32) // p) + (y.astype(np.int32) // p)) % 2) == 0
+    if cls == 7:  # horizontal stripes
+        p = int(rng.integers(3, 6))
+        ph = int(rng.integers(0, p))
+        return ((y.astype(np.int32) + ph) // p) % 2 == 0
+    if cls == 8:  # radial gradient blob -> soft threshold
+        d2 = ((x - cx) / (r * 1.3)) ** 2 + ((y - cy) / (r * 0.8)) ** 2
+        return d2 <= 1.0
+    # cls == 9: four-dot constellation
+    m = np.zeros((IMG, IMG), dtype=bool)
+    for _ in range(4):
+        dx = rng.uniform(6, 26)
+        dy = rng.uniform(6, 26)
+        rr = rng.uniform(2.2, 3.6)
+        m |= ((x - dx) ** 2 + (y - dy) ** 2) <= rr * rr
+    return m
+
+
+def make_sample(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One HWC float32 image in [0,1]."""
+    fg, bg = _PALETTES[cls]
+    fg = np.clip(fg + rng.normal(0, 0.08, 3), 0, 1).astype(np.float32)
+    bg = np.clip(bg + rng.normal(0, 0.05, 3), 0, 1).astype(np.float32)
+    mask = _mask_for(cls, rng).astype(np.float32)[..., None]
+    img = mask * fg + (1.0 - mask) * bg
+    # illumination gradient
+    x, y = _grid()
+    gx = rng.uniform(-0.12, 0.12)
+    gy = rng.uniform(-0.12, 0.12)
+    illum = 1.0 + gx * (x - 16) / 16 + gy * (y - 16) / 16
+    img = img * illum[..., None]
+    # distractor speckles
+    n_spk = int(rng.integers(0, 18))
+    for _ in range(n_spk):
+        sx, sy = rng.integers(0, IMG, 2)
+        img[sy, sx] = rng.uniform(0, 1, 3)
+    img = img + rng.normal(0, 0.035, img.shape)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples, balanced classes. Returns (images NHWC f32, labels u8)."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([make_sample(int(c), rng) for c in labels])
+    return imgs.astype(np.float32), labels.astype(np.uint8)
+
+
+MAGIC = 0x4D454D58  # "MEMX"
+
+
+def write_dataset_bin(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    """Binary layout (little-endian):
+    u32 magic | u32 n | u32 h | u32 w | u32 c | f32 data[n*h*w*c] | u8 labels[n]
+    """
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIII", MAGIC, n, h, w, c))
+        f.write(imgs.astype("<f4").tobytes())
+        f.write(labels.astype(np.uint8).tobytes())
+
+
+def read_dataset_bin(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        magic, n, h, w, c = struct.unpack("<IIIII", f.read(20))
+        assert magic == MAGIC, f"bad magic {magic:#x}"
+        data = np.frombuffer(f.read(n * h * w * c * 4), dtype="<f4")
+        labels = np.frombuffer(f.read(n), dtype=np.uint8)
+    return data.reshape(n, h, w, c).copy(), labels.copy()

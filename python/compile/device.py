@@ -1,0 +1,144 @@
+"""Memristor device model shared by the L1 kernel, the L2 model and the AOT
+exporter.
+
+The paper (§4, Eq 16) uses the HP titanium-dioxide model:
+
+    R_M = R_on * w + R_off * (1 - w)
+
+where ``w`` in [0, 1] is the normalized width of the doped layer.  A trained
+weight value is interpreted as a target conductance ``G = |weight| * g_scale``
+and the framework solves Eq 16 for ``w``; because ``w`` is programmed with a
+finite number of pulses the achievable conductances are *quantized* to
+``levels`` discrete values, and programming adds a relative gaussian error
+(``prog_sigma``).  The differential pair (G+, G-) plus the inverting TIA
+restores signed weights (paper §3.2, Figure 2 — the op-amp-saving inverted
+convention).
+"""
+
+from dataclasses import dataclass, asdict
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceParams:
+    """Physical constants of the memristor / op-amp process.
+
+    Values follow the paper's cited devices: HP memristor with
+    R_on = 100 Ω, R_off = 16 kΩ (Strukov et al. 2008), input mapped to
+    ±2.5 mV, low-power op-amps with a 10 V/µs slew rate and mW-level power,
+    100 ps crossbar response time.
+    """
+
+    r_on: float = 100.0            # Ω, fully doped
+    r_off: float = 16_000.0        # Ω, fully undoped
+    levels: int = 64               # programmable conductance levels (6-bit)
+    prog_sigma: float = 0.01       # relative programming error (lognormal-ish)
+    v_in: float = 2.5e-3           # V, input voltage full-scale (paper §5.3)
+    # TIA output rail in *normalized* units (physical swing = v_rail * v_in).
+    # Sized to the trained network's observed dynamic range (max activation
+    # ≈ 19 on the training distribution; rail sweep in EXPERIMENTS.md shows
+    # accuracy saturates at 24) with margin — the signal-conditioning gain
+    # choice every analog design makes when mapping signals onto its rails.
+    v_rail: float = 24.0
+    t_mem: float = 100e-12         # s, crossbar response time (paper §5.2)
+    slew_rate: float = 10e6        # V/s, op-amp slew rate (10 V/µs)
+    v_swing: float = 5.0           # V, op-amp output swing used for T_o
+    p_opamp: float = 1.0e-3        # W per op-amp (mW level, paper §3.2)
+    p_memristor: float = 1.1e-6    # W per memristor, worst case (paper §5.3)
+    p_aux: float = 0.5e-3          # W, activation/multiplier aux circuit
+
+    @property
+    def g_on(self) -> float:
+        return 1.0 / self.r_on
+
+    @property
+    def g_off(self) -> float:
+        return 1.0 / self.r_off
+
+    @property
+    def t_opamp(self) -> float:
+        """Op-amp transition time: full swing divided by slew rate."""
+        return self.v_swing / self.slew_rate
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["g_on"] = self.g_on
+        d["g_off"] = self.g_off
+        d["t_opamp"] = self.t_opamp
+        return d
+
+
+DEFAULT_DEVICE = DeviceParams()
+
+
+def doped_width(conductance: np.ndarray, dev: DeviceParams = DEFAULT_DEVICE) -> np.ndarray:
+    """Invert Eq 16: find w such that 1/(R_on*w + R_off*(1-w)) == conductance.
+
+    conductance must lie in [g_off, g_on]; values are clipped.
+    """
+    g = np.clip(conductance, dev.g_off, dev.g_on)
+    r = 1.0 / g
+    return (dev.r_off - r) / (dev.r_off - dev.r_on)
+
+
+def width_to_conductance(w: np.ndarray, dev: DeviceParams = DEFAULT_DEVICE) -> np.ndarray:
+    """Eq 16 forward: doped width -> conductance."""
+    r = dev.r_on * w + dev.r_off * (1.0 - w)
+    return 1.0 / r
+
+
+def quantize_unit(x: np.ndarray, levels: int) -> np.ndarray:
+    """Quantize x in [0,1] to `levels` uniform steps (0 is always a level —
+    a zero weight means *no memristor is placed*, paper §3.2)."""
+    if levels <= 1:
+        return np.zeros_like(x)
+    q = np.round(np.clip(x, 0.0, 1.0) * (levels - 1)) / (levels - 1)
+    return q
+
+
+def weights_to_differential(
+    w: np.ndarray,
+    scale: float | None = None,
+    dev: DeviceParams = DEFAULT_DEVICE,
+    rng: np.random.Generator | None = None,
+):
+    """Map a signed weight matrix to the differential crossbar pair.
+
+    Returns (w_pos_q, w_neg_q, scale) where the *effective* reconstructed
+    weight is ``(w_neg_q - w_pos_q) * scale`` following the paper's inverted
+    convention: positive weights live on the inverting half (w_neg_q carries
+    them) and the TIA's sign flip restores polarity with a single op-amp per
+    column.
+
+    Quantization models the finite programmable levels; optional ``rng``
+    applies relative programming noise (prog_sigma).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if scale is None:
+        scale = float(np.max(np.abs(w))) or 1.0
+    wn = w / scale                      # in [-1, 1]
+    pos_part = np.clip(wn, 0.0, None)   # magnitude of positive weights
+    neg_part = np.clip(-wn, 0.0, None)  # magnitude of negative weights
+    # inverted convention: positive weights -> "negative matrix" (inverting
+    # inputs), negative weights -> "positive matrix" (direct inputs).
+    w_neg_q = quantize_unit(pos_part, dev.levels)
+    w_pos_q = quantize_unit(neg_part, dev.levels)
+    if rng is not None and dev.prog_sigma > 0:
+        w_neg_q = apply_prog_noise(w_neg_q, dev, rng)
+        w_pos_q = apply_prog_noise(w_pos_q, dev, rng)
+    return w_pos_q.astype(np.float32), w_neg_q.astype(np.float32), float(scale)
+
+
+def apply_prog_noise(wq: np.ndarray, dev: DeviceParams, rng: np.random.Generator) -> np.ndarray:
+    """Relative gaussian programming error on non-zero devices only (zero
+    weight == absent memristor, which is exact)."""
+    noise = 1.0 + dev.prog_sigma * rng.standard_normal(wq.shape)
+    out = wq * noise
+    out[wq == 0.0] = 0.0
+    return np.clip(out, 0.0, 1.0)
+
+
+def reconstruct(w_pos_q: np.ndarray, w_neg_q: np.ndarray, scale: float) -> np.ndarray:
+    """Effective signed weight realized by the differential pair."""
+    return (w_neg_q.astype(np.float64) - w_pos_q.astype(np.float64)) * scale

@@ -1,0 +1,141 @@
+"""L1 — Pallas differential crossbar VMM kernel.
+
+One analog crossbar bank multiplies an input-voltage vector by a conductance
+matrix in a single step (Ohm's law per device, Kirchhoff per column); the
+differential pair (Gpos on the direct inputs, Gneg on the inverting inputs —
+the paper's op-amp-saving inverted convention) realizes signed weights, and
+the per-column TIA converts current back to a rail-limited voltage.
+
+Hardware adaptation (DESIGN.md §2): each crossbar *tile* maps to one Pallas
+block.  BlockSpec expresses the HBM→VMEM staging of conductance submatrices
+the way the paper banks physical arrays per channel; the MXU performs the
+G·V contraction the analog array performs in the current domain.  The rail
+clip is fused into the same kernel so the AOT'd HLO is the analog-faithful
+model with no extra memory round-trip.
+
+interpret=True everywhere on CPU: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the (8, 128) f32 TPU tiling; the MXU is
+# 128x128 so the C tile rides the systolic-array width.  VMEM residency per
+# block with the defaults is ~540 KiB (see vmem_bytes) « 16 MiB.
+BLOCK_B = 8
+BLOCK_R = 256
+BLOCK_C = 256
+
+
+def _vmm_kernel(v_ref, gp_ref, gn_ref, out_ref, *, rf_scale, v_rail, nk):
+    """Grid = (B/bb, C/bc, R/br).  The output block is revisited for every
+    R-step (its index_map ignores k), so partial Kirchhoff sums accumulate
+    in-place; the TIA gain + rail clip are applied on the last R-step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = v_ref[...]
+    # Differential pair: single fused contraction against (Gneg - Gpos) —
+    # numerically identical to two matmuls, half the MXU passes.
+    g = gn_ref[...] - gp_ref[...]
+    out_ref[...] += jnp.dot(v, g, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _tia():
+        out_ref[...] = jnp.clip(out_ref[...] * rf_scale, -v_rail, v_rail)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rf_scale", "v_rail", "block_b", "block_r", "block_c", "interpret"),
+)
+def crossbar_vmm(
+    v,
+    g_pos,
+    g_neg,
+    rf_scale: float = 1.0,
+    v_rail: float = 8.0,
+    block_b: int = BLOCK_B,
+    block_r: int = BLOCK_R,
+    block_c: int = BLOCK_C,
+    interpret: bool = True,
+):
+    """Differential crossbar VMM: ``clip((v @ (g_neg - g_pos)) * rf_scale)``.
+
+    v: (B, R) input voltages (normalized units)
+    g_pos, g_neg: (R, C) normalized conductances in [0, 1]
+    Returns (B, C) TIA output voltages, rail-limited to ±v_rail.
+    """
+    assert v.ndim == 2, "v must be (batch, rows)"
+    assert g_pos.shape == g_neg.shape, "differential pair shape mismatch"
+    assert v.shape[1] == g_pos.shape[0], "rows mismatch"
+    b, r = v.shape
+    _, c = g_pos.shape
+    bb = min(block_b, max(1, b))
+    br = min(block_r, r)
+    bc = min(block_c, c)
+
+    vp = _pad_to(_pad_to(v.astype(jnp.float32), 0, bb), 1, br)
+    gp = _pad_to(_pad_to(g_pos.astype(jnp.float32), 0, br), 1, bc)
+    gn = _pad_to(_pad_to(g_neg.astype(jnp.float32), 0, br), 1, bc)
+    pb, pr = vp.shape
+    _, pc = gp.shape
+    nk = pr // br
+
+    out = pl.pallas_call(
+        functools.partial(_vmm_kernel, rf_scale=rf_scale, v_rail=v_rail, nk=nk),
+        grid=(pb // bb, pc // bc, nk),
+        in_specs=[
+            pl.BlockSpec((bb, br), lambda i, j, k: (i, k)),
+            pl.BlockSpec((br, bc), lambda i, j, k: (k, j)),
+            pl.BlockSpec((br, bc), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pc), jnp.float32),
+        interpret=interpret,
+    )(vp, gp, gn)
+    return out[:b, :c]
+
+
+def crossbar_vmm_grouped(v, g_pos, g_neg, rf_scale=1.0, v_rail=8.0, interpret=True):
+    """Batched banks: v (G, B, R), g (G, R, C) -> (G, B, C).
+
+    Models per-channel crossbars (depthwise convolution, paper Fig 10a) as a
+    vmap over independent banks; each bank keeps the full differential + TIA
+    semantics.
+    """
+    fn = functools.partial(
+        crossbar_vmm, rf_scale=rf_scale, v_rail=v_rail, interpret=interpret
+    )
+    return jax.vmap(fn)(v, g_pos, g_neg)
+
+
+def vmem_bytes(block_b=BLOCK_B, block_r=BLOCK_R, block_c=BLOCK_C):
+    """Estimated VMEM residency (bytes) of one kernel block invocation (f32):
+    input tile + both conductance tiles + resident output/accumulator tile."""
+    v = block_b * block_r
+    g = 2 * block_r * block_c
+    out = block_b * block_c
+    return 4 * (v + g + out)
+
+
+def mxu_macs(b, r, c):
+    """MAC count of one differential VMM (fused single contraction)."""
+    return b * r * c

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the Pallas crossbar kernel.
+
+Semantics of one differential memristor crossbar bank with inverting TIAs
+(paper §3.2, Eq 4, inverted convention):
+
+  I_col   = sum_i V_i * (Gpos[i,c] - Gneg[i,c])      (Kirchhoff)
+  V_out_c = -Rf * I_col = Rf * sum_i V_i * (Gneg - Gpos)[i,c]
+
+followed by the TIA output-rail saturation.  ``gpos``/``gneg`` are the
+*normalized* conductance matrices (in weight units, see device.py); the
+physical Rf and full-scale factors collapse into ``rf_scale``.
+"""
+
+import jax.numpy as jnp
+
+
+def crossbar_vmm_ref(v, g_pos, g_neg, rf_scale=1.0, v_rail=8.0):
+    """v: (..., R) inputs; g_pos/g_neg: (R, C). Returns (..., C)."""
+    out = jnp.matmul(v, g_neg - g_pos) * rf_scale
+    return jnp.clip(out, -v_rail, v_rail)
+
+
+def hard_sigmoid_ref(x):
+    """Software hard sigmoid used by MobileNetV3: relu6(x + 3) / 6."""
+    return jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def hard_swish_ref(x):
+    return x * hard_sigmoid_ref(x)
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def analog_hard_sigmoid_ref(x, v_rail=8.0):
+    """Analog circuit (Fig 4a): op-amp adder (+3), divider (/6), diode
+    limiter clamps to [0, 1]; the *input* was already rail-limited by the
+    previous TIA stage, which the clip on x models."""
+    x = jnp.clip(x, -v_rail, v_rail)
+    return jnp.clip((x + 3.0) / 6.0, 0.0, 1.0)
+
+
+def analog_hard_swish_ref(x, v_rail=8.0):
+    """Fig 4b: hard-sigmoid branch followed by an analog multiplier.
+    The multiplier output is also bounded by the rails."""
+    x = jnp.clip(x, -v_rail, v_rail)
+    return jnp.clip(x * analog_hard_sigmoid_ref(x, v_rail), -v_rail, v_rail)
+
+
+def analog_relu_ref(x, v_rail=8.0):
+    """CMOS ReLU (Priyanka et al. 2019) with rail saturation."""
+    return jnp.clip(jnp.maximum(x, 0.0), 0.0, v_rail)

@@ -1,0 +1,520 @@
+"""L2 — MobileNetV3-Small (CIFAR-scaled) in JAX, in two modes:
+
+* ``digital``  — exact fp32 reference (the "PyTorch-equivalent" baseline of
+  the paper's Table 1), trained with this module's fwd/bwd.
+* ``analog``   — the memristor computing paradigm: every VMM-bearing layer
+  (conv / depthwise / pointwise / SE / FC / GAP / BN) routed through the L1
+  Pallas crossbar kernel with differentially-split, level-quantized,
+  programming-noised conductances and TIA rail saturation; activations use
+  the analog circuit models (Fig 4).
+
+The topology is the standard MobileNetV3-Small bottleneck stack (Howard et
+al. 2019) with CIFAR adaptations: 32x32 input, first conv stride 1, three
+spatial downsamples (32->16->8->4), width multiplier 0.5 — the same
+"scaled-down MobileNetV3" regime as the paper's §5.1 CIFAR-10 experiment
+(Table 4's bottleneck0..10).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import device as dv
+from .kernels import crossbar as xbar
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Architecture spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BneckCfg:
+    k: int        # depthwise kernel size
+    exp: int      # expansion channels
+    out: int      # output channels
+    se: bool      # squeeze-and-excite
+    act: str      # "relu" | "hswish"
+    stride: int
+
+
+def _c(ch: int, mult: float, min_ch: int = 8) -> int:
+    """Width-scaled channel count, rounded to a multiple of 4."""
+    v = max(min_ch, int(ch * mult + 2) // 4 * 4)
+    return v
+
+
+def mobilenet_v3_small_cifar(width: float = 0.5):
+    """Returns (stem_ch, [BneckCfg...], last_ch, hidden_ch).
+
+    MobileNetV3-Small table with strides adapted for 32x32 inputs:
+    stem stride 1; downsamples at bneck1, bneck3, bneck8 (32->16->8->4)."""
+    c = lambda ch: _c(ch, width)
+    stem = c(16)
+    cfgs = [
+        BneckCfg(3, c(16),  c(16), True,  "relu",   1),   # bneck0
+        BneckCfg(3, c(72),  c(24), False, "relu",   2),   # bneck1
+        BneckCfg(3, c(88),  c(24), False, "relu",   1),   # bneck2
+        BneckCfg(5, c(96),  c(40), True,  "hswish", 2),   # bneck3
+        BneckCfg(5, c(240), c(40), True,  "hswish", 1),   # bneck4
+        BneckCfg(5, c(240), c(40), True,  "hswish", 1),   # bneck5
+        BneckCfg(5, c(120), c(48), True,  "hswish", 1),   # bneck6
+        BneckCfg(5, c(144), c(48), True,  "hswish", 1),   # bneck7
+        BneckCfg(5, c(288), c(96), True,  "hswish", 2),   # bneck8
+        BneckCfg(5, c(576), c(96), True,  "hswish", 1),   # bneck9
+        BneckCfg(5, c(576), c(96), True,  "hswish", 1),   # bneck10
+    ]
+    last = c(576)
+    hidden = c(1024)
+    return stem, cfgs, last, hidden
+
+
+NUM_CLASSES = 10
+EPS = 1e-5
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _conv_init(rng, k, cin, cout):
+    fan_in = k * k * cin
+    std = float(np.sqrt(2.0 / fan_in))
+    return (rng.standard_normal((k, k, cin, cout)) * std).astype(np.float32)
+
+
+def _fc_init(rng, cin, cout):
+    std = float(np.sqrt(2.0 / cin))
+    w = (rng.standard_normal((cin, cout)) * std).astype(np.float32)
+    b = np.zeros((cout,), np.float32)
+    return w, b
+
+
+def _bn_init(c):
+    return {
+        "gamma": np.ones((c,), np.float32),
+        "beta": np.zeros((c,), np.float32),
+        "mean": np.zeros((c,), np.float32),
+        "var": np.ones((c,), np.float32),
+    }
+
+
+def init_params(seed: int = 0, width: float = 0.5) -> dict:
+    """Flat dict of numpy arrays, keys like 'b3.dw.w', 'b3.dw.bn.gamma'."""
+    rng = np.random.default_rng(seed)
+    stem, cfgs, last, hidden = mobilenet_v3_small_cifar(width)
+    p: dict[str, np.ndarray] = {}
+    p["stem.conv.w"] = _conv_init(rng, 3, 3, stem)
+    for k, v in _bn_init(stem).items():
+        p[f"stem.bn.{k}"] = v
+    cin = stem
+    for i, cfg in enumerate(cfgs):
+        pre = f"b{i}"
+        if cfg.exp != cin:
+            p[f"{pre}.exp.w"] = _conv_init(rng, 1, cin, cfg.exp)
+            for k, v in _bn_init(cfg.exp).items():
+                p[f"{pre}.exp.bn.{k}"] = v
+        p[f"{pre}.dw.w"] = _conv_init(rng, cfg.k, 1, cfg.exp)  # (k,k,1,exp)
+        for k, v in _bn_init(cfg.exp).items():
+            p[f"{pre}.dw.bn.{k}"] = v
+        if cfg.se:
+            sq = max(8, cfg.exp // 4 // 4 * 4)
+            w1, b1 = _fc_init(rng, cfg.exp, sq)
+            w2, b2 = _fc_init(rng, sq, cfg.exp)
+            p[f"{pre}.se.fc1.w"], p[f"{pre}.se.fc1.b"] = w1, b1
+            p[f"{pre}.se.fc2.w"], p[f"{pre}.se.fc2.b"] = w2, b2
+        p[f"{pre}.proj.w"] = _conv_init(rng, 1, cfg.exp, cfg.out)
+        for k, v in _bn_init(cfg.out).items():
+            p[f"{pre}.proj.bn.{k}"] = v
+        cin = cfg.out
+    p["last.conv.w"] = _conv_init(rng, 1, cin, last)
+    for k, v in _bn_init(last).items():
+        p[f"last.bn.{k}"] = v
+    w1, b1 = _fc_init(rng, last, hidden)
+    w2, b2 = _fc_init(rng, hidden, NUM_CLASSES)
+    p["cls.fc1.w"], p["cls.fc1.b"] = w1, b1
+    p["cls.fc2.w"], p["cls.fc2.b"] = w2, b2
+    return p
+
+
+def count_params(params: dict) -> int:
+    return int(sum(int(np.prod(v.shape)) for v in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Analog conversion — weights -> differential quantized conductances
+# ---------------------------------------------------------------------------
+
+def convert_params_analog(params: dict, dev: dv.DeviceParams, seed: int = 7) -> dict:
+    """Precompute, for every VMM weight / BN scale / bias, the differential
+    quantized conductance pair (paper Eq 16 + §3.2 inverted convention) with
+    programming noise.  The result is a dict name -> dict of numpy arrays
+    consumed by `forward(..., analog=...)` and baked into the AOT artifact.
+    """
+    rng = np.random.default_rng(seed)
+    out: dict[str, dict] = {}
+
+    def diff(name, w):
+        pos, neg, scale = dv.weights_to_differential(np.asarray(w), None, dev, rng)
+        out[name] = {"pos": pos, "neg": neg, "scale": np.float32(scale)}
+
+    for name, w in params.items():
+        if name.endswith(".w") or name.endswith(".b"):
+            diff(name, w)
+    # Fold BN into per-channel scale k = gamma/sqrt(var+eps) and offset beta,
+    # each realized by a differential memristor pair (paper Eqs 8/9).
+    bn_names = sorted({n.rsplit(".", 1)[0] for n in params if n.endswith(".gamma")})
+    for bn in bn_names:
+        gamma = params[f"{bn}.gamma"]
+        var = params[f"{bn}.var"]
+        beta = params[f"{bn}.beta"]
+        k = gamma / np.sqrt(var + EPS)
+        diff(f"{bn}.k", k)
+        diff(f"{bn}.beta_q", beta)
+    return out
+
+
+def _eff(analog_entry) -> jnp.ndarray:
+    """Effective signed weight realized by a differential pair."""
+    e = analog_entry
+    return (jnp.asarray(e["neg"]) - jnp.asarray(e["pos"])) * jnp.float32(e["scale"])
+
+
+# ---------------------------------------------------------------------------
+# Layer primitives (digital and analog paths)
+# ---------------------------------------------------------------------------
+
+def _patches(x, k, stride, padding):
+    """im2col: x (B,H,W,C) -> (B,Ho,Wo, C*k*k) with feature order (C,kh,kw).
+
+    Built from pad + strided slices + stack only — deliberately NOT
+    jax.lax.conv_general_dilated_patches: XLA convolution ops miscompile (to
+    zeros) through the StableHLO -> HLO-text -> xla_extension 0.5.1 AOT
+    path this repo ships on (see DESIGN.md §8), and slicing also mirrors the
+    crossbar's physical wiring (each kernel tap is a dedicated input line).
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - k) // stride + 1
+    wo = (w + 2 * padding - k) // stride + 1
+    taps = []
+    for a in range(k):
+        for bb in range(k):
+            sl = jax.lax.slice(
+                xp,
+                (0, a, bb, 0),
+                (b, a + (ho - 1) * stride + 1, bb + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            taps.append(sl)  # (B, Ho, Wo, C)
+    pats = jnp.stack(taps, axis=-1)  # (B, Ho, Wo, C, k*k)
+    return pats.reshape(b, ho, wo, c * k * k)
+
+
+def _w_matrix(w):
+    """HWIO conv weight (k,k,cin,cout) -> (cin*k*k, cout) matching _patches
+    feature order (C, kh, kw)."""
+    k1, k2, cin, cout = w.shape
+    return jnp.transpose(w, (2, 0, 1, 3)).reshape(k1 * k2 * cin, cout)
+
+
+class Ctx:
+    """Forward context: mode flags + device constants."""
+
+    def __init__(self, analog=None, dev=dv.DEFAULT_DEVICE, interpret=True,
+                 use_kernel=True, native_conv=True):
+        self.analog = analog          # dict from convert_params_analog, or None
+        self.dev = dev
+        self.interpret = interpret
+        self.use_kernel = use_kernel  # route VMMs through the Pallas kernel
+        # native XLA convolutions: fast for on-host training/eval, but they
+        # MUST be disabled for AOT export (XLA 0.5.1 miscompiles conv ops
+        # arriving via HLO text — the exporter uses the im2col form).
+        self.native_conv = native_conv
+
+    @property
+    def is_analog(self):
+        return self.analog is not None
+
+
+def _vmm(ctx: Ctx, name: str, v2d, w_digital):
+    """Dispatch a (B,R)x(R,C) VMM to the crossbar kernel (analog) or a plain
+    matmul (digital)."""
+    if not ctx.is_analog:
+        return v2d @ w_digital
+    e = ctx.analog[name]
+    rail = ctx.dev.v_rail
+    pos, neg = jnp.asarray(e["pos"]), jnp.asarray(e["neg"])
+    if pos.ndim == 4:  # conv weight: quantization is elementwise, so the
+        pos = _w_matrix(pos)  # im2col transpose commutes with it
+        neg = _w_matrix(neg)
+    if ctx.use_kernel:
+        return xbar.crossbar_vmm(
+            v2d, pos, neg,
+            rf_scale=float(e["scale"]), v_rail=float(rail),
+            interpret=ctx.interpret,
+        )
+    return kref.crossbar_vmm_ref(
+        v2d, pos, neg, rf_scale=float(e["scale"]), v_rail=float(rail))
+
+
+def conv2d(ctx: Ctx, name: str, x, w, stride=1, padding=0):
+    """Regular convolution.  Analog: im2col + crossbar VMM (paper §3.2: the
+    sliding window realized by memristor placement; Eqs 1-3).  Digital: the
+    native XLA convolution (reference semantics are identical; the im2col
+    form exists to mirror the crossbar dataflow)."""
+    if not ctx.is_analog and ctx.native_conv:
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(padding, padding), (padding, padding)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    k = w.shape[0]
+    pats = _patches(x, k, stride, padding)
+    b, ho, wo, feat = pats.shape
+    out = _vmm(ctx, name, pats.reshape(b * ho * wo, feat), _w_matrix(w))
+    return out.reshape(b, ho, wo, -1)
+
+
+def depthwise_conv2d(ctx: Ctx, name: str, x, w, stride=1, padding=0):
+    """Depthwise convolution: per-channel crossbars without the cross-channel
+    current summation (paper Fig 10a).  Implemented as im2col with the
+    (C, kh, kw) feature order and a block-diagonal effective weight —
+    numerically identical to C independent small crossbars."""
+    k1, k2, _, c = w.shape
+    if not ctx.is_analog and ctx.native_conv:
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(padding, padding), (padding, padding)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+    pats = _patches(x, k1, stride, padding)          # (B,Ho,Wo, C*k*k)
+    b, ho, wo, feat = pats.shape
+    kk = k1 * k2
+    pats = pats.reshape(b * ho * wo, c, kk)          # per-channel patches
+    if not ctx.is_analog:
+        wm = jnp.transpose(w.reshape(kk, c), (1, 0))  # (C, k*k)
+        out = jnp.einsum("nck,ck->nc", pats, wm)
+        return out.reshape(b, ho, wo, c)
+    e = ctx.analog[name]
+    # (k,k,1,C) -> (C, k*k) per-channel differential banks
+    pos = jnp.transpose(jnp.asarray(e["pos"]).reshape(kk, c), (1, 0))
+    neg = jnp.transpose(jnp.asarray(e["neg"]).reshape(kk, c), (1, 0))
+    geff = (neg - pos) * jnp.float32(e["scale"])     # (C, k*k)
+    out = jnp.einsum("nck,ck->nc", pats, geff)
+    return jnp.clip(out, -ctx.dev.v_rail, ctx.dev.v_rail).reshape(b, ho, wo, c)
+
+
+def batch_norm(ctx: Ctx, name: str, x, p, train_stats=None):
+    """Inference BN.  Digital: exact.  Analog: the memristor BN module
+    (paper §3.3, Eqs 8/9): subtraction crossbar (exact unit conductances),
+    quantized differential scale k and offset beta, TIA rail clip."""
+    if train_stats is not None:
+        mean, var = train_stats
+    else:
+        mean, var = p[f"{name}.mean"], p[f"{name}.var"]
+    if not ctx.is_analog:
+        k = p[f"{name}.gamma"] / jnp.sqrt(var + EPS)
+        return (x - mean) * k + p[f"{name}.beta"]
+    k_eff = _eff(ctx.analog[f"{name}.k"])
+    b_eff = _eff(ctx.analog[f"{name}.beta_q"])
+    y = (x - mean) * k_eff + b_eff
+    return jnp.clip(y, -ctx.dev.v_rail, ctx.dev.v_rail)
+
+
+def act(ctx: Ctx, kind: str, x):
+    if ctx.is_analog:
+        rail = ctx.dev.v_rail
+        if kind == "relu":
+            return kref.analog_relu_ref(x, rail)
+        if kind == "hswish":
+            return kref.analog_hard_swish_ref(x, rail)
+        if kind == "hsigmoid":
+            return kref.analog_hard_sigmoid_ref(x, rail)
+    else:
+        if kind == "relu":
+            return kref.relu_ref(x)
+        if kind == "hswish":
+            return kref.hard_swish_ref(x)
+        if kind == "hsigmoid":
+            return kref.hard_sigmoid_ref(x)
+    raise ValueError(kind)
+
+
+def global_avg_pool(ctx: Ctx, x):
+    """GAP (paper §3.5): crossbar with 1/N conductances.  The per-layer scale
+    makes 1/N exactly representable, so analog == digital up to the rail."""
+    y = jnp.mean(x, axis=(1, 2))
+    if ctx.is_analog:
+        y = jnp.clip(y, -ctx.dev.v_rail, ctx.dev.v_rail)
+    return y
+
+
+def fully_connected(ctx: Ctx, name: str, x, w, b):
+    y = _vmm(ctx, f"{name}.w", x, w)
+    if not ctx.is_analog:
+        return y + b
+    b_eff = _eff(ctx.analog[f"{name}.b"])
+    return jnp.clip(y + b_eff, -ctx.dev.v_rail, ctx.dev.v_rail)
+
+
+def se_block(ctx: Ctx, pre: str, x, p):
+    """Squeeze-and-excite (paper's PConv attention pair + HSigmoid + analog
+    multiplier)."""
+    s = global_avg_pool(ctx, x)
+    s = fully_connected(ctx, f"{pre}.se.fc1", s, p[f"{pre}.se.fc1.w"], p[f"{pre}.se.fc1.b"])
+    s = act(ctx, "relu", s)
+    s = fully_connected(ctx, f"{pre}.se.fc2", s, p[f"{pre}.se.fc2.w"], p[f"{pre}.se.fc2.b"])
+    s = act(ctx, "hsigmoid", s)
+    y = x * s[:, None, None, :]
+    if ctx.is_analog:  # analog multiplier output is rail-bounded
+        y = jnp.clip(y, -ctx.dev.v_rail, ctx.dev.v_rail)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def forward(params, x, ctx: Ctx | None = None, width: float = 0.5,
+            train: bool = False, stats_out: dict | None = None):
+    """Logits for x (B,32,32,3) in [0,1].
+
+    train=True: BN uses batch statistics, and (mean, var) per BN layer are
+    recorded into ``stats_out`` so the trainer can update running stats.
+    """
+    ctx = ctx or Ctx()
+    p = params
+    stem, cfgs, last, hidden = mobilenet_v3_small_cifar(width)
+    v = (x - 0.5) * 2.0  # sensor voltages, normalized full scale (±2.5 mV)
+
+    def bn(name, h):
+        if train:
+            axes = tuple(range(h.ndim - 1))
+            m = jnp.mean(h, axis=axes)
+            va = jnp.var(h, axis=axes)
+            if stats_out is not None:
+                stats_out[name] = (m, va)
+            return batch_norm(ctx, name, h, p, (m, va))
+        return batch_norm(ctx, name, h, p, None)
+
+    h = conv2d(ctx, "stem.conv.w", v, p["stem.conv.w"], stride=1, padding=1)
+    h = bn("stem.bn", h)
+    h = act(ctx, "hswish", h)
+
+    cin = stem
+    for i, cfg in enumerate(cfgs):
+        pre = f"b{i}"
+        inp = h
+        if cfg.exp != cin:
+            h = conv2d(ctx, f"{pre}.exp.w", h, p[f"{pre}.exp.w"])
+            h = bn(f"{pre}.exp.bn", h)
+            h = act(ctx, cfg.act, h)
+        h = depthwise_conv2d(ctx, f"{pre}.dw.w", h, p[f"{pre}.dw.w"],
+                             stride=cfg.stride, padding=cfg.k // 2)
+        h = bn(f"{pre}.dw.bn", h)
+        h = act(ctx, cfg.act, h)
+        if cfg.se:
+            h = se_block(ctx, pre, h, p)
+        h = conv2d(ctx, f"{pre}.proj.w", h, p[f"{pre}.proj.w"])
+        h = bn(f"{pre}.proj.bn", h)
+        if cfg.stride == 1 and cin == cfg.out:
+            h = h + inp  # residual adder module
+            if ctx.is_analog:
+                h = jnp.clip(h, -ctx.dev.v_rail, ctx.dev.v_rail)
+        cin = cfg.out
+
+    h = conv2d(ctx, "last.conv.w", h, p["last.conv.w"])
+    h = bn("last.bn", h)
+    h = act(ctx, "hswish", h)
+
+    h = global_avg_pool(ctx, h)
+    h = fully_connected(ctx, "cls.fc1", h, p["cls.fc1.w"], p["cls.fc1.b"])
+    h = act(ctx, "hswish", h)
+    logits = fully_connected(ctx, "cls.fc2", h, p["cls.fc2.w"], p["cls.fc2.b"])
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Manifest — layer inventory for the rust mapper (Table 4 / netlists)
+# ---------------------------------------------------------------------------
+
+def build_manifest(params: dict, width: float = 0.5, img: int = 32) -> dict:
+    """Structured per-unit layer list mirroring the paper's Table 4: for each
+    sublayer its geometry (input HxWxC, kernel, stride, padding, output) and
+    the weight keys; the rust mapper derives crossbar sizes, memristor /
+    op-amp counts (Eqs 5-15) and parallelism from this."""
+    stem, cfgs, last, hidden = mobilenet_v3_small_cifar(width)
+    units = []
+    h = w = img
+
+    def conv_entry(name, unit, typ, k, s, pd, cin, cout, hh, ww, wkey):
+        ho = (hh - k + 2 * pd) // s + 1
+        wo = (ww - k + 2 * pd) // s + 1
+        return {
+            "unit": unit, "layer": typ, "name": name,
+            "k": k, "stride": s, "padding": pd,
+            "cin": cin, "cout": cout,
+            "h_in": hh, "w_in": ww, "h_out": ho, "w_out": wo,
+            "weight": wkey,
+        }, ho, wo
+
+    layers = []
+    e, h, w = conv_entry("stem.conv", "input", "conv", 3, 1, 1, 3, stem, h, w, "stem.conv.w")
+    layers.append(e)
+    layers.append({"unit": "input", "layer": "bn", "name": "stem.bn", "c": stem,
+                   "weight": "stem.bn.gamma"})
+    layers.append({"unit": "input", "layer": "hswish", "name": "stem.act", "c": stem})
+    cin = stem
+    for i, cfg in enumerate(cfgs):
+        unit = f"bottleneck{i}"
+        pre = f"b{i}"
+        if cfg.exp != cin:
+            e, _, _ = conv_entry(f"{pre}.exp", unit, "conv", 1, 1, 0, cin, cfg.exp, h, w, f"{pre}.exp.w")
+            layers.append(e)
+            layers.append({"unit": unit, "layer": "bn", "name": f"{pre}.exp.bn",
+                           "c": cfg.exp, "weight": f"{pre}.exp.bn.gamma"})
+            layers.append({"unit": unit, "layer": cfg.act, "name": f"{pre}.exp.act", "c": cfg.exp})
+        e, ho, wo = conv_entry(f"{pre}.dw", unit, "dwconv", cfg.k, cfg.stride,
+                               cfg.k // 2, cfg.exp, cfg.exp, h, w, f"{pre}.dw.w")
+        layers.append(e)
+        layers.append({"unit": unit, "layer": "bn", "name": f"{pre}.dw.bn",
+                       "c": cfg.exp, "weight": f"{pre}.dw.bn.gamma"})
+        layers.append({"unit": unit, "layer": cfg.act, "name": f"{pre}.dw.act", "c": cfg.exp})
+        h, w = ho, wo
+        if cfg.se:
+            sq = params[f"{pre}.se.fc1.w"].shape[1]
+            layers.append({"unit": unit, "layer": "gapool", "name": f"{pre}.se.gap",
+                           "c": cfg.exp, "h_in": h, "w_in": w})
+            layers.append({"unit": unit, "layer": "pconv", "name": f"{pre}.se.fc1",
+                           "cin": cfg.exp, "cout": sq, "weight": f"{pre}.se.fc1.w"})
+            layers.append({"unit": unit, "layer": "relu", "name": f"{pre}.se.act1", "c": sq})
+            layers.append({"unit": unit, "layer": "pconv", "name": f"{pre}.se.fc2",
+                           "cin": sq, "cout": cfg.exp, "weight": f"{pre}.se.fc2.w"})
+            layers.append({"unit": unit, "layer": "hsigmoid", "name": f"{pre}.se.act2", "c": cfg.exp})
+        e, _, _ = conv_entry(f"{pre}.proj", unit, "conv", 1, 1, 0, cfg.exp, cfg.out, h, w, f"{pre}.proj.w")
+        layers.append(e)
+        layers.append({"unit": unit, "layer": "bn", "name": f"{pre}.proj.bn",
+                       "c": cfg.out, "weight": f"{pre}.proj.bn.gamma"})
+        if cfg.stride == 1 and cin == cfg.out:
+            layers.append({"unit": unit, "layer": "residual", "name": f"{pre}.add", "c": cfg.out})
+        cin = cfg.out
+    e, _, _ = conv_entry("last.conv", "last_conv", "conv", 1, 1, 0, cin, last, h, w, "last.conv.w")
+    layers.append(e)
+    layers.append({"unit": "last_conv", "layer": "bn", "name": "last.bn", "c": last,
+                   "weight": "last.bn.gamma"})
+    layers.append({"unit": "last_conv", "layer": "hswish", "name": "last.act", "c": last})
+    layers.append({"unit": "classifier", "layer": "gapool", "name": "cls.gap",
+                   "c": last, "h_in": h, "w_in": w})
+    layers.append({"unit": "classifier", "layer": "fc", "name": "cls.fc1",
+                   "cin": last, "cout": hidden, "weight": "cls.fc1.w"})
+    layers.append({"unit": "classifier", "layer": "hswish", "name": "cls.act", "c": hidden})
+    layers.append({"unit": "classifier", "layer": "fc", "name": "cls.fc2",
+                   "cin": hidden, "cout": NUM_CLASSES, "weight": "cls.fc2.w"})
+    return {
+        "arch": "mobilenet_v3_small_cifar",
+        "width": width,
+        "img": img,
+        "num_classes": NUM_CLASSES,
+        "stem": stem,
+        "last": last,
+        "hidden": hidden,
+        "layers": layers,
+    }

@@ -1,0 +1,152 @@
+"""Offline trainer for the digital MobileNetV3 (paper §5.1: "network weights
+are obtained from an offline server").
+
+Hand-rolled SGD with Nesterov-style momentum, cosine LR, label smoothing and
+light augmentation (flips + shifts); BN running statistics tracked with
+momentum 0.9.  No optax in this offline image — the update rule is ~20 lines.
+
+Usage:  cd python && python -m compile.train --out ../artifacts/params.npz
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+def cross_entropy(logits, labels, smooth=0.1):
+    n_cls = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, n_cls)
+    target = onehot * (1.0 - smooth) + smooth / n_cls
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(target * logp, axis=-1))
+
+
+def split_params(params):
+    """BN stats are not trained by gradient; gamma/beta/weights are."""
+    trained = {k: v for k, v in params.items()
+               if not (k.endswith(".mean") or k.endswith(".var"))}
+    stats = {k: v for k, v in params.items()
+             if k.endswith(".mean") or k.endswith(".var")}
+    return trained, stats
+
+
+def make_step(width, lr_schedule, momentum=0.9, weight_decay=1e-4):
+    def loss_fn(trained, stats, x, y):
+        params = {**trained, **stats}
+        bn_out: dict = {}
+        logits = M.forward(params, x, M.Ctx(), width=width,
+                           train=True, stats_out=bn_out)
+        loss = cross_entropy(logits, y)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return loss, (acc, bn_out)
+
+    @jax.jit
+    def step(trained, stats, vel, x, y, it):
+        (loss, (acc, bn_out)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(trained, stats, x, y)
+        lr = lr_schedule(it)
+        new_trained, new_vel = {}, {}
+        for k, g in grads.items():
+            if k.endswith(".w") or k.endswith(".b"):
+                g = g + weight_decay * trained[k]
+            v = momentum * vel[k] + g
+            new_vel[k] = v
+            new_trained[k] = trained[k] - lr * v
+        # running BN stats, momentum 0.9
+        new_stats = dict(stats)
+        for name, (m, va) in bn_out.items():
+            new_stats[f"{name}.mean"] = 0.9 * stats[f"{name}.mean"] + 0.1 * m
+            new_stats[f"{name}.var"] = 0.9 * stats[f"{name}.var"] + 0.1 * va
+        return new_trained, new_stats, new_vel, loss, acc
+
+    return step
+
+
+def evaluate(params, xs, ys, width, batch=200):
+    @jax.jit
+    def fwd(x):
+        return M.forward(params, x, M.Ctx(), width=width)
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = fwd(jnp.asarray(xs[i:i + batch]))
+        correct += int(np.sum(np.argmax(np.asarray(logits), -1) == ys[i:i + batch]))
+    return correct / len(xs)
+
+
+def augment(rng, x):
+    """Random horizontal flip + integer shift up to ±3 px (reflect pad)."""
+    b = x.shape[0]
+    flip = rng.uniform(size=b) < 0.5
+    x = np.where(flip[:, None, None, None], x[:, :, ::-1, :], x)
+    out = np.empty_like(x)
+    shifts = rng.integers(-3, 4, size=(b, 2))
+    for i in range(b):
+        out[i] = np.roll(x[i], tuple(shifts[i]), axis=(0, 1))
+    return out
+
+
+def train(out_path: str, steps: int = 600, batch: int = 64, width: float = 0.4,
+          n_train: int = 9000, n_test: int = 2000, seed: int = 0,
+          base_lr: float = 0.4, log_every: int = 50):
+    t0 = time.time()
+    print(f"[train] generating synth-cifar: {n_train} train / {n_test} test")
+    xs, ys = D.make_dataset(n_train, seed=1234)
+    xt, yt = D.make_dataset(n_test, seed=5678)
+
+    params = M.init_params(seed, width)
+    trained, stats = split_params(params)
+    vel = {k: jnp.zeros_like(v) for k, v in trained.items()}
+    trained = {k: jnp.asarray(v) for k, v in trained.items()}
+    stats = {k: jnp.asarray(v) for k, v in stats.items()}
+
+    warmup = max(1, steps // 20)
+
+    def lr_schedule(it):
+        it = jnp.asarray(it, jnp.float32)
+        warm = base_lr * it / warmup
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * (it - warmup) / max(1, steps - warmup)))
+        return jnp.where(it < warmup, warm, cos)
+
+    step = make_step(width, lr_schedule)
+    rng = np.random.default_rng(seed + 1)
+    print(f"[train] {M.count_params(params)} params, {steps} steps, batch {batch}")
+    for it in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        xb = augment(rng, xs[idx])
+        trained, stats, vel, loss, acc = step(
+            trained, stats, vel, jnp.asarray(xb), jnp.asarray(ys[idx]), it)
+        if it % log_every == 0 or it == steps - 1:
+            print(f"[train] step {it:4d}  loss {float(loss):.4f}  "
+                  f"batch-acc {float(acc):.3f}  ({time.time()-t0:.0f}s)")
+
+    params = {k: np.asarray(v) for k, v in {**trained, **stats}.items()}
+    test_acc = evaluate(params, xt, yt, width)
+    train_acc = evaluate(params, xs[:2000], ys[:2000], width)
+    print(f"[train] digital accuracy: test {test_acc:.4f} train(2k) {train_acc:.4f}")
+
+    np.savez(out_path, __test_acc=np.float32(test_acc),
+             __width=np.float32(width), **params)
+    print(f"[train] saved {out_path} in {time.time()-t0:.0f}s")
+    return test_acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/params.npz")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--width", type=float, default=0.4)
+    args = ap.parse_args()
+    acc = train(args.out, steps=args.steps, batch=args.batch, width=args.width)
+    if acc < 0.9:
+        print(f"[train] WARNING: test accuracy {acc:.3f} < 0.90 target")
+
+
+if __name__ == "__main__":
+    main()

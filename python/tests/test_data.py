@@ -1,0 +1,76 @@
+"""synth-cifar generator + binary format tests (shared with rust)."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+class TestGenerator:
+    def test_shapes_and_range(self):
+        x, y = D.make_dataset(20, seed=0)
+        assert x.shape == (20, 32, 32, 3) and x.dtype == np.float32
+        assert y.shape == (20,) and y.dtype == np.uint8
+        assert x.min() >= 0.0 and x.max() <= 1.0
+
+    def test_balanced_classes(self):
+        _, y = D.make_dataset(100, seed=0)
+        counts = np.bincount(y, minlength=10)
+        assert np.all(counts == 10)
+
+    def test_deterministic(self):
+        x1, y1 = D.make_dataset(10, seed=42)
+        x2, y2 = D.make_dataset(10, seed=42)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_seeds_differ(self):
+        x1, _ = D.make_dataset(10, seed=1)
+        x2, _ = D.make_dataset(10, seed=2)
+        assert not np.array_equal(x1, x2)
+
+    def test_classes_are_distinguishable(self):
+        """Mean intra-class distance < mean inter-class distance (the task
+        must be learnable)."""
+        x, y = D.make_dataset(200, seed=3)
+        flat = x.reshape(len(x), -1)
+        centroids = np.stack([flat[y == c].mean(0) for c in range(10)])
+        intra = np.mean([np.linalg.norm(flat[y == c] - centroids[c], axis=1).mean()
+                         for c in range(10)])
+        dists = np.linalg.norm(centroids[:, None] - centroids[None], axis=-1)
+        inter = dists[dists > 0].mean()
+        assert inter > 0.5 * intra
+
+    def test_all_classes_produce_masks(self):
+        rng = np.random.default_rng(0)
+        for c in range(10):
+            m = D._mask_for(c, rng)
+            assert m.shape == (32, 32)
+            assert 0 < m.sum() < 32 * 32
+
+
+class TestBinaryFormat:
+    def test_roundtrip(self, tmp_path):
+        x, y = D.make_dataset(12, seed=7)
+        p = str(tmp_path / "d.bin")
+        D.write_dataset_bin(p, x, y)
+        x2, y2 = D.read_dataset_bin(p)
+        np.testing.assert_array_equal(x, x2)
+        np.testing.assert_array_equal(y, y2)
+
+    def test_header_layout(self, tmp_path):
+        x, y = D.make_dataset(3, seed=7)
+        p = str(tmp_path / "d.bin")
+        D.write_dataset_bin(p, x, y)
+        raw = open(p, "rb").read()
+        import struct
+        magic, n, h, w, c = struct.unpack("<IIIII", raw[:20])
+        assert magic == D.MAGIC and (n, h, w, c) == (3, 32, 32, 3)
+        assert len(raw) == 20 + 3 * 32 * 32 * 3 * 4 + 3
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = str(tmp_path / "bad.bin")
+        with open(p, "wb") as f:
+            f.write(b"\x00" * 64)
+        with pytest.raises(AssertionError):
+            D.read_dataset_bin(p)

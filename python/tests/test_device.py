@@ -1,0 +1,138 @@
+"""Device model (HP memristor, Eq 16) and differential mapping tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import device as dv
+
+
+class TestHPModel:
+    def test_width_bounds(self):
+        d = dv.DEFAULT_DEVICE
+        assert dv.doped_width(np.array([d.g_on]))[0] == 1.0
+        assert abs(dv.doped_width(np.array([d.g_off]))[0]) < 1e-12
+
+    def test_roundtrip(self):
+        d = dv.DEFAULT_DEVICE
+        g = np.linspace(d.g_off, d.g_on, 64)
+        w = dv.doped_width(g, d)
+        g2 = dv.width_to_conductance(w, d)
+        np.testing.assert_allclose(g, g2, rtol=1e-10)
+
+    def test_out_of_range_clipped(self):
+        d = dv.DEFAULT_DEVICE
+        w = dv.doped_width(np.array([d.g_on * 10, d.g_off / 10]), d)
+        assert np.all(w >= 0.0) and np.all(w <= 1.0)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.floats(0.0, 1.0))
+    def test_width_monotone(self, w):
+        """More doping -> lower resistance -> higher conductance."""
+        d = dv.DEFAULT_DEVICE
+        g = dv.width_to_conductance(np.array([w, min(1.0, w + 0.01)]), d)
+        assert g[1] >= g[0]
+
+
+class TestQuantize:
+    def test_endpoints_exact(self):
+        q = dv.quantize_unit(np.array([0.0, 1.0]), 64)
+        assert q[0] == 0.0 and q[1] == 1.0
+
+    def test_error_bound(self):
+        x = np.linspace(0, 1, 1001)
+        q = dv.quantize_unit(x, 64)
+        assert np.max(np.abs(q - x)) <= 0.5 / 63 + 1e-12
+
+    def test_levels_one(self):
+        assert np.all(dv.quantize_unit(np.array([0.3, 0.9]), 1) == 0.0)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(2, 256), st.floats(0.0, 1.0))
+    def test_idempotent(self, levels, x):
+        a = np.array([x])
+        q1 = dv.quantize_unit(a, levels)
+        q2 = dv.quantize_unit(q1, levels)
+        np.testing.assert_allclose(q1, q2)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 256))
+    def test_values_on_grid(self, levels):
+        x = np.random.default_rng(0).uniform(0, 1, 100)
+        q = dv.quantize_unit(x, levels)
+        steps = q * (levels - 1)
+        np.testing.assert_allclose(steps, np.round(steps), atol=1e-9)
+
+
+class TestDifferential:
+    def test_reconstruct_error_bound(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(0, 0.3, (40, 30))
+        dev = dv.DeviceParams(prog_sigma=0.0)
+        pos, neg, scale = dv.weights_to_differential(w, None, dev, rng=None)
+        w_hat = dv.reconstruct(pos, neg, scale)
+        # quantization error <= scale * half-step
+        assert np.max(np.abs(w_hat - w)) <= scale * (0.5 / (dev.levels - 1)) + 1e-9
+
+    def test_inverted_convention(self):
+        """Positive weights live in the 'neg' (inverting-input) matrix."""
+        dev = dv.DeviceParams(prog_sigma=0.0)
+        pos, neg, scale = dv.weights_to_differential(
+            np.array([[0.5, -0.5]]), None, dev)
+        assert neg[0, 0] > 0 and pos[0, 0] == 0
+        assert pos[0, 1] > 0 and neg[0, 1] == 0
+
+    def test_one_side_active(self):
+        """A weight occupies exactly one side of the differential pair."""
+        rng = np.random.default_rng(1)
+        w = rng.normal(0, 1, (64, 64))
+        pos, neg, _ = dv.weights_to_differential(w, None, dv.DeviceParams(prog_sigma=0.0))
+        assert np.all((pos == 0) | (neg == 0))
+
+    def test_scale_autodetect(self):
+        w = np.array([[2.0, -4.0]])
+        _, _, scale = dv.weights_to_differential(w, None, dv.DeviceParams(prog_sigma=0.0))
+        assert scale == 4.0
+
+    def test_zero_matrix(self):
+        pos, neg, scale = dv.weights_to_differential(
+            np.zeros((3, 3)), None, dv.DeviceParams(prog_sigma=0.0))
+        assert np.all(pos == 0) and np.all(neg == 0) and scale == 1.0
+
+    def test_prog_noise_preserves_zeros(self):
+        """Zero weight = absent memristor = exactly zero current."""
+        rng = np.random.default_rng(2)
+        w = np.where(rng.uniform(size=(50, 50)) < 0.5, 0.0,
+                     rng.normal(0, 1, (50, 50)))
+        dev = dv.DeviceParams(prog_sigma=0.05)
+        pos, neg, scale = dv.weights_to_differential(w, None, dev, rng=rng)
+        w_hat = dv.reconstruct(pos, neg, scale)
+        assert np.all(w_hat[w == 0.0] == 0.0)
+
+    def test_prog_noise_magnitude(self):
+        rng = np.random.default_rng(3)
+        w = np.ones((200, 200)) * 0.5
+        dev = dv.DeviceParams(prog_sigma=0.02)
+        pos, neg, scale = dv.weights_to_differential(w, None, dev, rng=rng)
+        rel = (dv.reconstruct(pos, neg, scale) - 0.5) / 0.5
+        assert 0.01 < np.std(rel) < 0.04  # ~ prog_sigma after quantization
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10000), st.floats(0.05, 3.0))
+    def test_reconstruct_hypothesis(self, seed, amp):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(0, amp, (17, 23))
+        dev = dv.DeviceParams(prog_sigma=0.0, levels=128)
+        pos, neg, scale = dv.weights_to_differential(w, None, dev)
+        w_hat = dv.reconstruct(pos, neg, scale)
+        assert np.max(np.abs(w_hat - w)) <= scale / (dev.levels - 1)
+
+
+class TestDeviceParams:
+    def test_t_opamp(self):
+        d = dv.DeviceParams(slew_rate=10e6, v_swing=5.0)
+        assert abs(d.t_opamp - 0.5e-6) < 1e-12
+
+    def test_to_dict_has_derived(self):
+        d = dv.DEFAULT_DEVICE.to_dict()
+        assert "g_on" in d and "t_opamp" in d
+        assert d["g_on"] == 1.0 / dv.DEFAULT_DEVICE.r_on

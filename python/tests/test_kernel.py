@@ -1,0 +1,190 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes / block sizes / scales; every case asserts
+allclose against kernels.ref.crossbar_vmm_ref.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar as xb
+from compile.kernels import ref as kref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(rng, *shape):
+    return rng.uniform(-1.0, 1.0, shape).astype(np.float32)
+
+
+def _gpair(rng, r, c):
+    g = rng.uniform(0.0, 1.0, (2, r, c)).astype(np.float32)
+    return g[0], g[1]
+
+
+def run_case(b, r, c, rf=1.0, rail=8.0, seed=0, **blocks):
+    rng = np.random.default_rng(seed)
+    v = _rand(rng, b, r)
+    gp, gn = _gpair(rng, r, c)
+    out = xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp), jnp.asarray(gn),
+                          rf_scale=rf, v_rail=rail, **blocks)
+    ref = kref.crossbar_vmm_ref(jnp.asarray(v), jnp.asarray(gp),
+                                jnp.asarray(gn), rf, rail)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=RTOL, atol=ATOL)
+
+
+class TestBasic:
+    def test_small_square(self):
+        run_case(4, 16, 16)
+
+    def test_single_row_vector(self):
+        run_case(1, 8, 8)
+
+    def test_single_column(self):
+        run_case(4, 16, 1)
+
+    def test_single_input(self):
+        run_case(4, 1, 16)
+
+    def test_rectangular_tall(self):
+        run_case(2, 300, 40)
+
+    def test_rectangular_wide(self):
+        run_case(2, 40, 300)
+
+    def test_larger_than_blocks(self):
+        run_case(17, 515, 300)
+
+    def test_non_multiple_of_tile(self):
+        run_case(3, 13, 7)
+
+    def test_fc_layer_shape(self):
+        # classifier-scale crossbar (cls.fc1)
+        run_case(8, 232, 408)
+
+
+class TestPhysics:
+    def test_rf_scale(self):
+        run_case(4, 32, 32, rf=2.5)
+
+    def test_tiny_rf(self):
+        run_case(4, 32, 32, rf=1e-3)
+
+    def test_rail_clips(self):
+        rng = np.random.default_rng(1)
+        v = np.ones((2, 64), np.float32)
+        gp = np.zeros((64, 4), np.float32)
+        gn = np.ones((64, 4), np.float32)
+        out = np.asarray(xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp),
+                                         jnp.asarray(gn), v_rail=8.0))
+        assert np.all(out == 8.0), "64 unit currents must saturate the TIA"
+
+    def test_rail_clips_negative(self):
+        v = np.ones((2, 64), np.float32)
+        gp = np.ones((64, 4), np.float32)
+        gn = np.zeros((64, 4), np.float32)
+        out = np.asarray(xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp),
+                                         jnp.asarray(gn), v_rail=8.0))
+        assert np.all(out == -8.0)
+
+    def test_zero_conductance_is_open_circuit(self):
+        # absent memristors contribute no current
+        v = np.ones((1, 16), np.float32)
+        gp = np.zeros((16, 3), np.float32)
+        gn = np.zeros((16, 3), np.float32)
+        out = np.asarray(xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp),
+                                         jnp.asarray(gn)))
+        assert np.all(out == 0.0)
+
+    def test_differential_symmetry(self):
+        # swapping the pair negates the output (inverted convention)
+        rng = np.random.default_rng(2)
+        v = _rand(rng, 3, 32)
+        gp, gn = _gpair(rng, 32, 8)
+        a = np.asarray(xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp), jnp.asarray(gn)))
+        b = np.asarray(xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gn), jnp.asarray(gp)))
+        np.testing.assert_allclose(a, -b, rtol=RTOL, atol=ATOL)
+
+
+class TestBlocks:
+    def test_block_b_1(self):
+        run_case(5, 64, 64, block_b=1)
+
+    def test_block_r_smaller(self):
+        run_case(4, 100, 64, block_r=32)
+
+    def test_block_c_smaller(self):
+        run_case(4, 64, 100, block_c=32)
+
+    def test_all_blocks_tiny(self):
+        run_case(9, 33, 17, block_b=2, block_r=8, block_c=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    r=st.integers(1, 130),
+    c=st.integers(1, 130),
+    rf=st.floats(0.01, 4.0),
+    seed=st.integers(0, 1000),
+)
+def test_hypothesis_sweep(b, r, c, rf, seed):
+    run_case(b, r, c, rf=rf, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    br=st.sampled_from([8, 16, 64, 256]),
+    bc=st.sampled_from([8, 16, 64, 256]),
+    bb=st.sampled_from([1, 2, 8]),
+    seed=st.integers(0, 100),
+)
+def test_hypothesis_block_invariance(br, bc, bb, seed):
+    """Output must be independent of the BlockSpec tiling."""
+    rng = np.random.default_rng(seed)
+    v = _rand(rng, 6, 70)
+    gp, gn = _gpair(rng, 70, 50)
+    base = xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp), jnp.asarray(gn))
+    tiled = xb.crossbar_vmm(jnp.asarray(v), jnp.asarray(gp), jnp.asarray(gn),
+                            block_b=bb, block_r=br, block_c=bc)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_grouped_matches_loop():
+    rng = np.random.default_rng(3)
+    g, b, r, c = 4, 3, 24, 12
+    v = _rand(rng, g, b, r)
+    gp = rng.uniform(0, 1, (g, r, c)).astype(np.float32)
+    gn = rng.uniform(0, 1, (g, r, c)).astype(np.float32)
+    out = np.asarray(xb.crossbar_vmm_grouped(
+        jnp.asarray(v), jnp.asarray(gp), jnp.asarray(gn)))
+    for i in range(g):
+        ref = np.asarray(kref.crossbar_vmm_ref(
+            jnp.asarray(v[i]), jnp.asarray(gp[i]), jnp.asarray(gn[i])))
+        np.testing.assert_allclose(out[i], ref, rtol=RTOL, atol=ATOL)
+
+
+def test_dtype_bf16_inputs_upcast():
+    rng = np.random.default_rng(4)
+    v = _rand(rng, 2, 16)
+    gp, gn = _gpair(rng, 16, 8)
+    out = xb.crossbar_vmm(jnp.asarray(v, jnp.bfloat16),
+                          jnp.asarray(gp), jnp.asarray(gn))
+    assert out.dtype == jnp.float32
+    ref = kref.crossbar_vmm_ref(jnp.asarray(v, jnp.bfloat16).astype(jnp.float32),
+                                jnp.asarray(gp), jnp.asarray(gn))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_budget():
+    """Default BlockSpec must fit the 16 MiB TPU VMEM with headroom."""
+    assert xb.vmem_bytes() < 4 * 1024 * 1024
+
+
+def test_mxu_macs():
+    assert xb.mxu_macs(8, 256, 256) == 8 * 256 * 256

@@ -1,0 +1,187 @@
+"""L2 model tests: analog/digital equivalence at ideal device settings,
+activation circuit models, BN module, manifest consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import device as dv
+from compile import model as M
+from compile.kernels import ref as kref
+
+WIDTH = 0.25  # small width keeps these tests fast
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(3, WIDTH)
+
+
+@pytest.fixture(scope="module")
+def imgs():
+    x, _ = D.make_dataset(4, seed=99)
+    return jnp.asarray(x)
+
+
+IDEAL = dv.DeviceParams(levels=1_000_000, prog_sigma=0.0, v_rail=1e9)
+
+
+class TestEquivalence:
+    def test_ideal_analog_matches_digital(self, params, imgs):
+        dig = M.forward(params, imgs, M.Ctx(), width=WIDTH)
+        ana_p = M.convert_params_analog(params, IDEAL)
+        ana = M.forward(params, imgs, M.Ctx(analog=ana_p, dev=IDEAL,
+                                            use_kernel=False), width=WIDTH)
+        np.testing.assert_allclose(np.asarray(dig), np.asarray(ana),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_kernel_path_matches_ref_path(self, params, imgs):
+        ana_p = M.convert_params_analog(params, dv.DEFAULT_DEVICE)
+        a = M.forward(params, imgs, M.Ctx(analog=ana_p, use_kernel=True), width=WIDTH)
+        b = M.forward(params, imgs, M.Ctx(analog=ana_p, use_kernel=False), width=WIDTH)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_quantization_degrades_gracefully(self, params, imgs):
+        """64-level quantization + 1% noise must stay close to fp32 logits on
+        the *logit* scale (the paper's <1%-accuracy-drop regime)."""
+        dig = np.asarray(M.forward(params, imgs, M.Ctx(), width=WIDTH))
+        ana_p = M.convert_params_analog(params, dv.DEFAULT_DEVICE)
+        ana = np.asarray(M.forward(params, imgs, M.Ctx(analog=ana_p), width=WIDTH))
+        spread = np.std(dig)
+        assert np.max(np.abs(dig - ana)) < 5 * spread + 0.5
+
+    def test_analog_deterministic(self, params, imgs):
+        ana_p = M.convert_params_analog(params, dv.DEFAULT_DEVICE, seed=7)
+        a = M.forward(params, imgs, M.Ctx(analog=ana_p), width=WIDTH)
+        b = M.forward(params, imgs, M.Ctx(analog=ana_p), width=WIDTH)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestShapes:
+    def test_logits_shape(self, params, imgs):
+        out = M.forward(params, imgs, M.Ctx(), width=WIDTH)
+        assert out.shape == (4, M.NUM_CLASSES)
+
+    def test_batch_one(self, params, imgs):
+        out = M.forward(params, imgs[:1], M.Ctx(), width=WIDTH)
+        assert out.shape == (1, M.NUM_CLASSES)
+
+    def test_param_count_positive(self, params):
+        assert M.count_params(params) > 50_000
+
+    def test_widths_produce_different_sizes(self):
+        p1 = M.init_params(0, 0.25)
+        p2 = M.init_params(0, 0.5)
+        assert M.count_params(p2) > M.count_params(p1)
+
+
+class TestActivationCircuits:
+    """Fig 4: analog circuits vs software functions."""
+
+    def test_hard_sigmoid_linear_region(self):
+        x = jnp.linspace(-2.9, 2.9, 59)
+        np.testing.assert_allclose(
+            np.asarray(kref.analog_hard_sigmoid_ref(x)),
+            np.asarray(kref.hard_sigmoid_ref(x)), rtol=1e-6, atol=1e-6)
+
+    def test_hard_sigmoid_saturation(self):
+        x = jnp.array([-10.0, -3.0, 3.0, 10.0])
+        out = np.asarray(kref.analog_hard_sigmoid_ref(x))
+        np.testing.assert_allclose(out, [0.0, 0.0, 1.0, 1.0], atol=1e-6)
+
+    def test_hard_swish_matches_software_within_rails(self):
+        x = jnp.linspace(-7.9, 7.9, 159)
+        np.testing.assert_allclose(
+            np.asarray(kref.analog_hard_swish_ref(x)),
+            np.asarray(kref.hard_swish_ref(x)), rtol=1e-5, atol=1e-6)
+
+    def test_hard_swish_rail_clamp(self):
+        out = np.asarray(kref.analog_hard_swish_ref(jnp.array([100.0]), v_rail=8.0))
+        assert out[0] == 8.0
+
+    def test_relu_negative_region(self):
+        x = jnp.linspace(-5, -0.1, 20)
+        assert np.all(np.asarray(kref.analog_relu_ref(x)) == 0.0)
+
+
+class TestBatchNorm:
+    def test_analog_bn_matches_digital_at_ideal(self, params):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 1, (2, 8, 8, params["stem.conv.w"].shape[-1]))
+                        .astype(np.float32))
+        ana_p = M.convert_params_analog(params, IDEAL)
+        dig = M.batch_norm(M.Ctx(), "stem.bn", x, params)
+        ana = M.batch_norm(M.Ctx(analog=ana_p, dev=IDEAL), "stem.bn", x, params)
+        np.testing.assert_allclose(np.asarray(dig), np.asarray(ana),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_train_mode_uses_batch_stats(self, params, imgs):
+        stats: dict = {}
+        M.forward(params, imgs, M.Ctx(), width=WIDTH, train=True, stats_out=stats)
+        assert "stem.bn" in stats
+        m, v = stats["stem.bn"]
+        assert m.shape == (params["stem.conv.w"].shape[-1],)
+        assert np.all(np.asarray(v) >= 0)
+
+
+class TestConvForms:
+    def test_digital_conv_equals_im2col_form(self, params):
+        """The native XLA conv (digital fast path) and the crossbar im2col
+        dataflow must agree — this pins the Eq 1-3 placement semantics."""
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(0, 1, (2, 9, 9, 3)).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 0.5, (3, 3, 3, 5)).astype(np.float32))
+        native = M.conv2d(M.Ctx(), "w", x, w, stride=2, padding=1)
+        pats = M._patches(x, 3, 2, 1)
+        b, ho, wo, feat = pats.shape
+        manual = (pats.reshape(b * ho * wo, feat) @ M._w_matrix(w)).reshape(b, ho, wo, -1)
+        np.testing.assert_allclose(np.asarray(native), np.asarray(manual),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_depthwise_digital_vs_manual(self):
+        rng = np.random.default_rng(6)
+        c = 4
+        x = jnp.asarray(rng.normal(0, 1, (2, 8, 8, c)).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 0.5, (3, 3, 1, c)).astype(np.float32))
+        out = M.depthwise_conv2d(M.Ctx(), "w", x, w, stride=1, padding=1)
+        # brute-force per channel
+        for ch in range(c):
+            ref = M.conv2d(M.Ctx(), "w", x[..., ch:ch + 1],
+                           w[:, :, :, ch:ch + 1], stride=1, padding=1)
+            np.testing.assert_allclose(np.asarray(out[..., ch]),
+                                       np.asarray(ref[..., 0]),
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestManifest:
+    def test_manifest_covers_all_weights(self, params):
+        man = M.build_manifest(params, width=WIDTH)
+        weight_keys = {l.get("weight") for l in man["layers"] if "weight" in l}
+        for k in params:
+            if k.endswith(".conv.w") or k.endswith(".dw.w"):
+                assert k in weight_keys, f"{k} missing from manifest"
+
+    def test_manifest_geometry_consistent(self, params):
+        """Eq 1: O = (W - F + 2P)/S + 1 holds for every conv entry."""
+        man = M.build_manifest(params, width=WIDTH)
+        for l in man["layers"]:
+            if l["layer"] in ("conv", "dwconv"):
+                for d in ("h", "w"):
+                    o = (l[f"{d}_in"] - l["k"] + 2 * l["padding"]) // l["stride"] + 1
+                    assert o == l[f"{d}_out"], l["name"]
+
+    def test_manifest_chain_shapes(self, params):
+        """Spatial dims flow 32 -> 4 through the three downsamples."""
+        man = M.build_manifest(params, width=WIDTH)
+        convs = [l for l in man["layers"] if l["layer"] in ("conv", "dwconv")]
+        assert convs[0]["h_in"] == 32
+        assert convs[-1]["h_out"] == 4
+
+    def test_manifest_units_match_table4_structure(self, params):
+        man = M.build_manifest(params, width=WIDTH)
+        units = {l["unit"] for l in man["layers"]}
+        assert "input" in units and "classifier" in units
+        assert sum(1 for u in units if u.startswith("bottleneck")) == 11

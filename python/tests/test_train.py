@@ -1,0 +1,60 @@
+"""Trainer smoke tests — a few SGD steps must run and reduce the loss."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+WIDTH = 0.25
+
+
+def test_split_params_partitions():
+    p = M.init_params(0, WIDTH)
+    trained, stats = T.split_params(p)
+    assert set(trained) | set(stats) == set(p)
+    assert not (set(trained) & set(stats))
+    assert all(k.endswith(".mean") or k.endswith(".var") for k in stats)
+
+
+def test_cross_entropy_smoothing():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    y = jnp.asarray([0, 1])
+    ce = float(T.cross_entropy(logits, y, smooth=0.0))
+    assert ce < 1e-3
+    ce_s = float(T.cross_entropy(logits, y, smooth=0.1))
+    assert ce_s > ce  # smoothing keeps a loss floor
+
+
+def test_augment_preserves_shape_and_range():
+    rng = np.random.default_rng(0)
+    x, _ = D.make_dataset(8, seed=1)
+    out = T.augment(rng, x)
+    assert out.shape == x.shape
+    assert out.min() >= 0.0 and out.max() <= 1.0
+
+
+def test_few_steps_reduce_loss():
+    xs, ys = D.make_dataset(96, seed=3)
+    params = M.init_params(0, WIDTH)
+    trained, stats = T.split_params(params)
+    trained = {k: jnp.asarray(v) for k, v in trained.items()}
+    stats = {k: jnp.asarray(v) for k, v in stats.items()}
+    vel = {k: jnp.zeros_like(v) for k, v in trained.items()}
+    step = T.make_step(WIDTH, lambda it: 0.2)
+    rng = np.random.default_rng(0)
+    losses = []
+    for it in range(6):
+        idx = rng.integers(0, 96, 32)
+        trained, stats, vel, loss, _ = step(
+            trained, stats, vel, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]), it)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not drop: {losses}"
+
+
+def test_evaluate_runs():
+    params = M.init_params(0, WIDTH)
+    xs, ys = D.make_dataset(20, seed=4)
+    acc = T.evaluate(params, xs, ys, WIDTH, batch=10)
+    assert 0.0 <= acc <= 1.0

@@ -1,0 +1,36 @@
+//! E1 / Table 1 — accuracy + inference throughput of the analog memristor
+//! model vs the digital fp32 baseline on the held-out test split.
+//!
+//!   cargo bench --bench bench_accuracy
+
+use std::path::Path;
+
+use memx::coordinator::{accuracy, classify_dataset};
+use memx::runtime::{Engine, Model};
+use memx::util::bin::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_accuracy: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::new(dir)?;
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file))?;
+    let n = 256.min(ds.n);
+
+    println!("== Table 1: accuracy + throughput ({n} images) ==");
+    println!("| model | accuracy | wall | img/s |");
+    println!("|---|---:|---:|---:|");
+    for model in [Model::Digital, Model::Analog] {
+        let (labels, wall) = classify_dataset(&engine, model, &ds, n)?;
+        let acc = accuracy(&labels, &ds.labels[..labels.len()]);
+        println!(
+            "| {model:?} | {:.4} | {wall:?} | {:.1} |",
+            acc,
+            n as f64 / wall.as_secs_f64()
+        );
+    }
+    println!("paper Table 1 'this work': 90.36% on CIFAR-10 (analog ≈ digital)");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Crossbar microbenchmark — behavioural VMM throughput and SPICE solve
+//! cost per crossbar size (supports the §Perf L3 iteration log).
+//!
+//!   cargo bench --bench bench_crossbar
+
+use memx::mapper::{self, MapMode};
+use memx::netlist;
+use memx::nn::DeviceJson;
+use memx::spice::solve::Ordering;
+use memx::util::bench::{black_box, Bench};
+
+fn device() -> DeviceJson {
+    DeviceJson {
+        r_on: 100.0,
+        r_off: 16000.0,
+        levels: 64,
+        prog_sigma: 0.01,
+        v_in: 2.5e-3,
+        v_rail: 24.0,
+        t_mem: 1e-10,
+        slew_rate: 1e7,
+        v_swing: 5.0,
+        p_opamp: 1e-3,
+        p_memristor: 1.1e-6,
+        p_aux: 5e-4,
+        t_opamp: 5e-7,
+    }
+}
+
+fn main() {
+    let dev = device();
+    let mut b = Bench::default();
+
+    for &n in &[64usize, 256, 512] {
+        let cb = mapper::build_synthetic_fc(n, n, 64, MapMode::Inverted, 5);
+        let inputs: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.31).sin() * 0.4).collect();
+
+        let s = b.run(&format!("eval_ideal {n}x{n}"), || {
+            black_box(cb.eval_ideal(&inputs));
+        });
+        let macs = cb.devices.len() as f64;
+        println!("    -> {:.1} M device-ops/s", macs / s.mean_secs() / 1e6);
+
+        let segs = netlist::plan_segments(cb.cols, 64);
+        b.run(&format!("spice seg64 {n}x{n} (emit+parse+solve all)"), || {
+            for seg in &segs {
+                let text = netlist::emit_crossbar(&cb, &dev, seg, Some(&inputs), segs.len());
+                let c = netlist::parse(&text).unwrap();
+                black_box(
+                    netlist::solve_segment_outputs(&c, seg, true, Ordering::Smart).unwrap(),
+                );
+            }
+        });
+    }
+    b.table("crossbar microbenchmarks");
+}

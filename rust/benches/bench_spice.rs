@@ -1,0 +1,83 @@
+//! SPICE solver scaling — MNA solve cost vs system size for the two
+//! elimination orderings and the dense fallback (supports §Perf and the
+//! Fig 7 mechanism analysis: Natural ordering goes superlinear on
+//! monolithic crossbars; Smart stays near-linear).
+//!
+//!   cargo bench --bench bench_spice
+
+use memx::spice::solve::{solve_dense, Ordering, SparseSys};
+use memx::spice::Circuit;
+use memx::util::bench::{black_box, Bench};
+use memx::util::prng::Rng;
+
+/// Build the MNA system of an n-input, c-column ideal-TIA crossbar.
+fn crossbar_circuit(inputs: usize, cols: usize, rng: &mut Rng) -> Circuit {
+    let mut c = Circuit::new("bench crossbar");
+    let in_nodes: Vec<usize> = (0..inputs).map(|r| c.node(&format!("in{r}"))).collect();
+    for (r, &node) in in_nodes.iter().enumerate() {
+        c.vsource(&format!("V{r}"), node, 0, (r as f64 * 0.7).sin() * 0.3);
+    }
+    for col in 0..cols {
+        let vcol = c.node(&format!("vcol{col}"));
+        let vout = c.node(&format!("vout{col}"));
+        for (r, &node) in in_nodes.iter().enumerate() {
+            let g = 0.05 + 0.9 * rng.f64();
+            c.resistor(&format!("RM{r}_{col}"), node, vcol, 100.0 / g);
+        }
+        c.resistor(&format!("RF{col}"), vcol, vout, 50.0);
+        c.opamp(&format!("E{col}"), 0, vcol, vout);
+    }
+    c
+}
+
+fn main() {
+    let mut b = Bench::quick();
+    let mut rng = Rng::new(31);
+
+    // dense baseline on small systems
+    for &n in &[32usize, 96, 192] {
+        let mut a = vec![vec![0.0; n]; n];
+        let mut bb = vec![0.0; n];
+        for i in 0..n {
+            for _ in 0..4 {
+                a[i][rng.below(n)] += rng.range_f64(-1.0, 1.0);
+            }
+            a[i][i] += 4.0;
+            bb[i] = rng.range_f64(-1.0, 1.0);
+        }
+        b.run(&format!("dense LU n={n}"), || {
+            black_box(solve_dense(&a, &bb).unwrap());
+        });
+    }
+
+    // sparse orderings on crossbar MNA systems
+    for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
+        let circuit = crossbar_circuit(inputs, cols, &mut rng);
+        for ord in [Ordering::Smart, Ordering::Natural] {
+            b.run(&format!("mna {inputs}x{cols} {ord:?}"), || {
+                black_box(circuit.dc_op_with(ord).unwrap());
+            });
+        }
+    }
+
+    // raw sparse system: block-diagonal (segmented limit case)
+    for &blocks in &[200usize, 800] {
+        let n = blocks * 3;
+        let mut s = SparseSys::new(n);
+        for k in 0..blocks {
+            let i = 3 * k;
+            for d in 0..3 {
+                s.add(i + d, i + d, 4.0 + d as f64);
+            }
+            s.add(i, i + 1, 1.0);
+            s.add(i + 1, i + 2, 1.0);
+            s.add(i + 2, i, 0.5);
+            s.add_b(i, 1.0);
+        }
+        b.run(&format!("block-diag {blocks}x3"), || {
+            black_box(s.solve().unwrap());
+        });
+    }
+
+    b.table("SPICE solver scaling");
+}

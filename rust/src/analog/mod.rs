@@ -1,0 +1,192 @@
+//! Analog circuit modules — transistor-level models of the paper's §3.4
+//! activation circuits (Fig 4) plus fast behavioural equivalents.
+//!
+//! The circuit builders produce real [`spice::Circuit`]s (op-amp adders /
+//! dividers, diode+source limiters, a Gilbert-cell multiplier abstraction);
+//! `sweep` reproduces Fig 4(c)/(d). The behavioural functions are the
+//! rail-clipped piecewise forms the L2 JAX model uses — tests pin the SPICE
+//! curves to them within the diode-knee tolerance.
+
+use anyhow::{anyhow, Result};
+
+use crate::spice::Circuit;
+
+/// Software hard sigmoid: relu6(x + 3) / 6.
+pub fn hard_sigmoid_sw(x: f64) -> f64 {
+    ((x + 3.0) / 6.0).clamp(0.0, 1.0)
+}
+
+/// Software hard swish.
+pub fn hard_swish_sw(x: f64) -> f64 {
+    x * hard_sigmoid_sw(x)
+}
+
+/// Behavioural analog hard sigmoid (rail-limited input — ref.py mirror).
+pub fn hard_sigmoid_analog(x: f64, v_rail: f64) -> f64 {
+    hard_sigmoid_sw(x.clamp(-v_rail, v_rail))
+}
+
+/// Behavioural analog hard swish.
+pub fn hard_swish_analog(x: f64, v_rail: f64) -> f64 {
+    let x = x.clamp(-v_rail, v_rail);
+    (x * hard_sigmoid_analog(x, v_rail)).clamp(-v_rail, v_rail)
+}
+
+/// Behavioural analog ReLU (CMOS, rail-limited).
+pub fn relu_analog(x: f64, v_rail: f64) -> f64 {
+    x.clamp(0.0, v_rail)
+}
+
+/// A built activation circuit: drive `vin_name`, read `out_node`.
+pub struct ActCircuit {
+    pub circuit: Circuit,
+    pub vin_name: String,
+    pub out_node: String,
+}
+
+impl ActCircuit {
+    /// Evaluate the circuit at one input voltage.
+    pub fn eval(&mut self, vin: f64) -> Result<f64> {
+        self.circuit.set_vsource(&self.vin_name, vin)?;
+        let sol = self.circuit.dc_op()?;
+        let n = self
+            .circuit
+            .node_named(&self.out_node)
+            .ok_or_else(|| anyhow!("no node {}", self.out_node))?;
+        Ok(sol[n])
+    }
+
+    /// Input sweep — the Fig 4(c)/(d) curves.
+    pub fn sweep(&mut self, lo: f64, hi: f64, points: usize) -> Result<Vec<(f64, f64)>> {
+        (0..points)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / (points - 1).max(1) as f64;
+                Ok((x, self.eval(x)?))
+            })
+            .collect()
+    }
+}
+
+/// Fig 4(a): hard sigmoid.
+///
+/// Stage 1 — inverting summing amplifier: out1 = -(x + 3)/6
+///   (x through 60k, +3 V reference through 60k, Rf = 10k).
+/// Stage 2 — unity inverter: hs_lin = (x + 3)/6.
+/// Stage 3 — diode+source limiter (the paper's "max" operation):
+///   clamp to [0, 1] with compensated clamp sources.
+pub fn build_hard_sigmoid() -> ActCircuit {
+    let mut c = Circuit::new("hard_sigmoid (Fig 4a)");
+    let vin = c.node("vin");
+    let vref = c.node("vref3");
+    let sum_m = c.node("sum_vm");
+    let out1 = c.node("out1");
+    let inv_m = c.node("inv_vm");
+    let out2 = c.node("out2");
+    let lim = c.node("vout");
+
+    c.vsource("VIN", vin, 0, 0.0);
+    c.vsource("VREF", vref, 0, 3.0);
+    // summing amp: Rf/Rin = 10k/60k = 1/6
+    c.resistor("R1", vin, sum_m, 60_000.0);
+    c.resistor("R2", vref, sum_m, 60_000.0);
+    c.resistor("RF1", sum_m, out1, 10_000.0);
+    c.opamp("EOP1", 0, sum_m, out1);
+    // unity inverter
+    c.resistor("R3", out1, inv_m, 10_000.0);
+    c.resistor("RF2", inv_m, out2, 10_000.0);
+    c.opamp("EOP2", 0, inv_m, out2);
+    // limiter: series resistor then clamp diodes with compensating sources
+    c.resistor("RS", out2, lim, 1_000.0);
+    // low clamp at ~0 V: anode driven at +0.55 V so conduction starts when
+    // the output node dips below ≈ -0.05 V (0.6 V knee compensated)
+    let lo = c.node("vclamp_lo");
+    c.vsource("VCLO", lo, 0, 0.55);
+    c.diode("DLO", lo, lim);
+    // high clamp at ~1 V: cathode at 1 - 0.55
+    let hi = c.node("vclamp_hi");
+    c.vsource("VCHI", hi, 0, 0.45);
+    c.diode("DHI", lim, hi);
+    ActCircuit { circuit: c, vin_name: "VIN".into(), out_node: "vout".into() }
+}
+
+/// Fig 4(b): hard swish = multiplier(x, hard_sigmoid(x)).
+pub fn build_hard_swish() -> ActCircuit {
+    let mut act = build_hard_sigmoid();
+    let c = &mut act.circuit;
+    let vin = c.node("vin");
+    let hs = c.node("vout");
+    let out = c.node("vswish");
+    c.mult("XMUL", out, vin, hs, 1.0);
+    ActCircuit { circuit: std::mem::take(c), vin_name: "VIN".into(), out_node: "vswish".into() }
+}
+
+/// Knee width of the diode limiter — tolerance band used when pinning the
+/// SPICE curves to the piecewise software model.
+pub const KNEE_TOL: f64 = 0.12;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behavioural_matches_software_inside_rails() {
+        for i in -50..=50 {
+            let x = i as f64 / 10.0;
+            if x.abs() < 7.9 {
+                assert!((hard_swish_analog(x, 8.0) - hard_swish_sw(x)).abs() < 1e-12);
+            }
+        }
+        assert_eq!(relu_analog(-2.0, 8.0), 0.0);
+        assert_eq!(relu_analog(12.0, 8.0), 8.0);
+    }
+
+    #[test]
+    fn spice_hard_sigmoid_linear_region() {
+        let mut hs = build_hard_sigmoid();
+        for x in [-2.0, -1.0, 0.0, 1.0, 2.0] {
+            let y = hs.eval(x).unwrap();
+            let want = hard_sigmoid_sw(x);
+            assert!((y - want).abs() < 0.02, "x={x}: spice {y} vs sw {want}");
+        }
+    }
+
+    #[test]
+    fn spice_hard_sigmoid_saturates() {
+        let mut hs = build_hard_sigmoid();
+        let y_lo = hs.eval(-6.0).unwrap();
+        let y_hi = hs.eval(6.0).unwrap();
+        assert!(y_lo.abs() < KNEE_TOL, "low clamp {y_lo}");
+        assert!((y_hi - 1.0).abs() < KNEE_TOL, "high clamp {y_hi}");
+    }
+
+    #[test]
+    fn spice_hard_sigmoid_monotone() {
+        let mut hs = build_hard_sigmoid();
+        let curve = hs.sweep(-5.0, 5.0, 41).unwrap();
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-6, "non-monotone at {:?}", w);
+        }
+    }
+
+    #[test]
+    fn spice_hard_swish_matches_software() {
+        let mut hw = build_hard_swish();
+        for x in [-4.0, -2.0, -1.0, 0.0, 0.5, 1.0, 2.0, 4.0] {
+            let y = hw.eval(x).unwrap();
+            let want = hard_swish_sw(x);
+            assert!(
+                (y - want).abs() < KNEE_TOL + 0.02 * x.abs(),
+                "x={x}: spice {y} vs sw {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_covers_range() {
+        let mut hs = build_hard_sigmoid();
+        let curve = hs.sweep(-4.0, 4.0, 17).unwrap();
+        assert_eq!(curve.len(), 17);
+        assert_eq!(curve[0].0, -4.0);
+        assert_eq!(curve[16].0, 4.0);
+    }
+}

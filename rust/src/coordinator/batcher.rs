@@ -1,0 +1,91 @@
+//! Dynamic batching policy.
+//!
+//! The engine exports executables for a fixed set of batch sizes (1/8/32).
+//! The batcher drains the request queue, picks the largest compiled batch
+//! that the queue depth can fill, and pads the final partial batch by
+//! replicating its last image (padded slots are discarded on the way out and
+//! counted in metrics). A `max_wait` deadline bounds added latency when the
+//! queue is shallow.
+
+use std::time::Duration;
+
+/// Decision for one assembled batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// compiled batch size to run
+    pub size: usize,
+    /// how many real requests it carries (<= size)
+    pub real: usize,
+}
+
+/// Policy: given available compiled sizes (ascending) and current queue
+/// depth, choose the batch to run now, or None to wait for more requests.
+///
+/// `waited_out`: the oldest request has exceeded max_wait — run whatever we
+/// have rather than waiting for a fuller batch.
+pub fn plan_batch(available: &[usize], queued: usize, waited_out: bool) -> Option<BatchPlan> {
+    if queued == 0 {
+        return None;
+    }
+    let largest = *available.iter().max()?;
+    // enough to fill the largest batch: go now
+    if queued >= largest {
+        return Some(BatchPlan { size: largest, real: largest });
+    }
+    if !waited_out {
+        return None; // wait for either a full batch or the deadline
+    }
+    // deadline hit: smallest compiled size that covers the queue
+    let size = available
+        .iter()
+        .copied()
+        .filter(|&b| b >= queued)
+        .min()
+        .unwrap_or(largest);
+    Some(BatchPlan { size, real: queued.min(size) })
+}
+
+/// Default deadline before a partial batch is dispatched.
+pub fn default_max_wait() -> Duration {
+    Duration::from_millis(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const AVAIL: &[usize] = &[1, 8, 32];
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(plan_batch(AVAIL, 0, true), None);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        assert_eq!(plan_batch(AVAIL, 32, false), Some(BatchPlan { size: 32, real: 32 }));
+        assert_eq!(plan_batch(AVAIL, 40, false), Some(BatchPlan { size: 32, real: 32 }));
+    }
+
+    #[test]
+    fn partial_waits_until_deadline() {
+        assert_eq!(plan_batch(AVAIL, 5, false), None);
+        assert_eq!(plan_batch(AVAIL, 5, true), Some(BatchPlan { size: 8, real: 5 }));
+    }
+
+    #[test]
+    fn single_request_deadline_uses_b1() {
+        assert_eq!(plan_batch(AVAIL, 1, true), Some(BatchPlan { size: 1, real: 1 }));
+    }
+
+    #[test]
+    fn queue_between_sizes_picks_covering_size() {
+        assert_eq!(plan_batch(AVAIL, 9, true), Some(BatchPlan { size: 32, real: 9 }));
+        assert_eq!(plan_batch(AVAIL, 8, true), Some(BatchPlan { size: 8, real: 8 }));
+    }
+
+    #[test]
+    fn no_sizes_yields_none() {
+        assert_eq!(plan_batch(&[], 4, true), None);
+    }
+}

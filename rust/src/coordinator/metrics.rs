@@ -1,0 +1,145 @@
+//! Serving metrics: request counters, latency histogram, throughput.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed log-scale latency histogram from 1 µs to ~67 s.
+const BUCKETS: usize = 27;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    lat: Mutex<Hist>,
+    queue_lat: Mutex<Hist>,
+}
+
+#[derive(Default, Clone)]
+struct Hist {
+    counts: [u64; BUCKETS],
+    sum_us: u128,
+    max_us: u64,
+    n: u64,
+}
+
+impl Hist {
+    fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[b] += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+        self.n += 1;
+    }
+
+    fn quantile(&self, q: f64) -> Duration {
+        if self.n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (self.n as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // upper edge of bucket b
+                return Duration::from_micros(1u64 << (b + 1));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    fn mean(&self) -> Duration {
+        if self.n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.n as u128) as u64)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub lat_mean: Duration,
+    pub lat_p50: Duration,
+    pub lat_p95: Duration,
+    pub lat_p99: Duration,
+    pub lat_max: Duration,
+    pub queue_mean: Duration,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        self.lat.lock().unwrap().record(d);
+    }
+
+    pub fn record_queue(&self, d: Duration) {
+        self.queue_lat.lock().unwrap().record(d);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let lat = self.lat.lock().unwrap().clone();
+        let q = self.queue_lat.lock().unwrap().clone();
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            lat_mean: lat.mean(),
+            lat_p50: lat.quantile(0.50),
+            lat_p95: lat.quantile(0.95),
+            lat_p99: lat.quantile(0.99),
+            lat_max: Duration::from_micros(lat.max_us),
+            queue_mean: q.mean(),
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn print(&self, wall: Duration) {
+        let thr = self.completed as f64 / wall.as_secs_f64().max(1e-9);
+        println!("  requests      {}", self.requests);
+        println!("  completed     {}", self.completed);
+        println!("  errors        {}", self.errors);
+        println!("  batches       {} (padded slots {})", self.batches, self.padded_slots);
+        println!("  throughput    {thr:.1} img/s");
+        println!(
+            "  latency       mean {:?}  p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+            self.lat_mean, self.lat_p50, self.lat_p95, self.lat_p99, self.lat_max
+        );
+        println!("  queue wait    mean {:?}", self.queue_mean);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let m = Metrics::default();
+        for i in 1..=1000u64 {
+            m.record_latency(Duration::from_micros(i * 10));
+        }
+        let s = m.snapshot();
+        assert!(s.lat_p50 <= s.lat_p95);
+        assert!(s.lat_p95 <= s.lat_p99);
+        assert!(s.lat_p99 <= Duration::from_micros(s.lat_max.as_micros() as u64 * 2));
+        assert!(s.lat_mean > Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.lat_mean, Duration::ZERO);
+        assert_eq!(s.lat_p99, Duration::ZERO);
+    }
+}

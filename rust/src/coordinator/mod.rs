@@ -1,0 +1,297 @@
+//! L3 coordinator — the inference service.
+//!
+//! Topology (PJRT wrappers are !Send, so the engine is pinned):
+//!
+//! ```text
+//!   clients ──mpsc──► batcher thread ──(assembled batches)──► executor
+//!   (Client::classify)  plan_batch()        same thread owns Engine
+//!        ◄──────────── per-request oneshot responses ◄────────┘
+//! ```
+//!
+//! The batcher+executor run on a single dedicated thread: it drains the
+//! queue, assembles a batch per [`batcher::plan_batch`], executes via PJRT
+//! and answers each request through its response channel. This mirrors the
+//! paper's deployment model where one analog accelerator serves a stream of
+//! sensor frames; metrics capture latency/throughput for Fig 8-style runs.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{argmax_rows, Engine, Model};
+use metrics::Metrics;
+
+/// One classification result.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub label: usize,
+    pub logits: Vec<f32>,
+    /// end-to-end latency observed by the server
+    pub latency: std::time::Duration,
+}
+
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Result<Prediction>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    img_elems: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    /// Blocking classify of one NHWC image.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Prediction> {
+        if image.len() != self.img_elems {
+            return Err(anyhow!("image has {} floats, expected {}", image.len(), self.img_elems));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), resp: tx })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub model: Model,
+    pub max_wait: std::time::Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { model: Model::Analog, max_wait: batcher::default_max_wait() }
+    }
+}
+
+pub struct Server {
+    client: Client,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub warmup: std::time::Duration,
+}
+
+impl Server {
+    /// Start the service: builds the engine on the service thread (PJRT
+    /// handles are !Send), pre-compiles all batch variants, then serves.
+    pub fn start(artifacts_dir: &Path, cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let dir = artifacts_dir.to_path_buf();
+        let m2 = metrics.clone();
+        let stop2 = stop.clone();
+
+        // probe the manifest on the caller thread for early errors + geometry
+        let manifest = crate::nn::Manifest::load(artifacts_dir)?;
+        let img_elems = manifest.img * manifest.img * 3;
+
+        let (ready_tx, ready_rx) = channel::<Result<std::time::Duration>>();
+        let join = std::thread::Builder::new()
+            .name("memx-serve".into())
+            .spawn(move || serve_thread(dir, cfg, rx, m2, stop2, ready_tx))
+            .expect("spawn server thread");
+        let warmup = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during warmup"))??;
+        Ok(Server {
+            client: Client { tx, img_elems, metrics },
+            stop,
+            join: Some(join),
+            warmup,
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.client.metrics.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            j.join().ok();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            j.join().ok();
+        }
+    }
+}
+
+fn serve_thread(
+    dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    ready: Sender<Result<std::time::Duration>>,
+) {
+    // build + warm the engine
+    let t0 = Instant::now();
+    let engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            ready.send(Err(e)).ok();
+            return;
+        }
+    };
+    let sizes = engine.available_batches();
+    for &b in &sizes {
+        if let Err(e) = engine.get(cfg.model, b) {
+            ready.send(Err(e)).ok();
+            return;
+        }
+    }
+    ready.send(Ok(t0.elapsed())).ok();
+
+    let mut queue: Vec<Request> = Vec::new();
+    // reusable input buffer — hot path stays allocation-free after warmup
+    let largest = sizes.iter().copied().max().unwrap_or(1);
+    let img_elems = engine.manifest().img * engine.manifest().img * 3;
+    let mut input = vec![0f32; largest * img_elems];
+
+    while !stop.load(Ordering::Relaxed) {
+        // drain everything currently queued
+        while let Ok(r) = rx.try_recv() {
+            queue.push(r);
+        }
+        let waited_out = queue
+            .first()
+            .map(|r| r.enqueued.elapsed() >= cfg.max_wait)
+            .unwrap_or(false);
+        let Some(plan) = batcher::plan_batch(&sizes, queue.len(), waited_out) else {
+            // nothing to do: block briefly for the next request
+            match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                Ok(r) => queue.push(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    if queue.is_empty() {
+                        break;
+                    }
+                }
+            }
+            continue;
+        };
+
+        let batch: Vec<Request> = queue.drain(..plan.real).collect();
+        let buf = &mut input[..plan.size * img_elems];
+        for (i, r) in batch.iter().enumerate() {
+            buf[i * img_elems..(i + 1) * img_elems].copy_from_slice(&r.image);
+            metrics.record_queue(r.enqueued.elapsed());
+        }
+        // pad by replicating the last real image
+        for i in plan.real..plan.size {
+            let (head, tail) = buf.split_at_mut(i * img_elems);
+            tail[..img_elems].copy_from_slice(&head[(plan.real - 1) * img_elems..plan.real * img_elems]);
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .padded_slots
+            .fetch_add((plan.size - plan.real) as u64, Ordering::Relaxed);
+
+        let exec = engine.get(cfg.model, plan.size).expect("precompiled");
+        match exec.run(buf) {
+            Ok(logits) => {
+                let classes = exec.num_classes;
+                let labels = argmax_rows(&logits, classes);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let latency = r.enqueued.elapsed();
+                    metrics.record_latency(latency);
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    let pred = Prediction {
+                        label: labels[i],
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        latency,
+                    };
+                    r.resp.send(Ok(pred)).ok();
+                }
+            }
+            Err(e) => {
+                for r in batch {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    r.resp.send(Err(anyhow!("execute failed: {e}"))).ok();
+                }
+            }
+        }
+    }
+}
+
+/// Synchronous bulk evaluation (no batcher thread): classify `n` images from
+/// a dataset with greedy largest-batch packing. Returns (labels, wall time).
+pub fn classify_dataset(
+    engine: &Engine,
+    model: Model,
+    ds: &crate::util::bin::Dataset,
+    n: usize,
+) -> Result<(Vec<usize>, std::time::Duration)> {
+    let n = n.min(ds.n);
+    let img = ds.image_len();
+    let mut labels = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    let mut i = 0;
+    while i < n {
+        let b = engine.pick_batch(n - i);
+        let exec = engine.get(model, b)?;
+        let take = b.min(n - i);
+        let mut buf = vec![0f32; b * img];
+        for j in 0..take {
+            buf[j * img..(j + 1) * img].copy_from_slice(ds.image(i + j));
+        }
+        for j in take..b {
+            let src = ds.image(i + take - 1).to_vec();
+            buf[j * img..(j + 1) * img].copy_from_slice(&src);
+        }
+        let logits = exec.run(&buf)?;
+        labels.extend(argmax_rows(&logits, exec.num_classes).into_iter().take(take));
+        i += take;
+    }
+    Ok((labels, t0.elapsed()))
+}
+
+/// Accuracy of predicted labels vs dataset ground truth.
+pub fn accuracy(labels: &[usize], truth: &[u8]) -> f64 {
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = labels.iter().zip(truth).filter(|(p, t)| **p == **t as usize).count();
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+}

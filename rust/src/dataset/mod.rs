@@ -1,0 +1,242 @@
+//! Dataset handling: the memx binary format (written by python at AOT
+//! time), a loader for the *real* CIFAR-10 binary batches (if the user
+//! supplies them — not available in this offline environment, DESIGN.md §3),
+//! and a rust-native synth-cifar generator for tests/benches that must run
+//! without artifacts.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+pub use crate::util::bin::Dataset;
+use crate::util::prng::Rng;
+
+pub const IMG: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+pub const CLASS_NAMES: [&str; 10] = [
+    "circle", "square", "triangle", "cross", "diagonal",
+    "ring", "checker", "stripes", "blob", "dots",
+];
+
+/// Load a real CIFAR-10 binary batch file (the canonical `data_batch_*.bin`
+/// format: per record `u8 label | 3072 u8 pixels, CHW planar`). Converted to
+/// NHWC f32 in [0,1] to match the model's input layout.
+pub fn load_cifar10_batch(path: &Path) -> Result<Dataset> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut raw)?;
+    const REC: usize = 1 + 3072;
+    if raw.len() % REC != 0 {
+        bail!("not a CIFAR-10 binary batch: size {} % {REC} != 0", raw.len());
+    }
+    let n = raw.len() / REC;
+    let mut data = vec![0f32; n * IMG * IMG * 3];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let rec = &raw[i * REC..(i + 1) * REC];
+        labels[i] = rec[0];
+        let px = &rec[1..];
+        for c in 0..3 {
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let v = px[c * IMG * IMG + y * IMG + x] as f32 / 255.0;
+                    data[((i * IMG + y) * IMG + x) * 3 + c] = v;
+                }
+            }
+        }
+    }
+    Ok(Dataset { n, h: IMG, w: IMG, c: 3, data, labels })
+}
+
+/// rust-native synth-cifar (same class archetypes as python/compile/data.py;
+/// not byte-identical — used only where artifacts are unavailable).
+pub fn synth_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<u8> = (0..n).map(|i| (i % NUM_CLASSES) as u8).collect();
+    rng.shuffle(&mut labels);
+    let mut data = vec![0f32; n * IMG * IMG * 3];
+    for (i, &c) in labels.iter().enumerate() {
+        let img = synth_image(c as usize, &mut rng);
+        data[i * IMG * IMG * 3..(i + 1) * IMG * IMG * 3].copy_from_slice(&img);
+    }
+    Dataset { n, h: IMG, w: IMG, c: 3, data, labels }
+}
+
+const PALETTES: [([f32; 3], [f32; 3]); 10] = [
+    ([0.9, 0.2, 0.2], [0.1, 0.1, 0.2]),
+    ([0.2, 0.8, 0.3], [0.15, 0.1, 0.1]),
+    ([0.2, 0.4, 0.9], [0.2, 0.15, 0.05]),
+    ([0.9, 0.8, 0.2], [0.1, 0.2, 0.15]),
+    ([0.8, 0.3, 0.8], [0.1, 0.15, 0.1]),
+    ([0.3, 0.9, 0.9], [0.2, 0.1, 0.15]),
+    ([0.95, 0.55, 0.15], [0.1, 0.1, 0.25]),
+    ([0.6, 0.9, 0.4], [0.25, 0.1, 0.1]),
+    ([0.4, 0.6, 0.95], [0.1, 0.2, 0.1]),
+    ([0.9, 0.9, 0.9], [0.15, 0.15, 0.15]),
+];
+
+/// One HWC image in [0,1] for class `cls`.
+pub fn synth_image(cls: usize, rng: &mut Rng) -> Vec<f32> {
+    let (mut fg, mut bg) = PALETTES[cls];
+    for ch in 0..3 {
+        fg[ch] = (fg[ch] + 0.08 * rng.gaussian() as f32).clamp(0.0, 1.0);
+        bg[ch] = (bg[ch] + 0.05 * rng.gaussian() as f32).clamp(0.0, 1.0);
+    }
+    let cx = rng.range_f64(10.0, 22.0) as f32;
+    let cy = rng.range_f64(10.0, 22.0) as f32;
+    let r = rng.range_f64(6.0, 11.0) as f32;
+    let mask = class_mask(cls, cx, cy, r, rng);
+
+    let gx = rng.range_f64(-0.12, 0.12) as f32;
+    let gy = rng.range_f64(-0.12, 0.12) as f32;
+    let mut img = vec![0f32; IMG * IMG * 3];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let m = mask[y * IMG + x];
+            let illum = 1.0 + gx * (x as f32 - 16.0) / 16.0 + gy * (y as f32 - 16.0) / 16.0;
+            for ch in 0..3 {
+                let v = if m { fg[ch] } else { bg[ch] };
+                img[(y * IMG + x) * 3 + ch] = (v * illum).clamp(0.0, 1.0);
+            }
+        }
+    }
+    // speckles + noise
+    let n_spk = rng.below(18);
+    for _ in 0..n_spk {
+        let sx = rng.below(IMG);
+        let sy = rng.below(IMG);
+        for ch in 0..3 {
+            img[(sy * IMG + sx) * 3 + ch] = rng.f32();
+        }
+    }
+    for v in img.iter_mut() {
+        *v = (*v + 0.035 * rng.gaussian() as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn class_mask(cls: usize, cx: f32, cy: f32, r: f32, rng: &mut Rng) -> Vec<bool> {
+    let mut m = vec![false; IMG * IMG];
+    let set = |m: &mut Vec<bool>, f: &dyn Fn(f32, f32) -> bool| {
+        for y in 0..IMG {
+            for x in 0..IMG {
+                if f(x as f32, y as f32) {
+                    m[y * IMG + x] = true;
+                }
+            }
+        }
+    };
+    match cls {
+        0 => set(&mut m, &|x, y| (x - cx).powi(2) + (y - cy).powi(2) <= r * r),
+        1 => set(&mut m, &|x, y| (x - cx).abs() <= r * 0.8 && (y - cy).abs() <= r * 0.8),
+        2 => set(&mut m, &|x, y| {
+            y - cy <= r * 0.7 && y - cy >= -r && (x - cx).abs() <= (y - cy + r) * 0.55
+        }),
+        3 => {
+            let t = r * rng.range_f64(0.28, 0.4) as f32;
+            set(&mut m, &|x, y| {
+                ((x - cx).abs() <= t && (y - cy).abs() <= r)
+                    || ((y - cy).abs() <= t && (x - cx).abs() <= r)
+            })
+        }
+        4 => {
+            let t = r * rng.range_f64(0.3, 0.45) as f32;
+            let sign = if rng.bool() { 1.0 } else { -1.0 };
+            set(&mut m, &|x, y| {
+                let d = ((x - cx) - sign * (y - cy)).abs() / std::f32::consts::SQRT_2;
+                d <= t && (x - cx).abs() <= r && (y - cy).abs() <= r
+            })
+        }
+        5 => {
+            let inner = r * rng.range_f64(0.45, 0.6) as f32;
+            set(&mut m, &|x, y| {
+                let d2 = (x - cx).powi(2) + (y - cy).powi(2);
+                d2 <= r * r && d2 >= inner * inner
+            })
+        }
+        6 => {
+            let p = rng.int_in(4, 6) as usize;
+            set(&mut m, &|x, y| ((x as usize / p) + (y as usize / p)) % 2 == 0)
+        }
+        7 => {
+            let p = rng.int_in(3, 5) as usize;
+            let ph = rng.below(p);
+            set(&mut m, &|_, y| ((y as usize + ph) / p) % 2 == 0)
+        }
+        8 => set(&mut m, &|x, y| {
+            ((x - cx) / (r * 1.3)).powi(2) + ((y - cy) / (r * 0.8)).powi(2) <= 1.0
+        }),
+        9 => {
+            for _ in 0..4 {
+                let dx = rng.range_f64(6.0, 26.0) as f32;
+                let dy = rng.range_f64(6.0, 26.0) as f32;
+                let rr = rng.range_f64(2.2, 3.6) as f32;
+                set(&mut m, &|x, y| (x - dx).powi(2) + (y - dy).powi(2) <= rr * rr)
+            }
+        }
+        _ => unreachable!("class out of range"),
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_shapes_and_range() {
+        let d = synth_dataset(20, 1);
+        assert_eq!(d.n, 20);
+        assert_eq!(d.data.len(), 20 * IMG * IMG * 3);
+        assert!(d.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn synth_balanced() {
+        let d = synth_dataset(100, 2);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn synth_deterministic() {
+        let a = synth_dataset(5, 42);
+        let b = synth_dataset(5, 42);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn all_class_masks_nonempty() {
+        let mut rng = Rng::new(3);
+        for cls in 0..10 {
+            let m = class_mask(cls, 16.0, 16.0, 8.0, &mut rng);
+            let cnt = m.iter().filter(|&&b| b).count();
+            assert!(cnt > 0 && cnt < IMG * IMG, "class {cls}: {cnt}");
+        }
+    }
+
+    #[test]
+    fn cifar10_loader_rejects_garbage() {
+        let tmp = std::env::temp_dir().join("memx_cifar_garbage.bin");
+        std::fs::write(&tmp, [0u8; 100]).unwrap();
+        assert!(load_cifar10_batch(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn cifar10_loader_parses_one_record() {
+        let tmp = std::env::temp_dir().join("memx_cifar_one.bin");
+        let mut rec = vec![7u8]; // label
+        rec.extend(std::iter::repeat(128u8).take(3072));
+        std::fs::write(&tmp, &rec).unwrap();
+        let d = load_cifar10_batch(&tmp).unwrap();
+        assert_eq!(d.n, 1);
+        assert_eq!(d.labels[0], 7);
+        assert!((d.data[0] - 128.0 / 255.0).abs() < 1e-6);
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! memx — memristor crossbar computing paradigm for MobileNetV3.
+//!
+//! Reproduction of "A Novel Computing Paradigm for MobileNetV3 using
+//! Memristor" (Li et al., 2024). Three-layer architecture (DESIGN.md):
+//! JAX/Pallas analog model AOT-compiled to HLO artifacts, executed from this
+//! rust coordinator via PJRT; the paper's automated mapping framework
+//! (crossbar layout -> SPICE netlists -> MNA simulation) lives here too.
+pub mod analog;
+pub mod coordinator;
+pub mod dataset;
+pub mod mapper;
+pub mod netlist;
+pub mod nn;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod spice;
+pub mod util;

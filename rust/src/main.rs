@@ -1,0 +1,277 @@
+//! memx CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         artifact + manifest summary
+//!   accuracy [--model analog|digital] [--n N]      Table 1 row
+//!   serve    [--n N] [--model ...] [--max-wait-us U]  demo serving run
+//!   verify                       runtime vs python expected logits
+//!   map      [--mode inverted|dual]                Table 4 resources
+//!   netlist  --layer NAME [--outdir DIR] [--segment N]   emit SPICE
+//!   spice    --layer NAME [--segment N] [--n N]    simulate a layer
+//!   report   --table4|--fig4|--fig7|--fig8|--fig9  paper artifacts
+//!
+//! Flags are parsed by util::cli (clap is not in the offline crate cache).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use memx::coordinator::{self, Server, ServerConfig};
+use memx::runtime::{Engine, Model};
+use memx::util::bin::Dataset;
+use memx::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = argv[1..].to_vec();
+    let code = match run(&cmd, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "memx — memristor crossbar computing paradigm for MobileNetV3\n\
+         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report> [flags]\n\
+         common flags: --artifacts DIR (default ./artifacts)"
+    );
+}
+
+fn parse_model(s: &str) -> Result<Model> {
+    match s {
+        "analog" => Ok(Model::Analog),
+        "digital" => Ok(Model::Digital),
+        other => bail!("unknown model '{other}' (analog|digital)"),
+    }
+}
+
+fn run(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "info" => cmd_info(rest),
+        "accuracy" => cmd_accuracy(rest),
+        "serve" => cmd_serve(rest),
+        "verify" => cmd_verify(rest),
+        "map" => cmd_map(rest),
+        "netlist" => cmd_netlist(rest),
+        "spice" => cmd_spice(rest),
+        "report" => cmd_report(rest),
+        _ => {
+            usage();
+            bail!("unknown command '{cmd}'")
+        }
+    }
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let m = memx::nn::Manifest::load(dir)?;
+    println!("arch            {} (width {})", m.arch, m.width);
+    println!("input           {0}x{0}x3, {1} classes", m.img, m.num_classes);
+    println!("digital test acc{:>8.4}", m.digital_test_acc);
+    println!("batch variants  {:?}", m.batch_sizes);
+    println!("layers          {}", m.layers.len());
+    println!("units           {:?}", m.units());
+    println!("weights tensors {}", m.weights.len());
+    println!(
+        "device          Ron {}Ω Roff {}Ω, {} levels, σ_prog {}",
+        m.device.r_on, m.device.r_off, m.device.levels, m.device.prog_sigma
+    );
+    Ok(())
+}
+
+fn cmd_accuracy(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "model", "n"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let model = parse_model(a.get_or("model", "analog"))?;
+    let engine = Engine::new(dir)?;
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file))?;
+    let n = a.get_usize("n", ds.n)?;
+    println!("classifying {n} images with {model:?} model on {}", engine.platform());
+    let (labels, wall) = coordinator::classify_dataset(&engine, model, &ds, n)?;
+    let acc = coordinator::accuracy(&labels, &ds.labels[..labels.len()]);
+    println!(
+        "accuracy {:.4} ({}/{} correct)  wall {:?}  {:.1} img/s",
+        acc,
+        (acc * labels.len() as f64).round() as usize,
+        labels.len(),
+        wall,
+        labels.len() as f64 / wall.as_secs_f64()
+    );
+    println!("digital (python) reference accuracy: {:.4}", engine.manifest().digital_test_acc);
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let model = parse_model(a.get_or("model", "analog"))?;
+    let n = a.get_usize("n", 256)?;
+    let max_wait = std::time::Duration::from_micros(a.get_usize("max-wait-us", 2000)? as u64);
+
+    let manifest = memx::nn::Manifest::load(dir)?;
+    let ds = Dataset::load(&dir.join(&manifest.dataset_file))?;
+    let n = n.min(ds.n);
+
+    let server = Server::start(dir, ServerConfig { model, max_wait })?;
+    println!("server up ({model:?}), warmup {:?}", server.warmup);
+    let t0 = std::time::Instant::now();
+    let client = server.client();
+    // closed-loop clients: a few submitter threads
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let c = client.clone();
+            let ds = &ds;
+            let correct = &correct;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                match c.classify(ds.image(i).to_vec()) {
+                    Ok(p) if p.label == ds.labels[i] as usize => {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    _ => {}
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64;
+    println!("served {n} requests in {wall:?}  accuracy {acc:.4}");
+    server.metrics().snapshot().print(wall);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_verify(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "tol"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let tol = a.get_f64("tol", 1e-3)?;
+    let engine = Engine::new(dir)?;
+    let m = engine.manifest();
+    let ds = Dataset::load(&dir.join(&m.dataset_file))?;
+    let (n, classes, expected) =
+        memx::util::bin::read_expected_logits(&dir.join(&m.expected_file))?;
+    println!("verifying {n} images against python logits (tol {tol})");
+    let img = ds.image_len();
+    let mut worst = 0f64;
+    let mut i = 0;
+    while i < n {
+        let b = engine.pick_batch(n - i);
+        let exec = engine.get(Model::Analog, b)?;
+        let take = b.min(n - i);
+        let mut buf = vec![0f32; b * img];
+        for j in 0..take {
+            buf[j * img..(j + 1) * img].copy_from_slice(ds.image(i + j));
+        }
+        for j in take..b {
+            let src = ds.image(i + take - 1).to_vec();
+            buf[j * img..(j + 1) * img].copy_from_slice(&src);
+        }
+        let got = exec.run(&buf)?;
+        for j in 0..take {
+            for c in 0..classes {
+                let d = (got[j * classes + c] as f64 - expected[(i + j) * classes + c] as f64)
+                    .abs();
+                worst = worst.max(d);
+            }
+        }
+        i += take;
+    }
+    println!("max |rust - python| over {n}x{classes} logits: {worst:.3e}");
+    if worst > tol {
+        bail!("verification FAILED: {worst:.3e} > {tol:.1e}");
+    }
+    println!("verification OK");
+    Ok(())
+}
+
+fn cmd_map(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "mode"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    let m = memx::nn::Manifest::load(dir)?;
+    let ws = memx::nn::WeightStore::load(dir, &m)?;
+    let mapped = memx::mapper::map_network(&m, &ws, mode)?;
+    memx::report::print_table4(&mapped);
+    Ok(())
+}
+
+fn cmd_netlist(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "layer", "outdir", "segment", "mode"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let layer = a.get("layer").unwrap_or("cls.fc1");
+    let outdir = Path::new(a.get_or("outdir", "netlists"));
+    let segment = a.get_usize("segment", 0)?;
+    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    let m = memx::nn::Manifest::load(dir)?;
+    let ws = memx::nn::WeightStore::load(dir, &m)?;
+    let files = memx::netlist::emit_layer_netlists(&m, &ws, layer, mode, segment, outdir)?;
+    println!("wrote {} netlist file(s) under {outdir:?}", files.len());
+    for f in files.iter().take(5) {
+        println!("  {f:?}");
+    }
+    if files.len() > 5 {
+        println!("  ... ({} more)", files.len() - 5);
+    }
+    Ok(())
+}
+
+fn cmd_spice(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode"])?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let layer = a.get("layer").unwrap_or("cls.fc2");
+    let segment = a.get_usize("segment", 64)?;
+    let n = a.get_usize("n", 4)?;
+    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    memx::report::spice_layer_demo(dir, layer, mode, segment, n)
+}
+
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let a = Args::parse(
+        rest,
+        &["artifacts", "table4!", "fig4!", "fig7!", "fig8!", "fig9!", "all!", "out"],
+    )?;
+    let dir = Path::new(a.get_or("artifacts", "artifacts"));
+    let all = a.has("all");
+    let mut any = false;
+    if a.has("table4") || all {
+        memx::report::report_table4(dir)?;
+        any = true;
+    }
+    if a.has("fig4") || all {
+        memx::report::report_fig4(a.get("out"))?;
+        any = true;
+    }
+    if a.has("fig7") || all {
+        memx::report::report_fig7(dir)?;
+        any = true;
+    }
+    if a.has("fig8") || all {
+        memx::report::report_fig8(dir)?;
+        any = true;
+    }
+    if a.has("fig9") || all {
+        memx::report::report_fig9(dir)?;
+        any = true;
+    }
+    if !any {
+        bail!("pick at least one of --table4 --fig4 --fig7 --fig8 --fig9 --all");
+    }
+    Ok(())
+}

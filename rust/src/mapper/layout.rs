@@ -1,0 +1,273 @@
+//! Crossbar layout — the paper's Algorithm 1 and Eqs 1-3.
+//!
+//! A regular-convolution crossbar (per input channel, per output channel)
+//! has rows = [positive input region | negative input region | 2 bias rows]
+//! where each region is the row-unfolded padded input (Wr*Wc lines), and
+//! cols = the flattened output positions (Or*Oc lines).  The memristor for
+//! kernel element (a, b) of output i sits at row P_i + a*(Wc) + b, i.e.
+//! starting from Eq 2/3's P_Pi / P_Ni and skipping (Wc - Fc) positions
+//! between kernel rows (the paper writes the skip as Wc - Fc + 2P because it
+//! indexes the *unpadded* input; we unfold the padded input directly so the
+//! skip is Wc_padded - Fc).
+
+/// Eq 1 (one spatial dim): O = (W - F + 2P)/S + 1.
+pub fn out_dim(w: usize, f: usize, p: usize, s: usize) -> usize {
+    (w + 2 * p - f) / s + 1
+}
+
+/// Eq 2: starting row of output i in the positive input region, over the
+/// *padded* input of width `wc_pad`.
+pub fn p_pos(i: usize, oc: usize, wc_pad: usize, s: usize) -> usize {
+    ((i / oc) * wc_pad + (i % oc)) * s
+}
+
+/// Eq 3: starting row in the negative input region (offset by the region
+/// size Wr*Wc of the padded input).
+pub fn p_neg(i: usize, oc: usize, wr_pad: usize, wc_pad: usize, s: usize) -> usize {
+    p_pos(i, oc, wc_pad, s) + wr_pad * wc_pad
+}
+
+/// One placed memristor: crossbar coordinates + normalized conductance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placed {
+    pub row: usize,
+    pub col: usize,
+    /// normalized conductance in (0, 1] (quantized |weight| / scale)
+    pub g_norm: f64,
+}
+
+/// Geometry of one conv-channel crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvXbarGeom {
+    pub wr: usize,      // padded input rows
+    pub wc: usize,      // padded input cols
+    pub fr: usize,      // kernel rows
+    pub fc: usize,      // kernel cols
+    pub stride: usize,
+    pub or_: usize,     // output rows
+    pub oc: usize,      // output cols
+}
+
+impl ConvXbarGeom {
+    pub fn from_conv(h_in: usize, w_in: usize, k: usize, stride: usize, pad: usize) -> Self {
+        ConvXbarGeom {
+            wr: h_in + 2 * pad,
+            wc: w_in + 2 * pad,
+            fr: k,
+            fc: k,
+            stride,
+            or_: out_dim(h_in, k, pad, stride),
+            oc: out_dim(w_in, k, pad, stride),
+        }
+    }
+
+    /// Total input lines: pos region + neg region + 2 bias rows.
+    pub fn rows(&self) -> usize {
+        2 * self.wr * self.wc + 2
+    }
+
+    /// Output columns (flattened output positions).
+    pub fn cols(&self) -> usize {
+        self.or_ * self.oc
+    }
+
+    pub fn bias_row_pos(&self) -> usize {
+        2 * self.wr * self.wc
+    }
+
+    pub fn bias_row_neg(&self) -> usize {
+        2 * self.wr * self.wc + 1
+    }
+}
+
+/// Place one 2-D kernel (row-major `fr*fc` normalized weights, signed) onto
+/// a conv crossbar following Algorithm 1.  `inverted` selects the paper's
+/// op-amp-saving convention (positive weights on the negated-input region).
+/// Zero weights place no device (paper §3.2).
+pub fn place_conv_kernel(g: &ConvXbarGeom, kernel_norm: &[f64], inverted: bool) -> Vec<Placed> {
+    assert_eq!(kernel_norm.len(), g.fr * g.fc, "kernel size mismatch");
+    let mut placed = Vec::new();
+    let region = g.wr * g.wc;
+    for i in 0..g.cols() {
+        let base = p_pos(i, g.oc, g.wc, g.stride);
+        for a in 0..g.fr {
+            for b in 0..g.fc {
+                let w = kernel_norm[a * g.fc + b];
+                if w == 0.0 {
+                    continue;
+                }
+                // row within the positive region for this kernel element
+                let row_pos = base + a * g.wc + b;
+                debug_assert!(row_pos < region, "placement overflows region");
+                // inverted convention: w > 0 -> negative (negated-input)
+                // region; w < 0 -> positive region. dual convention is the
+                // mirror image.
+                let to_neg_region = if inverted { w > 0.0 } else { w < 0.0 };
+                let row = if to_neg_region { row_pos + region } else { row_pos };
+                placed.push(Placed { row, col: i, g_norm: w.abs() });
+            }
+        }
+    }
+    placed
+}
+
+/// FC layout (paper §3.6): rows = [cin (pos) | cin (neg) | 2 bias], columns
+/// = outputs; weight matrix row-major (cin x cout), bias per column.
+#[derive(Debug, Clone, Copy)]
+pub struct FcXbarGeom {
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl FcXbarGeom {
+    pub fn rows(&self) -> usize {
+        2 * self.cin + 2
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cout
+    }
+}
+
+pub fn place_fc(
+    g: &FcXbarGeom,
+    w_norm: &[f64],
+    bias_norm: Option<&[f64]>,
+    inverted: bool,
+) -> Vec<Placed> {
+    assert_eq!(w_norm.len(), g.cin * g.cout);
+    let mut placed = Vec::new();
+    for o in 0..g.cout {
+        for i in 0..g.cin {
+            let w = w_norm[i * g.cout + o];
+            if w == 0.0 {
+                continue;
+            }
+            let to_neg = if inverted { w > 0.0 } else { w < 0.0 };
+            let row = if to_neg { i + g.cin } else { i };
+            placed.push(Placed { row, col: o, g_norm: w.abs() });
+        }
+        if let Some(b) = bias_norm {
+            let w = b[o];
+            if w != 0.0 {
+                let to_neg = if inverted { w > 0.0 } else { w < 0.0 };
+                let row = 2 * g.cin + usize::from(to_neg);
+                placed.push(Placed { row, col: o, g_norm: w.abs() });
+            }
+        }
+    }
+    placed
+}
+
+/// Global-average-pool layout (paper §3.5): one column, conductances 1/N on
+/// the negated-input region so the TIA emits +mean (inverted by nature).
+pub fn place_gap(n_inputs: usize) -> Vec<Placed> {
+    (0..n_inputs)
+        .map(|i| Placed { row: i, col: 0, g_norm: 1.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's worked example (Fig 2): 3x3 input, 2x2 kernel, stride 1,
+    /// pad 0 -> 2x2 output; kernel [[0, 0.4], [0.6, 0]] positive part and
+    /// [[ -0.1, 0], [0, -0.5]] merged as [[-0.1, 0.4], [0.6, -0.5]].
+    #[test]
+    fn paper_fig2_example() {
+        let g = ConvXbarGeom::from_conv(3, 3, 2, 1, 0);
+        assert_eq!((g.or_, g.oc), (2, 2));
+        assert_eq!(g.rows(), 20); // 9 + 9 + 2 — matches the paper's "20 inputs"
+        assert_eq!(g.cols(), 4);
+        // Eq 2 starting positions: 0 -> 0? paper says (1,2,4,5) with 1-based
+        // columns; 0-based: i=0 -> 0*3+0 = 0... the paper's example uses
+        // starting position *after* the first element for its 1-indexed
+        // figure; our 0-based P_0 = 0, P_1 = 1, P_2 = 3, P_3 = 4.
+        assert_eq!(p_pos(0, 2, 3, 1), 0);
+        assert_eq!(p_pos(1, 2, 3, 1), 1);
+        assert_eq!(p_pos(2, 2, 3, 1), 3);
+        assert_eq!(p_pos(3, 2, 3, 1), 4);
+        assert_eq!(p_neg(0, 2, 3, 3, 1), 9);
+
+        let kernel = [-0.1, 0.4, 0.6, -0.5];
+        let placed = place_conv_kernel(&g, &kernel, true);
+        // 4 outputs x 4 nonzero weights
+        assert_eq!(placed.len(), 16);
+        // output 0: -0.1 at (0,0) pos region; 0.4 at row 1 neg region (9+1);
+        // 0.6 at row 3 (0 + 1*3 + 0) pos?? 0.6>0 -> neg region row 9+3=12;
+        // -0.5 at row 0+1*3+1=4 pos region.
+        let o0: Vec<&Placed> = placed.iter().filter(|p| p.col == 0).collect();
+        let rows: Vec<usize> = o0.iter().map(|p| p.row).collect();
+        assert!(rows.contains(&0));      // -0.1 direct region
+        assert!(rows.contains(&10));     // +0.4 negated region (9 + 1)
+        assert!(rows.contains(&12));     // +0.6 negated region (9 + 3)
+        assert!(rows.contains(&4));      // -0.5 direct region
+    }
+
+    #[test]
+    fn eq1_matches_manifest_geometry() {
+        assert_eq!(out_dim(32, 3, 1, 1), 32);
+        assert_eq!(out_dim(32, 3, 1, 2), 16);
+        assert_eq!(out_dim(8, 5, 2, 1), 8);
+    }
+
+    #[test]
+    fn zero_weights_place_nothing() {
+        let g = ConvXbarGeom::from_conv(4, 4, 3, 1, 1);
+        let placed = place_conv_kernel(&g, &[0.0; 9], true);
+        assert!(placed.is_empty());
+    }
+
+    #[test]
+    fn inverted_vs_dual_mirror() {
+        let g = ConvXbarGeom::from_conv(4, 4, 2, 1, 0);
+        let kernel = [0.5, -0.25, 0.0, 1.0];
+        let inv = place_conv_kernel(&g, &kernel, true);
+        let dual = place_conv_kernel(&g, &kernel, false);
+        assert_eq!(inv.len(), dual.len());
+        let region = g.wr * g.wc;
+        for (a, b) in inv.iter().zip(&dual) {
+            assert_eq!(a.col, b.col);
+            assert_eq!(a.g_norm, b.g_norm);
+            // same physical input line, opposite region
+            assert_eq!(a.row % region, b.row % region);
+            assert_ne!(a.row / region, b.row / region);
+        }
+    }
+
+    #[test]
+    fn rows_within_crossbar() {
+        let g = ConvXbarGeom::from_conv(32, 32, 5, 2, 2);
+        let kernel: Vec<f64> = (0..25).map(|i| (i as f64 - 12.0) / 12.0).collect();
+        for p in place_conv_kernel(&g, &kernel, true) {
+            assert!(p.row < g.rows() - 2, "row {} in {}", p.row, g.rows());
+            assert!(p.col < g.cols());
+            assert!(p.g_norm > 0.0 && p.g_norm <= 1.0);
+        }
+    }
+
+    #[test]
+    fn fc_placement_counts() {
+        let g = FcXbarGeom { cin: 3, cout: 2 };
+        assert_eq!(g.rows(), 8);
+        let w = [0.5, -0.5, 0.0, 0.25, 1.0, 0.0];
+        let b = [0.1, 0.0];
+        let placed = place_fc(&g, &w, Some(&b), true);
+        // nonzero weights: 4, nonzero bias: 1
+        assert_eq!(placed.len(), 5);
+        // w[0,0]=0.5 > 0 -> neg region row 0+3=3
+        assert!(placed.iter().any(|p| p.row == 3 && p.col == 0));
+        // w[0,1]=-0.5 -> pos region row 0
+        assert!(placed.iter().any(|p| p.row == 0 && p.col == 1));
+        // bias col 0 positive -> row 2*3+1 = 7
+        assert!(placed.iter().any(|p| p.row == 7 && p.col == 0));
+    }
+
+    #[test]
+    fn gap_places_n_devices() {
+        let placed = place_gap(16);
+        assert_eq!(placed.len(), 16);
+        assert!(placed.iter().all(|p| p.col == 0 && p.g_norm == 1.0));
+    }
+}

@@ -1,0 +1,420 @@
+//! Network IR — the typed view of `artifacts/manifest.json`.
+//!
+//! The python side (python/compile/model.py::build_manifest) emits a
+//! per-unit layer inventory mirroring the paper's Table 4; this module
+//! parses it into [`Manifest`] / [`Layer`] and loads the raw weight tensors
+//! from weights.bin into a [`WeightStore`]. The mapper (Eqs 1-15), the
+//! power models (Eqs 17-18) and the report generators all consume this IR.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bin;
+use crate::util::json::Json;
+
+pub mod tensor;
+pub use tensor::Tensor;
+
+/// One sublayer, as listed in Table 4 (Conv / BN / HSwish / DConv / GAPool /
+/// PConv / HSigmoid / ReLU / FC / residual adder).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv(ConvGeom),
+    DwConv(ConvGeom),
+    /// 1x1 attention convs inside SE (the paper's "PConv"): pure VMM.
+    PConv { name: String, unit: String, cin: usize, cout: usize, weight: String },
+    Bn { name: String, unit: String, c: usize, weight: String },
+    Act { name: String, unit: String, kind: ActKind, c: usize },
+    GaPool { name: String, unit: String, c: usize, h_in: usize, w_in: usize },
+    Fc { name: String, unit: String, cin: usize, cout: usize, weight: String },
+    Residual { name: String, unit: String, c: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    HSwish,
+    HSigmoid,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvGeom {
+    pub name: String,
+    pub unit: String,
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub weight: String,
+}
+
+impl ConvGeom {
+    /// Eq 1: O = (W + 2P - F)/S + 1, both spatial dims. (Padding added
+    /// before the kernel subtraction — W < F alone is legal when padding
+    /// covers it, and usize must not underflow.)
+    pub fn check_geometry(&self) -> Result<()> {
+        let o = |w: usize| (w + 2 * self.padding - self.k) / self.stride + 1;
+        if o(self.h_in) != self.h_out || o(self.w_in) != self.w_out {
+            bail!("conv {} violates Eq 1", self.name);
+        }
+        Ok(())
+    }
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv(g) | Layer::DwConv(g) => &g.name,
+            Layer::PConv { name, .. }
+            | Layer::Bn { name, .. }
+            | Layer::Act { name, .. }
+            | Layer::GaPool { name, .. }
+            | Layer::Fc { name, .. }
+            | Layer::Residual { name, .. } => name,
+        }
+    }
+
+    pub fn unit(&self) -> &str {
+        match self {
+            Layer::Conv(g) | Layer::DwConv(g) => &g.unit,
+            Layer::PConv { unit, .. }
+            | Layer::Bn { unit, .. }
+            | Layer::Act { unit, .. }
+            | Layer::GaPool { unit, .. }
+            | Layer::Fc { unit, .. }
+            | Layer::Residual { unit, .. } => unit,
+        }
+    }
+
+    /// Table 4 "Layer" column name.
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            Layer::Conv(_) => "Conv",
+            Layer::DwConv(_) => "DConv",
+            Layer::PConv { .. } => "PConv",
+            Layer::Bn { .. } => "BN",
+            Layer::Act { kind: ActKind::Relu, .. } => "ReLU",
+            Layer::Act { kind: ActKind::HSwish, .. } => "HSwish",
+            Layer::Act { kind: ActKind::HSigmoid, .. } => "HSigmoid",
+            Layer::GaPool { .. } => "GAPool",
+            Layer::Fc { .. } => "FC",
+            Layer::Residual { .. } => "Add",
+        }
+    }
+}
+
+/// Entry of the weight table (name -> location in weights.bin + analog scale).
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+    /// per-tensor analog scale (max |w|) — present for VMM/BN tensors.
+    pub scale: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub arch: String,
+    pub width: f64,
+    pub img: usize,
+    pub num_classes: usize,
+    pub digital_test_acc: f64,
+    pub batch_sizes: Vec<usize>,
+    /// artifact key ("model_b8") -> filename
+    pub artifacts: BTreeMap<String, String>,
+    pub layers: Vec<Layer>,
+    pub weights: Vec<WeightEntry>,
+    pub device: DeviceJson,
+    pub dataset_file: String,
+    pub dataset_n: usize,
+    pub expected_file: String,
+    pub expected_n: usize,
+}
+
+/// Device constants exported by python/compile/device.py::to_dict.
+#[derive(Debug, Clone)]
+pub struct DeviceJson {
+    pub r_on: f64,
+    pub r_off: f64,
+    pub levels: usize,
+    pub prog_sigma: f64,
+    pub v_in: f64,
+    pub v_rail: f64,
+    pub t_mem: f64,
+    pub slew_rate: f64,
+    pub v_swing: f64,
+    pub p_opamp: f64,
+    pub p_memristor: f64,
+    pub p_aux: f64,
+    pub t_opamp: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read manifest in {dir:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parse manifest.json")?;
+        let layers = j
+            .req_arr("layers")?
+            .iter()
+            .map(parse_layer)
+            .collect::<Result<Vec<_>>>()?;
+        let weights = j
+            .req_arr("weights")?
+            .iter()
+            .map(|e| {
+                Ok(WeightEntry {
+                    name: e.req_str("name")?.to_string(),
+                    shape: e
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|s| s.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: e.req_usize("offset")?,
+                    len: e.req_usize("len")?,
+                    scale: e.get("scale").and_then(|s| s.as_f64()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dj = j.req("device")?;
+        let device = DeviceJson {
+            r_on: dj.req_f64("r_on")?,
+            r_off: dj.req_f64("r_off")?,
+            levels: dj.req_usize("levels")?,
+            prog_sigma: dj.req_f64("prog_sigma")?,
+            v_in: dj.req_f64("v_in")?,
+            v_rail: dj.req_f64("v_rail")?,
+            t_mem: dj.req_f64("t_mem")?,
+            slew_rate: dj.req_f64("slew_rate")?,
+            v_swing: dj.req_f64("v_swing")?,
+            p_opamp: dj.req_f64("p_opamp")?,
+            p_memristor: dj.req_f64("p_memristor")?,
+            p_aux: dj.req_f64("p_aux")?,
+            t_opamp: dj.req_f64("t_opamp")?,
+        };
+        let artifacts = j
+            .req("artifacts")?
+            .as_obj()
+            .context("artifacts must be an object")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+            .collect();
+        let ds = j.req("dataset")?;
+        let ex = j.req("expected_logits")?;
+        Ok(Manifest {
+            arch: j.req_str("arch")?.to_string(),
+            width: j.req_f64("width")?,
+            img: j.req_usize("img")?,
+            num_classes: j.req_usize("num_classes")?,
+            digital_test_acc: j.req_f64("digital_test_acc")?,
+            batch_sizes: j
+                .req_arr("batch_sizes")?
+                .iter()
+                .filter_map(|b| b.as_usize())
+                .collect(),
+            artifacts,
+            layers,
+            weights,
+            device,
+            dataset_file: ds.req_str("file")?.to_string(),
+            dataset_n: ds.req_usize("n")?,
+            expected_file: ex.req_str("file")?.to_string(),
+            expected_n: ex.req_usize("n")?,
+        })
+    }
+
+    pub fn weight_entry(&self, name: &str) -> Option<&WeightEntry> {
+        self.weights.iter().find(|w| w.name == name)
+    }
+
+    /// Units in Table 4 order.
+    pub fn units(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for l in &self.layers {
+            if !seen.iter().any(|u| u == l.unit()) {
+                seen.push(l.unit().to_string());
+            }
+        }
+        seen
+    }
+}
+
+fn parse_layer(e: &Json) -> Result<Layer> {
+    let kind = e.req_str("layer")?;
+    let name = e.req_str("name")?.to_string();
+    let unit = e.req_str("unit")?.to_string();
+    let conv_geom = |e: &Json| -> Result<ConvGeom> {
+        Ok(ConvGeom {
+            name: name.clone(),
+            unit: unit.clone(),
+            k: e.req_usize("k")?,
+            stride: e.req_usize("stride")?,
+            padding: e.req_usize("padding")?,
+            cin: e.req_usize("cin")?,
+            cout: e.req_usize("cout")?,
+            h_in: e.req_usize("h_in")?,
+            w_in: e.req_usize("w_in")?,
+            h_out: e.req_usize("h_out")?,
+            w_out: e.req_usize("w_out")?,
+            weight: e.req_str("weight")?.to_string(),
+        })
+    };
+    Ok(match kind {
+        "conv" => Layer::Conv(conv_geom(e)?),
+        "dwconv" => Layer::DwConv(conv_geom(e)?),
+        "pconv" => Layer::PConv {
+            name,
+            unit,
+            cin: e.req_usize("cin")?,
+            cout: e.req_usize("cout")?,
+            weight: e.req_str("weight")?.to_string(),
+        },
+        "bn" => Layer::Bn {
+            name,
+            unit,
+            c: e.req_usize("c")?,
+            weight: e.req_str("weight")?.to_string(),
+        },
+        "relu" => Layer::Act { name, unit, kind: ActKind::Relu, c: e.req_usize("c")? },
+        "hswish" => Layer::Act { name, unit, kind: ActKind::HSwish, c: e.req_usize("c")? },
+        "hsigmoid" => Layer::Act { name, unit, kind: ActKind::HSigmoid, c: e.req_usize("c")? },
+        "gapool" => Layer::GaPool {
+            name,
+            unit,
+            c: e.req_usize("c")?,
+            h_in: e.get("h_in").and_then(|v| v.as_usize()).unwrap_or(1),
+            w_in: e.get("w_in").and_then(|v| v.as_usize()).unwrap_or(1),
+        },
+        "fc" => Layer::Fc {
+            name,
+            unit,
+            cin: e.req_usize("cin")?,
+            cout: e.req_usize("cout")?,
+            weight: e.req_str("weight")?.to_string(),
+        },
+        "residual" => Layer::Residual { name, unit, c: e.req_usize("c")? },
+        other => bail!("unknown layer kind '{other}'"),
+    })
+}
+
+/// Raw weight tensors resolved against weights.bin.
+pub struct WeightStore {
+    blob: Vec<f32>,
+    entries: Vec<WeightEntry>,
+}
+
+impl WeightStore {
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<WeightStore> {
+        let blob = bin::read_weights_blob(&dir.join("weights.bin"))?;
+        let need = manifest.weights.iter().map(|w| w.offset + w.len).max().unwrap_or(0);
+        if blob.len() < need {
+            bail!("weights.bin too short: {} < {need}", blob.len());
+        }
+        Ok(WeightStore { blob, entries: manifest.weights.clone() })
+    }
+
+    pub fn get(&self, name: &str) -> Option<Tensor<'_>> {
+        let e = self.entries.iter().find(|w| w.name == name)?;
+        Some(Tensor {
+            shape: e.shape.clone(),
+            data: &self.blob[e.offset..e.offset + e.len],
+            scale: e.scale,
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+
+    /// All raw weight values of VMM-bearing tensors (Fig 9 histogram input).
+    pub fn all_vmm_values(&self) -> Vec<f32> {
+        self.entries
+            .iter()
+            .filter(|e| e.name.ends_with(".w"))
+            .flat_map(|e| self.blob[e.offset..e.offset + e.len].iter().copied())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "arch":"m","width":0.4,"img":32,"num_classes":10,
+      "digital_test_acc":0.93,"batch_sizes":[1,8],
+      "artifacts":{"model_b1":"model_b1.hlo.txt"},
+      "device":{"r_on":100,"r_off":16000,"levels":64,"prog_sigma":0.01,
+        "v_in":0.0025,"v_rail":8.0,"t_mem":1e-10,"slew_rate":1e7,
+        "v_swing":5.0,"p_opamp":0.001,"p_memristor":1.1e-6,"p_aux":0.0005,
+        "t_opamp":5e-7,"g_on":0.01,"g_off":6.25e-5},
+      "dataset":{"file":"dataset.bin","n":10},
+      "expected_logits":{"file":"expected_logits.bin","n":4},
+      "weights":[{"name":"stem.conv.w","shape":[3,3,3,8],"offset":0,"len":216,"scale":0.5}],
+      "layers":[
+        {"unit":"input","layer":"conv","name":"stem.conv","k":3,"stride":1,
+         "padding":1,"cin":3,"cout":8,"h_in":32,"w_in":32,"h_out":32,"w_out":32,
+         "weight":"stem.conv.w"},
+        {"unit":"input","layer":"bn","name":"stem.bn","c":8,"weight":"stem.bn.gamma"},
+        {"unit":"input","layer":"hswish","name":"stem.act","c":8},
+        {"unit":"classifier","layer":"gapool","name":"cls.gap","c":8,"h_in":4,"w_in":4},
+        {"unit":"classifier","layer":"fc","name":"cls.fc2","cin":8,"cout":10,
+         "weight":"cls.fc2.w"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.layers.len(), 5);
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.units(), vec!["input", "classifier"]);
+        match &m.layers[0] {
+            Layer::Conv(g) => {
+                assert_eq!(g.k, 3);
+                g.check_geometry().unwrap();
+            }
+            _ => panic!("expected conv"),
+        }
+        assert_eq!(m.layers[2].kind_label(), "HSwish");
+        assert_eq!(m.weight_entry("stem.conv.w").unwrap().scale, Some(0.5));
+    }
+
+    #[test]
+    fn geometry_violation_detected() {
+        let g = ConvGeom {
+            name: "x".into(),
+            unit: "u".into(),
+            k: 3,
+            stride: 2,
+            padding: 1,
+            cin: 3,
+            cout: 8,
+            h_in: 32,
+            w_in: 32,
+            h_out: 30, // wrong: should be 16
+            w_out: 16,
+            weight: "w".into(),
+        };
+        assert!(g.check_geometry().is_err());
+    }
+
+    #[test]
+    fn unknown_layer_kind_errors() {
+        let bad = MINI.replace("\"hswish\"", "\"frobnicate\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

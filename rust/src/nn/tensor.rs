@@ -1,0 +1,89 @@
+//! Borrowed tensor view over the weights blob.
+
+/// A read-only tensor slice of weights.bin with its manifest metadata.
+#[derive(Debug, Clone)]
+pub struct Tensor<'a> {
+    pub shape: Vec<usize>,
+    pub data: &'a [f32],
+    /// analog scale (max |w|) if this tensor is mapped to a crossbar
+    pub scale: Option<f64>,
+}
+
+impl<'a> Tensor<'a> {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Conv weight (k,k,cin,cout) -> crossbar matrix (cin*k*k, cout) in the
+    /// (C, kh, kw) feature order used by the im2col dataflow (model.py
+    /// `_w_matrix`). FC weights (cin,cout) pass through.
+    pub fn as_matrix(&self) -> (usize, usize, Vec<f32>) {
+        match self.shape.as_slice() {
+            [k1, k2, cin, cout] => {
+                let (k1, k2, cin, cout) = (*k1, *k2, *cin, *cout);
+                let rows = cin * k1 * k2;
+                let mut m = vec![0f32; rows * cout];
+                for c in 0..cin {
+                    for a in 0..k1 {
+                        for b in 0..k2 {
+                            for o in 0..cout {
+                                let src = ((a * k2 + b) * cin + c) * cout + o;
+                                let dst = ((c * k1 * k2) + a * k2 + b) * cout + o;
+                                m[dst] = self.data[src];
+                            }
+                        }
+                    }
+                }
+                (rows, cout, m)
+            }
+            [cin, cout] => (*cin, *cout, self.data.to_vec()),
+            [c] => (1, *c, self.data.to_vec()),
+            other => panic!("unsupported weight rank {other:?}"),
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |a, &x| a.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_matrix_passthrough() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let t = Tensor { shape: vec![2, 3], data: &data, scale: None };
+        let (r, c, m) = t.as_matrix();
+        assert_eq!((r, c), (2, 3));
+        assert_eq!(m, data);
+    }
+
+    #[test]
+    fn conv_matrix_feature_order() {
+        // (k1,k2,cin,cout) = (2,1,2,1): features must come out as (C,kh,kw)
+        let data = vec![
+            1.0, // a=0,b=0,c=0
+            2.0, // a=0,b=0,c=1
+            3.0, // a=1,b=0,c=0
+            4.0, // a=1,b=0,c=1
+        ];
+        let t = Tensor { shape: vec![2, 1, 2, 1], data: &data, scale: None };
+        let (r, c, m) = t.as_matrix();
+        assert_eq!((r, c), (4, 1));
+        // order: c0(a0,a1), c1(a0,a1)
+        assert_eq!(m, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let data = vec![-3.0, 1.0, 2.5];
+        let t = Tensor { shape: vec![3], data: &data, scale: None };
+        assert_eq!(t.max_abs(), 3.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! Report generators — regenerate the paper's tables and figures as
+//! markdown/CSV text on stdout (EXPERIMENTS.md records the outputs).
+//!
+//!   Table 1 — accuracy row: `memx accuracy` (coordinator)
+//!   Fig 4   — activation circuit transfer curves (CSV)
+//!   Fig 7   — construction + simulation time, segmented vs monolithic
+//!   Fig 8   — latency + energy vs baselines (Eqs 17/18)
+//!   Fig 9   — memristor weight histogram
+//!   Table 4 — per-layer resources
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::analog;
+use crate::mapper::{self, MapMode, MappedNetwork};
+use crate::netlist;
+use crate::nn::{Manifest, WeightStore};
+use crate::power;
+use crate::spice::solve::Ordering;
+
+/// Table 4: size / memristors / op-amps / parallelism per layer.
+pub fn print_table4(net: &MappedNetwork) {
+    println!("## Table 4 — resources of the memristor-based MobileNetV3 (mode {:?})", net.mode);
+    println!("| Unit | Layer | Size | Banks | Memristors | Op-amps | Parallelism |");
+    println!("|---|---|---|---:|---:|---:|---:|");
+    let mut last_unit = "";
+    for l in &net.layers {
+        let unit = if l.unit == last_unit { "" } else { &l.unit };
+        last_unit = &l.unit;
+        let size = l
+            .size
+            .map(|(r, c)| format!("{r}x{c}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            unit, l.kind, size, l.banks, l.memristors, l.opamps, l.parallelism
+        );
+    }
+    println!(
+        "| **total** | | | | **{}** | **{}** | |",
+        net.total_memristors(),
+        net.total_opamps()
+    );
+    println!(
+        "memristor stages on critical path (Eq 17 N_m): {}",
+        net.memristor_stages()
+    );
+}
+
+pub fn report_table4(dir: &Path) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &m)?;
+    let net = mapper::map_network(&m, &ws, MapMode::Inverted)?;
+    print_table4(&net);
+    Ok(())
+}
+
+/// Fig 4(c)/(d): SPICE transfer curves of the activation circuits vs the
+/// software functions (CSV to stdout or a file).
+pub fn report_fig4(out: Option<&str>) -> Result<()> {
+    let mut hs = analog::build_hard_sigmoid();
+    let mut hw = analog::build_hard_swish();
+    let mut csv = String::from("vin,hsigmoid_spice,hsigmoid_sw,hswish_spice,hswish_sw\n");
+    for (x, y_hs) in hs.sweep(-4.0, 4.0, 81)? {
+        let y_hw = hw.eval(x)?;
+        csv.push_str(&format!(
+            "{x:.3},{y_hs:.5},{:.5},{y_hw:.5},{:.5}\n",
+            analog::hard_sigmoid_sw(x),
+            analog::hard_swish_sw(x)
+        ));
+    }
+    match out {
+        Some(p) => {
+            std::fs::write(p, &csv)?;
+            println!("wrote Fig 4 curves to {p}");
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+/// Fig 7: construction + simulation time of FC crossbars, segmented vs
+/// monolithic (quick in-process variant; the full sweep lives in
+/// benches/bench_segmentation.rs).
+pub fn report_fig7(dir: &Path) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    println!("## Fig 7 — FC crossbar construction + simulation time");
+    println!("| size (in x out) | construct | netlist files | sim monolithic | sim segmented (64 cols) | speedup |");
+    println!("|---|---:|---:|---:|---:|---:|");
+    for &(cin, cout) in &[(64usize, 64usize), (128, 128), (256, 256)] {
+        let t0 = Instant::now();
+        let cb = mapper::build_synthetic_fc(cin, cout, m.device.levels, MapMode::Inverted, 42);
+        let construct = t0.elapsed();
+        let inputs: Vec<f64> = (0..cin).map(|i| ((i as f64) * 0.1).sin() * 0.5).collect();
+
+        let mono_segs = netlist::plan_segments(cb.cols, 0);
+        let t0 = Instant::now();
+        let text = netlist::emit_crossbar(&cb, &m.device, &mono_segs[0], Some(&inputs), 1);
+        let circuit = netlist::parse(&text)?;
+        let _ = netlist::solve_segment_outputs(&circuit, &mono_segs[0], true, Ordering::Natural)?;
+        let mono = t0.elapsed();
+
+        let segs = netlist::plan_segments(cb.cols, 64);
+        let t0 = Instant::now();
+        for seg in &segs {
+            let text = netlist::emit_crossbar(&cb, &m.device, seg, Some(&inputs), segs.len());
+            let circuit = netlist::parse(&text)?;
+            let _ = netlist::solve_segment_outputs(&circuit, seg, true, Ordering::Natural)?;
+        }
+        let segd = t0.elapsed();
+
+        println!(
+            "| {cin}x{cout} | {construct:?} | {} | {mono:?} | {segd:?} | {:.1}x |",
+            segs.len(),
+            mono.as_secs_f64() / segd.as_secs_f64().max(1e-12)
+        );
+    }
+    println!("(full sweep incl. 1024x1024: cargo bench --bench bench_segmentation)");
+    Ok(())
+}
+
+/// Fig 8: latency + power of the analog paradigm vs dual-op-amp / GPU / CPU.
+pub fn report_fig8(dir: &Path) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &m)?;
+    println!("## Fig 8 — latency and energy per inference");
+    println!("| implementation | latency | vs analog | energy | vs analog |");
+    println!("|---|---:|---:|---:|---:|");
+    let inv = mapper::map_network(&m, &ws, MapMode::Inverted)?;
+    let t_inv = power::latency(&inv, &m.device);
+    let e_inv = power::energy(&inv, &m.device, &t_inv);
+    let dual = mapper::map_network(&m, &ws, MapMode::Dual)?;
+    let t_dual = power::latency(&dual, &m.device);
+    let e_dual = power::energy(&dual, &m.device, &t_dual);
+    let c = power::compare(&t_inv, &e_inv, None);
+    let row = |name: &str, t: f64, e: f64| {
+        println!(
+            "| {name} | {:.4} µs | {:.1}x | {:.4} µJ | {:.1}x |",
+            t * 1e6,
+            t / t_inv.total,
+            e * 1e6,
+            e / e_inv.total
+        );
+    };
+    let t_pipe = power::latency_pipelined(&inv, &m.device);
+    let t_pipe_dual = power::latency_pipelined(&dual, &m.device);
+    row("memristor sequential (this work)", t_inv.total, e_inv.total);
+    row("memristor sequential (dual op-amp)", t_dual.total, e_dual.total);
+    row("memristor pipelined (this work)", t_pipe.total, e_inv.total);
+    row("memristor pipelined (dual op-amp)", t_pipe_dual.total, e_dual.total);
+    row("GPU RTX 4090 (paper)", c.t_gpu, c.e_gpu);
+    row("CPU i7-12700 (paper)", c.t_cpu, c.e_cpu);
+    println!(
+        "\nEq 17 breakdown: N_m = {}, T_m = {} ps, T_o = {} µs, T_r = {:.1} ns",
+        t_inv.n_m,
+        t_inv.t_mem * 1e12,
+        t_inv.t_opamp * 1e6,
+        t_inv.t_rest * 1e9
+    );
+    println!(
+        "Eq 18 breakdown: memristors {:.3} µJ, op-amps {:.3} µJ, aux {:.3} µJ",
+        e_inv.e_memristors * 1e6,
+        e_inv.e_opamps * 1e6,
+        e_inv.e_rest * 1e6
+    );
+    println!(
+        "headline (sequential): {:.0}x vs GPU, {:.0}x vs CPU latency; {:.1}x / {:.1}x energy savings",
+        c.speedup_vs_gpu(),
+        c.speedup_vs_cpu(),
+        c.savings_vs_gpu(),
+        c.savings_vs_cpu()
+    );
+    println!(
+        "headline (pipelined):  {:.0}x vs GPU, {:.0}x vs CPU latency (paper's §5.2 regime)",
+        c.t_gpu / t_pipe.total,
+        c.t_cpu / t_pipe.total
+    );
+    Ok(())
+}
+
+/// Fig 9: distribution of memristor weights (ASCII histogram + CSV rows).
+pub fn report_fig9(dir: &Path) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &m)?;
+    let values = ws.all_vmm_values();
+    println!("## Fig 9 — distribution of memristor weights ({} devices)", values.len());
+    let bins = 40;
+    let (lo, hi) = (-0.5f32, 0.5f32);
+    let mut counts = vec![0usize; bins];
+    let mut clipped = 0usize;
+    for &v in &values {
+        if v < lo || v >= hi {
+            clipped += 1;
+            continue;
+        }
+        let b = (((v - lo) / (hi - lo)) * bins as f32) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    for (i, &c) in counts.iter().enumerate() {
+        let left = lo + (hi - lo) * i as f32 / bins as f32;
+        let bar = "#".repeat(c * 50 / max);
+        println!("{left:+.3} {c:>8} {bar}");
+    }
+    println!("outside [-0.5, 0.5): {clipped}");
+    let in_band = values.iter().filter(|v| v.abs() <= 0.2).count();
+    println!(
+        "fraction within ±0.2 (paper: 'predominantly'): {:.1}%",
+        100.0 * in_band as f64 / values.len() as f64
+    );
+    Ok(())
+}
+
+/// `memx spice` — map one FC layer, emit (segmented) netlists, simulate a
+/// few input vectors and compare against the behavioural crossbar.
+pub fn spice_layer_demo(
+    dir: &Path,
+    layer: &str,
+    mode: MapMode,
+    segment: usize,
+    n_vectors: usize,
+) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    let ws = WeightStore::load(dir, &m)?;
+    let cb = mapper::build_fc_crossbar(&m, &ws, layer, mode)?;
+    println!(
+        "layer {layer}: crossbar {}x{} ({} devices, mode {mode:?})",
+        cb.rows,
+        cb.cols,
+        cb.devices.len()
+    );
+    let segs = netlist::plan_segments(cb.cols, segment);
+    println!("segments: {} ({} columns each)", segs.len(), segment.max(cb.cols));
+    let mut rng = crate::util::prng::Rng::new(99);
+    let mut worst = 0f64;
+    let t0 = Instant::now();
+    for v in 0..n_vectors {
+        let inputs: Vec<f64> = (0..cb.region).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let ideal = cb.eval_ideal(&inputs);
+        let mut got = Vec::with_capacity(cb.cols);
+        for seg in &segs {
+            let text = netlist::emit_crossbar(&cb, &m.device, seg, Some(&inputs), segs.len());
+            let circuit = netlist::parse(&text)?;
+            got.extend(netlist::solve_segment_outputs(
+                &circuit,
+                seg,
+                mode.inverted(),
+                Ordering::Smart,
+            )?);
+        }
+        let err = got
+            .iter()
+            .zip(&ideal)
+            .fold(0f64, |a, (g, i)| a.max((g - i).abs()));
+        worst = worst.max(err);
+        println!("vector {v}: max |spice - ideal| = {err:.3e}");
+    }
+    println!("{} vectors in {:?}; worst error {worst:.3e}", n_vectors, t0.elapsed());
+    Ok(())
+}

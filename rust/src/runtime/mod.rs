@@ -1,0 +1,211 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client (`xla` crate 0.1.6 / xla_extension 0.5.1).
+//!
+//! Interchange is HLO **text**: `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits that
+//! this XLA build rejects (see /opt/xla-example/README.md).
+//!
+//! Python never runs here: artifacts are compiled once at startup (or
+//! lazily, cached per batch size) and the request path is pure rust + XLA.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nn::Manifest;
+
+/// Which lowered forward to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Model {
+    /// memristor computing paradigm (quantized differential crossbars)
+    Analog,
+    /// fp32 digital baseline ("CPU" row of Fig 8)
+    Digital,
+}
+
+impl Model {
+    pub fn artifact_key(&self, batch: usize) -> String {
+        match self {
+            Model::Analog => format!("model_b{batch}"),
+            Model::Digital => format!("digital_b{batch}"),
+        }
+    }
+}
+
+/// A compiled executable with its input geometry.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub img_elems: usize,
+    pub num_classes: usize,
+    pub compile_time: std::time::Duration,
+}
+
+impl Compiled {
+    /// Run one batch. `images` must be exactly `batch * img_elems` floats
+    /// (NHWC). Returns row-major logits (batch x num_classes).
+    pub fn run(&self, images: &[f32]) -> Result<Vec<f32>> {
+        if images.len() != self.batch * self.img_elems {
+            bail!(
+                "input size {} != batch {} * img {}",
+                images.len(),
+                self.batch,
+                self.img_elems
+            );
+        }
+        let hw = ((self.img_elems / 3) as f64).sqrt() as i64;
+        let lit = xla::Literal::vec1(images)
+            .reshape(&[self.batch as i64, hw, hw, 3])
+            .context("reshape input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?; // lowered with return_tuple=True
+        Ok(result.to_vec::<f32>()?)
+    }
+}
+
+/// The engine owns the PJRT client and an executable cache keyed by
+/// (model, batch).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<(Model, usize), &'static Compiled>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Batch sizes for which artifacts exist, ascending.
+    pub fn available_batches(&self) -> Vec<usize> {
+        self.manifest.batch_sizes.clone()
+    }
+
+    /// Get (compiling + caching on first use) the executable for a model and
+    /// exact batch size.
+    ///
+    /// Executables are leaked into 'static: a handful of variants live for
+    /// the process lifetime anyway, and this keeps the hot path free of
+    /// lock-held references.
+    pub fn get(&self, model: Model, batch: usize) -> Result<&'static Compiled> {
+        if let Some(c) = self.cache.lock().unwrap().get(&(model, batch)) {
+            return Ok(c);
+        }
+        let key = model.artifact_key(batch);
+        let file = self
+            .manifest
+            .artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact '{key}' (batch {batch} not exported)"))?;
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile {key}: {e}"))?;
+        let compiled = Box::leak(Box::new(Compiled {
+            exe,
+            batch,
+            img_elems: self.manifest.img * self.manifest.img * 3,
+            num_classes: self.manifest.num_classes,
+            compile_time: t0.elapsed(),
+        }));
+        self.cache.lock().unwrap().insert((model, batch), compiled);
+        Ok(compiled)
+    }
+
+    /// Compile an arbitrary artifact by manifest key (e.g. the
+    /// "model_kernelpath_b8" pallas-lowering cross-validation variant).
+    /// Not cached — intended for tests/benches.
+    pub fn compile_key(&self, key: &str, batch: usize) -> Result<Compiled> {
+        let file = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact '{key}'"))?;
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow!("XLA compile {key}: {e}"))?;
+        Ok(Compiled {
+            exe,
+            batch,
+            img_elems: self.manifest.img * self.manifest.img * 3,
+            num_classes: self.manifest.num_classes,
+            compile_time: t0.elapsed(),
+        })
+    }
+
+    /// Largest available batch size <= want (or the smallest overall).
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut best = None;
+        for &b in &self.manifest.batch_sizes {
+            if b <= want {
+                best = Some(best.map_or(b, |x: usize| x.max(b)));
+            }
+        }
+        best.unwrap_or_else(|| self.manifest.batch_sizes.iter().copied().min().unwrap_or(1))
+    }
+}
+
+/// argmax over each row of logits.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let logits = vec![0.1, 0.9, 0.0, /* row2 */ 5.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn artifact_keys() {
+        assert_eq!(Model::Analog.artifact_key(8), "model_b8");
+        assert_eq!(Model::Digital.artifact_key(1), "digital_b1");
+    }
+}

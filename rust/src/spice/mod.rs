@@ -1,0 +1,451 @@
+//! SPICE substrate — DC operating-point simulator for the generated
+//! memristor netlists (the paper validates on SPICE; DESIGN.md §3 maps
+//! their PSpice runs to this MNA engine).
+//!
+//! Supported elements (all the generated netlists need):
+//!   R  resistor                      V  independent voltage source
+//!   E  VCVS (op-amp = high-gain E)   I  independent current source
+//!   D  diode (Shockley, solved by Newton-Raphson companion iteration)
+//!
+//! Node 0 is ground. The engine performs Modified Nodal Analysis: node
+//! voltages plus branch currents for V and E elements; diodes are
+//! linearized per Newton iteration until max voltage delta < tol.
+
+pub mod solve;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use solve::{solve_dense, SparseSys};
+
+/// Circuit element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Element {
+    /// name, n+, n-, ohms
+    Resistor(String, usize, usize, f64),
+    /// name, n+, n-, volts
+    Vsource(String, usize, usize, f64),
+    /// name, n+, n-, amps (flows n+ -> n-)
+    Isource(String, usize, usize, f64),
+    /// name, out+, out-, ctrl+, ctrl-, gain
+    Vcvs(String, usize, usize, usize, usize, f64),
+    /// name, anode, cathode, saturation current, emission*Vt
+    Diode(String, usize, usize, f64, f64),
+    /// name, out (vs ground), ctrl_a, ctrl_b, gain: V(out) = gain*V(a)*V(b).
+    /// Behavioural analog multiplier (Gilbert-cell abstraction, Fig 4b);
+    /// nonlinear — solved by the same Newton loop as diodes.
+    Mult(String, usize, usize, usize, f64),
+}
+
+impl Element {
+    pub fn name(&self) -> &str {
+        match self {
+            Element::Resistor(n, ..)
+            | Element::Vsource(n, ..)
+            | Element::Isource(n, ..)
+            | Element::Vcvs(n, ..)
+            | Element::Diode(n, ..)
+            | Element::Mult(n, ..) => n,
+        }
+    }
+}
+
+/// A flat circuit: elements over integer nodes (0 = ground).
+#[derive(Debug, Clone, Default)]
+pub struct Circuit {
+    pub title: String,
+    pub elements: Vec<Element>,
+    next_node: usize,
+    names: BTreeMap<String, usize>,
+}
+
+impl Circuit {
+    pub fn new(title: &str) -> Self {
+        let mut c = Circuit { title: title.to_string(), ..Default::default() };
+        c.names.insert("0".into(), 0);
+        c.names.insert("gnd".into(), 0);
+        c.next_node = 1;
+        c
+    }
+
+    /// Intern a named node.
+    pub fn node(&mut self, name: &str) -> usize {
+        if let Some(&n) = self.names.get(name) {
+            return n;
+        }
+        let n = self.next_node;
+        self.next_node += 1;
+        self.names.insert(name.to_string(), n);
+        n
+    }
+
+    /// Fresh anonymous node.
+    pub fn fresh(&mut self) -> usize {
+        let n = self.next_node;
+        self.next_node += 1;
+        self.names.insert(format!("_n{n}"), n);
+        n
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.next_node
+    }
+
+    pub fn node_named(&self, name: &str) -> Option<usize> {
+        self.names.get(name).copied()
+    }
+
+    pub fn resistor(&mut self, name: &str, a: usize, b: usize, ohms: f64) {
+        self.elements.push(Element::Resistor(name.into(), a, b, ohms));
+    }
+
+    pub fn vsource(&mut self, name: &str, a: usize, b: usize, volts: f64) {
+        self.elements.push(Element::Vsource(name.into(), a, b, volts));
+    }
+
+    pub fn isource(&mut self, name: &str, a: usize, b: usize, amps: f64) {
+        self.elements.push(Element::Isource(name.into(), a, b, amps));
+    }
+
+    pub fn vcvs(&mut self, name: &str, op: usize, om: usize, cp: usize, cm: usize, gain: f64) {
+        self.elements.push(Element::Vcvs(name.into(), op, om, cp, cm, gain));
+    }
+
+    pub fn mult(&mut self, name: &str, out: usize, a: usize, b: usize, gain: f64) {
+        self.elements.push(Element::Mult(name.into(), out, a, b, gain));
+    }
+
+    pub fn diode(&mut self, name: &str, a: usize, k: usize) {
+        // 1N4148-ish: Is = 2.52e-9 A, n*Vt = 1.752 * 25.85 mV
+        self.elements.push(Element::Diode(name.into(), a, k, 2.52e-9, 1.752 * 0.02585));
+    }
+
+    /// Ideal op-amp as a VCVS with high open-loop gain (paper's ideal-TIA
+    /// assumption). out is referenced to ground.
+    pub fn opamp(&mut self, name: &str, vplus: usize, vminus: usize, out: usize) {
+        self.vcvs(name, out, 0, vplus, vminus, 1e6);
+    }
+
+    /// Update the value of an existing V source (reprogramming crossbar
+    /// inputs between solves without rebuilding the circuit).
+    pub fn set_vsource(&mut self, name: &str, volts: f64) -> Result<()> {
+        for e in self.elements.iter_mut() {
+            if let Element::Vsource(n, _, _, v) = e {
+                if n == name {
+                    *v = volts;
+                    return Ok(());
+                }
+            }
+        }
+        bail!("no vsource named '{name}'")
+    }
+
+    fn num_branches(&self) -> usize {
+        self.elements
+            .iter()
+            .filter(|e| {
+                matches!(e, Element::Vsource(..) | Element::Vcvs(..) | Element::Mult(..))
+            })
+            .count()
+    }
+
+    /// DC operating point. Returns node voltages (index = node id).
+    pub fn dc_op(&self) -> Result<Vec<f64>> {
+        self.dc_op_with(solve::Ordering::Smart)
+    }
+
+    /// DC operating point under an explicit elimination ordering (the Fig 7
+    /// benchmarks contrast Natural vs Smart — see spice::solve docs).
+    pub fn dc_op_with(&self, ordering: solve::Ordering) -> Result<Vec<f64>> {
+        Ok(self.dc_op_stats(ordering)?.0)
+    }
+
+    /// DC operating point + solver work/memory counters (Fig 7 reads the
+    /// peak resident matrix entries of monolithic vs segmented solves).
+    pub fn dc_op_stats(
+        &self,
+        ordering: solve::Ordering,
+    ) -> Result<(Vec<f64>, solve::SolveStats)> {
+        let n_nodes = self.node_count();
+        let n_br = self.num_branches();
+        let dim = (n_nodes - 1) + n_br; // ground eliminated
+        let has_diodes = self
+            .elements
+            .iter()
+            .any(|e| matches!(e, Element::Diode(..) | Element::Mult(..)));
+
+        let mut v_nodes = vec![0.0; n_nodes];
+        let mut stats = solve::SolveStats { peak_entries: 0, unknowns: dim };
+        let max_newton = if has_diodes { 200 } else { 1 };
+        for _it in 0..max_newton {
+            let sys = self.stamp(dim, n_nodes, &v_nodes)?;
+            let x = if dim <= 220 {
+                // dense path for small circuits (activation modules)
+                let mut a = vec![vec![0.0; dim]; dim];
+                for &(i, j, v) in sys.iter_triplets() {
+                    a[i][j] += v;
+                }
+                stats = solve::SolveStats { peak_entries: dim * dim, unknowns: dim };
+                solve_dense(&a, &sys.b).context("dense MNA solve")?
+            } else {
+                let (x, st) = sys.solve_with_stats(ordering).context("sparse MNA solve")?;
+                stats = st;
+                x
+            };
+            let mut new_v = vec![0.0; n_nodes];
+            new_v[1..].copy_from_slice(&x[..n_nodes - 1]);
+            // damped Newton update for diode convergence
+            let mut delta = 0.0f64;
+            for i in 0..n_nodes {
+                delta = delta.max((new_v[i] - v_nodes[i]).abs());
+            }
+            if has_diodes {
+                for i in 0..n_nodes {
+                    let step = new_v[i] - v_nodes[i];
+                    v_nodes[i] += step.clamp(-0.5, 0.5); // limit junction jumps
+                }
+            } else {
+                v_nodes = new_v;
+            }
+            if delta < 1e-9 || !has_diodes {
+                return Ok((v_nodes, stats));
+            }
+        }
+        Ok((v_nodes, stats)) // damped iterations exhausted; callers check outputs
+    }
+
+    /// Build the MNA system around the current diode linearization point.
+    fn stamp(&self, dim: usize, n_nodes: usize, v_prev: &[f64]) -> Result<SparseSys> {
+        let mut sys = SparseSys::new(dim);
+        // node index helper: ground (0) is dropped
+        let idx = |node: usize| -> Option<usize> { (node > 0).then(|| node - 1) };
+        let mut br = n_nodes - 1; // branch current unknowns follow nodes
+
+        for e in &self.elements {
+            match *e {
+                Element::Resistor(ref name, a, b, r) => {
+                    if r <= 0.0 {
+                        bail!("resistor {name} has non-positive value {r}");
+                    }
+                    let g = 1.0 / r;
+                    if let Some(i) = idx(a) {
+                        sys.add(i, i, g);
+                    }
+                    if let Some(j) = idx(b) {
+                        sys.add(j, j, g);
+                    }
+                    if let (Some(i), Some(j)) = (idx(a), idx(b)) {
+                        sys.add(i, j, -g);
+                        sys.add(j, i, -g);
+                    }
+                }
+                Element::Isource(_, a, b, amps) => {
+                    if let Some(i) = idx(a) {
+                        sys.add_b(i, -amps);
+                    }
+                    if let Some(j) = idx(b) {
+                        sys.add_b(j, amps);
+                    }
+                }
+                Element::Vsource(_, a, b, volts) => {
+                    if let Some(i) = idx(a) {
+                        sys.add(i, br, 1.0);
+                        sys.add(br, i, 1.0);
+                    }
+                    if let Some(j) = idx(b) {
+                        sys.add(j, br, -1.0);
+                        sys.add(br, j, -1.0);
+                    }
+                    sys.add_b(br, volts);
+                    br += 1;
+                }
+                Element::Vcvs(_, op, om, cp, cm, gain) => {
+                    // v(op) - v(om) = gain * (v(cp) - v(cm))
+                    if let Some(i) = idx(op) {
+                        sys.add(i, br, 1.0);
+                        sys.add(br, i, 1.0);
+                    }
+                    if let Some(j) = idx(om) {
+                        sys.add(j, br, -1.0);
+                        sys.add(br, j, -1.0);
+                    }
+                    if let Some(i) = idx(cp) {
+                        sys.add(br, i, -gain);
+                    }
+                    if let Some(j) = idx(cm) {
+                        sys.add(br, j, gain);
+                    }
+                    br += 1;
+                }
+                Element::Mult(_, out, ca, cb2, gain) => {
+                    // Newton linearization of V(out) = g*Va*Vb around
+                    // (Va0, Vb0):  V(out) - g*Vb0*Va - g*Va0*Vb = -g*Va0*Vb0
+                    let va0 = v_prev[ca];
+                    let vb0 = v_prev[cb2];
+                    if let Some(i) = idx(out) {
+                        sys.add(i, br, 1.0);
+                        sys.add(br, i, 1.0);
+                    }
+                    if let Some(i) = idx(ca) {
+                        sys.add(br, i, -gain * vb0);
+                    }
+                    if let Some(j) = idx(cb2) {
+                        sys.add(br, j, -gain * va0);
+                    }
+                    sys.add_b(br, -gain * va0 * vb0);
+                    br += 1;
+                }
+                Element::Diode(_, a, k, isat, nvt) => {
+                    // Newton companion: G_eq = dI/dV at v0, I_eq = I(v0) - G_eq*v0
+                    let v0 = (v_prev[a] - v_prev[k]).clamp(-5.0, 0.9);
+                    let ex = (v0 / nvt).exp();
+                    let g_eq = (isat / nvt * ex).max(1e-12);
+                    let i_eq = isat * (ex - 1.0) - g_eq * v0;
+                    if let Some(i) = idx(a) {
+                        sys.add(i, i, g_eq);
+                        sys.add_b(i, -i_eq);
+                    }
+                    if let Some(j) = idx(k) {
+                        sys.add(j, j, g_eq);
+                        sys.add_b(j, i_eq);
+                    }
+                    if let (Some(i), Some(j)) = (idx(a), idx(k)) {
+                        sys.add(i, j, -g_eq);
+                        sys.add(j, i, -g_eq);
+                    }
+                }
+            }
+        }
+        Ok(sys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn voltage_divider() {
+        let mut c = Circuit::new("divider");
+        let vin = c.node("in");
+        let mid = c.node("mid");
+        c.vsource("V1", vin, 0, 10.0);
+        c.resistor("R1", vin, mid, 1000.0);
+        c.resistor("R2", mid, 0, 1000.0);
+        let v = c.dc_op().unwrap();
+        assert!((v[mid] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn current_source_into_resistor() {
+        let mut c = Circuit::new("ir");
+        let n = c.node("n");
+        c.isource("I1", 0, n, 1e-3); // 1 mA into n
+        c.resistor("R1", n, 0, 2000.0);
+        let v = c.dc_op().unwrap();
+        assert!((v[n] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverting_tia() {
+        // TIA: 1 V through 1k into virtual ground, Rf = 1k -> out = -1 V
+        let mut c = Circuit::new("tia");
+        let vin = c.node("in");
+        let vminus = c.node("vm");
+        let out = c.node("out");
+        c.vsource("V1", vin, 0, 1.0);
+        c.resistor("Rin", vin, vminus, 1000.0);
+        c.resistor("Rf", vminus, out, 1000.0);
+        c.opamp("X1", 0, vminus, out);
+        let v = c.dc_op().unwrap();
+        assert!((v[out] + 1.0).abs() < 1e-4, "out {}", v[out]);
+        assert!(v[vminus].abs() < 1e-4, "virtual ground {}", v[vminus]);
+    }
+
+    #[test]
+    fn summing_tia_two_inputs() {
+        // two input branches into one virtual ground: out = -(v1*g1 + v2*g2)*Rf
+        let mut c = Circuit::new("sum");
+        let v1 = c.node("v1");
+        let v2 = c.node("v2");
+        let vm = c.node("vm");
+        let out = c.node("out");
+        c.vsource("V1", v1, 0, 0.5);
+        c.vsource("V2", v2, 0, -0.25);
+        c.resistor("R1", v1, vm, 1000.0);
+        c.resistor("R2", v2, vm, 500.0);
+        c.resistor("Rf", vm, out, 1000.0);
+        c.opamp("X1", 0, vm, out);
+        let v = c.dc_op().unwrap();
+        let expect = -(0.5 / 1000.0 - 0.25 / 500.0) * 1000.0; // = 0.0
+        assert!((v[out] - expect).abs() < 1e-4, "out {}", v[out]);
+    }
+
+    #[test]
+    fn diode_forward_drop() {
+        let mut c = Circuit::new("d");
+        let vin = c.node("in");
+        let mid = c.node("mid");
+        c.vsource("V1", vin, 0, 5.0);
+        c.resistor("R1", vin, mid, 1000.0);
+        c.diode("D1", mid, 0);
+        let v = c.dc_op().unwrap();
+        assert!(v[mid] > 0.4 && v[mid] < 0.85, "diode drop {}", v[mid]);
+    }
+
+    #[test]
+    fn diode_reverse_blocks() {
+        let mut c = Circuit::new("dr");
+        let vin = c.node("in");
+        let mid = c.node("mid");
+        c.vsource("V1", vin, 0, -5.0);
+        c.resistor("R1", vin, mid, 1000.0);
+        c.diode("D1", mid, 0);
+        let v = c.dc_op().unwrap();
+        assert!((v[mid] + 5.0).abs() < 0.01, "reverse diode should block: {}", v[mid]);
+    }
+
+    #[test]
+    fn set_vsource_updates() {
+        let mut c = Circuit::new("sv");
+        let vin = c.node("in");
+        c.vsource("V1", vin, 0, 1.0);
+        c.resistor("R1", vin, 0, 100.0);
+        assert!((c.dc_op().unwrap()[vin] - 1.0).abs() < 1e-12);
+        c.set_vsource("V1", 3.0).unwrap();
+        assert!((c.dc_op().unwrap()[vin] - 3.0).abs() < 1e-12);
+        assert!(c.set_vsource("nope", 0.0).is_err());
+    }
+
+    #[test]
+    fn negative_resistor_rejected() {
+        let mut c = Circuit::new("bad");
+        let n = c.node("n");
+        c.vsource("V1", n, 0, 1.0);
+        c.resistor("R1", n, 0, -5.0);
+        assert!(c.dc_op().is_err());
+    }
+
+    #[test]
+    fn larger_sparse_path() {
+        // >220 unknowns forces the sparse backend: chain of dividers
+        let mut c = Circuit::new("chain");
+        let mut prev = c.node("in");
+        c.vsource("V1", prev, 0, 1.0);
+        for i in 0..300 {
+            let nxt = c.node(&format!("n{i}"));
+            c.resistor(&format!("Ra{i}"), prev, nxt, 100.0);
+            c.resistor(&format!("Rb{i}"), nxt, 0, 1e6);
+            prev = nxt;
+        }
+        let v = c.dc_op().unwrap();
+        // RC-less transmission line: voltage decays monotonically along the
+        // ladder and stays strictly positive
+        let first = c.node_named("n0").unwrap();
+        let mid = c.node_named("n150").unwrap();
+        let last = c.node_named("n299").unwrap();
+        assert!(v[first] > v[mid] && v[mid] > v[last], "non-monotone ladder");
+        assert!(v[last] > 0.0 && v[first] < 1.0, "ladder end {}", v[last]);
+    }
+}

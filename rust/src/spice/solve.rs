@@ -1,0 +1,390 @@
+//! Linear solvers for the MNA system.
+//!
+//! * [`solve_dense`] — dense LU with partial pivoting (activation circuits,
+//!   unit tests; n <= a few hundred).
+//! * [`SparseSys`] — sparse Gaussian elimination over hash-map rows with a
+//!   column->rows index, in two elimination orderings:
+//!
+//!   - [`Ordering::Natural`]: node-number order with diagonal-preference
+//!     pivoting — the classic textbook/early-SPICE behaviour. On monolithic
+//!     crossbar matrices this floods the virtual-ground rows with fill-in
+//!     and goes superlinear in the column count, which is exactly the
+//!     simulation-time explosion the paper's Fig 7 reports for PSpice and
+//!     attacks with netlist segmentation.
+//!   - [`Ordering::Smart`]: Markowitz-lite (ascending initial column count)
+//!     with sparsest-pivot-row preference — our optimized mode; crossbar
+//!     systems eliminate input nodes through their single-entry V-source
+//!     branch rows with zero fill and solve near-linearly.
+//!
+//! Fig 7 benches run both (see benches/bench_segmentation.rs); the engine
+//! defaults to Smart everywhere else.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Dense LU with partial pivoting. O(n^3); fine for n <= ~512.
+pub fn solve_dense(a: &[Vec<f64>], b: &[f64]) -> Result<Vec<f64>> {
+    let n = b.len();
+    if a.len() != n || a.iter().any(|r| r.len() != n) {
+        bail!("dense solve: non-square system");
+    }
+    let mut m: Vec<Vec<f64>> = a.to_vec();
+    let mut x = b.to_vec();
+    for k in 0..n {
+        let (p, pv) = (k..n)
+            .map(|i| (i, m[i][k].abs()))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        if pv < 1e-300 {
+            bail!("dense solve: singular at column {k}");
+        }
+        m.swap(k, p);
+        x.swap(k, p);
+        for i in k + 1..n {
+            let f = m[i][k] / m[k][k];
+            if f == 0.0 {
+                continue;
+            }
+            for j in k..n {
+                m[i][j] -= f * m[k][j];
+            }
+            x[i] -= f * x[k];
+        }
+    }
+    for k in (0..n).rev() {
+        let mut s = x[k];
+        for j in k + 1..n {
+            s -= m[k][j] * x[j];
+        }
+        x[k] = s / m[k][k];
+    }
+    Ok(x)
+}
+
+/// Elimination ordering (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    Natural,
+    Smart,
+}
+
+/// Work/memory counters from one sparse solve.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveStats {
+    /// resident matrix entries at the end of elimination (original + fill)
+    pub peak_entries: usize,
+    pub unknowns: usize,
+}
+
+/// Sparse linear system `A x = b` assembled from triplets.
+#[derive(Debug, Clone, Default)]
+pub struct SparseSys {
+    pub n: usize,
+    triplets: Vec<(usize, usize, f64)>,
+    pub b: Vec<f64>,
+}
+
+impl SparseSys {
+    pub fn new(n: usize) -> Self {
+        Self { n, triplets: Vec::new(), b: vec![0.0; n] }
+    }
+
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        if v != 0.0 {
+            self.triplets.push((i, j, v));
+        }
+    }
+
+    pub fn add_b(&mut self, i: usize, v: f64) {
+        self.b[i] += v;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.triplets.len()
+    }
+
+    /// Raw (possibly duplicated) triplets — used by the dense fallback path.
+    pub fn iter_triplets(&self) -> impl Iterator<Item = &(usize, usize, f64)> {
+        self.triplets.iter()
+    }
+
+    pub fn solve(&self) -> Result<Vec<f64>> {
+        self.solve_with(Ordering::Smart)
+    }
+
+    pub fn solve_with(&self, ord: Ordering) -> Result<Vec<f64>> {
+        Ok(self.solve_with_stats(ord)?.0)
+    }
+
+    /// Sparse Gaussian elimination. Returns x with ||Ax-b|| small for
+    /// well-conditioned MNA systems (high-gain op-amps are ~1e6 so partial
+    /// magnitude checks guard the pivots), plus work/memory counters
+    /// (peak resident matrix entries incl. fill-in; elimination flops) —
+    /// the Fig 7 memory-footprint comparison reads these.
+    pub fn solve_with_stats(&self, ord: Ordering) -> Result<(Vec<f64>, SolveStats)> {
+        let n = self.n;
+        // assemble hash rows + column index
+        let mut rows: Vec<HashMap<usize, f64>> = vec![HashMap::new(); n];
+        for &(i, j, v) in &self.triplets {
+            *rows[i].entry(j).or_insert(0.0) += v;
+        }
+        for r in rows.iter_mut() {
+            r.retain(|_, v| *v != 0.0);
+        }
+        let mut col_rows: Vec<Vec<usize>> = vec![Vec::new(); n]; // may hold stale ids
+        for (i, r) in rows.iter().enumerate() {
+            for &j in r.keys() {
+                col_rows[j].push(i);
+            }
+        }
+        let mut b = self.b.clone();
+        let mut used = vec![false; n];
+
+        let col_order: Vec<usize> = match ord {
+            Ordering::Natural => (0..n).collect(),
+            Ordering::Smart => {
+                let mut order: Vec<usize> = (0..n).collect();
+                let counts: Vec<usize> = (0..n).map(|j| col_rows[j].len()).collect();
+                order.sort_by_key(|&j| counts[j]);
+                order
+            }
+        };
+
+        // (col, pivot row) in elimination order
+        let mut pivots: Vec<(usize, usize)> = Vec::with_capacity(n);
+        for &col in &col_order {
+            // prune stale ids, pick pivot
+            let mut best: Option<(usize, f64, usize)> = None; // (row, |v|, nnz)
+            let mut live: Vec<usize> = Vec::with_capacity(col_rows[col].len());
+            for &r in &col_rows[col] {
+                if used[r] {
+                    continue;
+                }
+                let Some(&v) = rows[r].get(&col) else { continue };
+                if v == 0.0 {
+                    continue;
+                }
+                live.push(r);
+                let av = v.abs();
+                let nz = rows[r].len();
+                let better = match (ord, best) {
+                    (_, None) => true,
+                    // Natural: classic partial pivoting — max |v| in the
+                    // column, no sparsity awareness (fill-in follows the
+                    // node numbering, the early-SPICE behaviour)
+                    (Ordering::Natural, Some((_, bv, _))) => av > bv,
+                    // Smart: prefer sparser rows unless magnitude collapses
+                    (Ordering::Smart, Some((_, bv, bn))) => {
+                        (nz < bn && av > 1e-3 * bv) || (av > 1e3 * bv && nz <= bn)
+                    }
+                };
+                if better {
+                    best = Some((r, av, nz));
+                }
+            }
+            let Some((prow, pv, _)) = best else {
+                bail!("sparse solve: singular at column {col}");
+            };
+            if pv < 1e-300 {
+                bail!("sparse solve: numerically singular at column {col}");
+            }
+            used[prow] = true;
+            pivots.push((col, prow));
+            let pivot_val = rows[prow][&col];
+            let prow_data: Vec<(usize, f64)> =
+                rows[prow].iter().map(|(&j, &v)| (j, v)).collect();
+            let bp = b[prow];
+            for &r in &live {
+                if r == prow || used[r] {
+                    continue;
+                }
+                let Some(&vc) = rows[r].get(&col) else { continue };
+                let f = vc / pivot_val;
+                rows[r].remove(&col);
+                if f == 0.0 {
+                    continue;
+                }
+                for &(j, v) in &prow_data {
+                    if j == col {
+                        continue;
+                    }
+                    let e = rows[r].entry(j).or_insert_with(|| {
+                        col_rows[j].push(r); // new fill-in
+                        0.0
+                    });
+                    *e -= f * v;
+                    if e.abs() < 1e-300 {
+                        rows[r].remove(&j);
+                    }
+                }
+                b[r] -= f * bp;
+            }
+            col_rows[col].clear();
+        }
+
+        // back substitution in reverse elimination order
+        let mut x = vec![0.0; n];
+        for &(col, prow) in pivots.iter().rev() {
+            let mut s = b[prow];
+            let mut diag = 0.0;
+            for (&j, &v) in &rows[prow] {
+                if j == col {
+                    diag = v;
+                } else {
+                    s -= v * x[j];
+                }
+            }
+            if diag.abs() < 1e-300 {
+                bail!("sparse solve: zero diagonal in back-substitution");
+            }
+            x[col] = s / diag;
+        }
+        let peak = rows.iter().map(|r| r.len()).sum::<usize>().max(self.triplets.len());
+        Ok((x, SolveStats { peak_entries: peak, unknowns: n }))
+    }
+
+    /// Residual max-norm ||Ax - b||_inf (for tests / diagnostics).
+    pub fn residual(&self, x: &[f64]) -> f64 {
+        let mut r = self.b.clone();
+        for &(i, j, v) in &self.triplets {
+            r[i] -= v * x[j];
+        }
+        r.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn dense_2x2() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let x = solve_dense(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_singular_detected() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve_dense(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn dense_needs_pivoting() {
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let x = solve_dense(&a, &[3.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    fn random_system(n: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, SparseSys, Vec<f64>) {
+        let mut dense = vec![vec![0.0; n]; n];
+        let mut sys = SparseSys::new(n);
+        for i in 0..n {
+            for _ in 0..3 {
+                let j = rng.below(n);
+                let v = rng.range_f64(-1.0, 1.0);
+                dense[i][j] += v;
+                sys.add(i, j, v);
+            }
+            dense[i][i] += 5.0;
+            sys.add(i, i, 5.0);
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        for (i, &v) in b.iter().enumerate() {
+            sys.add_b(i, v);
+        }
+        (dense, sys, b)
+    }
+
+    #[test]
+    fn sparse_matches_dense_random_both_orderings() {
+        let mut rng = Rng::new(11);
+        for trial in 0..8 {
+            let n = 5 + trial * 4;
+            let (dense, sys, b) = random_system(n, &mut rng);
+            let xd = solve_dense(&dense, &b).unwrap();
+            for ord in [Ordering::Smart, Ordering::Natural] {
+                let xs = sys.solve_with(ord).unwrap();
+                for i in 0..n {
+                    assert!((xd[i] - xs[i]).abs() < 1e-9, "{ord:?} trial {trial} x[{i}]");
+                }
+                assert!(sys.residual(&xs) < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_duplicate_triplets_summed() {
+        let mut s = SparseSys::new(1);
+        s.add(0, 0, 1.5);
+        s.add(0, 0, 0.5);
+        s.add_b(0, 4.0);
+        let x = s.solve().unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_singular_detected() {
+        let mut s = SparseSys::new(2);
+        s.add(0, 0, 1.0);
+        s.add(1, 0, 1.0); // column 1 empty
+        assert!(s.solve().is_err());
+        assert!(s.solve_with(Ordering::Natural).is_err());
+    }
+
+    #[test]
+    fn sparse_needs_off_diagonal_pivot() {
+        // zero diagonal forces non-diagonal pivot row in both orderings
+        let mut s = SparseSys::new(2);
+        s.add(0, 1, 1.0);
+        s.add(1, 0, 1.0);
+        s.add_b(0, 3.0);
+        s.add_b(1, 7.0);
+        for ord in [Ordering::Smart, Ordering::Natural] {
+            let x = s.solve_with(ord).unwrap();
+            assert!((x[0] - 7.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12, "{ord:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_block_diagonal_fast_path() {
+        // 200 independent 2x2 blocks — the segmented-crossbar structure
+        let n = 400;
+        let mut s = SparseSys::new(n);
+        for k in 0..200 {
+            let i = 2 * k;
+            s.add(i, i, 2.0);
+            s.add(i, i + 1, 1.0);
+            s.add(i + 1, i, 1.0);
+            s.add(i + 1, i + 1, 3.0);
+            s.add_b(i, 5.0);
+            s.add_b(i + 1, 10.0);
+        }
+        let x = s.solve().unwrap();
+        for k in 0..200 {
+            assert!((x[2 * k] - 1.0).abs() < 1e-10);
+            assert!((x[2 * k + 1] - 3.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn wide_value_range_stays_accurate() {
+        // mixes 1e-4-siemens conductances with 1e6 op-amp gains
+        let mut s = SparseSys::new(3);
+        s.add(0, 0, 1e-4);
+        s.add(0, 1, -1e-4);
+        s.add(1, 0, -1e-4);
+        s.add(1, 1, 2e-4);
+        s.add(1, 2, 1.0);
+        s.add(2, 1, 1e6);
+        s.add(2, 2, 1.0);
+        s.add_b(0, 1e-3);
+        let x = s.solve().unwrap();
+        assert!(s.residual(&x) < 1e-9);
+    }
+}

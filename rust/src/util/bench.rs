@@ -1,0 +1,130 @@
+//! Micro-bench harness (criterion is not in the offline crate cache).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that calls
+//! [`Bench::run`] per case: warmup, then timed iterations until both a
+//! minimum iteration count and a minimum wall budget are met; reports
+//! median / mean / p95 like criterion's summary line and collects rows so
+//! benches can print paper-style tables at the end.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bench {
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub warmup: usize,
+    pub rows: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { min_iters: 10, min_time: Duration::from_millis(300), warmup: 2, rows: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { min_iters: 3, min_time: Duration::from_millis(50), warmup: 1, rows: Vec::new() }
+    }
+
+    /// Time `f` (which must fully perform the work per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.min_time {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            p95: samples[((n * 95) / 100).min(n - 1)],
+            min: samples[0],
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>12?}  median {:>12?}  min {:>12?}",
+            stats.name, stats.iters, stats.mean, stats.median, stats.min
+        );
+        self.rows.push(stats.clone());
+        stats
+    }
+
+    /// Record an externally-measured single-shot duration (for expensive
+    /// cases where repeated runs are impractical, e.g. large SPICE solves).
+    pub fn record_once(&mut self, name: &str, d: Duration) -> Stats {
+        let stats = Stats {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            median: d,
+            p95: d,
+            min: d,
+        };
+        println!("{:<44} {:>10} iter   once {:>12?}", stats.name, 1, d);
+        self.rows.push(stats.clone());
+        stats
+    }
+
+    pub fn table(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{:<44} {:>14} {:>14}", "case", "median", "mean");
+        for r in &self.rows {
+            println!("{:<44} {:>14?} {:>14?}", r.name, r.median, r.mean);
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench::quick();
+        let s = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.median <= s.p95 || s.iters < 20);
+        assert_eq!(b.rows.len(), 1);
+    }
+
+    #[test]
+    fn record_once_row() {
+        let mut b = Bench::quick();
+        b.record_once("big", Duration::from_millis(5));
+        assert_eq!(b.rows[0].iters, 1);
+    }
+}

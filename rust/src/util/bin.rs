@@ -1,0 +1,138 @@
+//! Little-endian binary readers/writers for the artifact sidecar formats
+//! (weights.bin, dataset.bin, expected_logits.bin — see python/compile/aot.py
+//! and data.py for the producing side).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: u32 = 0x4D45_4D58; // "MEMX"
+
+pub fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_f32_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn write_f32_slice<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// weights.bin: `u32 magic | u32 n_f32 | f32 data[n]`
+pub fn read_weights_blob(path: &Path) -> Result<Vec<f32>> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let magic = read_u32(&mut r)?;
+    if magic != MAGIC {
+        bail!("weights.bin bad magic {magic:#x}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    read_f32_vec(&mut r, n)
+}
+
+/// dataset.bin: `u32 magic | u32 n | u32 h | u32 w | u32 c | f32 data | u8 labels`
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// NHWC, row-major
+    pub data: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC {
+            bail!("dataset.bin bad magic {magic:#x}");
+        }
+        let n = read_u32(&mut r)? as usize;
+        let h = read_u32(&mut r)? as usize;
+        let w = read_u32(&mut r)? as usize;
+        let c = read_u32(&mut r)? as usize;
+        let data = read_f32_vec(&mut r, n * h * w * c)?;
+        let mut labels = vec![0u8; n];
+        r.read_exact(&mut labels)?;
+        Ok(Self { n, h, w, c, data, labels })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        for v in [self.n, self.h, self.w, self.c] {
+            w.write_all(&(v as u32).to_le_bytes())?;
+        }
+        write_f32_slice(&mut w, &self.data)?;
+        w.write_all(&self.labels)?;
+        Ok(())
+    }
+
+    /// Image `i` as an NHWC slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// expected_logits.bin: `u32 n | u32 classes | f32 logits[n*classes]`
+pub fn read_expected_logits(path: &Path) -> Result<(usize, usize, Vec<f32>)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let n = read_u32(&mut r)? as usize;
+    let c = read_u32(&mut r)? as usize;
+    let data = read_f32_vec(&mut r, n * c)?;
+    Ok((n, c, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let d = Dataset {
+            n: 2,
+            h: 4,
+            w: 4,
+            c: 3,
+            data: (0..2 * 4 * 4 * 3).map(|i| i as f32 * 0.25).collect(),
+            labels: vec![3, 7],
+        };
+        let tmp = std::env::temp_dir().join("memx_ds_test.bin");
+        d.save(&tmp).unwrap();
+        let d2 = Dataset::load(&tmp).unwrap();
+        assert_eq!(d2.n, 2);
+        assert_eq!(d2.data, d.data);
+        assert_eq!(d2.labels, d.labels);
+        assert_eq!(d2.image(1).len(), d2.image_len());
+        assert_eq!(d2.image(1)[0], d.data[48]);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let tmp = std::env::temp_dir().join("memx_badmagic.bin");
+        std::fs::write(&tmp, [0u8; 64]).unwrap();
+        assert!(Dataset::load(&tmp).is_err());
+        assert!(read_weights_blob(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

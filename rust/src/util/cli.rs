@@ -1,0 +1,117 @@
+//! Flag parsing for the `memx` CLI (clap is not in the offline cache).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// `spec`: list of accepted flag names (without `--`). Flags listed with
+    /// a trailing `!` are boolean (no value).
+    pub fn parse(argv: &[String], spec: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let bool_flags: Vec<&str> =
+            spec.iter().filter(|s| s.ends_with('!')).map(|s| &s[..s.len() - 1]).collect();
+        let val_flags: Vec<&str> =
+            spec.iter().filter(|s| !s.ends_with('!')).map(|s| *s).collect();
+        a.known = spec.iter().map(|s| s.trim_end_matches('!').to_string()).collect();
+
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    if !val_flags.contains(&k) {
+                        bail!("unknown flag --{k}");
+                    }
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&flag) {
+                    a.bools.push(flag.to_string());
+                } else if val_flags.contains(&flag) {
+                    i += 1;
+                    let Some(v) = argv.get(i) else { bail!("--{flag} needs a value") };
+                    a.flags.insert(flag.to_string(), v.clone());
+                } else {
+                    bail!("unknown flag --{flag}");
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.iter().any(|b| b == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_bools() {
+        let a = Args::parse(&sv(&["--n", "5", "--verbose", "pos1", "--k=v"]),
+                            &["n", "k", "verbose!"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get("k"), Some("v"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&sv(&["--nope"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--n"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &["n"]).unwrap();
+        assert_eq!(a.get_usize("n", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("n", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("n", "d"), "d");
+    }
+}

@@ -1,0 +1,11 @@
+//! Support utilities hand-rolled for the offline environment: JSON codec,
+//! PRNG, binary artifact IO, scoped thread pool, CLI flags, bench and
+//! property-test harnesses (serde/rand/rayon/clap/criterion/proptest are not
+//! in the image's offline crate cache — DESIGN.md §4 S17).
+pub mod bench;
+pub mod bin;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,71 @@
+//! Tiny scoped parallel-map built on std::thread::scope.
+//!
+//! rayon is not in the offline crate cache; the coordinator and the
+//! segmented SPICE scheduler only need a static work-split map, which
+//! std::thread::scope provides without unsafe.
+
+/// Parallel map over `items` with up to `workers` OS threads.
+/// Results are returned in input order. Panics in workers propagate.
+pub fn par_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker missed slot")).collect()
+}
+
+/// Recommended worker count for this host.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = par_map(&xs, 4, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(par_map(&xs, 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        assert!(par_map(&xs, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let xs = vec![5];
+        assert_eq!(par_map(&xs, 16, |x| x * x), vec![25]);
+    }
+}

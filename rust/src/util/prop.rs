@@ -1,0 +1,86 @@
+//! Mini property-testing harness (proptest is not in the offline cache).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, performs a simple halving shrink over the generator seed
+//! space is not possible — instead we re-run with the failing seed printed so
+//! the case is reproducible, and shrink *sized* inputs when the generator
+//! supports it via [`Gen::resize`].
+
+use super::prng::Rng;
+
+/// A generator: seeded, sized random value.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run a property over `cases` random inputs with growing size.
+/// Panics with the seed + size of the first failure (after shrinking size).
+pub fn check<G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let size = 1 + (case * 25) / cases.max(1); // grow 1..=25
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        let v = gen.generate(&mut Rng::new(seed), size);
+        if !prop(&v) {
+            // shrink: retry with smaller sizes, same seed, find minimal failing size
+            let mut min_fail = size;
+            for s in 1..size {
+                let v2 = gen.generate(&mut Rng::new(seed), s);
+                if !prop(&v2) {
+                    min_fail = s;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed:#x}, size {min_fail} \
+                 (reproduce: Rng::new({seed:#x}), size {min_fail})"
+            );
+        }
+    }
+}
+
+/// Common generator: f32 vector with values in [-amp, amp].
+pub fn vec_f32(amp: f32) -> impl Gen<Value = Vec<f32>> {
+    move |rng: &mut Rng, size: usize| {
+        let n = 1 + rng.below(size * 8);
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * amp).collect()
+    }
+}
+
+/// Common generator: matrix dims (rows, cols) growing with size.
+pub fn dims() -> impl Gen<Value = (usize, usize)> {
+    |rng: &mut Rng, size: usize| (1 + rng.below(size * 6), 1 + rng.below(size * 6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("abs-nonneg", 50, vec_f32(3.0), |v| v.iter().all(|x| x.abs() >= 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        check("always-false", 5, dims(), |_| false);
+    }
+
+    #[test]
+    fn dims_positive() {
+        check("dims-positive", 50, dims(), |&(r, c)| r >= 1 && c >= 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! End-to-end runtime tests: PJRT engine + coordinator over the real AOT
+//! artifacts. These are the heaviest tests (XLA compiles + analog-model
+//! executions); they skip gracefully without artifacts.
+
+use std::path::{Path, PathBuf};
+
+use memx::coordinator::{accuracy, classify_dataset, Server, ServerConfig};
+use memx::runtime::{argmax_rows, Engine, Model};
+use memx::util::bin::{read_expected_logits, Dataset};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn digital_model_matches_python_accuracy() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file)).unwrap();
+    let (labels, _) = classify_dataset(&engine, Model::Digital, &ds, 64).unwrap();
+    let acc = accuracy(&labels, &ds.labels[..labels.len()]);
+    assert!(acc > 0.9, "digital accuracy {acc}");
+}
+
+#[test]
+fn analog_model_reproduces_table1() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file)).unwrap();
+    let (labels, _) = classify_dataset(&engine, Model::Analog, &ds, 32).unwrap();
+    let acc = accuracy(&labels, &ds.labels[..labels.len()]);
+    assert!(acc > 0.9, "memristor paradigm accuracy {acc} (paper: >90%)");
+}
+
+#[test]
+fn analog_logits_match_python_export() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let m = engine.manifest();
+    let ds = Dataset::load(&dir.join(&m.dataset_file)).unwrap();
+    let (n, classes, expected) = read_expected_logits(&dir.join(&m.expected_file)).unwrap();
+    let take = n.min(32);
+    let exec = engine.get(Model::Analog, engine.pick_batch(take)).unwrap();
+    let img = ds.image_len();
+    let mut buf = vec![0f32; exec.batch * img];
+    for j in 0..exec.batch {
+        buf[j * img..(j + 1) * img].copy_from_slice(ds.image(j.min(take - 1)));
+    }
+    let got = exec.run(&buf).unwrap();
+    let mut worst = 0f64;
+    for j in 0..take.min(exec.batch) {
+        for c in 0..classes {
+            worst = worst
+                .max((got[j * classes + c] as f64 - expected[j * classes + c] as f64).abs());
+        }
+    }
+    assert!(worst < 1e-3, "rust PJRT vs python jit diverged: {worst:.3e}");
+}
+
+#[test]
+fn batch_variants_agree() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file)).unwrap();
+    let img = ds.image_len();
+    let b1 = engine.get(Model::Digital, 1).unwrap();
+    let b8 = engine.get(Model::Digital, 8).unwrap();
+    let mut buf8 = vec![0f32; 8 * img];
+    for j in 0..8 {
+        buf8[j * img..(j + 1) * img].copy_from_slice(ds.image(j));
+    }
+    let out8 = b8.run(&buf8).unwrap();
+    for j in 0..8 {
+        let out1 = b1.run(ds.image(j)).unwrap();
+        for c in 0..b1.num_classes {
+            let d = (out1[c] - out8[j * b1.num_classes + c]).abs();
+            assert!(d < 1e-4, "img {j} class {c}: b1 {} vs b8 {}", out1[c], out8[j * 10 + c]);
+        }
+    }
+}
+
+#[test]
+fn pallas_kernel_lowering_matches_served_artifact() {
+    // the serving artifact uses the fast dot-form lowering; the pallas
+    // interpret-mode lowering of the SAME analog model must agree (L1<->L2
+    // cross-check at the compiled-artifact level)
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    if !engine.manifest().artifacts.contains_key("model_kernelpath_b8") {
+        eprintln!("skipping: kernel-path artifact not exported");
+        return;
+    }
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file)).unwrap();
+    let fast = engine.get(Model::Analog, 8).unwrap();
+    let kern = engine.compile_key("model_kernelpath_b8", 8).unwrap();
+    let img = ds.image_len();
+    let mut buf = vec![0f32; 8 * img];
+    for j in 0..8 {
+        buf[j * img..(j + 1) * img].copy_from_slice(ds.image(j));
+    }
+    let a = fast.run(&buf).unwrap();
+    let b = kern.run(&buf).unwrap();
+    let worst = a
+        .iter()
+        .zip(&b)
+        .fold(0f64, |m, (x, y)| m.max((x - y).abs() as f64));
+    assert!(worst < 1e-3, "kernel vs dot lowering diverged: {worst:.3e}");
+}
+
+#[test]
+fn engine_rejects_bad_input_size() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let exec = engine.get(Model::Digital, 1).unwrap();
+    assert!(exec.run(&[0.0; 7]).is_err());
+}
+
+#[test]
+fn pick_batch_policy() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    assert_eq!(engine.pick_batch(1), 1);
+    assert_eq!(engine.pick_batch(7), 1);
+    assert_eq!(engine.pick_batch(8), 8);
+    assert_eq!(engine.pick_batch(31), 8);
+    assert_eq!(engine.pick_batch(100), 32);
+}
+
+#[test]
+fn server_serves_concurrent_clients() {
+    let dir = require_artifacts!();
+    let ds = {
+        let m = memx::nn::Manifest::load(&dir).unwrap();
+        Dataset::load(&dir.join(&m.dataset_file)).unwrap()
+    };
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            model: Model::Digital,
+            max_wait: std::time::Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    let n = 24;
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let client = server.client();
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let c = client.clone();
+            let ds = &ds;
+            let correct = &correct;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let p = c.classify(ds.image(i).to_vec()).unwrap();
+                assert_eq!(p.logits.len(), 10);
+                if p.label == ds.labels[i] as usize {
+                    correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches >= 1);
+    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64;
+    assert!(acc > 0.9, "served accuracy {acc}");
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_malformed_image() {
+    let dir = require_artifacts!();
+    let server = Server::start(&dir, ServerConfig::default()).unwrap();
+    let client = server.client();
+    assert!(client.classify(vec![0.0; 5]).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn argmax_consistency_with_served_labels() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file)).unwrap();
+    let exec = engine.get(Model::Digital, 1).unwrap();
+    let logits = exec.run(ds.image(0)).unwrap();
+    let l = argmax_rows(&logits, exec.num_classes)[0];
+    assert_eq!(l, ds.labels[0] as usize);
+}

@@ -1,0 +1,235 @@
+//! Integration tests over the real trained artifacts (no PJRT needed here —
+//! see e2e_runtime.rs for the executable path). Skipped gracefully when
+//! `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use memx::mapper::{self, MapMode};
+use memx::netlist;
+use memx::nn::{Layer, Manifest, WeightStore};
+use memx::power;
+use memx::spice::solve::Ordering;
+use memx::util::bin::Dataset;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.num_classes, 10);
+    assert_eq!(m.img, 32);
+    assert!(m.digital_test_acc > 0.9, "trained model must clear 90%");
+    assert_eq!(m.units().len(), 14); // input + 11 bottlenecks + last + classifier
+    // Eq 1 holds for every conv
+    for l in &m.layers {
+        if let Layer::Conv(g) | Layer::DwConv(g) = l {
+            g.check_geometry().unwrap();
+        }
+    }
+    // every referenced weight exists in the table
+    for l in &m.layers {
+        let wname = match l {
+            Layer::Conv(g) | Layer::DwConv(g) => Some(g.weight.clone()),
+            Layer::Fc { weight, .. } | Layer::PConv { weight, .. } => Some(weight.clone()),
+            _ => None,
+        };
+        if let Some(w) = wname {
+            assert!(m.weight_entry(&w).is_some(), "missing weight {w}");
+        }
+    }
+}
+
+#[test]
+fn weight_store_tensors_match_manifest_shapes() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    for e in &m.weights {
+        let t = ws.get(&e.name).unwrap();
+        assert_eq!(t.numel(), e.len, "{}", e.name);
+        assert_eq!(t.shape, e.shape, "{}", e.name);
+        // analog scale must bound the data
+        if let Some(s) = t.scale {
+            assert!(t.max_abs() as f64 <= s * (1.0 + 1e-5), "{}", e.name);
+        }
+    }
+}
+
+#[test]
+fn dataset_loads_and_is_balanced() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ds = Dataset::load(&dir.join(&m.dataset_file)).unwrap();
+    assert_eq!(ds.n, m.dataset_n);
+    assert_eq!((ds.h, ds.w, ds.c), (32, 32, 3));
+    assert!(ds.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    let mut counts = [0usize; 10];
+    for &l in &ds.labels {
+        counts[l as usize] += 1;
+    }
+    assert!(counts.iter().all(|&c| c == ds.n / 10));
+}
+
+#[test]
+fn table4_mapping_totals_sane() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let net = mapper::map_network(&m, &ws, MapMode::Inverted).unwrap();
+    assert_eq!(net.layers.len(), m.layers.len());
+    assert!(net.total_memristors() > 100_000, "scaled net places many devices");
+    assert!(net.total_opamps() > 1_000);
+    assert!(net.memristor_stages() > 50);
+    // actual placed devices never exceed the paper's closed-form bound
+    for l in &net.layers {
+        if l.kind == "Conv" || l.kind == "DConv" {
+            assert!(
+                l.memristors <= l.formula_memristors,
+                "{}: {} > formula {}",
+                l.name,
+                l.memristors,
+                l.formula_memristors
+            );
+        }
+    }
+}
+
+#[test]
+fn opamp_halving_claim() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let inv = mapper::map_network(&m, &ws, MapMode::Inverted).unwrap();
+    let dual = mapper::map_network(&m, &ws, MapMode::Dual).unwrap();
+    assert_eq!(inv.total_memristors(), dual.total_memristors());
+    let ratio = inv.total_opamps() as f64 / dual.total_opamps() as f64;
+    // crossbar ports halve exactly; activation/CMOS op-amps are mode-free,
+    // so the overall ratio sits between 0.5 and 1.0, close to 0.5
+    assert!(ratio > 0.45 && ratio < 0.75, "op-amp ratio {ratio}");
+}
+
+#[test]
+fn trained_fc_crossbar_spice_matches_ideal() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    for mode in [MapMode::Inverted, MapMode::Dual] {
+        let cb = mapper::build_fc_crossbar(&m, &ws, "cls.fc2", mode).unwrap();
+        let inputs: Vec<f64> =
+            (0..cb.region).map(|i| ((i as f64) * 0.21).sin() * 0.5).collect();
+        let ideal = cb.eval_ideal(&inputs);
+        let segs = netlist::plan_segments(cb.cols, 0);
+        let text = netlist::emit_crossbar(&cb, &m.device, &segs[0], Some(&inputs), 1);
+        let circuit = netlist::parse(&text).unwrap();
+        let outs =
+            netlist::solve_segment_outputs(&circuit, &segs[0], mode.inverted(), Ordering::Smart)
+                .unwrap();
+        for (c, (got, want)) in outs.iter().zip(&ideal).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-3,
+                "{mode:?} col {c}: spice {got} vs ideal {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn netlist_files_roundtrip_from_disk() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let out = std::env::temp_dir().join("memx_netlist_test");
+    let files =
+        netlist::emit_layer_netlists(&m, &ws, "cls.fc2", MapMode::Inverted, 4, &out).unwrap();
+    assert!(files.len() >= 2, "10 cols / 4 per seg -> 3 files");
+    for f in &files {
+        let text = std::fs::read_to_string(f).unwrap();
+        let c = netlist::parse(&text).unwrap();
+        assert!(!c.elements.is_empty());
+    }
+    std::fs::remove_dir_all(out).ok();
+}
+
+#[test]
+fn segmented_equals_monolithic_on_trained_layer() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let cb = mapper::build_fc_crossbar(&m, &ws, "cls.fc2", MapMode::Inverted).unwrap();
+    let inputs: Vec<f64> = (0..cb.region).map(|i| (i as f64 / 50.0).cos() * 0.3).collect();
+    let run = |segment: usize| -> Vec<f64> {
+        let segs = netlist::plan_segments(cb.cols, segment);
+        segs.iter()
+            .flat_map(|seg| {
+                let text =
+                    netlist::emit_crossbar(&cb, &m.device, seg, Some(&inputs), segs.len());
+                netlist::solve_segment_outputs(
+                    &netlist::parse(&text).unwrap(),
+                    seg,
+                    true,
+                    Ordering::Smart,
+                )
+                .unwrap()
+            })
+            .collect()
+    };
+    let mono = run(0);
+    let seg = run(3);
+    for (a, b) in mono.iter().zip(&seg) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn latency_energy_models_on_trained_network() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let net = mapper::map_network(&m, &ws, MapMode::Inverted).unwrap();
+    let t = power::latency(&net, &m.device);
+    let e = power::energy(&net, &m.device, &t);
+    // µs-scale analog inference, far below the paper's CPU/GPU baselines
+    assert!(t.total > 1e-6 && t.total < 1e-3, "latency {}", t.total);
+    assert!(t.total < power::T_GPU_RTX4090);
+    assert!(e.total > 0.0 && e.total < power::E_CPU_I7_12700);
+    let tp = power::latency_pipelined(&net, &m.device);
+    assert!(tp.total < t.total);
+    assert!(power::T_GPU_RTX4090 / tp.total > 100.0, "pipelined regime beats GPU >100x");
+}
+
+#[test]
+fn conv_crossbar_builds_for_every_conv_layer() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let mut checked = 0;
+    for l in &m.layers {
+        if let Layer::Conv(g) | Layer::DwConv(g) = l {
+            let cb = mapper::build_conv_crossbar(&m, &ws, &g.name, 0, 0, MapMode::Inverted)
+                .unwrap();
+            assert_eq!(cb.rows, 2 * (g.h_in + 2 * g.padding) * (g.w_in + 2 * g.padding) + 2);
+            assert_eq!(cb.cols, g.h_out * g.w_out);
+            for d in &cb.devices {
+                assert!(d.row < cb.rows && d.col < cb.cols);
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 20, "expected many conv layers, got {checked}");
+}

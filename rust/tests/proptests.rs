@@ -1,0 +1,281 @@
+//! Property-based tests (util::prop mini-harness; proptest is not in the
+//! offline crate cache) over the coordinator invariants, the layout
+//! formulas, the solver and the JSON codec.
+
+use memx::coordinator::batcher::plan_batch;
+use memx::mapper::layout::{
+    out_dim, p_neg, p_pos, place_conv_kernel, place_fc, ConvXbarGeom, FcXbarGeom,
+};
+use memx::mapper::{self, MapMode};
+use memx::netlist::plan_segments;
+use memx::spice::solve::SparseSys;
+use memx::util::json::Json;
+use memx::util::prng::Rng;
+use memx::util::prop::check;
+
+#[test]
+fn prop_eq1_consistent_with_placement_bounds() {
+    check(
+        "eq1-bounds",
+        200,
+        |rng: &mut Rng, size: usize| {
+            let w = 3 + rng.below(4 + size * 2);
+            let k = 1 + rng.below(w.min(5));
+            let p = rng.below(k); // padding < kernel
+            let s = 1 + rng.below(2);
+            (w, k, p, s)
+        },
+        |&(w, k, p, s)| {
+            let o = out_dim(w, k, p, s);
+            // last window must fit in the padded input
+            (o - 1) * s + k <= w + 2 * p && o >= 1
+        },
+    );
+}
+
+#[test]
+fn prop_eq23_rows_disjoint_regions() {
+    check(
+        "eq2-eq3-regions",
+        100,
+        |rng: &mut Rng, size: usize| {
+            let w = 3 + rng.below(3 + size);
+            let k = 1 + rng.below(w.min(4));
+            let s = 1 + rng.below(2);
+            (w, k, s, rng.next_u64())
+        },
+        |&(w, k, s, _)| {
+            let g = ConvXbarGeom::from_conv(w, w, k, s, 0);
+            let region = g.wr * g.wc;
+            (0..g.cols()).all(|i| {
+                let pp = p_pos(i, g.oc, g.wc, s);
+                let pn = p_neg(i, g.oc, g.wr, g.wc, s);
+                pp < region && pn >= region && pn == pp + region
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_placement_device_count_equals_nonzeros_times_outputs() {
+    check(
+        "placement-count",
+        100,
+        |rng: &mut Rng, size: usize| {
+            let w = 4 + rng.below(3 + size);
+            let k = 1 + rng.below(3);
+            let kernel: Vec<f64> = (0..k * k)
+                .map(|_| {
+                    if rng.f64() < 0.3 {
+                        0.0
+                    } else {
+                        rng.range_f64(-1.0, 1.0)
+                    }
+                })
+                .collect();
+            (w, k, kernel)
+        },
+        |(w, k, kernel)| {
+            let g = ConvXbarGeom::from_conv(*w, *w, *k, 1, 0);
+            let placed = place_conv_kernel(&g, kernel, true);
+            let nnz = kernel.iter().filter(|&&v| v != 0.0).count();
+            placed.len() == nnz * g.cols()
+        },
+    );
+}
+
+#[test]
+fn prop_fc_eval_is_linear() {
+    // crossbar transfer must be linear below the rails: f(a+b) = f(a)+f(b)
+    check(
+        "fc-linearity",
+        60,
+        |rng: &mut Rng, size: usize| {
+            let cin = 2 + rng.below(4 + size);
+            let cout = 1 + rng.below(3 + size / 2);
+            (cin, cout, rng.next_u64())
+        },
+        |&(cin, cout, seed)| {
+            let cb = mapper::build_synthetic_fc(cin, cout, 64, MapMode::Inverted, seed);
+            let mut rng = Rng::new(seed ^ 0xabc);
+            let a: Vec<f64> = (0..cin).map(|_| rng.range_f64(-0.3, 0.3)).collect();
+            let b: Vec<f64> = (0..cin).map(|_| rng.range_f64(-0.3, 0.3)).collect();
+            let ab: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            let fa = cb.eval_ideal(&a);
+            let fb = cb.eval_ideal(&b);
+            let fab = cb.eval_ideal(&ab);
+            fab.iter()
+                .zip(fa.iter().zip(&fb))
+                .all(|(s, (x, y))| (s - (x + y)).abs() < 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_error_bounded() {
+    check(
+        "quantize-bound",
+        200,
+        |rng: &mut Rng, _| (rng.range_f64(0.0, 1.0), 2 + rng.below(255)),
+        |&(x, levels)| {
+            let q = mapper::quantize_unit(x, levels);
+            (q - x).abs() <= 0.5 / (levels - 1) as f64 + 1e-12 && (0.0..=1.0).contains(&q)
+        },
+    );
+}
+
+#[test]
+fn prop_fc_dual_inverted_same_function() {
+    check(
+        "dual-inverted-equal",
+        40,
+        |rng: &mut Rng, size: usize| (2 + rng.below(4 + size), 1 + rng.below(4), rng.next_u64()),
+        |&(cin, cout, seed)| {
+            let a = mapper::build_synthetic_fc(cin, cout, 64, MapMode::Inverted, seed);
+            let b = mapper::build_synthetic_fc(cin, cout, 64, MapMode::Dual, seed);
+            let mut rng = Rng::new(seed);
+            let v: Vec<f64> = (0..cin).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+            a.eval_ideal(&v)
+                .iter()
+                .zip(b.eval_ideal(&v))
+                .all(|(x, y)| (x - y).abs() < 1e-12)
+        },
+    );
+}
+
+#[test]
+fn prop_fc_placement_one_side() {
+    check(
+        "fc-one-side",
+        60,
+        |rng: &mut Rng, size: usize| {
+            let cin = 1 + rng.below(5 + size);
+            let cout = 1 + rng.below(4);
+            let w: Vec<f64> = (0..cin * cout).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            (cin, cout, w)
+        },
+        |(cin, cout, w)| {
+            let g = FcXbarGeom { cin: *cin, cout: *cout };
+            let placed = place_fc(&g, w, None, true);
+            // at most one device per (row mod cin, col)
+            let mut seen = std::collections::HashSet::new();
+            placed.iter().all(|p| p.row < g.rows() - 2 && seen.insert((p.row % cin, p.col)))
+        },
+    );
+}
+
+#[test]
+fn prop_segments_partition_columns() {
+    check(
+        "segments-partition",
+        100,
+        |rng: &mut Rng, size: usize| (1 + rng.below(50 * size), rng.below(70)),
+        |&(cols, seg)| {
+            let segs = plan_segments(cols, seg);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for s in &segs {
+                if s.col_start != prev_end {
+                    return false;
+                }
+                covered += s.col_end - s.col_start;
+                prev_end = s.col_end;
+            }
+            covered == cols && prev_end == cols
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_exceeds_queue_or_sizes() {
+    check(
+        "batcher-sound",
+        150,
+        |rng: &mut Rng, _| {
+            let avail = vec![1usize, 8, 32];
+            (avail, rng.below(100), rng.bool())
+        },
+        |(avail, queued, waited)| match plan_batch(avail, *queued, *waited) {
+            None => *queued == 0 || (!waited && *queued < 32),
+            Some(p) => {
+                avail.contains(&p.size) && p.real <= p.size && p.real <= *queued && p.real > 0
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_solver_residual_small() {
+    check(
+        "sparse-residual",
+        40,
+        |rng: &mut Rng, size: usize| {
+            let n = 3 + rng.below(5 + size * 4);
+            let mut sys = SparseSys::new(n);
+            for i in 0..n {
+                for _ in 0..3 {
+                    sys.add(i, rng.below(n), rng.range_f64(-1.0, 1.0));
+                }
+                sys.add(i, i, 4.0 + rng.f64());
+                sys.add_b(i, rng.range_f64(-2.0, 2.0));
+            }
+            sys
+        },
+        |sys| match sys.solve() {
+            // loose absolute bound: random ill-scaled systems accumulate
+            // ~1e-6 residuals in f64; a *wrong* solve shows O(1) residuals,
+            // which is what this property guards against
+            Ok(x) => sys.residual(&x) < 1e-4,
+            Err(_) => false,
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| char::from(32 + rng.below(94) as u8)).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        "json-roundtrip",
+        120,
+        |rng: &mut Rng, size: usize| gen_json(rng, (size / 6).min(3)),
+        |v| Json::parse(&v.to_string()).map(|p| p == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn prop_prng_shuffle_preserves_multiset() {
+    check(
+        "shuffle-multiset",
+        60,
+        |rng: &mut Rng, size: usize| {
+            let n = 1 + rng.below(10 * size);
+            let v: Vec<u32> = (0..n).map(|_| rng.below(16) as u32).collect();
+            (v, rng.next_u64())
+        },
+        |(v, seed)| {
+            let mut shuffled = v.clone();
+            Rng::new(*seed).shuffle(&mut shuffled);
+            let mut a = v.clone();
+            let mut b = shuffled;
+            a.sort();
+            b.sort();
+            a == b
+        },
+    );
+}
