@@ -7,17 +7,27 @@
 //! emits + simulates its SPICE netlist, and prints the latency/energy
 //! estimates — every major subsystem in ~80 lines.
 
+#[cfg(feature = "runtime-xla")]
 use std::path::Path;
 
+#[cfg(feature = "runtime-xla")]
 use memx::coordinator::{accuracy, classify_dataset};
+#[cfg(feature = "runtime-xla")]
 use memx::mapper::{self, MapMode};
+#[cfg(feature = "runtime-xla")]
 use memx::netlist;
+#[cfg(feature = "runtime-xla")]
 use memx::nn::{Manifest, WeightStore};
+#[cfg(feature = "runtime-xla")]
 use memx::power;
+#[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
+#[cfg(feature = "runtime-xla")]
 use memx::spice::solve::Ordering;
+#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 
+#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
 
@@ -70,4 +80,12 @@ fn main() -> anyhow::Result<()> {
         e.total * 1e6
     );
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn main() {
+    eprintln!(
+        "this example needs the PJRT runtime: rebuild with --features runtime-xla \
+         (requires the xla crate + libxla_extension; see Cargo.toml)"
+    );
 }

@@ -11,14 +11,21 @@
 //! and the digital fp32 baseline — the Table 1 row plus the Fig 8 "this
 //! testbed" columns. Results are recorded in EXPERIMENTS.md §E1.
 
+#[cfg(feature = "runtime-xla")]
 use std::path::Path;
+#[cfg(feature = "runtime-xla")]
 use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(feature = "runtime-xla")]
 use std::time::Instant;
 
+#[cfg(feature = "runtime-xla")]
 use memx::coordinator::{Server, ServerConfig};
+#[cfg(feature = "runtime-xla")]
 use memx::runtime::Model;
+#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 
+#[cfg(feature = "runtime-xla")]
 fn run_model(dir: &Path, model: Model, ds: &Dataset, n: usize) -> anyhow::Result<f64> {
     println!("\n=== {model:?} model, {n} requests, 4 closed-loop clients ===");
     let server = Server::start(
@@ -57,6 +64,7 @@ fn run_model(dir: &Path, model: Model, ds: &Dataset, n: usize) -> anyhow::Result
     Ok(acc)
 }
 
+#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
@@ -79,4 +87,12 @@ fn main() -> anyhow::Result<()> {
     let ok = acc_analog > 0.9 && (acc_digital - acc_analog).abs() < 0.02;
     println!("reproduction          : {}", if ok { "PASS" } else { "CHECK" });
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn main() {
+    eprintln!(
+        "this example needs the PJRT runtime: rebuild with --features runtime-xla \
+         (requires the xla crate + libxla_extension; see Cargo.toml)"
+    );
 }

@@ -3,12 +3,17 @@
 //!
 //!   cargo bench --bench bench_accuracy
 
+#[cfg(feature = "runtime-xla")]
 use std::path::Path;
 
+#[cfg(feature = "runtime-xla")]
 use memx::coordinator::{accuracy, classify_dataset};
+#[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
+#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 
+#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -33,4 +38,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("paper Table 1 'this work': 90.36% on CIFAR-10 (analog ≈ digital)");
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn main() {
+    eprintln!("bench_accuracy: built without the runtime-xla feature; skipping (PJRT required)");
 }

@@ -7,7 +7,8 @@ use memx::mapper::{self, MapMode};
 use memx::netlist;
 use memx::nn::DeviceJson;
 use memx::spice::solve::Ordering;
-use memx::util::bench::{black_box, Bench};
+use memx::util::bench::{append_json_report, black_box, Bench};
+use memx::util::pool;
 
 fn device() -> DeviceJson {
     DeviceJson {
@@ -30,6 +31,7 @@ fn device() -> DeviceJson {
 fn main() {
     let dev = device();
     let mut b = Bench::default();
+    let mut derived: Vec<(String, f64)> = Vec::new();
 
     for &n in &[64usize, 256, 512] {
         let cb = mapper::build_synthetic_fc(n, n, 64, MapMode::Inverted, 5);
@@ -42,7 +44,7 @@ fn main() {
         println!("    -> {:.1} M device-ops/s", macs / s.mean_secs() / 1e6);
 
         let segs = netlist::plan_segments(cb.cols, 64);
-        b.run(&format!("spice seg64 {n}x{n} (emit+parse+solve all)"), || {
+        let cold = b.run(&format!("spice seg64 {n}x{n} (emit+parse+solve all)"), || {
             for seg in &segs {
                 let text = netlist::emit_crossbar(&cb, &dev, seg, Some(&inputs), segs.len());
                 let c = netlist::parse(&text).unwrap();
@@ -51,6 +53,24 @@ fn main() {
                 );
             }
         });
+
+        // factor-once/solve-many: same read served from cached per-segment
+        // LU factorizations, new inputs every iteration (RHS-only re-solves)
+        let workers = pool::default_workers();
+        let mut sim = cb.sim(&dev, 64, Ordering::Smart).unwrap();
+        let mut k = 0usize;
+        let warm = b.run(&format!("spice seg64 {n}x{n} cached resolve"), || {
+            k += 1;
+            let v: Vec<f64> =
+                (0..n).map(|i| ((i + k) as f64 * 0.31).sin() * 0.4).collect();
+            black_box(sim.solve_par(&v, workers).unwrap());
+        });
+        let speedup = cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
+        println!("    -> cached-resolve median speedup {speedup:.1}x");
+        derived.push((format!("seg64_{n}x{n}_cold_vs_cached"), speedup));
     }
     b.table("crossbar microbenchmarks");
+    if let Err(e) = append_json_report("BENCH_spice.json", "bench_crossbar", &b.rows, &derived) {
+        eprintln!("warning: could not write BENCH_spice.json: {e}");
+    }
 }

@@ -4,15 +4,23 @@
 //!
 //!   cargo bench --bench bench_inference
 
+#[cfg(feature = "runtime-xla")]
 use std::path::Path;
 
+#[cfg(feature = "runtime-xla")]
 use memx::mapper::{self, MapMode};
+#[cfg(feature = "runtime-xla")]
 use memx::nn::{Manifest, WeightStore};
+#[cfg(feature = "runtime-xla")]
 use memx::power;
+#[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
+#[cfg(feature = "runtime-xla")]
 use memx::util::bench::Bench;
+#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 
+#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -67,4 +75,9 @@ fn main() -> anyhow::Result<()> {
     b.table("Fig 8 — measured digital/analog-model latency on this host");
     println!("\npaper §5.2: GPU 0.1654 ms, CPU 3.3924 ms per image; analog 1.24 µs");
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn main() {
+    eprintln!("bench_inference: built without the runtime-xla feature; skipping (PJRT required)");
 }

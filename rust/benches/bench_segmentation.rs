@@ -21,6 +21,8 @@ use memx::mapper::{self, MapMode};
 use memx::netlist;
 use memx::nn::DeviceJson;
 use memx::spice::solve::Ordering;
+use memx::util::bench;
+use memx::util::pool;
 
 fn device() -> DeviceJson {
     DeviceJson {
@@ -113,4 +115,71 @@ fn main() {
     println!("our engine: the time penalty is an artifact of LU ordering (Natural");
     println!("pathology shown in bench_spice); the enduring segmentation win here is");
     println!("peak solver memory (+ distributed execution via par_map on multicore).");
+
+    // --- factor-once / solve-many over segments -------------------------
+    // The per-call path above re-emits, re-parses and re-eliminates every
+    // segment per input vector. CrossbarSim factors each segment once and
+    // answers subsequent vectors from the cached LU (parallel segments,
+    // multi-RHS batch path). Cold = first read incl. emit+parse+analyze.
+    println!("\n== factor-once/solve-many: segmented crossbar reads ({SEG} cols/file) ==");
+    println!("| size | cold first read | cached read | speedup | batch of 8 (per read) | max |Δ| vs per-call |");
+    println!("|---|---:|---:|---:|---:|---:|");
+    let workers = pool::default_workers();
+    let mut stats = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    for &n in &sizes {
+        let cb = mapper::build_synthetic_fc(n, n, 64, MapMode::Inverted, 99);
+        let inputs: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.13).sin() * 0.4).collect();
+        let reference = simulate(&cb, &dev, SEG, Ordering::Smart, &inputs);
+
+        let t0 = Instant::now();
+        let mut sim = netlist::CrossbarSim::new(&cb, &dev, SEG, Ordering::Smart)
+            .expect("build sim");
+        let first = sim.solve_par(&inputs, workers).expect("cold read");
+        let cold = t0.elapsed();
+
+        // cached reads with fresh input vectors (RHS-only edits)
+        let reads = 8usize;
+        let t0 = Instant::now();
+        let mut last = Vec::new();
+        for k in 1..=reads {
+            let v: Vec<f64> =
+                (0..n).map(|i| ((i + k) as f64 * 0.17).sin() * 0.4).collect();
+            last = sim.solve_par(&v, workers).expect("cached read");
+        }
+        let cached = t0.elapsed() / reads as u32;
+        assert_eq!(last.len(), cb.cols);
+
+        // batched multi-RHS reads
+        let batch: Vec<Vec<f64>> = (0..8)
+            .map(|k| (0..n).map(|i| ((i * 3 + k) as f64 * 0.11).cos() * 0.4).collect())
+            .collect();
+        let t0 = Instant::now();
+        let outs = sim.solve_batch(&batch, workers).expect("batch read");
+        let per_batched = t0.elapsed() / batch.len() as u32;
+        assert_eq!(outs.len(), batch.len());
+
+        let err = first
+            .iter()
+            .zip(&reference.outputs)
+            .fold(0f64, |a, (g, r)| a.max((g - r).abs()));
+        let speedup = cold.as_secs_f64() / cached.as_secs_f64().max(1e-12);
+        println!(
+            "| {n}x{n} | {cold:?} | {cached:?} | {speedup:.1}x | {per_batched:?} | {err:.1e} |"
+        );
+        stats.push(bench::Stats {
+            name: format!("seg{SEG} {n}x{n} cached read"),
+            iters: reads,
+            mean: cached,
+            median: cached,
+            p95: cached,
+            min: cached,
+        });
+        derived.push((format!("seg_{n}x{n}_cold_vs_cached"), speedup));
+    }
+    if let Err(e) =
+        bench::append_json_report("BENCH_spice.json", "bench_segmentation", &stats, &derived)
+    {
+        eprintln!("warning: could not write BENCH_spice.json: {e}");
+    }
 }

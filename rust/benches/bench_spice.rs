@@ -1,13 +1,19 @@
 //! SPICE solver scaling — MNA solve cost vs system size for the two
 //! elimination orderings and the dense fallback (supports §Perf and the
 //! Fig 7 mechanism analysis: Natural ordering goes superlinear on
-//! monolithic crossbars; Smart stays near-linear).
+//! monolithic crossbars; Smart stays near-linear), plus the
+//! factor-once/solve-many engine: a sweep/Newton-style repeated-solve
+//! workload (same topology, new source values every iteration) comparing
+//! the seed per-call `solve_with_stats` path against cached re-solves.
 //!
 //!   cargo bench --bench bench_spice
+//!
+//! Appends a run record (rows + cached-vs-cold speedups) to
+//! BENCH_spice.json at the repo root.
 
 use memx::spice::solve::{solve_dense, Ordering, SparseSys};
 use memx::spice::Circuit;
-use memx::util::bench::{black_box, Bench};
+use memx::util::bench::{append_json_report, black_box, Bench};
 use memx::util::prng::Rng;
 
 /// Build the MNA system of an n-input, c-column ideal-TIA crossbar.
@@ -50,12 +56,12 @@ fn main() {
         });
     }
 
-    // sparse orderings on crossbar MNA systems
+    // sparse orderings on crossbar MNA systems (per-call reference engine)
     for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
         let circuit = crossbar_circuit(inputs, cols, &mut rng);
         for ord in [Ordering::Smart, Ordering::Natural] {
-            b.run(&format!("mna {inputs}x{cols} {ord:?}"), || {
-                black_box(circuit.dc_op_with(ord).unwrap());
+            b.run(&format!("mna {inputs}x{cols} {ord:?} reference"), || {
+                black_box(circuit.dc_op_stats_reference(ord).unwrap());
             });
         }
     }
@@ -79,5 +85,42 @@ fn main() {
         });
     }
 
+    // --- factor-once/solve-many: repeated-solve workload ---------------
+    // Sweep/Newton style: same topology every iteration, new source values
+    // (RHS-only edits). Cold = the seed per-call reference elimination;
+    // cached = the factored engine reusing the symbolic factorization
+    // (pure re-solves at O(nnz(L+U))).
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
+        let mut circuit = crossbar_circuit(inputs, cols, &mut rng);
+        let vidx: Vec<usize> = (0..inputs)
+            .map(|r| circuit.vsource_index(&format!("V{r}")).unwrap())
+            .collect();
+        let mut point = 0usize;
+        let bump = |c: &mut Circuit, k: usize| {
+            for (r, &i) in vidx.iter().enumerate() {
+                c.set_vsource_at(i, ((r * 7 + k) as f64 * 0.13).sin() * 0.3).unwrap();
+            }
+        };
+        let cold = b.run(&format!("sweep {inputs}x{cols} cold reference"), || {
+            point += 1;
+            bump(&mut circuit, point);
+            black_box(circuit.dc_op_stats_reference(Ordering::Smart).unwrap());
+        });
+        let warm = b.run(&format!("sweep {inputs}x{cols} cached resolve"), || {
+            point += 1;
+            bump(&mut circuit, point);
+            black_box(circuit.dc_op().unwrap());
+        });
+        let speedup =
+            cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
+        println!("    -> cached-resolve median speedup {speedup:.1}x");
+        derived.push((format!("sweep_{inputs}x{cols}_median_speedup"), speedup));
+    }
+
     b.table("SPICE solver scaling");
+    match append_json_report("BENCH_spice.json", "bench_spice", &b.rows, &derived) {
+        Ok(()) => println!("\nrecorded trajectory entry in BENCH_spice.json"),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_spice.json: {e}"),
+    }
 }

@@ -46,6 +46,11 @@ pub struct ActCircuit {
 
 impl ActCircuit {
     /// Evaluate the circuit at one input voltage.
+    ///
+    /// Repeated calls reuse the circuit's cached factorization: the input
+    /// source edit is RHS-only, so each Newton iteration replays the
+    /// symbolic analysis computed on the first solve instead of
+    /// re-eliminating from scratch (see [`crate::spice::factor`]).
     pub fn eval(&mut self, vin: f64) -> Result<f64> {
         self.circuit.set_vsource(&self.vin_name, vin)?;
         let sol = self.circuit.dc_op()?;
@@ -56,7 +61,8 @@ impl ActCircuit {
         Ok(sol[n])
     }
 
-    /// Input sweep — the Fig 4(c)/(d) curves.
+    /// Input sweep — the Fig 4(c)/(d) curves. Factor-once/solve-many:
+    /// every point after the first is a cached re-solve.
     pub fn sweep(&mut self, lo: f64, hi: f64, points: usize) -> Result<Vec<(f64, f64)>> {
         (0..points)
             .map(|i| {
@@ -178,6 +184,25 @@ mod tests {
                 (y - want).abs() < KNEE_TOL + 0.02 * x.abs(),
                 "x={x}: spice {y} vs sw {want}"
             );
+        }
+    }
+
+    #[test]
+    fn sweep_cache_matches_cold_solves() {
+        // the cached sweep (one ActCircuit reused across points) must match
+        // cold solves (a freshly built circuit per point) within 1e-9 —
+        // the factor-once/solve-many equivalence guarantee
+        for swish in [false, true] {
+            let mut warm = if swish { build_hard_swish() } else { build_hard_sigmoid() };
+            let curve = warm.sweep(-4.0, 4.0, 33).unwrap();
+            for &(x, y) in &curve {
+                let mut cold = if swish { build_hard_swish() } else { build_hard_sigmoid() };
+                let y_cold = cold.eval(x).unwrap();
+                assert!(
+                    (y - y_cold).abs() < 1e-9,
+                    "swish={swish} x={x}: cached {y} vs cold {y_cold}"
+                );
+            }
         }
     }
 

@@ -14,20 +14,33 @@
 //! paper's deployment model where one analog accelerator serves a stream of
 //! sensor frames; metrics capture latency/throughput for Fig 8-style runs.
 
+//! The batching policy ([`batcher`]), metrics ([`metrics`]) and
+//! [`accuracy`] are pure and always available; the PJRT-backed service
+//! ([`Server`], [`classify_dataset`]) needs the `runtime-xla` feature.
+
 pub mod batcher;
 pub mod metrics;
 
+#[cfg(feature = "runtime-xla")]
 use std::path::Path;
+#[cfg(feature = "runtime-xla")]
 use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(feature = "runtime-xla")]
 use std::sync::mpsc::{channel, Receiver, Sender};
+#[cfg(feature = "runtime-xla")]
 use std::sync::Arc;
+#[cfg(feature = "runtime-xla")]
 use std::time::Instant;
 
+#[cfg(feature = "runtime-xla")]
 use anyhow::{anyhow, Result};
 
+#[cfg(feature = "runtime-xla")]
 use crate::runtime::{argmax_rows, Engine, Model};
+#[cfg(feature = "runtime-xla")]
 use metrics::Metrics;
 
+#[cfg(feature = "runtime-xla")]
 /// One classification result.
 #[derive(Debug, Clone)]
 pub struct Prediction {
@@ -37,12 +50,14 @@ pub struct Prediction {
     pub latency: std::time::Duration,
 }
 
+#[cfg(feature = "runtime-xla")]
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
     resp: Sender<Result<Prediction>>,
 }
 
+#[cfg(feature = "runtime-xla")]
 /// Cloneable submission handle.
 #[derive(Clone)]
 pub struct Client {
@@ -51,6 +66,7 @@ pub struct Client {
     metrics: Arc<Metrics>,
 }
 
+#[cfg(feature = "runtime-xla")]
 impl Client {
     /// Blocking classify of one NHWC image.
     pub fn classify(&self, image: Vec<f32>) -> Result<Prediction> {
@@ -70,6 +86,7 @@ impl Client {
     }
 }
 
+#[cfg(feature = "runtime-xla")]
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -77,12 +94,14 @@ pub struct ServerConfig {
     pub max_wait: std::time::Duration,
 }
 
+#[cfg(feature = "runtime-xla")]
 impl Default for ServerConfig {
     fn default() -> Self {
         Self { model: Model::Analog, max_wait: batcher::default_max_wait() }
     }
 }
 
+#[cfg(feature = "runtime-xla")]
 pub struct Server {
     client: Client,
     stop: Arc<AtomicBool>,
@@ -90,6 +109,7 @@ pub struct Server {
     pub warmup: std::time::Duration,
 }
 
+#[cfg(feature = "runtime-xla")]
 impl Server {
     /// Start the service: builds the engine on the service thread (PJRT
     /// handles are !Send), pre-compiles all batch variants, then serves.
@@ -137,6 +157,7 @@ impl Server {
     }
 }
 
+#[cfg(feature = "runtime-xla")]
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
@@ -146,6 +167,7 @@ impl Drop for Server {
     }
 }
 
+#[cfg(feature = "runtime-xla")]
 fn serve_thread(
     dir: std::path::PathBuf,
     cfg: ServerConfig,
@@ -244,6 +266,7 @@ fn serve_thread(
     }
 }
 
+#[cfg(feature = "runtime-xla")]
 /// Synchronous bulk evaluation (no batcher thread): classify `n` images from
 /// a dataset with greedy largest-batch packing. Returns (labels, wall time).
 pub fn classify_dataset(

@@ -13,6 +13,9 @@ pub mod netlist;
 pub mod nn;
 pub mod power;
 pub mod report;
+/// PJRT runtime — requires the `runtime-xla` feature (the `xla` crate +
+/// libxla_extension are not in the offline crate cache; see Cargo.toml).
+#[cfg(feature = "runtime-xla")]
 pub mod runtime;
 pub mod spice;
 pub mod util;

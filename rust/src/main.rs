@@ -16,8 +16,11 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+#[cfg(feature = "runtime-xla")]
 use memx::coordinator::{self, Server, ServerConfig};
+#[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
+#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 use memx::util::cli::Args;
 
@@ -47,6 +50,7 @@ fn usage() {
     );
 }
 
+#[cfg(feature = "runtime-xla")]
 fn parse_model(s: &str) -> Result<Model> {
     match s {
         "analog" => Ok(Model::Analog),
@@ -90,6 +94,7 @@ fn cmd_info(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "runtime-xla")]
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &["artifacts", "model", "n"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
@@ -112,6 +117,7 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "runtime-xla")]
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
@@ -158,6 +164,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "runtime-xla")]
 fn cmd_verify(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &["artifacts", "tol"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
@@ -199,6 +206,30 @@ fn cmd_verify(rest: &[String]) -> Result<()> {
     }
     println!("verification OK");
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn cmd_accuracy(_rest: &[String]) -> Result<()> {
+    no_runtime("accuracy")
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn cmd_serve(_rest: &[String]) -> Result<()> {
+    no_runtime("serve")
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn cmd_verify(_rest: &[String]) -> Result<()> {
+    no_runtime("verify")
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn no_runtime(cmd: &str) -> Result<()> {
+    bail!(
+        "'{cmd}' needs the PJRT runtime, which this binary was built without.\n\
+         Rebuild with `cargo build --release --features runtime-xla` on a host\n\
+         that has the xla crate + libxla_extension (see Cargo.toml)."
+    )
 }
 
 fn cmd_map(rest: &[String]) -> Result<()> {

@@ -355,6 +355,19 @@ pub struct Crossbar {
 }
 
 impl Crossbar {
+    /// SPICE-level reader for this crossbar: emits + parses the segmented
+    /// netlists once and answers every subsequent input vector from the
+    /// cached LU factorization (see [`crate::netlist::CrossbarSim`]).
+    /// `segment` = columns per netlist file (0 = monolithic).
+    pub fn sim(
+        &self,
+        dev: &crate::nn::DeviceJson,
+        segment: usize,
+        ordering: crate::spice::solve::Ordering,
+    ) -> Result<crate::netlist::CrossbarSim> {
+        crate::netlist::CrossbarSim::new(self, dev, segment, ordering)
+    }
+
     /// Behavioural evaluation (ideal TIA): inputs `v` of len `region` (the
     /// direct-region voltages; negated region is implied), bias voltages
     /// (vb+, vb-) = (1, -1). Returns per-column outputs.

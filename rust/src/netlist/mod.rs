@@ -17,6 +17,12 @@
 //! Node conventions: `in<r>` crossbar input lines (r indexes the full
 //! physical crossbar even in segment files), `vcol<c>` TIA virtual grounds,
 //! `vout<c>` outputs, `vinv<c>` the dual-mode inverter outputs.
+//!
+//! Repeated reads of the same crossbar should go through [`CrossbarSim`]:
+//! it parses each segment once, then reuses the per-segment cached LU
+//! factorization for every input vector (parallel across segments, with a
+//! multi-RHS batch path) instead of re-emitting, re-parsing and
+//! re-eliminating per read.
 
 use std::path::{Path, PathBuf};
 
@@ -24,7 +30,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::mapper::{build_fc_crossbar, Crossbar, MapMode};
 use crate::nn::{DeviceJson, Manifest, WeightStore};
-use crate::spice::Circuit;
+use crate::spice::solve::Ordering;
+use crate::spice::{Circuit, Element};
+use crate::util::pool::par_map_mut;
 
 /// Conductance mapping: normalized g in (0,1] -> physical resistance.
 /// G_phys = g * g_on, i.e. R = r_on / g. With 64 levels the smallest
@@ -125,7 +133,25 @@ pub fn emit_crossbar(
 }
 
 fn input_voltage(cb: &Crossbar, row: usize, inputs: Option<&[f64]>) -> f64 {
-    let region = cb.region;
+    input_voltage_region(cb.region, row, inputs)
+}
+
+/// Node read back as column `col`'s output (see the module-level node
+/// conventions): the TIA output in inverted mode, the dual-mode inverter
+/// output otherwise. Single source of truth for the readers
+/// ([`solve_segment_outputs`], [`CrossbarSim`]).
+pub fn output_node_name(inverted: bool, col: usize) -> String {
+    if inverted {
+        format!("vout{col}")
+    } else {
+        format!("vinv{col}")
+    }
+}
+
+/// Voltage of input line `row` given the direct-region values (see
+/// [`emit_crossbar`]): rows [0, region) direct, [region, 2*region) negated,
+/// then the +1 V / -1 V bias lines.
+fn input_voltage_region(region: usize, row: usize, inputs: Option<&[f64]>) -> f64 {
     if row < region {
         inputs.map_or(0.0, |v| v[row])
     } else if row < 2 * region {
@@ -204,6 +230,146 @@ pub fn parse(text: &str) -> Result<Circuit> {
     Ok(c)
 }
 
+/// Factor-once / solve-many simulator for one crossbar.
+///
+/// Construction emits + parses the (optionally segmented) netlists once;
+/// every subsequent input vector is applied as V-source edits — RHS-only,
+/// so each segment's cached LU factorization ([`crate::spice::factor`]) is
+/// reused and a read costs one O(nnz(L+U)) substitution per segment.
+/// Independent segments solve in parallel ([`par_map_mut`]), and
+/// [`CrossbarSim::solve_batch`] amortizes a whole batch of input vectors
+/// over a single multi-RHS substitution pass per segment — the batched
+/// crossbar column-read path used by the benches and the Fig 7 report.
+pub struct CrossbarSim {
+    segments: Vec<SegmentSim>,
+    region: usize,
+    cols: usize,
+    ordering: Ordering,
+}
+
+struct SegmentSim {
+    circuit: Circuit,
+    /// (vsource element index, physical crossbar row) per input line
+    vin: Vec<(usize, usize)>,
+    /// output node id per column of this segment
+    out_nodes: Vec<usize>,
+}
+
+impl CrossbarSim {
+    /// Emit + parse + index every segment (`segment` = columns per file,
+    /// 0 = monolithic). All sources start at 0 V / bias levels.
+    pub fn new(
+        cb: &Crossbar,
+        dev: &DeviceJson,
+        segment: usize,
+        ordering: Ordering,
+    ) -> Result<CrossbarSim> {
+        let segs = plan_segments(cb.cols, segment);
+        let n_segments = segs.len();
+        let mut segments = Vec::with_capacity(n_segments);
+        for seg in &segs {
+            let text = emit_crossbar(cb, dev, seg, None, n_segments);
+            let circuit = parse(&text)?;
+            // one pass over the element list (vsource_index per row would
+            // make construction quadratic in the crossbar size)
+            let vin: Vec<(usize, usize)> = {
+                let mut by_name = std::collections::HashMap::new();
+                for (i, e) in circuit.elements.iter().enumerate() {
+                    if let Element::Vsource(n, ..) = e {
+                        by_name.insert(n.as_str(), i);
+                    }
+                }
+                (0..cb.rows)
+                    .filter_map(|r| {
+                        by_name.get(format!("Vin{r}").as_str()).map(|&i| (i, r))
+                    })
+                    .collect()
+            };
+            let out_nodes = (seg.col_start..seg.col_end)
+                .map(|c| {
+                    let name = output_node_name(cb.mode.inverted(), c);
+                    circuit
+                        .node_named(&name)
+                        .ok_or_else(|| anyhow!("output node {name} missing"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            segments.push(SegmentSim { circuit, vin, out_nodes });
+        }
+        Ok(CrossbarSim { segments, region: cb.region, cols: cb.cols, ordering })
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Per-column outputs for one input vector (len = crossbar region),
+    /// solving segments sequentially.
+    pub fn solve(&mut self, inputs: &[f64]) -> Result<Vec<f64>> {
+        self.solve_par(inputs, 1)
+    }
+
+    /// Like [`CrossbarSim::solve`] with segments distributed over
+    /// `workers` threads.
+    pub fn solve_par(&mut self, inputs: &[f64], workers: usize) -> Result<Vec<f64>> {
+        if inputs.len() != self.region {
+            bail!("crossbar sim: {} inputs, region is {}", inputs.len(), self.region);
+        }
+        let (region, ordering) = (self.region, self.ordering);
+        let results = par_map_mut(&mut self.segments, workers, |seg| -> Result<Vec<f64>> {
+            for &(idx, r) in &seg.vin {
+                seg.circuit
+                    .set_vsource_at(idx, input_voltage_region(region, r, Some(inputs)))?;
+            }
+            let sol = seg.circuit.dc_op_with(ordering)?;
+            Ok(seg.out_nodes.iter().map(|&n| sol[n]).collect())
+        });
+        let mut out = Vec::with_capacity(self.cols);
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+
+    /// Batched reads: outputs for each input vector, one factorization and
+    /// a single multi-RHS substitution pass per segment
+    /// ([`Circuit::dc_op_batch`]), segments parallel over `workers`.
+    pub fn solve_batch(
+        &mut self,
+        inputs: &[Vec<f64>],
+        workers: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        for iv in inputs {
+            if iv.len() != self.region {
+                bail!("crossbar sim: {} inputs, region is {}", iv.len(), self.region);
+            }
+        }
+        let (region, ordering, cols) = (self.region, self.ordering, self.cols);
+        let per_seg = par_map_mut(&mut self.segments, workers, |seg| -> Result<Vec<Vec<f64>>> {
+            let overrides: Vec<Vec<(usize, f64)>> = inputs
+                .iter()
+                .map(|iv| {
+                    seg.vin
+                        .iter()
+                        .map(|&(idx, r)| (idx, input_voltage_region(region, r, Some(iv))))
+                        .collect()
+                })
+                .collect();
+            let sols = seg.circuit.dc_op_batch(&overrides, ordering)?;
+            Ok(sols
+                .into_iter()
+                .map(|sol| seg.out_nodes.iter().map(|&n| sol[n]).collect())
+                .collect())
+        });
+        let mut out: Vec<Vec<f64>> = vec![Vec::with_capacity(cols); inputs.len()];
+        for segres in per_seg {
+            for (k, seg_cols) in segres?.into_iter().enumerate() {
+                out[k].extend(seg_cols);
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Solve a parsed crossbar segment and extract the per-column outputs.
 pub fn solve_segment_outputs(
     circuit: &Circuit,
@@ -214,8 +380,7 @@ pub fn solve_segment_outputs(
     let sol = circuit.dc_op_with(ordering)?;
     (seg.col_start..seg.col_end)
         .map(|cidx| {
-            let name =
-                if inverted { format!("vout{cidx}") } else { format!("vinv{cidx}") };
+            let name = output_node_name(inverted, cidx);
             circuit
                 .node_named(&name)
                 .map(|n| sol[n])
@@ -360,6 +525,50 @@ mod tests {
         let outs = solve_segment_outputs(&circuit, seg, false, Ordering::Smart).unwrap();
         for (c, (got, want)) in outs.iter().zip(&ideal).enumerate() {
             assert!((got - want).abs() < 1e-4, "col {c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn crossbar_sim_matches_ideal_and_oneshot() {
+        let cb = build_synthetic_fc(14, 6, 64, MapMode::Inverted, 31);
+        let dev = test_device();
+        let mut sim = CrossbarSim::new(&cb, &dev, 2, Ordering::Smart).unwrap();
+        assert_eq!(sim.n_segments(), 3);
+        for trial in 0..3 {
+            let inputs: Vec<f64> =
+                (0..14).map(|i| ((i + trial) as f64 * 0.53).sin() * 0.4).collect();
+            let got = sim.solve_par(&inputs, 2).unwrap();
+            let ideal = cb.eval_ideal(&inputs);
+            for (c, (g, w)) in got.iter().zip(&ideal).enumerate() {
+                assert!((g - w).abs() < 1e-4, "trial {trial} col {c}: {g} vs {w}");
+            }
+            // cached sim must agree with the one-shot emit+parse+solve path
+            let seg = &plan_segments(6, 0)[0];
+            let text = emit_crossbar(&cb, &dev, seg, Some(&inputs), 1);
+            let oneshot =
+                solve_segment_outputs(&parse(&text).unwrap(), seg, true, Ordering::Smart)
+                    .unwrap();
+            for (c, (g, w)) in got.iter().zip(&oneshot).enumerate() {
+                assert!((g - w).abs() < 1e-9, "trial {trial} col {c}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossbar_sim_batch_matches_sequential() {
+        let cb = build_synthetic_fc(10, 4, 64, MapMode::Dual, 12);
+        let dev = test_device();
+        let mut sim = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart).unwrap();
+        let batch: Vec<Vec<f64>> = (0..5)
+            .map(|k| (0..10).map(|i| ((i * 2 + k) as f64 * 0.29).cos() * 0.3).collect())
+            .collect();
+        let batched = sim.solve_batch(&batch, 2).unwrap();
+        assert_eq!(batched.len(), 5);
+        for (k, iv) in batch.iter().enumerate() {
+            let seq = sim.solve(iv).unwrap();
+            for (a, b) in batched[k].iter().zip(&seq) {
+                assert!((a - b).abs() < 1e-9, "batch {k}");
+            }
         }
     }
 

@@ -107,35 +107,20 @@ impl Engine {
     /// Executables are leaked into 'static: a handful of variants live for
     /// the process lifetime anyway, and this keeps the hot path free of
     /// lock-held references.
+    ///
+    /// The cache lock is held across the compile (single-flight): if two
+    /// threads raced the old check-then-insert, both compiled the same
+    /// artifact and the loser's `Box::leak` was orphaned for the process
+    /// lifetime. Compiles are rare (a handful of variants at warmup), so
+    /// serializing them is the simple correct choice.
     pub fn get(&self, model: Model, batch: usize) -> Result<&'static Compiled> {
-        if let Some(c) = self.cache.lock().unwrap().get(&(model, batch)) {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(c) = cache.get(&(model, batch)) {
             return Ok(c);
         }
         let key = model.artifact_key(batch);
-        let file = self
-            .manifest
-            .artifacts
-            .get(&key)
-            .ok_or_else(|| anyhow!("no artifact '{key}' (batch {batch} not exported)"))?;
-        let path = self.dir.join(file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("XLA compile {key}: {e}"))?;
-        let compiled = Box::leak(Box::new(Compiled {
-            exe,
-            batch,
-            img_elems: self.manifest.img * self.manifest.img * 3,
-            num_classes: self.manifest.num_classes,
-            compile_time: t0.elapsed(),
-        }));
-        self.cache.lock().unwrap().insert((model, batch), compiled);
+        let compiled = Box::leak(Box::new(self.compile_artifact(&key, batch)?));
+        cache.insert((model, batch), compiled);
         Ok(compiled)
     }
 
@@ -143,11 +128,15 @@ impl Engine {
     /// "model_kernelpath_b8" pallas-lowering cross-validation variant).
     /// Not cached — intended for tests/benches.
     pub fn compile_key(&self, key: &str, batch: usize) -> Result<Compiled> {
+        self.compile_artifact(key, batch)
+    }
+
+    fn compile_artifact(&self, key: &str, batch: usize) -> Result<Compiled> {
         let file = self
             .manifest
             .artifacts
             .get(key)
-            .ok_or_else(|| anyhow!("no artifact '{key}'"))?;
+            .ok_or_else(|| anyhow!("no artifact '{key}' (batch {batch} not exported)"))?;
         let path = self.dir.join(file);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(

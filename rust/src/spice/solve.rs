@@ -18,6 +18,14 @@
 //!
 //! Fig 7 benches run both (see benches/bench_segmentation.rs); the engine
 //! defaults to Smart everywhere else.
+//!
+//! This module is the **reference implementation**: simple, per-call,
+//! allocation-heavy, used for correctness cross-checks and the Fig 7
+//! ordering study. The hot path ([`crate::spice::Circuit::dc_op`] and
+//! friends) runs on the factor-once / solve-many engine in
+//! [`crate::spice::factor`], which caches the symbolic factorization per
+//! circuit topology and re-solves in O(nnz(L+U)); its results are
+//! residual-guarded against this reference within 1e-9.
 
 use std::collections::HashMap;
 
@@ -97,6 +105,16 @@ impl SparseSys {
         }
     }
 
+    /// Structural add: records the entry even when the value is currently
+    /// zero. Stamps whose *coefficients* vary across Newton iterations
+    /// (e.g. multiplier linearizations around a zero operating point) use
+    /// this so the sparsity pattern — and any cached symbolic
+    /// factorization keyed on it — stays stable across iterations.
+    pub fn add_keep(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        self.triplets.push((i, j, v));
+    }
+
     pub fn add_b(&mut self, i: usize, v: f64) {
         self.b[i] += v;
     }
@@ -133,6 +151,10 @@ impl SparseSys {
         for r in rows.iter_mut() {
             r.retain(|_, v| *v != 0.0);
         }
+        // assembled (deduplicated) nonzeros — the honest pre-elimination
+        // footprint; raw triplet counts contain duplicate stamps and would
+        // inflate the monolithic-vs-segmented memory comparison
+        let assembled_nnz: usize = rows.iter().map(|r| r.len()).sum();
         let mut col_rows: Vec<Vec<usize>> = vec![Vec::new(); n]; // may hold stale ids
         for (i, r) in rows.iter().enumerate() {
             for &j in r.keys() {
@@ -241,7 +263,7 @@ impl SparseSys {
             }
             x[col] = s / diag;
         }
-        let peak = rows.iter().map(|r| r.len()).sum::<usize>().max(self.triplets.len());
+        let peak = rows.iter().map(|r| r.len()).sum::<usize>().max(assembled_nnz);
         Ok((x, SolveStats { peak_entries: peak, unknowns: n }))
     }
 
@@ -326,6 +348,21 @@ mod tests {
         s.add_b(0, 4.0);
         let x = s.solve().unwrap();
         assert!((x[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_entries_counts_assembled_not_raw_triplets() {
+        // 20 duplicate triplets assemble into 2 entries; the stat must not
+        // take max against the raw (duplicated) triplet count
+        let mut s = SparseSys::new(2);
+        for _ in 0..10 {
+            s.add(0, 0, 0.1);
+            s.add(1, 1, 0.1);
+        }
+        s.add_b(0, 1.0);
+        let (_, st) = s.solve_with_stats(Ordering::Smart).unwrap();
+        assert_eq!(s.nnz(), 20);
+        assert_eq!(st.peak_entries, 2, "dedupe before comparing");
     }
 
     #[test]

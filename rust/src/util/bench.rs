@@ -101,6 +101,68 @@ impl Bench {
     }
 }
 
+/// Append one bench run to a JSON trajectory file (an array of run
+/// objects; created if missing, appended otherwise — successive runs build
+/// a history the perf dashboards can diff). Each row records ns timings;
+/// `derived` carries computed headline numbers such as cached-vs-cold
+/// speedups.
+pub fn append_json_report(
+    path: &str,
+    bench: &str,
+    rows: &[Stats],
+    derived: &[(String, f64)],
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text).ok().and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        {
+            Some(runs) => runs,
+            // an unreadable trajectory (e.g. a previous write was killed
+            // mid-flight) must not be silently replaced — that would drop
+            // the accumulated history
+            None => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{path}: existing trajectory is not a JSON array; refusing to overwrite"),
+                ))
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        // other read failures (permissions, bad UTF-8) also mean an
+        // existing history we must not clobber
+        Err(e) => return Err(e),
+    };
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("iters", Json::num(r.iters as f64)),
+                ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                ("p95_ns", Json::num(r.p95.as_nanos() as f64)),
+                ("min_ns", Json::num(r.min.as_nanos() as f64)),
+            ])
+        })
+        .collect();
+    let derived_obj = Json::Obj(
+        derived
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect(),
+    );
+    runs.push(Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("rows", Json::Arr(row_objs)),
+        ("derived", derived_obj),
+    ]));
+    // atomic replace: a killed bench run must not truncate the trajectory
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, Json::Arr(runs).to_string())?;
+    std::fs::rename(&tmp, path)
+}
+
 /// Prevent the optimizer from discarding a value (std::hint::black_box).
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
@@ -126,5 +188,23 @@ mod tests {
         let mut b = Bench::quick();
         b.record_once("big", Duration::from_millis(5));
         assert_eq!(b.rows[0].iters, 1);
+    }
+
+    #[test]
+    fn json_trajectory_appends() {
+        let path = std::env::temp_dir().join("memx_bench_traj_test.json");
+        let p = path.to_str().unwrap();
+        std::fs::remove_file(p).ok();
+        let mut b = Bench::quick();
+        b.record_once("case-a", Duration::from_micros(3));
+        append_json_report(p, "t", &b.rows, &[("speedup".into(), 5.5)]).unwrap();
+        append_json_report(p, "t", &b.rows, &[]).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        let runs = j.as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "trajectory must append, not overwrite");
+        assert_eq!(runs[0].get("bench").unwrap().as_str().unwrap(), "t");
+        let d = runs[0].get("derived").unwrap();
+        assert_eq!(d.get("speedup").unwrap().as_f64().unwrap(), 5.5);
+        std::fs::remove_file(p).ok();
     }
 }

@@ -35,6 +35,37 @@ where
     out.into_iter().map(|o| o.expect("worker missed slot")).collect()
 }
 
+/// Parallel map over mutable items (e.g. per-segment circuits whose cached
+/// factorizations update during the solve). Items are split into contiguous
+/// chunks, one worker per chunk; results return in input order. Panics in
+/// workers propagate.
+pub fn par_map_mut<T, R, F>(items: &mut [T], workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter_mut().map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Vec<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .map(|ch| s.spawn(move || ch.iter_mut().map(f).collect::<Vec<R>>()))
+            .collect();
+        out = handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map_mut worker panicked"))
+            .collect();
+    });
+    out.into_iter().flatten().collect()
+}
+
 /// Recommended worker count for this host.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -67,5 +98,24 @@ mod tests {
     fn more_workers_than_items() {
         let xs = vec![5];
         assert_eq!(par_map(&xs, 16, |x| x * x), vec![25]);
+    }
+
+    #[test]
+    fn par_map_mut_updates_and_orders() {
+        let mut xs: Vec<u64> = (0..57).collect();
+        let ys = par_map_mut(&mut xs, 4, |x| {
+            *x += 1;
+            *x * 10
+        });
+        assert_eq!(xs, (1..=57).collect::<Vec<_>>());
+        assert_eq!(ys, (1..=57).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_mut_single_and_empty() {
+        let mut xs: Vec<u32> = vec![];
+        assert!(par_map_mut(&mut xs, 4, |x| *x).is_empty());
+        let mut one = vec![7u32];
+        assert_eq!(par_map_mut(&mut one, 8, |x| *x + 1), vec![8]);
     }
 }

@@ -1,6 +1,9 @@
 //! End-to-end runtime tests: PJRT engine + coordinator over the real AOT
 //! artifacts. These are the heaviest tests (XLA compiles + analog-model
-//! executions); they skip gracefully without artifacts.
+//! executions); they skip gracefully without artifacts, and the whole file
+//! is compiled out unless the `runtime-xla` feature is enabled.
+
+#![cfg(feature = "runtime-xla")]
 
 use std::path::{Path, PathBuf};
 

@@ -2,13 +2,15 @@
 //! offline crate cache) over the coordinator invariants, the layout
 //! formulas, the solver and the JSON codec.
 
+use memx::analog;
 use memx::coordinator::batcher::plan_batch;
 use memx::mapper::layout::{
     out_dim, p_neg, p_pos, place_conv_kernel, place_fc, ConvXbarGeom, FcXbarGeom,
 };
 use memx::mapper::{self, MapMode};
 use memx::netlist::plan_segments;
-use memx::spice::solve::SparseSys;
+use memx::spice::factor;
+use memx::spice::solve::{solve_dense, Ordering, SparseSys};
 use memx::util::json::Json;
 use memx::util::prng::Rng;
 use memx::util::prop::check;
@@ -227,6 +229,168 @@ fn prop_sparse_solver_residual_small() {
             // which is what this property guards against
             Ok(x) => sys.residual(&x) < 1e-4,
             Err(_) => false,
+        },
+    );
+}
+
+/// Random MNA-like system generator shared by the factored-solver
+/// properties: diagonally-dominant resistive core, optional zero-diagonal
+/// pairs (forcing off-diagonal pivoting) and op-amp-structured 1e6-gain
+/// branch rows (the real TIA stamp pattern: unit branch couplings plus a
+/// high-gain control entry). Returns (dense mirror, system, n_opamps).
+fn gen_mna_like(rng: &mut Rng, size: usize) -> (Vec<Vec<f64>>, SparseSys, usize) {
+    let n0 = 4 + rng.below(4 + size * 2);
+    let opamps = rng.below(3);
+    let n = n0 + 2 * opamps; // out node + branch row per op-amp
+    let mut dense = vec![vec![0.0; n]; n];
+    let mut sys = SparseSys::new(n);
+    let mut add = |d: &mut Vec<Vec<f64>>, s: &mut SparseSys, i: usize, j: usize, v: f64| {
+        d[i][j] += v;
+        s.add(i, j, v);
+    };
+    // zero-diagonal swap pairs on a prefix of even indices
+    let pairs = rng.below(n0 / 2 + 1).min(2);
+    for k in 0..pairs {
+        let (i, j) = (2 * k, 2 * k + 1);
+        add(&mut dense, &mut sys, i, j, 3.0 + rng.f64());
+        add(&mut dense, &mut sys, j, i, 3.0 + rng.f64());
+    }
+    for i in 2 * pairs..n0 {
+        for _ in 0..3 {
+            let j = rng.below(n0);
+            add(&mut dense, &mut sys, i, j, rng.range_f64(-1.0, 1.0));
+        }
+        add(&mut dense, &mut sys, i, i, 5.0 + rng.f64());
+    }
+    // op-amp branch rows: V(out) = -1e6 * V(ctrl), TIA-style feedback
+    for k in 0..opamps {
+        let out = n0 + 2 * k;
+        let br = n0 + 2 * k + 1;
+        let ctrl = rng.below(n0);
+        add(&mut dense, &mut sys, out, br, 1.0);
+        add(&mut dense, &mut sys, br, out, 1.0);
+        add(&mut dense, &mut sys, br, ctrl, -1e6);
+        add(&mut dense, &mut sys, out, out, 1e-3);
+        add(&mut dense, &mut sys, out, ctrl, -1e-3);
+    }
+    for i in 0..n {
+        sys.add_b(i, rng.range_f64(-2.0, 2.0));
+    }
+    (dense, sys, opamps)
+}
+
+/// Scaled residual of x for `sys` (same acceptance shape the engine uses).
+fn scaled_residual(sys: &SparseSys, x: &[f64]) -> f64 {
+    let mut r = sys.b.clone();
+    let mut scale = 1.0f64;
+    for &bv in &sys.b {
+        scale = scale.max(bv.abs());
+    }
+    for &(i, j, v) in sys.iter_triplets() {
+        let t = v * x[j];
+        r[i] -= t;
+        scale = scale.max(t.abs());
+    }
+    r.iter().fold(0.0f64, |a, &v| a.max(v.abs())) / scale
+}
+
+#[test]
+fn prop_factored_solutions_match_dense() {
+    check(
+        "factored-vs-dense",
+        60,
+        |rng: &mut Rng, size: usize| {
+            let (dense, sys, opamps) = gen_mna_like(rng, size);
+            (dense, sys, opamps, rng.bool())
+        },
+        |(dense, sys, opamps, smart)| {
+            let ord = if *smart { Ordering::Smart } else { Ordering::Natural };
+            let Ok(xd) = solve_dense(dense, &sys.b) else {
+                // singular draws must fail on the factored path too
+                return factor::factor_solve(sys, ord).is_err()
+                    || scaled_residual(sys, &factor::factor_solve(sys, ord).unwrap().0)
+                        < 1e-6;
+            };
+            let Ok((xs, _)) = factor::factor_solve(sys, ord) else { return false };
+            // 1e6-gain systems are ill-conditioned: any backward-stable
+            // solver drifts from dense by ~cond*eps, so the hard criterion
+            // is the scaled residual (a wrong solve shows O(1) residuals);
+            // solution agreement gets conditioning-aware headroom
+            let sol_tol = if *opamps > 0 { 1e-4 } else { 1e-6 };
+            scaled_residual(sys, &xs) < 1e-6
+                && xd
+                    .iter()
+                    .zip(&xs)
+                    .all(|(d, s)| (d - s).abs() < sol_tol * (1.0 + d.abs()))
+        },
+    );
+}
+
+#[test]
+fn prop_refactor_matches_fresh_analysis() {
+    // same topology, rescaled values: refactor (fixed pattern) must agree
+    // with a from-scratch analysis at the new values
+    check(
+        "refactor-vs-fresh",
+        40,
+        |rng: &mut Rng, size: usize| {
+            let (_, sys, _) = gen_mna_like(rng, size);
+            (sys, 0.25 + rng.f64() * 4.0)
+        },
+        |(sys, scale)| {
+            let Ok((_, mut num)) = factor::factor_solve(sys, Ordering::Smart) else {
+                return true; // singular draw — nothing to compare
+            };
+            let mut sys2 = SparseSys::new(sys.n);
+            for &(i, j, v) in sys.iter_triplets() {
+                sys2.add(i, j, v * scale);
+            }
+            for (i, &bv) in sys.b.iter().enumerate() {
+                sys2.add_b(i, bv);
+            }
+            let refactored = match num.assemble(&sys2) {
+                Ok(false) => {
+                    if num.refactor().is_err() {
+                        return true; // stale pivots — caller would re-analyze
+                    }
+                    num.solve(&sys2.b)
+                }
+                Ok(true) => num.solve(&sys2.b),
+                Err(_) => return false, // identical stream must match
+            };
+            let Ok(xr) = refactored else { return false };
+            let Ok((xf, _)) = factor::factor_solve(&sys2, Ordering::Smart) else {
+                return false;
+            };
+            xr.iter()
+                .zip(&xf)
+                .all(|(a, b)| (a - b).abs() < 1e-9 * (1.0 + a.abs()))
+                && scaled_residual(&sys2, &xr) < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_sweep_cache_equivalence() {
+    // cached ActCircuit sweeps (factor-once/solve-many) match cold solves
+    // (fresh circuit per point) within 1e-9 — the acceptance criterion of
+    // the factored engine on the nonlinear activation circuits
+    check(
+        "sweep-cache-equivalence",
+        6,
+        |rng: &mut Rng, _| (rng.range_f64(-5.0, -2.0), rng.range_f64(2.0, 5.0), rng.bool()),
+        |&(lo, hi, swish)| {
+            let mut warm =
+                if swish { analog::build_hard_swish() } else { analog::build_hard_sigmoid() };
+            let Ok(curve) = warm.sweep(lo, hi, 9) else { return false };
+            curve.iter().all(|&(x, y)| {
+                let mut cold = if swish {
+                    analog::build_hard_swish()
+                } else {
+                    analog::build_hard_sigmoid()
+                };
+                cold.eval(x).map(|yc| (y - yc).abs() < 1e-9).unwrap_or(false)
+            })
         },
     );
 }
