@@ -7,7 +7,8 @@
 //! Mirrors the paper's Fig 6 block diagram: conversion module (mapper),
 //! layer module (netlist emitter with §4.2 segmentation), model module
 //! (the layer picked from the trained manifest), assessment module (the
-//! MNA solver validating the crossbar against its ideal transfer).
+//! layer compiled into a SPICE-fidelity `memx::pipeline` stage, batch-read
+//! and validated against its ideal transfer).
 
 use std::path::Path;
 use std::time::Instant;
@@ -15,8 +16,7 @@ use std::time::Instant;
 use memx::mapper::{self, MapMode};
 use memx::netlist;
 use memx::nn::{Manifest, WeightStore};
-use memx::spice::solve::Ordering;
-use memx::util::pool::par_map;
+use memx::pipeline::{Fidelity, PipelineBuilder};
 use memx::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -48,31 +48,34 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed()
     );
 
-    // assessment module: drive a random input vector through every segment
-    // (parsed back from disk — the full framework path) and compare with
-    // the behavioural crossbar
-    let mut rng = Rng::new(2024);
-    let inputs: Vec<f64> = (0..cb.region).map(|_| rng.range_f64(-0.5, 0.5)).collect();
-    let ideal = cb.eval_ideal(&inputs);
-    let segs = netlist::plan_segments(cb.cols, segment);
-
+    // assessment module: compile the layer into a SPICE-fidelity pipeline
+    // stage (resident factor-once simulator, parallel segments) and batch a
+    // few random vectors through it — one multi-RHS substitution pass per
+    // segment — validating against the ideal-fidelity transfer
+    let base = PipelineBuilder::new().mode(MapMode::Inverted).segment(segment);
     let t0 = Instant::now();
-    let seg_results = par_map(&segs, memx::util::pool::default_workers(), |seg| {
-        let text = netlist::emit_crossbar(&cb, &m.device, seg, Some(&inputs), segs.len());
-        let circuit = netlist::parse(&text).expect("parse emitted netlist");
-        netlist::solve_segment_outputs(&circuit, seg, true, Ordering::Smart)
-            .expect("solve segment")
-    });
-    let wall = t0.elapsed();
+    let mut spice = base.clone().fidelity(Fidelity::Spice).build_layer(&m, &ws, &layer)?;
+    let compile = t0.elapsed();
+    let mut ideal = base.fidelity(Fidelity::Ideal).build_layer(&m, &ws, &layer)?;
 
-    let spice: Vec<f64> = seg_results.into_iter().flatten().collect();
-    let max_err = spice
+    let mut rng = Rng::new(2024);
+    let batch: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..cb.region).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    let t0 = Instant::now();
+    let got = spice.forward_batch(&batch)?;
+    let wall = t0.elapsed();
+    let want = ideal.forward_batch(&batch)?;
+
+    let max_err = got
         .iter()
-        .zip(&ideal)
+        .flatten()
+        .zip(want.iter().flatten())
         .fold(0f64, |a, (s, i)| a.max((s - i).abs()));
     println!(
-        "[assess] {} segments simulated in {wall:?}; max |SPICE - ideal| = {max_err:.3e}",
-        segs.len()
+        "[assess] compiled in {compile:?}; {} vectors batched in {wall:?}; \
+         max |SPICE - ideal| = {max_err:.3e}",
+        batch.len()
     );
     anyhow::ensure!(max_err < 1e-3, "SPICE disagrees with the analog model");
     println!("netlist pipeline OK");

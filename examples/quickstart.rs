@@ -1,67 +1,98 @@
-//! Quickstart — the five-minute tour of the memx public API.
+//! Quickstart — the five-minute tour of the memx public API, built around
+//! the `memx::pipeline` builder.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Loads the AOT artifacts (run `make artifacts` once), classifies a few
-//! images with the memristor analog model, maps one layer to a crossbar,
-//! emits + simulates its SPICE netlist, and prints the latency/energy
-//! estimates — every major subsystem in ~80 lines.
+//! With trained artifacts present (`make artifacts`), compiles the full
+//! manifest into a runnable analog pipeline, classifies a few images
+//! batch-first, cross-checks one layer at SPICE fidelity and prints the
+//! Eq 17/18 latency + energy estimates. Without artifacts it falls back to
+//! a synthetic FC stack, so the tour always runs — no PJRT required
+//! (see examples/serve_cifar.rs for the PJRT serving demo).
 
-#[cfg(feature = "runtime-xla")]
 use std::path::Path;
 
-#[cfg(feature = "runtime-xla")]
-use memx::coordinator::{accuracy, classify_dataset};
-#[cfg(feature = "runtime-xla")]
 use memx::mapper::{self, MapMode};
-#[cfg(feature = "runtime-xla")]
-use memx::netlist;
-#[cfg(feature = "runtime-xla")]
 use memx::nn::{Manifest, WeightStore};
-#[cfg(feature = "runtime-xla")]
+use memx::pipeline::{argmax, default_device, image_to_input, Fidelity, PipelineBuilder};
 use memx::power;
-#[cfg(feature = "runtime-xla")]
-use memx::runtime::{Engine, Model};
-#[cfg(feature = "runtime-xla")]
-use memx::spice::solve::Ordering;
-#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
+use memx::util::prng::Rng;
 
-#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        artifact_tour(dir)
+    } else {
+        synthetic_tour()
+    }
+}
 
-    // 1. runtime: load + compile the AOT'd memristor model, classify images
-    let engine = Engine::new(dir)?;
-    println!("PJRT platform: {}", engine.platform());
-    let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file))?;
-    let (labels, wall) = classify_dataset(&engine, Model::Analog, &ds, 32)?;
-    let acc = accuracy(&labels, &ds.labels[..labels.len()]);
-    println!("analog model: {:.1}% on {} images in {wall:?}", acc * 100.0, labels.len());
+/// Manifest-free tour: a synthetic FC stack through every fidelity level.
+fn synthetic_tour() -> anyhow::Result<()> {
+    println!("(artifacts missing — run `make artifacts` for the full-network tour)");
+    let dev = default_device();
+    let dims = [32usize, 24, 10];
+    let mut rng = Rng::new(2024);
+    let batch: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    for fidelity in [Fidelity::Ideal, Fidelity::Behavioural, Fidelity::Spice] {
+        let mut pipe = PipelineBuilder::new()
+            .fidelity(fidelity)
+            .segment(8)
+            .build_fc_stack(&dims, &dev, 7)?;
+        let logits = pipe.forward_batch(&batch)?;
+        let labels: Vec<usize> = logits.iter().map(|row| argmax(row)).collect();
+        let tag = fidelity.to_string();
+        println!(
+            "{tag:<11} {} -> labels {labels:?}, logits[0][0] = {:+.5}",
+            pipe.describe(),
+            logits[0][0]
+        );
+    }
+    Ok(())
+}
 
-    // 2. mapper: weights -> differential quantized crossbar (paper §3.2)
+/// Full tour over the trained artifacts.
+fn artifact_tour(dir: &Path) -> anyhow::Result<()> {
+    // 1. pipeline: compile manifest + weights into the analog module chain
     let manifest = Manifest::load(dir)?;
     let ws = WeightStore::load(dir, &manifest)?;
-    let cb = mapper::build_fc_crossbar(&manifest, &ws, "cls.fc2", MapMode::Inverted)?;
-    println!(
-        "cls.fc2 crossbar: {}x{} with {} memristors (zero weights omitted)",
-        cb.rows,
-        cb.cols,
-        cb.devices.len()
-    );
+    let mut pipe = PipelineBuilder::new()
+        .mode(MapMode::Inverted)
+        .fidelity(Fidelity::Behavioural)
+        .build(&manifest, &ws)?;
+    println!("analog pipeline: {}", pipe.describe());
 
-    // 3. netlist + SPICE: emit, parse back, DC-solve, compare to the ideal
-    let inputs: Vec<f64> = (0..cb.region).map(|i| ((i as f64) * 0.1).sin() * 0.3).collect();
-    let seg = &netlist::plan_segments(cb.cols, 0)[0];
-    let text = netlist::emit_crossbar(&cb, &manifest.device, seg, Some(&inputs), 1);
-    let circuit = netlist::parse(&text)?;
-    let spice_out = netlist::solve_segment_outputs(&circuit, seg, true, Ordering::Smart)?;
-    let ideal = cb.eval_ideal(&inputs);
-    let err = spice_out
+    // 2. classify a few held-out images, batch-first
+    let ds = Dataset::load(&dir.join(&manifest.dataset_file))?;
+    let n = 8.min(ds.n);
+    let batch: Vec<Vec<f64>> =
+        (0..n).map(|i| image_to_input(ds.image(i), ds.h, ds.w, ds.c)).collect();
+    let labels = pipe.classify_batch(&batch)?;
+    let correct = labels
         .iter()
-        .zip(&ideal)
+        .zip(&ds.labels)
+        .filter(|(p, t)| **p == **t as usize)
+        .count();
+    println!("classified {n} images in one batched forward: {correct}/{n} correct");
+
+    // 3. one layer at SPICE fidelity vs the ideal crossbar
+    let base = PipelineBuilder::new().segment(4);
+    let mut spice = base.clone().fidelity(Fidelity::Spice).build_layer(&manifest, &ws, "cls.fc2")?;
+    let mut ideal = base.fidelity(Fidelity::Ideal).build_layer(&manifest, &ws, "cls.fc2")?;
+    let mut rng = Rng::new(5);
+    let probe: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..spice.in_dim()).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    let err = spice
+        .forward_batch(&probe)?
+        .iter()
+        .flatten()
+        .zip(ideal.forward_batch(&probe)?.iter().flatten())
         .fold(0f64, |a, (s, i)| a.max((s - i).abs()));
-    println!("SPICE vs ideal crossbar: max error {err:.2e} over {} columns", cb.cols);
+    println!("cls.fc2 SPICE vs ideal: max error {err:.2e} over 3 batched vectors");
 
     // 4. analytical models: Eq 17 latency + Eq 18 energy
     let net = mapper::map_network(&manifest, &ws, MapMode::Inverted)?;
@@ -80,12 +111,4 @@ fn main() -> anyhow::Result<()> {
         e.total * 1e6
     );
     Ok(())
-}
-
-#[cfg(not(feature = "runtime-xla"))]
-fn main() {
-    eprintln!(
-        "this example needs the PJRT runtime: rebuild with --features runtime-xla \
-         (requires the xla crate + libxla_extension; see Cargo.toml)"
-    );
 }

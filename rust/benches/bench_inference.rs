@@ -1,41 +1,81 @@
-//! E5/E6/E10 / Fig 8 — inference latency + energy: analytical crossbar
-//! models (Eqs 17/18) against the paper's GPU/CPU baselines, plus the
-//! *measured* digital PJRT latency on this host per batch size.
+//! E5/E6/E10 / Fig 8 — inference latency + energy: the pipeline end-to-end
+//! batched-forward workload (batch 1 vs 16 vs 64 through
+//! `Pipeline::forward_batch`, appended to BENCH_pipeline.json), the
+//! analytical crossbar models (Eqs 17/18) against the paper's GPU/CPU
+//! baselines, and — with the `runtime-xla` feature — the *measured* digital
+//! PJRT latency on this host per batch size.
 //!
 //!   cargo bench --bench bench_inference
 
-#[cfg(feature = "runtime-xla")]
-use std::path::Path;
+use memx::pipeline::{default_device, Fidelity, PipelineBuilder};
+use memx::util::bench::{append_json_report, black_box, Bench};
+use memx::util::prng::Rng;
 
-#[cfg(feature = "runtime-xla")]
-use memx::mapper::{self, MapMode};
-#[cfg(feature = "runtime-xla")]
-use memx::nn::{Manifest, WeightStore};
-#[cfg(feature = "runtime-xla")]
-use memx::power;
-#[cfg(feature = "runtime-xla")]
-use memx::runtime::{Engine, Model};
-#[cfg(feature = "runtime-xla")]
-use memx::util::bench::Bench;
-#[cfg(feature = "runtime-xla")]
-use memx::util::bin::Dataset;
+/// End-to-end batched pipeline forward: how much a batch amortizes the
+/// per-image cost (at SPICE fidelity, batches share one multi-RHS
+/// substitution pass per crossbar segment).
+fn pipeline_workload() -> anyhow::Result<()> {
+    let dev = default_device();
+    let dims = [96usize, 96, 48, 10];
+    let mut rng = Rng::new(11);
+    let inputs: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
 
-#[cfg(feature = "runtime-xla")]
-fn main() -> anyhow::Result<()> {
-    let dir = Path::new("artifacts");
+    println!("== pipeline end-to-end batched forward (fc {dims:?}) ==");
+    let mut b = Bench::quick();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut spice_per_image: Vec<(usize, f64)> = Vec::new();
+    for fidelity in [Fidelity::Behavioural, Fidelity::Spice] {
+        let mut pipe = PipelineBuilder::new()
+            .fidelity(fidelity)
+            .segment(32)
+            .build_fc_stack(&dims, &dev, 3)?;
+        for &batch in &[1usize, 16, 64] {
+            let chunk = &inputs[..batch];
+            let stats = b.run(&format!("pipeline {fidelity} b{batch}"), || {
+                black_box(pipe.forward_batch(chunk).expect("forward_batch"));
+            });
+            let per_image = stats.mean_secs() / batch as f64;
+            println!("    -> per-image {:.1} µs", per_image * 1e6);
+            if fidelity == Fidelity::Spice {
+                spice_per_image.push((batch, per_image));
+            }
+        }
+    }
+    if let (Some(&(_, t1)), Some(&(_, t64))) =
+        (spice_per_image.first(), spice_per_image.last())
+    {
+        derived.push(("spice_b64_vs_b1_per_image_speedup".into(), t1 / t64.max(1e-12)));
+    }
+    b.table("pipeline batched forward");
+    match append_json_report("BENCH_pipeline.json", "bench_inference_pipeline", &b.rows, &derived)
+    {
+        Ok(()) => println!("(appended to BENCH_pipeline.json)"),
+        Err(e) => eprintln!("warning: could not append BENCH_pipeline.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Eq 17/18 analytical figures over the trained manifest (skipped without
+/// artifacts).
+fn analytical_workload() -> anyhow::Result<()> {
+    use memx::mapper::{self, MapMode};
+    use memx::nn::{Manifest, WeightStore};
+    use memx::power;
+
+    let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("bench_inference: artifacts missing — run `make artifacts` first");
+        eprintln!("bench_inference: artifacts missing — skipping the analytical Fig 8 section");
         return Ok(());
     }
     let m = Manifest::load(dir)?;
     let ws = WeightStore::load(dir, &m)?;
-
-    // --- analytical crossbar latency/energy (Fig 8 analog columns) ---
     let net = mapper::map_network(&m, &ws, MapMode::Inverted)?;
     let t_seq = power::latency(&net, &m.device);
     let t_pipe = power::latency_pipelined(&net, &m.device);
     let e = power::energy(&net, &m.device, &t_seq);
-    println!("== Fig 8(a,b): analytical memristor inference ==");
+    println!("\n== Fig 8(a,b): analytical memristor inference ==");
     println!(
         "sequential: {:.3} µs (N_m={} stages) | pipelined: {:.3} µs | energy {:.2} µJ",
         t_seq.total * 1e6,
@@ -50,8 +90,22 @@ fn main() -> anyhow::Result<()> {
         power::T_CPU_I7_12700 / t_seq.total,
         power::T_CPU_I7_12700 / t_pipe.total
     );
+    Ok(())
+}
 
-    // --- measured digital + analog-model PJRT latency on this host ---
+/// Measured digital + analog-model PJRT latency on this host.
+#[cfg(feature = "runtime-xla")]
+fn pjrt_workload() -> anyhow::Result<()> {
+    use memx::nn::Manifest;
+    use memx::runtime::{Engine, Model};
+    use memx::util::bin::Dataset;
+
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_inference: artifacts missing — skipping the PJRT section");
+        return Ok(());
+    }
+    let m = Manifest::load(dir)?;
     let engine = Engine::new(dir)?;
     let ds = Dataset::load(&dir.join(&m.dataset_file))?;
     let mut b = Bench::quick(); // analog-model runs are seconds each
@@ -77,7 +131,10 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-#[cfg(not(feature = "runtime-xla"))]
-fn main() {
-    eprintln!("bench_inference: built without the runtime-xla feature; skipping (PJRT required)");
+fn main() -> anyhow::Result<()> {
+    pipeline_workload()?;
+    analytical_workload()?;
+    #[cfg(feature = "runtime-xla")]
+    pjrt_workload()?;
+    Ok(())
 }

@@ -1,7 +1,7 @@
 //! Analog circuit modules — transistor-level models of the paper's §3.4
 //! activation circuits (Fig 4) plus fast behavioural equivalents.
 //!
-//! The circuit builders produce real [`spice::Circuit`]s (op-amp adders /
+//! The circuit builders produce real [`Circuit`]s (op-amp adders /
 //! dividers, diode+source limiters, a Gilbert-cell multiplier abstraction);
 //! `sweep` reproduces Fig 4(c)/(d). The behavioural functions are the
 //! rail-clipped piecewise forms the L2 JAX model uses — tests pin the SPICE
@@ -38,6 +38,9 @@ pub fn relu_analog(x: f64, v_rail: f64) -> f64 {
 }
 
 /// A built activation circuit: drive `vin_name`, read `out_node`.
+/// Cloning clones the circuit including its cached factorization, so clones
+/// can solve independently (e.g. one per worker thread).
+#[derive(Clone)]
 pub struct ActCircuit {
     pub circuit: Circuit,
     pub vin_name: String,
@@ -117,13 +120,14 @@ pub fn build_hard_sigmoid() -> ActCircuit {
 
 /// Fig 4(b): hard swish = multiplier(x, hard_sigmoid(x)).
 pub fn build_hard_swish() -> ActCircuit {
-    let mut act = build_hard_sigmoid();
-    let c = &mut act.circuit;
-    let vin = c.node("vin");
-    let hs = c.node("vout");
-    let out = c.node("vswish");
-    c.mult("XMUL", out, vin, hs, 1.0);
-    ActCircuit { circuit: std::mem::take(c), vin_name: "VIN".into(), out_node: "vswish".into() }
+    // extend the hard-sigmoid front end's circuit in place (no moved-out
+    // intermediate ActCircuit holding an emptied sentinel)
+    let ActCircuit { mut circuit, .. } = build_hard_sigmoid();
+    let vin = circuit.node("vin");
+    let hs = circuit.node("vout");
+    let out = circuit.node("vswish");
+    circuit.mult("XMUL", out, vin, hs, 1.0);
+    ActCircuit { circuit, vin_name: "VIN".into(), out_node: "vswish".into() }
 }
 
 /// Knee width of the diode limiter — tolerance band used when pinning the

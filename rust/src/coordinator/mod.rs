@@ -14,9 +14,12 @@
 //! paper's deployment model where one analog accelerator serves a stream of
 //! sensor frames; metrics capture latency/throughput for Fig 8-style runs.
 
-//! The batching policy ([`batcher`]), metrics ([`metrics`]) and
-//! [`accuracy`] are pure and always available; the PJRT-backed service
-//! ([`Server`], [`classify_dataset`]) needs the `runtime-xla` feature.
+//! The batching policy ([`batcher`]), metrics ([`metrics`]), [`accuracy`]
+//! and the crossbar-pipeline analog path ([`classify_dataset_analog`],
+//! batching images through
+//! [`Pipeline::forward_batch`](crate::pipeline::Pipeline::forward_batch))
+//! are pure and always available; the PJRT-backed service (`Server`,
+//! `classify_dataset`) needs the `runtime-xla` feature.
 
 pub mod batcher;
 pub mod metrics;
@@ -29,11 +32,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 #[cfg(feature = "runtime-xla")]
 use std::sync::Arc;
-#[cfg(feature = "runtime-xla")]
 use std::time::Instant;
 
 #[cfg(feature = "runtime-xla")]
-use anyhow::{anyhow, Result};
+use anyhow::anyhow;
+use anyhow::Result;
+
+use crate::pipeline::{image_to_input, Pipeline};
+use crate::util::bin::Dataset;
 
 #[cfg(feature = "runtime-xla")]
 use crate::runtime::{argmax_rows, Engine, Model};
@@ -299,6 +305,46 @@ pub fn classify_dataset(
     Ok((labels, t0.elapsed()))
 }
 
+/// Synchronous bulk evaluation through the analog crossbar [`Pipeline`] —
+/// the offline counterpart of the PJRT `classify_dataset` and the serving
+/// path the ROADMAP asked for: images are packed with the same [`batcher::plan_batch`]
+/// policy the PJRT server uses, and each batch is answered by one
+/// [`Pipeline::forward_batch`] call — so at
+/// [`Fidelity::Spice`](crate::pipeline::Fidelity::Spice) every crossbar read
+/// amortizes the whole batch over a single multi-RHS
+/// [`CrossbarSim::solve_batch`](crate::netlist::CrossbarSim::solve_batch)
+/// substitution pass per segment. Returns (labels, wall time).
+pub fn classify_dataset_analog(
+    pipeline: &mut Pipeline,
+    ds: &Dataset,
+    n: usize,
+    batch_sizes: &[usize],
+) -> Result<(Vec<usize>, std::time::Duration)> {
+    let n = n.min(ds.n);
+    let mut sizes: Vec<usize> = batch_sizes.iter().copied().filter(|&b| b > 0).collect();
+    if sizes.is_empty() {
+        sizes.push(16);
+    }
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut labels = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    let mut i = 0;
+    while i < n {
+        // waited_out: bulk evaluation never holds requests back
+        let Some(plan) = batcher::plan_batch(&sizes, n - i, true) else {
+            break;
+        };
+        let take = plan.real.min(n - i);
+        let batch: Vec<Vec<f64>> = (0..take)
+            .map(|j| image_to_input(ds.image(i + j), ds.h, ds.w, ds.c))
+            .collect();
+        labels.extend(pipeline.classify_batch(&batch)?);
+        i += take;
+    }
+    Ok((labels, t0.elapsed()))
+}
+
 /// Accuracy of predicted labels vs dataset ground truth.
 pub fn accuracy(labels: &[usize], truth: &[u8]) -> f64 {
     if labels.is_empty() {
@@ -316,5 +362,33 @@ mod tests {
     fn accuracy_counts() {
         assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
         assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn analog_path_batches_and_classifies() {
+        use crate::pipeline::{argmax, default_device, Fidelity, PipelineBuilder};
+        let (h, w, c) = (2, 2, 3);
+        let n = 5;
+        let ds = Dataset {
+            n,
+            h,
+            w,
+            c,
+            data: (0..n * h * w * c).map(|i| (i % 7) as f32 / 7.0).collect(),
+            labels: vec![0; n],
+        };
+        let dev = default_device();
+        let mut p = PipelineBuilder::new()
+            .fidelity(Fidelity::Ideal)
+            .build_fc_stack(&[h * w * c, 4], &dev, 3)
+            .unwrap();
+        let (labels, _) = classify_dataset_analog(&mut p, &ds, n, &[2]).unwrap();
+        assert_eq!(labels.len(), n);
+        assert!(labels.iter().all(|&l| l < 4));
+        // the batched serving path must agree with per-image forwards
+        for (i, &label) in labels.iter().enumerate() {
+            let x = image_to_input(ds.image(i), h, w, c);
+            assert_eq!(label, argmax(&p.forward(&x).unwrap()), "image {i}");
+        }
     }
 }

@@ -4,13 +4,16 @@
 //! Memristor" (Li et al., 2024). Three-layer architecture (DESIGN.md):
 //! JAX/Pallas analog model AOT-compiled to HLO artifacts, executed from this
 //! rust coordinator via PJRT; the paper's automated mapping framework
-//! (crossbar layout -> SPICE netlists -> MNA simulation) lives here too.
+//! (crossbar layout -> SPICE netlists -> MNA simulation) lives here too,
+//! unified behind the trait-based [`pipeline`] inference API (manifest ->
+//! analog module chain -> batched crossbar logits).
 pub mod analog;
 pub mod coordinator;
 pub mod dataset;
 pub mod mapper;
 pub mod netlist;
 pub mod nn;
+pub mod pipeline;
 pub mod power;
 pub mod report;
 /// PJRT runtime — requires the `runtime-xla` feature (the `xla` crate +

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   info                         artifact + manifest summary
-//!   accuracy [--model analog|digital] [--n N]      Table 1 row
+//!   accuracy [--model analog|digital] [--n N] [--fidelity F]  Table 1 row
+//!            (analog runs offline through the crossbar pipeline;
+//!             digital needs the PJRT runtime)
 //!   serve    [--n N] [--model ...] [--max-wait-us U]  demo serving run
 //!   verify                       runtime vs python expected logits
 //!   map      [--mode inverted|dual]                Table 4 resources
@@ -13,14 +15,16 @@
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
 
 use std::path::Path;
+use std::str::FromStr;
 
 use anyhow::{bail, Result};
 
+use memx::coordinator;
 #[cfg(feature = "runtime-xla")]
-use memx::coordinator::{self, Server, ServerConfig};
+use memx::coordinator::{Server, ServerConfig};
+use memx::pipeline::{Fidelity, PipelineBuilder};
 #[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
-#[cfg(feature = "runtime-xla")]
 use memx::util::bin::Dataset;
 use memx::util::cli::Args;
 
@@ -50,13 +54,42 @@ fn usage() {
     );
 }
 
-#[cfg(feature = "runtime-xla")]
-fn parse_model(s: &str) -> Result<Model> {
-    match s {
-        "analog" => Ok(Model::Analog),
-        "digital" => Ok(Model::Digital),
-        other => bail!("unknown model '{other}' (analog|digital)"),
+/// Which model a subcommand should run. `Analog` routes through the
+/// crossbar [`memx::pipeline`] (works offline); `Digital` needs the PJRT
+/// runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelChoice {
+    Analog,
+    Digital,
+}
+
+impl FromStr for ModelChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ModelChoice> {
+        match s {
+            "analog" => Ok(ModelChoice::Analog),
+            "digital" => Ok(ModelChoice::Digital),
+            other => bail!("unknown model '{other}' (analog|digital)"),
+        }
     }
+}
+
+#[cfg(feature = "runtime-xla")]
+impl ModelChoice {
+    /// The PJRT-compiled model variant this choice maps to.
+    fn runtime(self) -> Model {
+        match self {
+            ModelChoice::Analog => Model::Analog,
+            ModelChoice::Digital => Model::Digital,
+        }
+    }
+}
+
+/// Deprecated thin wrapper over the [`FromStr`] impl — prefer
+/// `s.parse::<ModelChoice>()`.
+fn parse_model(s: &str) -> Result<ModelChoice> {
+    s.parse()
 }
 
 fn run(cmd: &str, rest: &[String]) -> Result<()> {
@@ -94,16 +127,55 @@ fn cmd_info(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "runtime-xla")]
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "model", "n"])?;
+    let a = Args::parse(rest, &["artifacts", "model", "n", "fidelity", "mode", "segment"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
-    let model = parse_model(a.get_or("model", "analog"))?;
+    match parse_model(a.get_or("model", "analog"))? {
+        ModelChoice::Analog => accuracy_analog(dir, &a),
+        ModelChoice::Digital => accuracy_digital(dir, &a),
+    }
+}
+
+/// Analog Table 1 row through the crossbar pipeline — the offline path:
+/// manifest + weights compile into a [`memx::pipeline::Pipeline`], and the
+/// coordinator batches the dataset through `Pipeline::forward_batch`.
+fn accuracy_analog(dir: &Path, a: &Args) -> Result<()> {
+    let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
+    let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
+    let m = memx::nn::Manifest::load(dir)?;
+    let ws = memx::nn::WeightStore::load(dir, &m)?;
+    let mut pipe = PipelineBuilder::new()
+        .mode(mode)
+        .fidelity(fidelity)
+        .segment(a.get_usize("segment", 64)?)
+        .build(&m, &ws)?;
+    let ds = Dataset::load(&dir.join(&m.dataset_file))?;
+    let n = a.get_usize("n", ds.n)?;
+    println!(
+        "classifying {n} images through the analog pipeline ({fidelity} fidelity, mode {mode}): {}",
+        pipe.describe()
+    );
+    let (labels, wall) = coordinator::classify_dataset_analog(&mut pipe, &ds, n, &m.batch_sizes)?;
+    let acc = coordinator::accuracy(&labels, &ds.labels[..labels.len()]);
+    println!(
+        "accuracy {:.4} ({}/{} correct)  wall {:?}  {:.1} img/s",
+        acc,
+        (acc * labels.len() as f64).round() as usize,
+        labels.len(),
+        wall,
+        labels.len() as f64 / wall.as_secs_f64()
+    );
+    println!("digital (python) reference accuracy: {:.4}", m.digital_test_acc);
+    Ok(())
+}
+
+#[cfg(feature = "runtime-xla")]
+fn accuracy_digital(dir: &Path, a: &Args) -> Result<()> {
     let engine = Engine::new(dir)?;
     let ds = Dataset::load(&dir.join(&engine.manifest().dataset_file))?;
     let n = a.get_usize("n", ds.n)?;
-    println!("classifying {n} images with {model:?} model on {}", engine.platform());
-    let (labels, wall) = coordinator::classify_dataset(&engine, model, &ds, n)?;
+    println!("classifying {n} images with the digital model on {}", engine.platform());
+    let (labels, wall) = coordinator::classify_dataset(&engine, Model::Digital, &ds, n)?;
     let acc = coordinator::accuracy(&labels, &ds.labels[..labels.len()]);
     println!(
         "accuracy {:.4} ({}/{} correct)  wall {:?}  {:.1} img/s",
@@ -117,11 +189,16 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "runtime-xla"))]
+fn accuracy_digital(_dir: &Path, _a: &Args) -> Result<()> {
+    no_runtime("accuracy --model digital")
+}
+
 #[cfg(feature = "runtime-xla")]
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
-    let model = parse_model(a.get_or("model", "analog"))?;
+    let model = parse_model(a.get_or("model", "analog"))?.runtime();
     let n = a.get_usize("n", 256)?;
     let max_wait = std::time::Duration::from_micros(a.get_usize("max-wait-us", 2000)? as u64);
 
@@ -209,11 +286,6 @@ fn cmd_verify(rest: &[String]) -> Result<()> {
 }
 
 #[cfg(not(feature = "runtime-xla"))]
-fn cmd_accuracy(_rest: &[String]) -> Result<()> {
-    no_runtime("accuracy")
-}
-
-#[cfg(not(feature = "runtime-xla"))]
 fn cmd_serve(_rest: &[String]) -> Result<()> {
     no_runtime("serve")
 }
@@ -235,7 +307,7 @@ fn no_runtime(cmd: &str) -> Result<()> {
 fn cmd_map(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &["artifacts", "mode"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
-    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     let m = memx::nn::Manifest::load(dir)?;
     let ws = memx::nn::WeightStore::load(dir, &m)?;
     let mapped = memx::mapper::map_network(&m, &ws, mode)?;
@@ -249,7 +321,7 @@ fn cmd_netlist(rest: &[String]) -> Result<()> {
     let layer = a.get("layer").unwrap_or("cls.fc1");
     let outdir = Path::new(a.get_or("outdir", "netlists"));
     let segment = a.get_usize("segment", 0)?;
-    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     let m = memx::nn::Manifest::load(dir)?;
     let ws = memx::nn::WeightStore::load(dir, &m)?;
     let files = memx::netlist::emit_layer_netlists(&m, &ws, layer, mode, segment, outdir)?;
@@ -269,7 +341,7 @@ fn cmd_spice(rest: &[String]) -> Result<()> {
     let layer = a.get("layer").unwrap_or("cls.fc2");
     let segment = a.get_usize("segment", 64)?;
     let n = a.get_usize("n", 4)?;
-    let mode = memx::mapper::MapMode::parse(a.get_or("mode", "inverted"))?;
+    let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     memx::report::spice_layer_demo(dir, layer, mode, segment, n)
 }
 

@@ -25,13 +25,32 @@ pub enum MapMode {
     Dual,
 }
 
-impl MapMode {
-    pub fn parse(s: &str) -> Result<MapMode> {
+impl std::str::FromStr for MapMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<MapMode> {
         match s {
             "inverted" => Ok(MapMode::Inverted),
             "dual" => Ok(MapMode::Dual),
             other => bail!("unknown map mode '{other}' (inverted|dual)"),
         }
+    }
+}
+
+impl std::fmt::Display for MapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MapMode::Inverted => "inverted",
+            MapMode::Dual => "dual",
+        })
+    }
+}
+
+impl MapMode {
+    /// Deprecated alias for the [`std::str::FromStr`] impl — prefer
+    /// `s.parse::<MapMode>()`. Retained for source compatibility.
+    pub fn parse(s: &str) -> Result<MapMode> {
+        s.parse()
     }
 
     pub fn inverted(&self) -> bool {
@@ -76,6 +95,29 @@ pub fn apply_prog_noise(q: &mut [f64], sigma: f64, rng: &mut Rng) {
             let noisy = *v * (1.0 + sigma * rng.gaussian());
             *v = noisy.clamp(-1.0, 1.0);
         }
+    }
+}
+
+/// Relative programming noise on placed crossbar devices — the [`Placed`]
+/// mirror of [`apply_prog_noise`]. Conductances stay physical: floored at
+/// half the smallest programmable level (so no device leaves the HP model's
+/// resistance window) and capped at the full-on conductance — except bias
+/// devices, which legitimately realize `|b|·bscale/scale > 1` (see
+/// [`build_fc_crossbar`]) and are capped at their own nominal value instead
+/// of being crushed to 1.
+pub fn apply_prog_noise_placed(
+    devices: &mut [Placed],
+    sigma: f64,
+    levels: usize,
+    rng: &mut Rng,
+) {
+    if sigma <= 0.0 {
+        return;
+    }
+    let floor = 0.5 / (levels.max(2) - 1) as f64;
+    for d in devices.iter_mut() {
+        let noisy = d.g_norm * (1.0 + sigma * rng.gaussian());
+        d.g_norm = noisy.clamp(floor, d.g_norm.max(1.0));
     }
 }
 
@@ -138,8 +180,11 @@ pub fn map_network(m: &Manifest, ws: &WeightStore, mode: MapMode) -> Result<Mapp
     Ok(MappedNetwork { mode, layers })
 }
 
-fn weight_q<'a>(
-    ws: &'a WeightStore,
+/// Resolve a named tensor to (shape, quantized signed units, analog scale)
+/// — the single source of the scale-fallback rule (max |w|, floored at
+/// 1e-12) shared by the mapper and the pipeline builder.
+pub(crate) fn weight_q(
+    ws: &WeightStore,
     name: &str,
     levels: usize,
 ) -> Result<(Vec<usize>, Vec<f64>, f64)> {
@@ -540,6 +585,45 @@ mod tests {
         assert!(MapMode::parse("x").is_err());
         assert_eq!(MapMode::Inverted.opamps_per_port(), 1);
         assert_eq!(MapMode::Dual.opamps_per_port(), 2);
+    }
+
+    #[test]
+    fn mode_fromstr_display_roundtrip() {
+        for mode in [MapMode::Inverted, MapMode::Dual] {
+            let parsed: MapMode = mode.to_string().parse().unwrap();
+            assert_eq!(parsed, mode);
+        }
+        assert!("INVERTED".parse::<MapMode>().is_err());
+    }
+
+    #[test]
+    fn prog_noise_placed_stays_physical() {
+        let mut devices: Vec<layout::Placed> = (0..64)
+            .map(|i| layout::Placed { row: i, col: 0, g_norm: (i + 1) as f64 / 64.0 })
+            .collect();
+        let before = devices.clone();
+        let mut rng = Rng::new(7);
+        apply_prog_noise_placed(&mut devices, 0.2, 64, &mut rng);
+        let floor = 0.5 / 63.0;
+        assert!(devices.iter().all(|d| d.g_norm >= floor && d.g_norm <= 1.0));
+        assert!(devices.iter().zip(&before).any(|(a, b)| a.g_norm != b.g_norm));
+        // sigma 0 is a no-op
+        let mut copy = before.clone();
+        apply_prog_noise_placed(&mut copy, 0.0, 64, &mut rng);
+        assert!(copy.iter().zip(&before).all(|(a, b)| a.g_norm == b.g_norm));
+    }
+
+    #[test]
+    fn prog_noise_placed_keeps_over_unity_bias_devices() {
+        // bias devices realize |b|·bscale/scale and can exceed unit
+        // conductance — noise must perturb around the nominal value, not
+        // crush it to 1
+        let mut devices =
+            vec![layout::Placed { row: 0, col: 0, g_norm: 8.0 }; 32];
+        let mut rng = Rng::new(3);
+        apply_prog_noise_placed(&mut devices, 0.05, 64, &mut rng);
+        assert!(devices.iter().all(|d| d.g_norm > 1.0 && d.g_norm <= 8.0));
+        assert!(devices.iter().any(|d| d.g_norm != 8.0));
     }
 
     #[test]

@@ -326,6 +326,16 @@ impl WeightStore {
         Ok(WeightStore { blob, entries: manifest.weights.clone() })
     }
 
+    /// Assemble a store from in-memory parts — synthetic manifests, tests
+    /// and tooling that never touch a weights.bin on disk.
+    pub fn from_parts(blob: Vec<f32>, entries: Vec<WeightEntry>) -> Result<WeightStore> {
+        let need = entries.iter().map(|w| w.offset + w.len).max().unwrap_or(0);
+        if blob.len() < need {
+            bail!("weight blob too short: {} < {need}", blob.len());
+        }
+        Ok(WeightStore { blob, entries })
+    }
+
     pub fn get(&self, name: &str) -> Option<Tensor<'_>> {
         let e = self.entries.iter().find(|w| w.name == name)?;
         Some(Tensor {

@@ -1,0 +1,530 @@
+//! [`PipelineBuilder`] — compiles a [`Manifest`] + [`WeightStore`] (or a
+//! synthetic FC stack) into a runnable [`Pipeline`].
+//!
+//! The builder owns every mapping decision the old free-function
+//! choreography spread across call sites: differential convention
+//! ([`MapMode`]), quantization levels, programming noise, netlist segment
+//! size, worker count and execution [`Fidelity`]. `build` walks the
+//! manifest's layer list, converts each entry into its [`AnalogModule`]
+//! (squeeze-and-excite sub-chains collapse into one [`SeModule`]; residual
+//! markers become summing-amplifier stages), and validates that the module
+//! dims chain end to end.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::mapper::{
+    apply_prog_noise, apply_prog_noise_placed, build_fc_crossbar, build_synthetic_fc, weight_q,
+    Crossbar, MapMode,
+};
+use crate::nn::{ActKind, ConvGeom, DeviceJson, Layer, Manifest, WeightStore};
+use crate::spice::solve::Ordering;
+use crate::util::pool;
+use crate::util::prng::Rng;
+
+use super::modules::{
+    ActivationModule, BatchNormModule, ConvModuleCfg, CrossbarModule, GapModule, SeModule,
+};
+use super::{AnalogModule, Fidelity, Pipeline, Stage};
+
+/// Running tensor shape while walking the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shape {
+    /// channel-major planes `[c][h*w]`
+    Spatial { c: usize, h: usize, w: usize },
+    /// plain vector
+    Flat(usize),
+}
+
+impl Shape {
+    fn len(&self) -> usize {
+        match *self {
+            Shape::Spatial { c, h, w } => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    fn channels(&self) -> usize {
+        match *self {
+            Shape::Spatial { c, .. } => c,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    fn spatial(&self) -> usize {
+        match *self {
+            Shape::Spatial { h, w, .. } => h * w,
+            Shape::Flat(_) => 1,
+        }
+    }
+}
+
+/// The device constants the synthetic/test paths use when no manifest is
+/// around (HP model values matching the trained artifacts' device.json).
+pub fn default_device() -> DeviceJson {
+    DeviceJson {
+        r_on: 100.0,
+        r_off: 16000.0,
+        levels: 64,
+        prog_sigma: 0.0,
+        v_in: 2.5e-3,
+        v_rail: 8.0,
+        t_mem: 1e-10,
+        slew_rate: 1e7,
+        v_swing: 5.0,
+        p_opamp: 1e-3,
+        p_memristor: 1.1e-6,
+        p_aux: 5e-4,
+        t_opamp: 5e-7,
+    }
+}
+
+/// The deterministic crossbar sequence behind
+/// [`PipelineBuilder::build_fc_stack`] — exposed so tests can reconstruct
+/// the exact same layers and compare module transfers against
+/// [`Crossbar::eval_ideal`] directly.
+pub fn synthetic_stack_crossbars(
+    dims: &[usize],
+    levels: usize,
+    mode: MapMode,
+    seed: u64,
+) -> Vec<Crossbar> {
+    dims.windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            build_synthetic_fc(w[0], w[1], levels, mode, seed.wrapping_add(i as u64 * 0x9E3779B9))
+        })
+        .collect()
+}
+
+/// Fluent configuration for compiling analog pipelines (see module docs).
+#[derive(Debug, Clone)]
+pub struct PipelineBuilder {
+    mode: MapMode,
+    fidelity: Fidelity,
+    levels: Option<usize>,
+    prog_sigma: f64,
+    noise_seed: u64,
+    segment: usize,
+    workers: usize,
+    ordering: Ordering,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PipelineBuilder {
+    pub fn new() -> PipelineBuilder {
+        PipelineBuilder {
+            mode: MapMode::Inverted,
+            fidelity: Fidelity::Behavioural,
+            levels: None,
+            prog_sigma: 0.0,
+            noise_seed: 0x5EED,
+            segment: 64,
+            workers: 0,
+            ordering: Ordering::Smart,
+        }
+    }
+
+    /// Differential mapping convention (default: the paper's inverted §3.2).
+    pub fn mode(mut self, mode: MapMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Execution fidelity (default: [`Fidelity::Behavioural`]).
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// Override the device's quantization levels.
+    pub fn levels(mut self, levels: usize) -> Self {
+        self.levels = Some(levels);
+        self
+    }
+
+    /// Relative programming noise applied to every placed device at compile
+    /// time (default 0: deterministic mapping).
+    pub fn prog_noise(mut self, sigma: f64, seed: u64) -> Self {
+        self.prog_sigma = sigma;
+        self.noise_seed = seed;
+        self
+    }
+
+    /// Columns per netlist segment for [`Fidelity::Spice`] simulators
+    /// (0 = monolithic; default 64, the paper's §4.2 sweet spot).
+    pub fn segment(mut self, segment: usize) -> Self {
+        self.segment = segment;
+        self
+    }
+
+    /// Worker threads for parallel segment solves (0 = auto).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Elimination ordering for the SPICE engine.
+    pub fn ordering(mut self, ordering: Ordering) -> Self {
+        self.ordering = ordering;
+        self
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            pool::default_workers()
+        } else {
+            self.workers
+        }
+    }
+
+    /// Compile the full manifest into a runnable [`Pipeline`].
+    pub fn build(&self, m: &Manifest, ws: &WeightStore) -> Result<Pipeline> {
+        if m.layers.is_empty() {
+            bail!("manifest has no layers");
+        }
+        let mut mm = m.clone();
+        if let Some(l) = self.levels {
+            mm.device.levels = l;
+        }
+        let dev = mm.device.clone();
+        let mut rng = Rng::new(self.noise_seed);
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut shape = input_shape(&mm.layers[0]);
+        let mut i = 0;
+        while i < mm.layers.len() {
+            let l = mm.layers[i].clone();
+            match &l {
+                Layer::Conv(g) | Layer::DwConv(g) => {
+                    let depthwise = matches!(l, Layer::DwConv(_));
+                    let want_c = if depthwise { g.cout } else { g.cin };
+                    ensure_spatial(shape, want_c, g.h_in, g.w_in, &g.name)?;
+                    let module = self.conv_module(g, depthwise, &mm, ws, &mut rng)?;
+                    shape = Shape::Spatial { c: g.cout, h: g.h_out, w: g.w_out };
+                    stages.push(Stage::Module { unit: g.unit.clone(), module: Box::new(module) });
+                }
+                Layer::Bn { name, unit, c, weight } => {
+                    ensure_channels(shape, *c, name)?;
+                    let module = self.bn_module(name, weight, *c, shape.spatial(), ws, &dev)?;
+                    stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                }
+                Layer::Act { name, unit, kind, c } => {
+                    ensure_channels(shape, *c, name)?;
+                    let module = ActivationModule::new(
+                        name.clone(),
+                        *kind,
+                        *c,
+                        shape.spatial(),
+                        self.fidelity,
+                        dev.v_rail,
+                        self.resolved_workers(),
+                    );
+                    stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                }
+                Layer::GaPool { name, unit, c, h_in, w_in } => {
+                    ensure_spatial(shape, *c, *h_in, *w_in, name)?;
+                    if is_se_block(&mm.layers[i..]) {
+                        let module = self.se_module(&mm, ws, i, shape.spatial(), &mut rng)?;
+                        stages
+                            .push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                        i += 5;
+                        continue;
+                    }
+                    let module = GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode);
+                    shape = Shape::Flat(*c);
+                    stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                }
+                Layer::Fc { name, unit, cin, cout, .. }
+                | Layer::PConv { name, unit, cin, cout, .. } => {
+                    if shape.len() != *cin {
+                        bail!(
+                            "layer '{name}' expects {cin} inputs, network provides {}",
+                            shape.len()
+                        );
+                    }
+                    let kind = if matches!(l, Layer::Fc { .. }) { "FC" } else { "PConv" };
+                    let module = self.fc_module(&mm, ws, name, kind, &mut rng)?;
+                    shape = Shape::Flat(*cout);
+                    stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                }
+                Layer::Residual { name, unit, c } => {
+                    ensure_channels(shape, *c, name)?;
+                    stages.push(Stage::Residual {
+                        name: name.clone(),
+                        unit: unit.clone(),
+                        dim: shape.len(),
+                        channels: *c,
+                    });
+                }
+            }
+            i += 1;
+        }
+        Pipeline::from_stages(stages, self.fidelity)
+    }
+
+    /// Compile a single named FC/PConv layer into a one-stage pipeline —
+    /// the `memx spice` / layer-demo path.
+    pub fn build_layer(&self, m: &Manifest, ws: &WeightStore, layer: &str) -> Result<Pipeline> {
+        let mut mm = m.clone();
+        if let Some(l) = self.levels {
+            mm.device.levels = l;
+        }
+        let found = mm
+            .layers
+            .iter()
+            .find(|l| l.name() == layer)
+            .ok_or_else(|| anyhow!("layer '{layer}' not found"))?;
+        let (kind, unit) = match found {
+            Layer::Fc { unit, .. } => ("FC", unit.clone()),
+            Layer::PConv { unit, .. } => ("PConv", unit.clone()),
+            other => bail!(
+                "layer '{layer}' is {} — single-layer pipelines support FC/PConv",
+                other.kind_label()
+            ),
+        };
+        let mut rng = Rng::new(self.noise_seed);
+        let module = self.fc_module(&mm, ws, layer, kind, &mut rng)?;
+        Pipeline::from_stages(
+            vec![Stage::Module { unit, module: Box::new(module) }],
+            self.fidelity,
+        )
+    }
+
+    /// Compile a synthetic FC stack (`dims[0] -> dims[1] -> ...`) — the
+    /// manifest-free path benches and property tests use. Layer weights
+    /// come from [`synthetic_stack_crossbars`] with the same `seed`.
+    pub fn build_fc_stack(&self, dims: &[usize], dev: &DeviceJson, seed: u64) -> Result<Pipeline> {
+        if dims.len() < 2 {
+            bail!("fc stack needs at least two dims");
+        }
+        let levels = self.levels.unwrap_or(dev.levels);
+        let mut rng = Rng::new(self.noise_seed);
+        let mut modules: Vec<Box<dyn AnalogModule>> = Vec::new();
+        for mut cb in synthetic_stack_crossbars(dims, levels, self.mode, seed) {
+            apply_prog_noise_placed(&mut cb.devices, self.prog_sigma, levels, &mut rng);
+            modules.push(Box::new(self.crossbar_module(cb, dev)?));
+        }
+        Pipeline::from_modules(modules, self.fidelity)
+    }
+
+    /// Wrap an explicit crossbar in a [`CrossbarModule`] using this
+    /// builder's fidelity / segment / ordering / workers configuration.
+    pub fn crossbar_module(&self, cb: Crossbar, dev: &DeviceJson) -> Result<CrossbarModule> {
+        CrossbarModule::fc(
+            cb.name.clone(),
+            "FC",
+            cb,
+            dev,
+            self.fidelity,
+            self.segment,
+            self.ordering,
+            self.resolved_workers(),
+        )
+    }
+
+    fn fc_module(
+        &self,
+        m: &Manifest,
+        ws: &WeightStore,
+        name: &str,
+        kind: &'static str,
+        rng: &mut Rng,
+    ) -> Result<CrossbarModule> {
+        let mut cb = build_fc_crossbar(m, ws, name, self.mode)?;
+        apply_prog_noise_placed(&mut cb.devices, self.prog_sigma, m.device.levels, rng);
+        CrossbarModule::fc(
+            name.to_string(),
+            kind,
+            cb,
+            &m.device,
+            self.fidelity,
+            self.segment,
+            self.ordering,
+            self.resolved_workers(),
+        )
+    }
+
+    fn conv_module(
+        &self,
+        g: &ConvGeom,
+        depthwise: bool,
+        m: &Manifest,
+        ws: &WeightStore,
+        rng: &mut Rng,
+    ) -> Result<CrossbarModule> {
+        let levels = m.device.levels;
+        let (shape, mut q, scale) = weight_q(ws, &g.weight, levels)?;
+        let expect = if depthwise {
+            vec![g.k, g.k, 1, g.cout]
+        } else {
+            vec![g.k, g.k, g.cin, g.cout]
+        };
+        if shape != expect {
+            bail!("conv '{}': weight shape {shape:?} != {expect:?}", g.name);
+        }
+        apply_prog_noise(&mut q, self.prog_sigma, rng);
+        // HWIO -> bank layout (see modules::ConvBanks::kernels)
+        let kk = g.k * g.k;
+        let kernels = if depthwise {
+            let mut ks = vec![0.0; g.cout * kk];
+            for c in 0..g.cout {
+                for a in 0..kk {
+                    ks[c * kk + a] = q[a * g.cout + c];
+                }
+            }
+            ks
+        } else {
+            let mut ks = vec![0.0; g.cin * g.cout * kk];
+            for co in 0..g.cout {
+                for ci in 0..g.cin {
+                    for a in 0..kk {
+                        ks[(co * g.cin + ci) * kk + a] = q[(a * g.cin + ci) * g.cout + co];
+                    }
+                }
+            }
+            ks
+        };
+        CrossbarModule::conv(
+            ConvModuleCfg {
+                name: g.name.clone(),
+                kind: if depthwise { "DConv" } else { "Conv" },
+                geom: g.clone(),
+                depthwise,
+                kernels,
+                scale,
+                mode: self.mode,
+                fidelity: self.fidelity,
+                segment: self.segment,
+                ordering: self.ordering,
+                workers: self.resolved_workers(),
+            },
+            &m.device,
+        )
+    }
+
+    fn bn_module(
+        &self,
+        name: &str,
+        weight: &str,
+        c: usize,
+        spatial: usize,
+        ws: &WeightStore,
+        dev: &DeviceJson,
+    ) -> Result<BatchNormModule> {
+        let base = weight.strip_suffix(".gamma").unwrap_or(weight);
+        let gamma = tensor_f64(ws, &format!("{base}.gamma"))
+            .ok_or_else(|| anyhow!("bn '{name}': tensor '{base}.gamma' not in store"))?;
+        // python always emits the companion stats; synthetic manifests may
+        // not — identity defaults keep the fold well-defined
+        let beta = tensor_f64(ws, &format!("{base}.beta")).unwrap_or_else(|| vec![0.0; c]);
+        let mean = tensor_f64(ws, &format!("{base}.mean")).unwrap_or_else(|| vec![0.0; c]);
+        let var = tensor_f64(ws, &format!("{base}.var")).unwrap_or_else(|| vec![1.0; c]);
+        BatchNormModule::new(
+            name,
+            c,
+            spatial,
+            &gamma,
+            &beta,
+            &mean,
+            &var,
+            self.mode,
+            self.fidelity,
+            dev.v_rail,
+        )
+    }
+
+    fn se_module(
+        &self,
+        m: &Manifest,
+        ws: &WeightStore,
+        i: usize,
+        spatial: usize,
+        rng: &mut Rng,
+    ) -> Result<SeModule> {
+        let dev = &m.device;
+        let (
+            Layer::GaPool { name, c, h_in, w_in, .. },
+            Layer::PConv { name: n1, .. },
+            Layer::Act { name: na1, c: c1, .. },
+            Layer::PConv { name: n2, .. },
+            Layer::Act { name: na2, c: c2, .. },
+        ) = (
+            &m.layers[i],
+            &m.layers[i + 1],
+            &m.layers[i + 2],
+            &m.layers[i + 3],
+            &m.layers[i + 4],
+        )
+        else {
+            bail!("squeeze-and-excite block structure mismatch at layer {i}");
+        };
+        let gap = GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode);
+        let fc1 = self.fc_module(m, ws, n1, "PConv", rng)?;
+        let act1 = ActivationModule::new(
+            na1.clone(),
+            ActKind::Relu,
+            *c1,
+            1,
+            self.fidelity,
+            dev.v_rail,
+            self.resolved_workers(),
+        );
+        let fc2 = self.fc_module(m, ws, n2, "PConv", rng)?;
+        let act2 = ActivationModule::new(
+            na2.clone(),
+            ActKind::HSigmoid,
+            *c2,
+            1,
+            self.fidelity,
+            dev.v_rail,
+            self.resolved_workers(),
+        );
+        let se_name = name.strip_suffix(".gap").unwrap_or(name).to_string();
+        SeModule::new(se_name, *c, spatial, gap, fc1, act1, fc2, act2)
+    }
+}
+
+/// Squeeze-and-excite structural pattern: pool → PConv → ReLU → PConv →
+/// hard sigmoid (the classifier's pool is followed by an FC, so it never
+/// matches).
+fn is_se_block(layers: &[Layer]) -> bool {
+    layers.len() >= 5
+        && matches!(layers[0], Layer::GaPool { .. })
+        && matches!(layers[1], Layer::PConv { .. })
+        && matches!(layers[2], Layer::Act { kind: ActKind::Relu, .. })
+        && matches!(layers[3], Layer::PConv { .. })
+        && matches!(layers[4], Layer::Act { kind: ActKind::HSigmoid, .. })
+}
+
+/// Input shape the first manifest layer expects.
+fn input_shape(first: &Layer) -> Shape {
+    match first {
+        Layer::Conv(g) => Shape::Spatial { c: g.cin, h: g.h_in, w: g.w_in },
+        Layer::DwConv(g) => Shape::Spatial { c: g.cout, h: g.h_in, w: g.w_in },
+        Layer::GaPool { c, h_in, w_in, .. } => Shape::Spatial { c: *c, h: *h_in, w: *w_in },
+        Layer::Fc { cin, .. } | Layer::PConv { cin, .. } => Shape::Flat(*cin),
+        Layer::Bn { c, .. } | Layer::Act { c, .. } | Layer::Residual { c, .. } => Shape::Flat(*c),
+    }
+}
+
+fn ensure_channels(shape: Shape, c: usize, name: &str) -> Result<()> {
+    if shape.channels() != c {
+        bail!("layer '{name}' expects {c} channels, network provides {}", shape.channels());
+    }
+    Ok(())
+}
+
+fn ensure_spatial(shape: Shape, c: usize, h: usize, w: usize, name: &str) -> Result<()> {
+    match shape {
+        Shape::Spatial { c: sc, h: sh, w: sw } if sc == c && sh == h && sw == w => Ok(()),
+        other => bail!("layer '{name}' expects {c}x{h}x{w} input, network provides {other:?}"),
+    }
+}
+
+fn tensor_f64(ws: &WeightStore, name: &str) -> Option<Vec<f64>> {
+    ws.get(name).map(|t| t.data.iter().map(|&v| v as f64).collect())
+}

@@ -1,0 +1,431 @@
+//! `memx::pipeline` — the trait-based analog inference API: from a trained
+//! [`Manifest`](crate::nn::Manifest) + [`WeightStore`](crate::nn::WeightStore)
+//! to batched crossbar logits in one composable surface.
+//!
+//! The paper's architecture is a chain of five memristive module types —
+//! convolution, batch normalization, activation, global average pooling and
+//! fully connected. This module makes that chain the unit of the public
+//! API: each paper module is an [`AnalogModule`] implementation
+//! ([`CrossbarModule`], [`BatchNormModule`], [`ActivationModule`],
+//! [`GapModule`], plus [`SeModule`] for the squeeze-and-excite side branch),
+//! and a [`PipelineBuilder`] compiles the manifest directly into a runnable
+//! [`Pipeline`] — replacing the old ad-hoc `map_network → emit → parse →
+//! sim` choreography.
+//!
+//! # Manifest → logits walkthrough
+//!
+//! ```no_run
+//! use memx::nn::{Manifest, WeightStore};
+//! use memx::pipeline::{Fidelity, PipelineBuilder};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let dir = std::path::Path::new("artifacts");
+//!     // 1. the typed network IR: layer inventory + weight table
+//!     let manifest = Manifest::load(dir)?;
+//!     let weights = WeightStore::load(dir, &manifest)?;
+//!     // 2. compile it: quantize weights onto devices (Eq 16), lay out the
+//!     //    differential crossbars (Algorithm 1) and pick the execution
+//!     //    fidelity for every stage
+//!     let mut pipeline = PipelineBuilder::new()
+//!         .fidelity(Fidelity::Behavioural)
+//!         .build(&manifest, &weights)?;
+//!     // 3. run it, batch-first: one image in channel-major planes
+//!     let image = vec![0.0; pipeline.in_dim()];
+//!     let logits = pipeline.forward_batch(&[image])?;
+//!     println!("predicted class {}", memx::pipeline::argmax(&logits[0]));
+//!     Ok(())
+//! }
+//! ```
+//!
+//! # Fidelity levels
+//!
+//! * [`Fidelity::Ideal`] — exact quantized-weight arithmetic: crossbars via
+//!   [`Crossbar::eval_ideal`](crate::mapper::Crossbar::eval_ideal),
+//!   activations via the software functions. The digital reference for the
+//!   mapped network.
+//! * [`Fidelity::Behavioural`] — the analog operating point the L2 JAX
+//!   model uses: the same crossbar arithmetic with TIA rail saturation, and
+//!   the rail-clipped activation forms.
+//! * [`Fidelity::Spice`] — circuit-level: every crossbar owns a resident
+//!   [`CrossbarSim`](crate::netlist::CrossbarSim) (factor-once / solve-many,
+//!   batches amortized over one multi-RHS substitution per segment via
+//!   [`CrossbarSim::solve_batch`](crate::netlist::CrossbarSim::solve_batch)),
+//!   and hard-sigmoid / hard-swish run through their Fig 4 op-amp circuits
+//!   ([`ActCircuit`](crate::analog::ActCircuit)).
+//!
+//! Data layout between modules: spatial tensors travel as channel-major
+//! planes `[c][h*w]` (row-major within a plane); vectors are plain `[c]`.
+//! [`image_to_input`] converts the dataset's HWC images.
+
+pub mod builder;
+pub mod modules;
+
+use anyhow::{bail, Result};
+
+pub use builder::{default_device, synthetic_stack_crossbars, PipelineBuilder};
+pub use modules::{ActivationModule, BatchNormModule, CrossbarModule, GapModule, SeModule};
+
+/// Execution fidelity of a compiled [`Pipeline`] (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// exact quantized-weight arithmetic, software activations
+    Ideal,
+    /// rail-clipped analog behavioural models (the L2 operating point)
+    Behavioural,
+    /// resident SPICE simulators per crossbar + Fig 4 activation circuits
+    Spice,
+}
+
+impl std::str::FromStr for Fidelity {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Fidelity> {
+        match s {
+            "ideal" => Ok(Fidelity::Ideal),
+            "behavioural" | "behavioral" => Ok(Fidelity::Behavioural),
+            "spice" => Ok(Fidelity::Spice),
+            other => bail!("unknown fidelity '{other}' (ideal|behavioural|spice)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Fidelity::Ideal => "ideal",
+            Fidelity::Behavioural => "behavioural",
+            Fidelity::Spice => "spice",
+        })
+    }
+}
+
+/// One analog stage of the paper's module chain. Implementations own their
+/// device state (crossbars, resident simulators, activation circuits) and
+/// answer whole batches per call — the batch-first contract the serving
+/// tier scales on.
+pub trait AnalogModule {
+    /// Layer name (manifest name or a synthetic label).
+    fn name(&self) -> &str;
+
+    /// Table 4 kind label ("Conv", "BN", "HSwish", "GAPool", "FC", ...).
+    fn kind(&self) -> &'static str;
+
+    /// Input vector length this module expects.
+    fn in_dim(&self) -> usize;
+
+    /// Output vector length this module produces.
+    fn out_dim(&self) -> usize;
+
+    /// Forward a batch of input vectors (each of length [`Self::in_dim`]).
+    /// At [`Fidelity::Spice`] this is where the multi-RHS batch
+    /// amortization happens — one factorization, one substitution pass per
+    /// crossbar segment for the whole batch.
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
+
+    /// Single-vector convenience — `forward_batch` of a batch of one.
+    fn forward(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        let batch = [x.to_vec()];
+        let mut out = self.forward_batch(&batch)?;
+        out.pop().ok_or_else(|| anyhow::anyhow!("module returned an empty batch"))
+    }
+
+    /// Physically placed memristors (resource hook; Table 4 column).
+    fn memristors(&self) -> usize {
+        0
+    }
+
+    /// Op-amps (resource hook; Table 4 column).
+    fn opamps(&self) -> usize {
+        0
+    }
+
+    /// Memristor-crossbar stages this module contributes to the critical
+    /// path (Eq 17 N_m). Composite modules may contribute several.
+    fn memristor_stages(&self) -> usize {
+        0
+    }
+}
+
+/// One stage of a compiled [`Pipeline`].
+pub enum Stage {
+    /// A paper module, tagged with the manifest unit it belongs to.
+    Module { unit: String, module: Box<dyn AnalogModule> },
+    /// The residual summing amplifier closing a bottleneck unit: adds the
+    /// vector that entered the unit (MobileNetV3 skip semantics — stride 1,
+    /// matching channels). `dim` is the full vector length; `channels`
+    /// counts the per-channel summing amplifiers (the mapper's "Add" row).
+    Residual { name: String, unit: String, dim: usize, channels: usize },
+}
+
+impl Stage {
+    fn unit(&self) -> &str {
+        match self {
+            Stage::Module { unit, .. } | Stage::Residual { unit, .. } => unit,
+        }
+    }
+}
+
+/// A runnable analog network: the paper's module chain compiled by
+/// [`PipelineBuilder`], with end-to-end [`Pipeline::forward_batch`] /
+/// [`Pipeline::classify_batch`].
+pub struct Pipeline {
+    stages: Vec<Stage>,
+    /// `checkpoint[i]`: snapshot the batch before stage `i` — set on the
+    /// first stage of every unit that ends in a residual adder, so
+    /// `forward_batch` only clones where a skip connection consumes it.
+    checkpoint: Vec<bool>,
+    fidelity: Fidelity,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl Pipeline {
+    /// Assemble a pipeline from explicit stages, validating that every
+    /// module's input length matches its predecessor's output.
+    pub fn from_stages(stages: Vec<Stage>, fidelity: Fidelity) -> Result<Pipeline> {
+        let mut dims: Option<(usize, usize)> = None; // (in, current)
+        for s in &stages {
+            match s {
+                Stage::Module { module, .. } => {
+                    let (input, cur) = match dims {
+                        None => (module.in_dim(), module.in_dim()),
+                        Some(d) => d,
+                    };
+                    if module.in_dim() != cur {
+                        bail!(
+                            "stage '{}' ({}) expects {} inputs, previous stage produces {}",
+                            module.name(),
+                            module.kind(),
+                            module.in_dim(),
+                            cur
+                        );
+                    }
+                    dims = Some((input, module.out_dim()));
+                }
+                Stage::Residual { name, dim, .. } => {
+                    let Some((input, cur)) = dims else {
+                        bail!("residual '{name}' cannot be the first stage");
+                    };
+                    if *dim != cur {
+                        bail!("residual '{name}' expects {dim} inputs, previous stage produces {cur}");
+                    }
+                    dims = Some((input, cur));
+                }
+            }
+        }
+        let Some((in_dim, out_dim)) = dims else {
+            bail!("pipeline needs at least one module");
+        };
+        // mark the first stage of each residual-closing unit for checkpoint
+        let mut checkpoint = vec![false; stages.len()];
+        for (i, s) in stages.iter().enumerate() {
+            if let Stage::Residual { unit, .. } = s {
+                let mut first = i;
+                while first > 0 && stages[first - 1].unit() == unit {
+                    first -= 1;
+                }
+                checkpoint[first] = true;
+            }
+        }
+        Ok(Pipeline { stages, checkpoint, fidelity, in_dim, out_dim })
+    }
+
+    /// Assemble a single-unit pipeline from bare modules.
+    pub fn from_modules(
+        modules: Vec<Box<dyn AnalogModule>>,
+        fidelity: Fidelity,
+    ) -> Result<Pipeline> {
+        let stages = modules
+            .into_iter()
+            .map(|module| Stage::Module { unit: "main".into(), module })
+            .collect();
+        Self::from_stages(stages, fidelity)
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn fidelity(&self) -> Fidelity {
+        self.fidelity
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total placed memristors across all stages (Table 4 bottom row).
+    pub fn memristors(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Module { module, .. } => module.memristors(),
+                Stage::Residual { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Total op-amps across all stages (residual adders count one summing
+    /// amplifier per channel, as in the mapper).
+    pub fn opamps(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Module { module, .. } => module.opamps(),
+                Stage::Residual { channels, .. } => *channels,
+            })
+            .sum()
+    }
+
+    /// Memristor-crossbar stages on the critical path (Eq 17 N_m).
+    pub fn memristor_stages(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Module { module, .. } => module.memristor_stages(),
+                Stage::Residual { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// One-line summary for logs and demos.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} stages ({} fidelity), {} -> {} dims, {} memristors / {} op-amps / N_m {}",
+            self.n_stages(),
+            self.fidelity,
+            self.in_dim,
+            self.out_dim,
+            self.memristors(),
+            self.opamps(),
+            self.memristor_stages()
+        )
+    }
+
+    /// End-to-end batched inference: every stage answers the whole batch
+    /// before the next begins, so each crossbar read is one multi-RHS
+    /// substitution pass per segment at [`Fidelity::Spice`].
+    pub fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for (k, x) in inputs.iter().enumerate() {
+            if x.len() != self.in_dim {
+                bail!("input {k} has {} values, pipeline expects {}", x.len(), self.in_dim);
+            }
+        }
+        let mut cur: Vec<Vec<f64>> = inputs.to_vec();
+        // the batch entering the current residual-closing unit (cloned only
+        // at stages `from_stages` marked — units without a skip pay nothing)
+        let mut unit_input: Vec<Vec<f64>> = Vec::new();
+        for (idx, stage) in self.stages.iter_mut().enumerate() {
+            if self.checkpoint[idx] {
+                unit_input = cur.clone();
+            }
+            match stage {
+                Stage::Module { module, .. } => {
+                    cur = module.forward_batch(&cur)?;
+                }
+                Stage::Residual { name, dim, .. } => {
+                    if unit_input.len() != cur.len() {
+                        bail!(
+                            "residual '{name}': {} checkpointed inputs for a batch of {}",
+                            unit_input.len(),
+                            cur.len()
+                        );
+                    }
+                    for (y, x0) in cur.iter_mut().zip(&unit_input) {
+                        if y.len() != *dim || x0.len() != *dim {
+                            bail!(
+                                "residual '{name}': {} outputs vs {} unit inputs (expected {dim})",
+                                y.len(),
+                                x0.len()
+                            );
+                        }
+                        for (a, b) in y.iter_mut().zip(x0) {
+                            *a += b;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Single-vector forward — a batch of one.
+    pub fn forward(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        let batch = [x.to_vec()];
+        let mut out = self.forward_batch(&batch)?;
+        out.pop().ok_or_else(|| anyhow::anyhow!("pipeline returned an empty batch"))
+    }
+
+    /// Batched classification: forward then per-row argmax.
+    pub fn classify_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<usize>> {
+        Ok(self.forward_batch(inputs)?.iter().map(|row| argmax(row)).collect())
+    }
+}
+
+/// Index of the largest logit (0 for an empty slice).
+pub fn argmax(v: &[f64]) -> usize {
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best.1 {
+            best = (i, x);
+        }
+    }
+    best.0
+}
+
+/// Convert one dataset image (HWC row-major, the PJRT/NHWC layout) into the
+/// pipeline's channel-major planes `[c][h*w]`.
+pub fn image_to_input(img: &[f32], h: usize, w: usize, c: usize) -> Vec<f64> {
+    assert_eq!(img.len(), h * w * c, "image length != h*w*c");
+    let mut v = vec![0.0; h * w * c];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                v[ch * h * w + y * w + x] = img[(y * w + x) * c + ch] as f64;
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fidelity_fromstr_display_roundtrip() {
+        for f in [Fidelity::Ideal, Fidelity::Behavioural, Fidelity::Spice] {
+            let parsed: Fidelity = f.to_string().parse().unwrap();
+            assert_eq!(parsed, f);
+        }
+        assert_eq!("behavioral".parse::<Fidelity>().unwrap(), Fidelity::Behavioural);
+        assert!("fast".parse::<Fidelity>().is_err());
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn image_to_input_channel_major() {
+        // 1x2 image, 2 channels: HWC [p0c0, p0c1, p1c0, p1c1]
+        let img = [1.0f32, 10.0, 2.0, 20.0];
+        let v = image_to_input(&img, 1, 2, 2);
+        assert_eq!(v, vec![1.0, 2.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        assert!(Pipeline::from_modules(Vec::new(), Fidelity::Ideal).is_err());
+    }
+}

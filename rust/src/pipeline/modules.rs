@@ -1,0 +1,807 @@
+//! [`AnalogModule`] implementations — one per paper module type.
+//!
+//! * [`CrossbarModule`] — FC/PConv layers own one differential crossbar;
+//!   Conv/DConv layers own a bank per channel pair (Algorithm 1 layout).
+//!   At [`Fidelity::Spice`] every crossbar holds a resident
+//!   [`CrossbarSim`] and batches are answered by
+//!   [`CrossbarSim::solve_batch`] — one multi-RHS substitution pass per
+//!   netlist segment.
+//! * [`BatchNormModule`] — the §3.3 subtraction + scale/offset crossbar,
+//!   folded to its exact affine form `(x - mean) * k + beta`.
+//! * [`ActivationModule`] — behavioural fast path (software / rail-clipped
+//!   forms) with the SPICE-backed Fig 4 [`ActCircuit`] at
+//!   [`Fidelity::Spice`].
+//! * [`GapModule`] — the §3.5 averaging column (1/N conductances).
+//! * [`SeModule`] — the squeeze-and-excite side branch: pool → FC → ReLU →
+//!   FC → hard sigmoid → per-channel scale of the trunk tensor.
+
+use anyhow::{bail, Result};
+
+use crate::analog::{self, ActCircuit};
+use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom};
+use crate::mapper::{Crossbar, MapMode};
+use crate::netlist::CrossbarSim;
+use crate::nn::{ActKind, ConvGeom, DeviceJson};
+use crate::spice::solve::Ordering;
+use crate::util::pool::par_map_mut;
+
+use super::{AnalogModule, Fidelity};
+
+/// `gamma / sqrt(var + EPS)` fold constant — python/compile/model.py mirror.
+pub const BN_EPS: f64 = 1e-5;
+
+fn clamp_rails(batch: &mut [Vec<f64>], v_rail: f64) {
+    for row in batch.iter_mut() {
+        for v in row.iter_mut() {
+            *v = v.clamp(-v_rail, v_rail);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CrossbarModule
+// ---------------------------------------------------------------------------
+
+/// A VMM layer realized as differential crossbar hardware (FC / PConv /
+/// Conv / DConv). See the module docs for the per-fidelity execution paths.
+pub struct CrossbarModule {
+    name: String,
+    kind: &'static str,
+    fidelity: Fidelity,
+    workers: usize,
+    v_rail: f64,
+    inner: Inner,
+}
+
+enum Inner {
+    Fc {
+        cb: Crossbar,
+        /// resident factor-once simulator at `Fidelity::Spice`
+        sim: Option<CrossbarSim>,
+    },
+    Conv(ConvBanks),
+}
+
+/// Per-channel-pair crossbar banks of a conv layer. The behavioural path
+/// evaluates the banks' transfer directly from the quantized kernels (same
+/// arithmetic as `Crossbar::eval_ideal` over `place_conv_kernel`, without
+/// materializing one `Placed` per output position); the SPICE path builds
+/// real per-bank crossbars.
+struct ConvBanks {
+    geom: ConvXbarGeom,
+    h_in: usize,
+    w_in: usize,
+    pad: usize,
+    cin: usize,
+    cout: usize,
+    depthwise: bool,
+    scale: f64,
+    mode: MapMode,
+    /// signed quantized kernels: depthwise `c*kk + a`, else
+    /// `(co*cin + ci)*kk + a` with `a = kh*k + kw` row-major
+    kernels: Vec<f64>,
+    /// resident per-bank simulators at `Fidelity::Spice` (zero kernels
+    /// place no bank)
+    sims: Vec<BankSim>,
+}
+
+struct BankSim {
+    ci: usize,
+    co: usize,
+    sim: CrossbarSim,
+}
+
+/// Construction parameters for a conv [`CrossbarModule`]
+/// (crate-internal; built by the [`super::PipelineBuilder`]).
+pub(crate) struct ConvModuleCfg {
+    pub name: String,
+    pub kind: &'static str,
+    pub geom: ConvGeom,
+    pub depthwise: bool,
+    /// signed quantized kernels in bank layout (see [`ConvBanks::kernels`])
+    pub kernels: Vec<f64>,
+    pub scale: f64,
+    pub mode: MapMode,
+    pub fidelity: Fidelity,
+    pub segment: usize,
+    pub ordering: Ordering,
+    pub workers: usize,
+}
+
+impl ConvBanks {
+    fn kk(&self) -> usize {
+        self.geom.fr * self.geom.fc
+    }
+
+    fn kernel(&self, ci: usize, co: usize) -> &[f64] {
+        let kk = self.kk();
+        let idx = if self.depthwise { co } else { co * self.cin + ci };
+        &self.kernels[idx * kk..(idx + 1) * kk]
+    }
+
+    fn ci_range(&self, co: usize) -> std::ops::Range<usize> {
+        if self.depthwise {
+            co..co + 1
+        } else {
+            0..self.cin
+        }
+    }
+
+    /// Zero-pad one channel plane into the crossbar's input region layout.
+    fn padded_plane(&self, x: &[f64], ci: usize) -> Vec<f64> {
+        let (h, w, pad, wc) = (self.h_in, self.w_in, self.pad, self.geom.wc);
+        let mut p = vec![0.0; self.geom.wr * wc];
+        for y in 0..h {
+            let dst = (y + pad) * wc + pad;
+            let src = ci * h * w + y * w;
+            p[dst..dst + w].copy_from_slice(&x[src..src + w]);
+        }
+        p
+    }
+
+    /// Ideal transfer of the whole bank set for one input tensor — the
+    /// direct-form mirror of summing `Crossbar::eval_ideal` per bank.
+    fn forward_ideal(&self, x: &[f64]) -> Vec<f64> {
+        let cols = self.geom.cols();
+        let (fr, fc, wc, stride, oc) =
+            (self.geom.fr, self.geom.fc, self.geom.wc, self.geom.stride, self.geom.oc);
+        let planes: Vec<Vec<f64>> =
+            (0..self.cin).map(|ci| self.padded_plane(x, ci)).collect();
+        let mut out = vec![0.0; self.cout * cols];
+        for co in 0..self.cout {
+            for ci in self.ci_range(co) {
+                let kern = self.kernel(ci, co);
+                let plane = &planes[ci];
+                for i in 0..cols {
+                    let base = p_pos(i, oc, wc, stride);
+                    let mut acc = 0.0;
+                    for a in 0..fr {
+                        for b in 0..fc {
+                            let q = kern[a * fc + b];
+                            if q != 0.0 {
+                                acc += q * plane[base + a * wc + b];
+                            }
+                        }
+                    }
+                    out[co * cols + i] += acc * self.scale;
+                }
+            }
+        }
+        out
+    }
+
+    /// SPICE transfer: every bank answers the whole batch via its resident
+    /// simulator's multi-RHS path, accumulated per output channel.
+    fn forward_spice(&mut self, inputs: &[Vec<f64>], workers: usize) -> Result<Vec<Vec<f64>>> {
+        let cols = self.geom.cols();
+        let mut out = vec![vec![0.0; self.cout * cols]; inputs.len()];
+        // padded planes per batch item, computed once and shared by banks
+        let mut planes: Vec<Vec<Vec<f64>>> = Vec::with_capacity(self.cin);
+        for ci in 0..self.cin {
+            planes.push(inputs.iter().map(|x| self.padded_plane(x, ci)).collect());
+        }
+        for bank in self.sims.iter_mut() {
+            let solved = bank.sim.solve_batch(&planes[bank.ci], workers)?;
+            for (k, cols_out) in solved.into_iter().enumerate() {
+                let dst = &mut out[k][bank.co * cols..(bank.co + 1) * cols];
+                for (d, s) in dst.iter_mut().zip(&cols_out) {
+                    *d += s;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn memristors(&self) -> usize {
+        let cols = self.geom.cols();
+        let kk = self.kk();
+        let n_banks = if self.depthwise { self.cout } else { self.cin * self.cout };
+        (0..n_banks)
+            .map(|b| {
+                self.kernels[b * kk..(b + 1) * kk]
+                    .iter()
+                    .filter(|&&v| v != 0.0)
+                    .count()
+                    * cols
+            })
+            .sum()
+    }
+}
+
+impl CrossbarModule {
+    /// FC/PConv module over an explicit crossbar (builds the resident
+    /// simulator at [`Fidelity::Spice`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fc(
+        name: String,
+        kind: &'static str,
+        cb: Crossbar,
+        dev: &DeviceJson,
+        fidelity: Fidelity,
+        segment: usize,
+        ordering: Ordering,
+        workers: usize,
+    ) -> Result<CrossbarModule> {
+        let sim = match fidelity {
+            Fidelity::Spice => Some(CrossbarSim::new(&cb, dev, segment, ordering)?),
+            _ => None,
+        };
+        Ok(CrossbarModule {
+            name,
+            kind,
+            fidelity,
+            workers,
+            v_rail: dev.v_rail,
+            inner: Inner::Fc { cb, sim },
+        })
+    }
+
+    /// Conv/DConv module over per-channel-pair banks.
+    pub(crate) fn conv(cfg: ConvModuleCfg, dev: &DeviceJson) -> Result<CrossbarModule> {
+        let g = &cfg.geom;
+        let geom = ConvXbarGeom::from_conv(g.h_in, g.w_in, g.k, g.stride, g.padding);
+        let kk = g.k * g.k;
+        let n_banks = if cfg.depthwise { g.cout } else { g.cin * g.cout };
+        if cfg.kernels.len() != n_banks * kk {
+            bail!(
+                "conv '{}': {} kernel values for {} banks of {kk}",
+                cfg.name,
+                cfg.kernels.len(),
+                n_banks
+            );
+        }
+        let mut banks = ConvBanks {
+            geom,
+            h_in: g.h_in,
+            w_in: g.w_in,
+            pad: g.padding,
+            cin: if cfg.depthwise { g.cout } else { g.cin },
+            cout: g.cout,
+            depthwise: cfg.depthwise,
+            scale: cfg.scale,
+            mode: cfg.mode,
+            kernels: cfg.kernels,
+            sims: Vec::new(),
+        };
+        if cfg.fidelity == Fidelity::Spice {
+            for co in 0..banks.cout {
+                for ci in banks.ci_range(co) {
+                    let devices =
+                        place_conv_kernel(&geom, banks.kernel(ci, co), cfg.mode.inverted());
+                    if devices.is_empty() {
+                        continue; // all-zero kernel: contributes nothing
+                    }
+                    let cb = Crossbar {
+                        name: format!("{}_ci{ci}_co{co}", cfg.name),
+                        rows: geom.rows(),
+                        cols: geom.cols(),
+                        region: geom.wr * geom.wc,
+                        devices,
+                        rf_scale: cfg.scale,
+                        mode: cfg.mode,
+                    };
+                    let sim = CrossbarSim::new(&cb, dev, cfg.segment, cfg.ordering)?;
+                    banks.sims.push(BankSim { ci, co, sim });
+                }
+            }
+        }
+        Ok(CrossbarModule {
+            name: cfg.name,
+            kind: cfg.kind,
+            fidelity: cfg.fidelity,
+            workers: cfg.workers,
+            v_rail: dev.v_rail,
+            inner: Inner::Conv(banks),
+        })
+    }
+
+    /// The underlying crossbar of an FC/PConv module (None for conv banks).
+    pub fn crossbar(&self) -> Option<&Crossbar> {
+        match &self.inner {
+            Inner::Fc { cb, .. } => Some(cb),
+            Inner::Conv(_) => None,
+        }
+    }
+}
+
+impl AnalogModule for CrossbarModule {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    fn in_dim(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { cb, .. } => cb.region,
+            Inner::Conv(cv) => cv.cin * cv.h_in * cv.w_in,
+        }
+    }
+
+    fn out_dim(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { cb, .. } => cb.cols,
+            Inner::Conv(cv) => cv.cout * cv.geom.cols(),
+        }
+    }
+
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let expect = self.in_dim();
+        for (k, x) in inputs.iter().enumerate() {
+            if x.len() != expect {
+                bail!("'{}': input {k} has {} values, expected {expect}", self.name, x.len());
+            }
+        }
+        let mut out = match (&mut self.inner, self.fidelity) {
+            (Inner::Fc { sim: Some(sim), .. }, Fidelity::Spice) => {
+                sim.solve_batch(inputs, self.workers)?
+            }
+            (Inner::Fc { cb, .. }, _) => inputs.iter().map(|v| cb.eval_ideal(v)).collect(),
+            (Inner::Conv(cv), Fidelity::Spice) => cv.forward_spice(inputs, self.workers)?,
+            (Inner::Conv(cv), _) => inputs.iter().map(|v| cv.forward_ideal(v)).collect(),
+        };
+        if self.fidelity == Fidelity::Behavioural {
+            clamp_rails(&mut out, self.v_rail);
+        }
+        Ok(out)
+    }
+
+    fn memristors(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { cb, .. } => cb.devices.len(),
+            Inner::Conv(cv) => cv.memristors(),
+        }
+    }
+
+    fn opamps(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { cb, .. } => cb.cols * cb.mode.opamps_per_port(),
+            Inner::Conv(cv) => cv.geom.cols() * cv.cout * cv.mode.opamps_per_port(),
+        }
+    }
+
+    fn memristor_stages(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchNormModule
+// ---------------------------------------------------------------------------
+
+/// Folded batch normalization: `y = (x - mean) * k + beta` per channel with
+/// `k = gamma / sqrt(var + BN_EPS)` — the exact transfer of the paper's
+/// §3.3 subtraction + scale/offset crossbar pair (unit conductances, so the
+/// SPICE netlist adds only TIA-gain error; the affine form is used at every
+/// fidelity, rail-clipped at [`Fidelity::Behavioural`]).
+pub struct BatchNormModule {
+    name: String,
+    c: usize,
+    /// elements per channel (h*w for spatial tensors, 1 for vectors)
+    spatial: usize,
+    k: Vec<f64>,
+    mean: Vec<f64>,
+    beta: Vec<f64>,
+    fidelity: Fidelity,
+    v_rail: f64,
+    opamps: usize,
+}
+
+impl BatchNormModule {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        c: usize,
+        spatial: usize,
+        gamma: &[f64],
+        beta: &[f64],
+        mean: &[f64],
+        var: &[f64],
+        mode: MapMode,
+        fidelity: Fidelity,
+        v_rail: f64,
+    ) -> Result<BatchNormModule> {
+        let name = name.into();
+        for (label, t) in [("gamma", gamma), ("beta", beta), ("mean", mean), ("var", var)] {
+            if t.len() != c {
+                bail!("bn '{name}': {label} has {} values for {c} channels", t.len());
+            }
+        }
+        let k: Vec<f64> = gamma
+            .iter()
+            .zip(var)
+            .map(|(g, v)| g / (v + BN_EPS).sqrt())
+            .collect();
+        Ok(BatchNormModule {
+            name,
+            c,
+            spatial,
+            k,
+            mean: mean.to_vec(),
+            beta: beta.to_vec(),
+            fidelity,
+            v_rail,
+            opamps: 2 * c * mode.opamps_per_port(),
+        })
+    }
+}
+
+impl AnalogModule for BatchNormModule {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "BN"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.c * self.spatial
+    }
+
+    fn out_dim(&self) -> usize {
+        self.c * self.spatial
+    }
+
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let expect = self.in_dim();
+        let mut out = Vec::with_capacity(inputs.len());
+        for (n, x) in inputs.iter().enumerate() {
+            if x.len() != expect {
+                bail!("'{}': input {n} has {} values, expected {expect}", self.name, x.len());
+            }
+            let mut y = vec![0.0; expect];
+            for ch in 0..self.c {
+                let (k, m, b) = (self.k[ch], self.mean[ch], self.beta[ch]);
+                for s in 0..self.spatial {
+                    y[ch * self.spatial + s] = (x[ch * self.spatial + s] - m) * k + b;
+                }
+            }
+            out.push(y);
+        }
+        if self.fidelity == Fidelity::Behavioural {
+            clamp_rails(&mut out, self.v_rail);
+        }
+        Ok(out)
+    }
+
+    fn memristors(&self) -> usize {
+        4 * self.c // Eq 10
+    }
+
+    fn opamps(&self) -> usize {
+        self.opamps // Eq 11
+    }
+
+    fn memristor_stages(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ActivationModule
+// ---------------------------------------------------------------------------
+
+/// Elementwise activation: software forms at [`Fidelity::Ideal`],
+/// rail-clipped analog forms at [`Fidelity::Behavioural`], and the Fig 4
+/// op-amp circuits ([`ActCircuit`]) at [`Fidelity::Spice`] (ReLU stays
+/// behavioural — the paper realizes it in CMOS, not op-amps). SPICE
+/// evaluation splits the batch's elements across `workers` circuit clones.
+pub struct ActivationModule {
+    name: String,
+    act: ActKind,
+    /// full vector length (c * spatial)
+    dim: usize,
+    fidelity: Fidelity,
+    v_rail: f64,
+    workers: usize,
+    circuit: Option<ActCircuit>,
+    opamps: usize,
+}
+
+impl ActivationModule {
+    pub fn new(
+        name: impl Into<String>,
+        act: ActKind,
+        c: usize,
+        spatial: usize,
+        fidelity: Fidelity,
+        v_rail: f64,
+        workers: usize,
+    ) -> ActivationModule {
+        let mut circuit = match (fidelity, act) {
+            (Fidelity::Spice, ActKind::HSigmoid) => Some(analog::build_hard_sigmoid()),
+            (Fidelity::Spice, ActKind::HSwish) => Some(analog::build_hard_swish()),
+            _ => None,
+        };
+        if let Some(c) = circuit.as_mut() {
+            // prime the factor cache once: per-worker clones inherit the
+            // ready factorization, so batch evals are pure cached re-solves
+            let _ = c.eval(0.0);
+        }
+        // Fig 4 op-amp budget (mapper mirror): adder+divider+limiter per
+        // module for hard sigmoid, plus the per-channel multiplier branch
+        // for hard swish; CMOS ReLU uses none
+        let opamps = match act {
+            ActKind::HSigmoid => 4,
+            ActKind::HSwish => 4 * c,
+            ActKind::Relu => 0,
+        };
+        ActivationModule {
+            name: name.into(),
+            act,
+            dim: c * spatial,
+            fidelity,
+            v_rail,
+            workers,
+            circuit,
+            opamps,
+        }
+    }
+
+    /// Fast scalar paths (everything except the SPICE circuits).
+    fn scalar(&self, v: f64) -> f64 {
+        match (self.fidelity, self.act) {
+            (Fidelity::Ideal, ActKind::Relu) => v.max(0.0),
+            (Fidelity::Ideal, ActKind::HSigmoid) => analog::hard_sigmoid_sw(v),
+            (Fidelity::Ideal, ActKind::HSwish) => analog::hard_swish_sw(v),
+            (Fidelity::Behavioural, ActKind::HSigmoid) => {
+                analog::hard_sigmoid_analog(v, self.v_rail)
+            }
+            (Fidelity::Behavioural, ActKind::HSwish) => {
+                analog::hard_swish_analog(v, self.v_rail)
+            }
+            (Fidelity::Behavioural | Fidelity::Spice, ActKind::Relu) => {
+                analog::relu_analog(v, self.v_rail)
+            }
+            (Fidelity::Spice, _) => unreachable!("SPICE activations route through forward_spice"),
+        }
+    }
+
+    /// Drive every element of the batch through the Fig 4 circuit, elements
+    /// split across `workers` independent circuit clones (each clone's
+    /// factor cache makes its per-element Newton solves RHS-only re-solves).
+    fn forward_spice(&self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let base = self.circuit.as_ref().expect("spice activation circuit built");
+        let flat: Vec<f64> = inputs.iter().flat_map(|x| x.iter().copied()).collect();
+        if flat.is_empty() {
+            return Ok(inputs.iter().map(|_| Vec::new()).collect());
+        }
+        let workers = self.workers.max(1);
+        let chunk = flat.len().div_ceil(workers);
+        let mut jobs: Vec<(ActCircuit, Vec<f64>)> = flat
+            .chunks(chunk)
+            .map(|vals| (base.clone(), vals.to_vec()))
+            .collect();
+        let solved = par_map_mut(&mut jobs, workers, |(circuit, vals)| -> Result<Vec<f64>> {
+            vals.iter().map(|&v| circuit.eval(v)).collect()
+        });
+        let mut flat_out = Vec::with_capacity(flat.len());
+        for r in solved {
+            flat_out.extend(r?);
+        }
+        Ok(flat_out.chunks(self.dim).map(|c| c.to_vec()).collect())
+    }
+}
+
+impl AnalogModule for ActivationModule {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        match self.act {
+            ActKind::Relu => "ReLU",
+            ActKind::HSwish => "HSwish",
+            ActKind::HSigmoid => "HSigmoid",
+        }
+    }
+
+    fn in_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        for (n, x) in inputs.iter().enumerate() {
+            if x.len() != self.dim {
+                bail!("'{}': input {n} has {} values, expected {}", self.name, x.len(), self.dim);
+            }
+        }
+        if self.fidelity == Fidelity::Spice && self.act != ActKind::Relu {
+            return self.forward_spice(inputs);
+        }
+        Ok(inputs
+            .iter()
+            .map(|x| x.iter().map(|&v| self.scalar(v)).collect())
+            .collect())
+    }
+
+    fn opamps(&self) -> usize {
+        self.opamps
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GapModule
+// ---------------------------------------------------------------------------
+
+/// Global average pooling: the §3.5 single-column crossbar with 1/N
+/// conductances. The transfer is exactly the per-channel mean (linear, unit
+/// devices), so every fidelity evaluates it directly.
+pub struct GapModule {
+    name: String,
+    c: usize,
+    h: usize,
+    w: usize,
+    opamps: usize,
+}
+
+impl GapModule {
+    pub fn new(name: impl Into<String>, c: usize, h: usize, w: usize, mode: MapMode) -> GapModule {
+        GapModule { name: name.into(), c, h, w, opamps: c * mode.opamps_per_port() }
+    }
+}
+
+impl AnalogModule for GapModule {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "GAPool"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    fn out_dim(&self) -> usize {
+        self.c
+    }
+
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let spatial = self.h * self.w;
+        let expect = self.c * spatial;
+        let mut out = Vec::with_capacity(inputs.len());
+        for (n, x) in inputs.iter().enumerate() {
+            if x.len() != expect {
+                bail!("'{}': input {n} has {} values, expected {expect}", self.name, x.len());
+            }
+            out.push(
+                (0..self.c)
+                    .map(|ch| {
+                        x[ch * spatial..(ch + 1) * spatial].iter().sum::<f64>() / spatial as f64
+                    })
+                    .collect(),
+            );
+        }
+        Ok(out)
+    }
+
+    fn memristors(&self) -> usize {
+        self.h * self.w * self.c // Eq 12
+    }
+
+    fn opamps(&self) -> usize {
+        self.opamps // Eq 13
+    }
+
+    fn memristor_stages(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SeModule
+// ---------------------------------------------------------------------------
+
+/// Squeeze-and-excite side branch (pool → FC → ReLU → FC → hard sigmoid →
+/// per-channel scale). The trunk tensor passes through scaled by the
+/// branch's channel gains — the implicit multiply the manifest's layer list
+/// leaves between `*.se.act2` and the projection conv.
+pub struct SeModule {
+    name: String,
+    c: usize,
+    spatial: usize,
+    gap: GapModule,
+    fc1: CrossbarModule,
+    act1: ActivationModule,
+    fc2: CrossbarModule,
+    act2: ActivationModule,
+}
+
+impl SeModule {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        c: usize,
+        spatial: usize,
+        gap: GapModule,
+        fc1: CrossbarModule,
+        act1: ActivationModule,
+        fc2: CrossbarModule,
+        act2: ActivationModule,
+    ) -> Result<SeModule> {
+        let name = name.into();
+        if gap.out_dim() != fc1.in_dim()
+            || fc1.out_dim() != act1.in_dim()
+            || act1.out_dim() != fc2.in_dim()
+            || fc2.out_dim() != c
+        {
+            bail!(
+                "se '{name}': branch dims {}->{}->{}->{}->{} do not chain back to {c} channels",
+                gap.out_dim(),
+                fc1.in_dim(),
+                fc1.out_dim(),
+                fc2.in_dim(),
+                fc2.out_dim()
+            );
+        }
+        Ok(SeModule { name, c, spatial, gap, fc1, act1, fc2, act2 })
+    }
+}
+
+impl AnalogModule for SeModule {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "SE"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.c * self.spatial
+    }
+
+    fn out_dim(&self) -> usize {
+        self.c * self.spatial
+    }
+
+    fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pooled = self.gap.forward_batch(inputs)?;
+        let h = self.fc1.forward_batch(&pooled)?;
+        let h = self.act1.forward_batch(&h)?;
+        let h = self.fc2.forward_batch(&h)?;
+        let gains = self.act2.forward_batch(&h)?;
+        let mut out = inputs.to_vec();
+        for (y, g) in out.iter_mut().zip(&gains) {
+            for ch in 0..self.c {
+                for s in 0..self.spatial {
+                    y[ch * self.spatial + s] *= g[ch];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn memristors(&self) -> usize {
+        self.gap.memristors() + self.fc1.memristors() + self.fc2.memristors()
+    }
+
+    fn opamps(&self) -> usize {
+        self.gap.opamps()
+            + self.fc1.opamps()
+            + self.act1.opamps()
+            + self.fc2.opamps()
+            + self.act2.opamps()
+    }
+
+    fn memristor_stages(&self) -> usize {
+        self.gap.memristor_stages()
+            + self.fc1.memristor_stages()
+            + self.fc2.memristor_stages()
+    }
+}

@@ -17,6 +17,7 @@ use crate::analog;
 use crate::mapper::{self, MapMode, MappedNetwork};
 use crate::netlist;
 use crate::nn::{Manifest, WeightStore};
+use crate::pipeline::{AnalogModule, Fidelity, PipelineBuilder};
 use crate::power;
 use crate::spice::solve::Ordering;
 
@@ -83,21 +84,22 @@ pub fn report_fig4(out: Option<&str>) -> Result<()> {
 
 /// Fig 7: construction + simulation time of FC crossbars, segmented vs
 /// monolithic (quick in-process variant; the full sweep lives in
-/// benches/bench_segmentation.rs), plus the factor-once/solve-many column:
-/// cached re-reads through [`netlist::CrossbarSim`] with segments solved in
-/// parallel (util::pool).
+/// benches/bench_segmentation.rs), plus the factor-once/solve-many columns:
+/// cached re-reads and batched multi-RHS reads through a Spice-fidelity
+/// [`crate::pipeline::CrossbarModule`] (resident [`netlist::CrossbarSim`],
+/// segments solved in parallel).
 pub fn report_fig7(dir: &Path) -> Result<()> {
     let m = Manifest::load(dir)?;
-    let workers = crate::util::pool::default_workers();
     println!("## Fig 7 — FC crossbar construction + simulation time");
-    println!("| size (in x out) | construct | netlist files | sim monolithic | sim segmented (64 cols) | speedup | cached re-read | vs monolithic |");
-    println!("|---|---:|---:|---:|---:|---:|---:|---:|");
+    println!("| size (in x out) | construct | netlist files | sim monolithic | sim segmented (64 cols) | speedup | cached re-read | vs monolithic | batched x16 per read |");
+    println!("|---|---:|---:|---:|---:|---:|---:|---:|---:|");
     for &(cin, cout) in &[(64usize, 64usize), (128, 128), (256, 256)] {
         let t0 = Instant::now();
         let cb = mapper::build_synthetic_fc(cin, cout, m.device.levels, MapMode::Inverted, 42);
         let construct = t0.elapsed();
         let inputs: Vec<f64> = (0..cin).map(|i| ((i as f64) * 0.1).sin() * 0.5).collect();
 
+        // one-shot emit+parse+solve — the legacy per-read cost Fig 7 charts
         let mono_segs = netlist::plan_segments(cb.cols, 0);
         let t0 = Instant::now();
         let text = netlist::emit_crossbar(&cb, &m.device, &mono_segs[0], Some(&inputs), 1);
@@ -114,21 +116,34 @@ pub fn report_fig7(dir: &Path) -> Result<()> {
         }
         let segd = t0.elapsed();
 
-        // factor-once: build the segmented sim, then time cached re-reads
-        // with fresh input vectors (pure RHS re-solves, parallel segments)
-        let mut sim = cb.sim(&m.device, 64, Ordering::Smart)?;
-        let _ = sim.solve_par(&inputs, workers)?; // cold read primes the cache
+        // factor-once: compile the crossbar into a Spice-fidelity pipeline
+        // module, then time cached re-reads with fresh input vectors (pure
+        // RHS re-solves, parallel segments)
+        let mut module = PipelineBuilder::new()
+            .fidelity(Fidelity::Spice)
+            .segment(64)
+            .crossbar_module(cb, &m.device)?;
+        let _ = module.forward(&inputs)?; // cold read primes the cache
         let reads = 4u32;
         let t0 = Instant::now();
         for k in 0..reads {
             let v: Vec<f64> =
                 (0..cin).map(|i| ((i + k as usize) as f64 * 0.23).sin() * 0.5).collect();
-            let _ = sim.solve_par(&v, workers)?;
+            let _ = module.forward(&v)?;
         }
         let cached = t0.elapsed() / reads;
 
+        // batched serving path: 16 vectors amortized over one multi-RHS
+        // substitution pass per segment
+        let batch: Vec<Vec<f64>> = (0..16usize)
+            .map(|k| (0..cin).map(|i| ((i + 7 * k) as f64 * 0.17).sin() * 0.5).collect())
+            .collect();
+        let t0 = Instant::now();
+        let _ = module.forward_batch(&batch)?;
+        let batched = t0.elapsed() / 16;
+
         println!(
-            "| {cin}x{cout} | {construct:?} | {} | {mono:?} | {segd:?} | {:.1}x | {cached:?} | {:.1}x |",
+            "| {cin}x{cout} | {construct:?} | {} | {mono:?} | {segd:?} | {:.1}x | {cached:?} | {:.1}x | {batched:?} |",
             segs.len(),
             mono.as_secs_f64() / segd.as_secs_f64().max(1e-12),
             mono.as_secs_f64() / cached.as_secs_f64().max(1e-12)
@@ -230,9 +245,11 @@ pub fn report_fig9(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// `memx spice` — map one FC layer, build its factor-once simulator
-/// ([`netlist::CrossbarSim`]), read a few input vectors (cached re-solves,
-/// segments in parallel) and compare against the behavioural crossbar.
+/// `memx spice` — compile one FC/PConv layer into a single-stage analog
+/// [`crate::pipeline::Pipeline`] at SPICE fidelity (resident factor-once
+/// [`netlist::CrossbarSim`], segments in parallel), batch-read a few input
+/// vectors through `forward_batch` (one multi-RHS substitution pass per
+/// segment) and compare against the same layer at ideal fidelity.
 pub fn spice_layer_demo(
     dir: &Path,
     layer: &str,
@@ -242,40 +259,37 @@ pub fn spice_layer_demo(
 ) -> Result<()> {
     let m = Manifest::load(dir)?;
     let ws = WeightStore::load(dir, &m)?;
-    let cb = mapper::build_fc_crossbar(&m, &ws, layer, mode)?;
-    println!(
-        "layer {layer}: crossbar {}x{} ({} devices, mode {mode:?})",
-        cb.rows,
-        cb.cols,
-        cb.devices.len()
-    );
-    let workers = crate::util::pool::default_workers();
+    let base = PipelineBuilder::new().mode(mode).segment(segment);
     let t0 = Instant::now();
-    let mut sim = cb.sim(&m.device, segment, Ordering::Smart)?;
+    let mut spice = base.clone().fidelity(Fidelity::Spice).build_layer(&m, &ws, layer)?;
     println!(
-        "segments: {} ({} columns each); emitted+parsed+indexed in {:?}",
-        sim.n_segments(),
-        if segment == 0 { cb.cols } else { segment.min(cb.cols) },
+        "layer {layer} (mode {mode}): {}; compiled for SPICE in {:?}",
+        spice.describe(),
         t0.elapsed()
     );
+    let mut ideal = base.fidelity(Fidelity::Ideal).build_layer(&m, &ws, layer)?;
+
     let mut rng = crate::util::prng::Rng::new(99);
-    let mut worst = 0f64;
+    let batch: Vec<Vec<f64>> = (0..n_vectors)
+        .map(|_| (0..spice.in_dim()).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
     let t0 = Instant::now();
-    for v in 0..n_vectors {
-        let inputs: Vec<f64> = (0..cb.region).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-        let ideal = cb.eval_ideal(&inputs);
-        let got = sim.solve_par(&inputs, workers)?;
-        let err = got
+    let got = spice.forward_batch(&batch)?;
+    let wall = t0.elapsed();
+    let want = ideal.forward_batch(&batch)?;
+
+    let mut worst = 0f64;
+    for (v, (g_row, w_row)) in got.iter().zip(&want).enumerate() {
+        let err = g_row
             .iter()
-            .zip(&ideal)
+            .zip(w_row)
             .fold(0f64, |a, (g, i)| a.max((g - i).abs()));
         worst = worst.max(err);
         println!("vector {v}: max |spice - ideal| = {err:.3e}");
     }
     println!(
-        "{} vectors in {:?} (factor-once, cached re-solves); worst error {worst:.3e}",
-        n_vectors,
-        t0.elapsed()
+        "{n_vectors} vectors batched in {wall:?} (factor-once, one multi-RHS pass per segment); \
+         worst error {worst:.3e}"
     );
     Ok(())
 }

@@ -4,7 +4,7 @@
 //! and, on failure, performs a simple halving shrink over the generator seed
 //! space is not possible — instead we re-run with the failing seed printed so
 //! the case is reproducible, and shrink *sized* inputs when the generator
-//! supports it via [`Gen::resize`].
+//! supports it via the `size` argument of [`Gen::generate`].
 
 use super::prng::Rng;
 

@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 use memx::mapper::{self, MapMode};
 use memx::netlist;
 use memx::nn::{Layer, Manifest, WeightStore};
+use memx::pipeline::{image_to_input, Fidelity, PipelineBuilder};
 use memx::power;
 use memx::spice::solve::Ordering;
 use memx::util::bin::Dataset;
@@ -211,6 +212,53 @@ fn latency_energy_models_on_trained_network() {
     let tp = power::latency_pipelined(&net, &m.device);
     assert!(tp.total < t.total);
     assert!(power::T_GPU_RTX4090 / tp.total > 100.0, "pipelined regime beats GPU >100x");
+}
+
+#[test]
+fn pipeline_layer_spice_matches_ideal_on_trained_fc() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let base = PipelineBuilder::new().segment(4);
+    let mut spice =
+        base.clone().fidelity(Fidelity::Spice).build_layer(&m, &ws, "cls.fc2").unwrap();
+    let mut ideal = base.fidelity(Fidelity::Ideal).build_layer(&m, &ws, "cls.fc2").unwrap();
+    let batch: Vec<Vec<f64>> = (0..3)
+        .map(|k| (0..spice.in_dim()).map(|i| ((i + k) as f64 * 0.21).sin() * 0.5).collect())
+        .collect();
+    let got = spice.forward_batch(&batch).unwrap();
+    let want = ideal.forward_batch(&batch).unwrap();
+    for (k, (g_row, w_row)) in got.iter().zip(&want).enumerate() {
+        for (c, (g, w)) in g_row.iter().zip(w_row).enumerate() {
+            assert!((g - w).abs() < 1e-3, "vector {k} col {c}: spice {g} vs ideal {w}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_full_manifest_builds_and_classifies() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let ws = WeightStore::load(&dir, &m).unwrap();
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Behavioural)
+        .build(&m, &ws)
+        .expect("full manifest compiles into a pipeline");
+    assert_eq!(p.in_dim(), 3 * m.img * m.img);
+    assert_eq!(p.out_dim(), m.num_classes);
+    // resource hooks mirror the Table 4 mapper totals exactly
+    let net = mapper::map_network(&m, &ws, MapMode::Inverted).unwrap();
+    assert_eq!(p.memristors(), net.total_memristors());
+    assert_eq!(p.opamps(), net.total_opamps());
+    assert_eq!(p.memristor_stages(), net.memristor_stages());
+    // batched end-to-end classification produces sane labels
+    let ds = Dataset::load(&dir.join(&m.dataset_file)).unwrap();
+    let n = 4.min(ds.n);
+    let batch: Vec<Vec<f64>> =
+        (0..n).map(|i| image_to_input(ds.image(i), ds.h, ds.w, ds.c)).collect();
+    let labels = p.classify_batch(&batch).unwrap();
+    assert_eq!(labels.len(), n);
+    assert!(labels.iter().all(|&l| l < m.num_classes));
 }
 
 #[test]

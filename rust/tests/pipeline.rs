@@ -1,0 +1,427 @@
+//! Tests for `memx::pipeline` — manifest-driven builds over in-memory
+//! weight stores (no artifacts needed): each module's transfer is checked
+//! against the mapper/crossbar ground truth, and the compiled pipelines
+//! against hand-folded chains.
+
+use memx::analog;
+use memx::mapper::{self, MapMode};
+use memx::nn::{Manifest, WeightStore};
+use memx::pipeline::modules::BN_EPS;
+use memx::pipeline::{default_device, Fidelity, PipelineBuilder};
+use memx::util::prng::Rng;
+
+/// Full manifest JSON around the given layer/weight fragments.
+fn manifest_json(layers: &str, weights: &str) -> String {
+    format!(
+        r#"{{
+        "arch":"test","width":1.0,"img":4,"num_classes":4,
+        "digital_test_acc":0.9,"batch_sizes":[1,4],
+        "artifacts":{{}},
+        "device":{{"r_on":100,"r_off":16000,"levels":64,"prog_sigma":0.0,
+          "v_in":0.0025,"v_rail":8.0,"t_mem":1e-10,"slew_rate":1e7,
+          "v_swing":5.0,"p_opamp":0.001,"p_memristor":1.1e-6,"p_aux":0.0005,
+          "t_opamp":5e-7}},
+        "dataset":{{"file":"dataset.bin","n":0}},
+        "expected_logits":{{"file":"expected.bin","n":0}},
+        "weights":[{weights}],
+        "layers":[{layers}]
+        }}"#
+    )
+}
+
+fn load(layers: &str, weights: &str, blob: Vec<f32>) -> (Manifest, WeightStore) {
+    let m = Manifest::parse(&manifest_json(layers, weights)).expect("manifest parses");
+    let ws = WeightStore::from_parts(blob, m.weights.clone()).expect("store assembles");
+    (m, ws)
+}
+
+fn rand_blob(n: usize, amp: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * amp).collect()
+}
+
+#[test]
+fn fc_stack_ideal_matches_manual_chain_and_mapper_resources() {
+    let layers = r#"
+        {"unit":"main","layer":"fc","name":"fc1","cin":6,"cout":5,"weight":"a.w"},
+        {"unit":"main","layer":"hswish","name":"act","c":5},
+        {"unit":"main","layer":"fc","name":"fc2","cin":5,"cout":3,"weight":"b.w"}"#;
+    let weights = r#"
+        {"name":"a.w","shape":[6,5],"offset":0,"len":30,"scale":0.5},
+        {"name":"b.w","shape":[5,3],"offset":30,"len":15,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(45, 0.5, 13));
+
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Ideal)
+        .build(&m, &ws)
+        .expect("pipeline builds");
+    assert_eq!((p.in_dim(), p.out_dim(), p.n_stages()), (6, 3, 3));
+
+    // manual chain over the same crossbars: exact agreement
+    let cb1 = mapper::build_fc_crossbar(&m, &ws, "fc1", MapMode::Inverted).unwrap();
+    let cb2 = mapper::build_fc_crossbar(&m, &ws, "fc2", MapMode::Inverted).unwrap();
+    let x: Vec<f64> = (0..6).map(|i| ((i as f64) * 0.7).sin() * 0.4).collect();
+    let mid: Vec<f64> = cb1.eval_ideal(&x).iter().map(|&v| analog::hard_swish_sw(v)).collect();
+    let want = cb2.eval_ideal(&mid);
+    let got = p.forward(&x).unwrap();
+    assert_eq!(got, want, "ideal pipeline must match the hand-folded chain exactly");
+
+    // resource hooks mirror the Table 4 mapper counts
+    let net = mapper::map_network(&m, &ws, MapMode::Inverted).unwrap();
+    assert_eq!(p.memristors(), net.total_memristors());
+    assert_eq!(p.opamps(), net.total_opamps());
+    assert_eq!(p.memristor_stages(), net.memristor_stages());
+}
+
+#[test]
+fn bn_module_folds_batch_stats_exactly() {
+    let layers = r#"{"unit":"u","layer":"bn","name":"n.bn","c":4,"weight":"n.bn.gamma"}"#;
+    let weights = r#"
+        {"name":"n.bn.gamma","shape":[4],"offset":0,"len":4},
+        {"name":"n.bn.beta","shape":[4],"offset":4,"len":4},
+        {"name":"n.bn.mean","shape":[4],"offset":8,"len":4},
+        {"name":"n.bn.var","shape":[4],"offset":12,"len":4}"#;
+    let blob = vec![
+        1.5, 0.5, -0.8, 1.0, // gamma
+        0.1, -0.2, 0.3, 0.0, // beta
+        0.05, -0.1, 0.2, 0.0, // mean
+        0.9, 1.2, 0.4, 1.0, // var
+    ];
+    let (m, ws) = load(layers, weights, blob.clone());
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    let x = vec![0.3, -0.4, 0.7, 0.0];
+    let got = p.forward(&x).unwrap();
+    for ch in 0..4 {
+        let k = blob[ch] as f64 / (blob[12 + ch] as f64 + BN_EPS).sqrt();
+        let want = (x[ch] - blob[8 + ch] as f64) * k + blob[4 + ch] as f64;
+        assert!((got[ch] - want).abs() < 1e-12, "ch {ch}: {} vs {want}", got[ch]);
+    }
+}
+
+/// Manual zero-padding into the conv crossbar's input-region layout.
+fn padded_plane(x: &[f64], ci: usize, h: usize, w: usize, pad: usize) -> Vec<f64> {
+    let (wr, wc) = (h + 2 * pad, w + 2 * pad);
+    let mut p = vec![0.0; wr * wc];
+    for y in 0..h {
+        for xx in 0..w {
+            p[(y + pad) * wc + xx + pad] = x[ci * h * w + y * w + xx];
+        }
+    }
+    p
+}
+
+#[test]
+fn conv_ideal_matches_per_bank_crossbar_eval() {
+    let layers = r#"
+        {"unit":"u","layer":"conv","name":"c0","k":3,"stride":1,"padding":1,
+         "cin":2,"cout":3,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"c0.w"}"#;
+    let weights = r#"{"name":"c0.w","shape":[3,3,2,3],"offset":0,"len":54,"scale":0.6}"#;
+    let (m, ws) = load(layers, weights, rand_blob(54, 0.6, 31));
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    assert_eq!((p.in_dim(), p.out_dim()), (2 * 16, 3 * 16));
+
+    let mut rng = Rng::new(8);
+    let x: Vec<f64> = (0..32).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let got = p.forward(&x).unwrap();
+
+    // ground truth: per-(ci,co) conv crossbars over padded planes
+    for co in 0..3 {
+        let mut want = vec![0.0; 16];
+        for ci in 0..2 {
+            let cb = mapper::build_conv_crossbar(&m, &ws, "c0", ci, co, MapMode::Inverted)
+                .unwrap();
+            let outs = cb.eval_ideal(&padded_plane(&x, ci, 4, 4, 1));
+            for (acc, o) in want.iter_mut().zip(&outs) {
+                *acc += o;
+            }
+        }
+        for (i, w) in want.iter().enumerate() {
+            assert!(
+                (got[co * 16 + i] - w).abs() < 1e-12,
+                "co {co} pos {i}: {} vs {w}",
+                got[co * 16 + i]
+            );
+        }
+    }
+}
+
+#[test]
+fn dwconv_ideal_matches_per_channel_crossbar_eval() {
+    let layers = r#"
+        {"unit":"u","layer":"dwconv","name":"d0","k":3,"stride":2,"padding":1,
+         "cin":2,"cout":2,"h_in":4,"w_in":4,"h_out":2,"w_out":2,"weight":"d0.w"}"#;
+    let weights = r#"{"name":"d0.w","shape":[3,3,1,2],"offset":0,"len":18,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(18, 0.5, 17));
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    assert_eq!((p.in_dim(), p.out_dim()), (2 * 16, 2 * 4));
+
+    let mut rng = Rng::new(9);
+    let x: Vec<f64> = (0..32).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let got = p.forward(&x).unwrap();
+    for c in 0..2 {
+        let cb = mapper::build_conv_crossbar(&m, &ws, "d0", 0, c, MapMode::Inverted).unwrap();
+        let want = cb.eval_ideal(&padded_plane(&x, c, 4, 4, 1));
+        for (i, w) in want.iter().enumerate() {
+            assert!((got[c * 4 + i] - w).abs() < 1e-12, "c {c} pos {i}");
+        }
+    }
+}
+
+#[test]
+fn conv_spice_matches_ideal_within_tolerance() {
+    // the per-bank resident-CrossbarSim path (regular conv) must track the
+    // direct-form ideal transfer within the op-amp finite-gain tolerance
+    let layers = r#"
+        {"unit":"u","layer":"conv","name":"c0","k":3,"stride":1,"padding":1,
+         "cin":2,"cout":2,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"c0.w"}"#;
+    let weights = r#"{"name":"c0.w","shape":[3,3,2,2],"offset":0,"len":36,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(36, 0.5, 51));
+    let base = PipelineBuilder::new().segment(8).workers(2);
+    let mut spice = base.clone().fidelity(Fidelity::Spice).build(&m, &ws).unwrap();
+    let mut ideal = base.fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    let mut rng = Rng::new(14);
+    let batch: Vec<Vec<f64>> = (0..2)
+        .map(|_| (0..32).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    let got = spice.forward_batch(&batch).unwrap();
+    let want = ideal.forward_batch(&batch).unwrap();
+    for (g_row, w_row) in got.iter().zip(&want) {
+        for (g, w) in g_row.iter().zip(w_row) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "conv spice {g} vs ideal {w}");
+        }
+    }
+}
+
+#[test]
+fn dwconv_spice_matches_ideal_within_tolerance() {
+    // depthwise banks (one crossbar per channel, ci == co) on the SPICE path
+    let layers = r#"
+        {"unit":"u","layer":"dwconv","name":"d0","k":3,"stride":2,"padding":1,
+         "cin":2,"cout":2,"h_in":4,"w_in":4,"h_out":2,"w_out":2,"weight":"d0.w"}"#;
+    let weights = r#"{"name":"d0.w","shape":[3,3,1,2],"offset":0,"len":18,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(18, 0.5, 53));
+    let base = PipelineBuilder::new().segment(0).workers(2);
+    let mut spice = base.clone().fidelity(Fidelity::Spice).build(&m, &ws).unwrap();
+    let mut ideal = base.fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    let mut rng = Rng::new(15);
+    let x: Vec<f64> = (0..32).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let got = spice.forward(&x).unwrap();
+    let want = ideal.forward(&x).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "dwconv spice {g} vs ideal {w}");
+    }
+}
+
+#[test]
+fn se_block_scales_channels_by_sigmoid_branch() {
+    let layers = r#"
+        {"unit":"u","layer":"gapool","name":"u.se.gap","c":4,"h_in":2,"w_in":2},
+        {"unit":"u","layer":"pconv","name":"u.se.fc1","cin":4,"cout":2,"weight":"u.se.fc1.w"},
+        {"unit":"u","layer":"relu","name":"u.se.act1","c":2},
+        {"unit":"u","layer":"pconv","name":"u.se.fc2","cin":2,"cout":4,"weight":"u.se.fc2.w"},
+        {"unit":"u","layer":"hsigmoid","name":"u.se.act2","c":4}"#;
+    let weights = r#"
+        {"name":"u.se.fc1.w","shape":[4,2],"offset":0,"len":8,"scale":0.5},
+        {"name":"u.se.fc2.w","shape":[2,4],"offset":8,"len":8,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(16, 0.5, 23));
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    // the five manifest layers collapse into one SE module, dims preserved
+    assert_eq!((p.in_dim(), p.out_dim(), p.n_stages()), (16, 16, 1));
+
+    let mut rng = Rng::new(3);
+    let x: Vec<f64> = (0..16).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let got = p.forward(&x).unwrap();
+
+    let cb1 = mapper::build_fc_crossbar(&m, &ws, "u.se.fc1", MapMode::Inverted).unwrap();
+    let cb2 = mapper::build_fc_crossbar(&m, &ws, "u.se.fc2", MapMode::Inverted).unwrap();
+    let pooled: Vec<f64> = (0..4).map(|c| x[c * 4..(c + 1) * 4].iter().sum::<f64>() / 4.0).collect();
+    let h: Vec<f64> = cb1.eval_ideal(&pooled).iter().map(|&v| v.max(0.0)).collect();
+    let gains: Vec<f64> =
+        cb2.eval_ideal(&h).iter().map(|&v| analog::hard_sigmoid_sw(v)).collect();
+    for c in 0..4 {
+        for s in 0..4 {
+            let want = x[c * 4 + s] * gains[c];
+            assert!(
+                (got[c * 4 + s] - want).abs() < 1e-12,
+                "c {c} s {s}: {} vs {want}",
+                got[c * 4 + s]
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_adds_unit_input() {
+    let layers = r#"
+        {"unit":"u","layer":"bn","name":"u.bn","c":3,"weight":"u.bn.gamma"},
+        {"unit":"u","layer":"relu","name":"u.act","c":3},
+        {"unit":"u","layer":"residual","name":"u.add","c":3}"#;
+    let weights = r#"
+        {"name":"u.bn.gamma","shape":[3],"offset":0,"len":3},
+        {"name":"u.bn.beta","shape":[3],"offset":3,"len":3},
+        {"name":"u.bn.mean","shape":[3],"offset":6,"len":3},
+        {"name":"u.bn.var","shape":[3],"offset":9,"len":3}"#;
+    let blob = vec![1.0, 2.0, 0.5, 0.1, 0.0, -0.1, 0.0, 0.1, 0.0, 1.0, 1.0, 1.0];
+    let (m, ws) = load(layers, weights, blob.clone());
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    let x = vec![0.5, -0.3, 0.2];
+    let got = p.forward(&x).unwrap();
+    for ch in 0..3 {
+        let k = blob[ch] as f64 / (blob[9 + ch] as f64 + BN_EPS).sqrt();
+        let bn = (x[ch] - blob[6 + ch] as f64) * k + blob[3 + ch] as f64;
+        let want = bn.max(0.0) + x[ch]; // relu then the unit-input skip
+        assert!((got[ch] - want).abs() < 1e-12, "ch {ch}: {} vs {want}", got[ch]);
+    }
+}
+
+#[test]
+fn gap_module_means_per_channel() {
+    let layers = r#"{"unit":"cls","layer":"gapool","name":"cls.gap","c":3,"h_in":2,"w_in":2}"#;
+    let (m, ws) = load(layers, "", Vec::new());
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    assert_eq!((p.in_dim(), p.out_dim()), (12, 3));
+    let x: Vec<f64> = (0..12).map(|i| i as f64).collect();
+    let got = p.forward(&x).unwrap();
+    assert_eq!(got, vec![1.5, 5.5, 9.5]);
+}
+
+#[test]
+fn classify_batch_picks_identity_labels() {
+    let layers = r#"{"unit":"m","layer":"fc","name":"cls","cin":4,"cout":4,"weight":"id.w"}"#;
+    let weights = r#"{"name":"id.w","shape":[4,4],"offset":0,"len":16,"scale":1.0}"#;
+    let mut blob = vec![0f32; 16];
+    for i in 0..4 {
+        blob[i * 4 + i] = 1.0;
+    }
+    let (m, ws) = load(layers, weights, blob);
+    let mut p = PipelineBuilder::new().fidelity(Fidelity::Ideal).build(&m, &ws).unwrap();
+    let batch: Vec<Vec<f64>> = (0..4)
+        .map(|j| (0..4).map(|i| if i == j { 0.3 } else { 0.0 }).collect())
+        .collect();
+    assert_eq!(p.classify_batch(&batch).unwrap(), vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn dim_mismatch_fails_at_build_time() {
+    let layers = r#"
+        {"unit":"m","layer":"fc","name":"fc1","cin":6,"cout":5,"weight":"a.w"},
+        {"unit":"m","layer":"fc","name":"fc2","cin":4,"cout":3,"weight":"b.w"}"#;
+    let weights = r#"
+        {"name":"a.w","shape":[6,5],"offset":0,"len":30,"scale":0.5},
+        {"name":"b.w","shape":[4,3],"offset":30,"len":12,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(42, 0.5, 5));
+    let err = match PipelineBuilder::new().build(&m, &ws) {
+        Ok(_) => panic!("mismatched fc dims must fail at build time"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("expects 4 inputs"), "unexpected error: {err}");
+}
+
+#[test]
+fn spice_stack_matches_ideal_and_batch_is_consistent() {
+    let dev = default_device();
+    let base = PipelineBuilder::new().segment(3).workers(2);
+    let mut spice =
+        base.clone().fidelity(Fidelity::Spice).build_fc_stack(&[8, 6, 4], &dev, 21).unwrap();
+    let mut ideal =
+        base.fidelity(Fidelity::Ideal).build_fc_stack(&[8, 6, 4], &dev, 21).unwrap();
+    let mut rng = Rng::new(4);
+    let batch: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..8).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    let got = spice.forward_batch(&batch).unwrap();
+    let want = ideal.forward_batch(&batch).unwrap();
+    for (g_row, w_row) in got.iter().zip(&want) {
+        for (g, w) in g_row.iter().zip(w_row) {
+            // op-amp finite-gain tolerance, compounded over two stages
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "spice {g} vs ideal {w}");
+        }
+    }
+    // batch-of-one equals single forward on the Spice path
+    for (k, x) in batch.iter().enumerate() {
+        let single = spice.forward(x).unwrap();
+        for (a, b) in single.iter().zip(&got[k]) {
+            assert!((a - b).abs() < 1e-9, "batch {k}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn spice_activation_circuit_matches_behavioural_within_knee() {
+    // fc -> hard sigmoid at Fidelity::Spice drives every element through
+    // the Fig 4 op-amp circuit (split across worker clones); it must track
+    // the behavioural transfer within the diode-knee tolerance
+    let layers = r#"
+        {"unit":"m","layer":"fc","name":"fc1","cin":4,"cout":3,"weight":"a.w"},
+        {"unit":"m","layer":"hsigmoid","name":"act","c":3}"#;
+    let weights = r#"{"name":"a.w","shape":[4,3],"offset":0,"len":12,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(12, 0.5, 41));
+    let mut spice = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(2)
+        .workers(2)
+        .build(&m, &ws)
+        .unwrap();
+    let mut behav = PipelineBuilder::new()
+        .fidelity(Fidelity::Behavioural)
+        .build(&m, &ws)
+        .unwrap();
+    let mut rng = Rng::new(6);
+    let batch: Vec<Vec<f64>> = (0..2)
+        .map(|_| (0..4).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
+    let got = spice.forward_batch(&batch).unwrap();
+    let want = behav.forward_batch(&batch).unwrap();
+    for (g_row, w_row) in got.iter().zip(&want) {
+        for (g, w) in g_row.iter().zip(w_row) {
+            assert!(
+                (g - w).abs() < analog::KNEE_TOL,
+                "spice activation {g} vs behavioural {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prog_noise_perturbs_but_preserves_structure() {
+    let dev = default_device();
+    let mut clean = PipelineBuilder::new()
+        .fidelity(Fidelity::Ideal)
+        .build_fc_stack(&[10, 6], &dev, 9)
+        .unwrap();
+    let mut noisy = PipelineBuilder::new()
+        .fidelity(Fidelity::Ideal)
+        .prog_noise(0.1, 42)
+        .build_fc_stack(&[10, 6], &dev, 9)
+        .unwrap();
+    assert_eq!(clean.memristors(), noisy.memristors(), "noise must not drop devices");
+    let x: Vec<f64> = (0..10).map(|i| ((i as f64) * 0.3).sin() * 0.4).collect();
+    let a = clean.forward(&x).unwrap();
+    let b = noisy.forward(&x).unwrap();
+    assert!(a.iter().zip(&b).any(|(p, q)| (p - q).abs() > 1e-9), "noise must perturb");
+    assert!(a.iter().zip(&b).all(|(p, q)| (p - q).abs() < 1.0), "noise must stay bounded");
+}
+
+#[test]
+fn behavioural_clamps_ideal_output_to_rails() {
+    // single-layer stack: behavioural == ideal followed by the TIA rail
+    // clip, element for element
+    let dev = default_device(); // v_rail = 8 V
+    let mut ideal = PipelineBuilder::new()
+        .fidelity(Fidelity::Ideal)
+        .build_fc_stack(&[64, 8], &dev, 77)
+        .unwrap();
+    let mut behav = PipelineBuilder::new()
+        .fidelity(Fidelity::Behavioural)
+        .build_fc_stack(&[64, 8], &dev, 77)
+        .unwrap();
+    // drive hard: +25 V inputs (unphysical) so saturation is plausible; the
+    // exact clamp identity must hold either way
+    let x = vec![25.0; 64];
+    let yi = ideal.forward(&x).unwrap();
+    let yb = behav.forward(&x).unwrap();
+    assert!(yb.iter().all(|v| v.abs() <= dev.v_rail + 1e-12));
+    for (b, i) in yb.iter().zip(&yi) {
+        assert_eq!(*b, i.clamp(-dev.v_rail, dev.v_rail), "clamp identity violated");
+    }
+}

@@ -9,6 +9,7 @@ use memx::mapper::layout::{
 };
 use memx::mapper::{self, MapMode};
 use memx::netlist::plan_segments;
+use memx::pipeline::{default_device, synthetic_stack_crossbars, Fidelity, PipelineBuilder};
 use memx::spice::factor;
 use memx::spice::solve::{solve_dense, Ordering, SparseSys};
 use memx::util::json::Json;
@@ -393,6 +394,100 @@ fn prop_sweep_cache_equivalence() {
             })
         },
     );
+}
+
+/// Random small FC-stack dims (first entry = input dim) plus a layer seed.
+fn gen_stack_dims(rng: &mut Rng, size: usize) -> (Vec<usize>, u64) {
+    let n_layers = 2 + rng.below(2); // 2-3 crossbars
+    let mut dims = vec![2 + rng.below(4 + size)];
+    for _ in 0..n_layers {
+        dims.push(1 + rng.below(4 + size));
+    }
+    (dims, rng.next_u64())
+}
+
+#[test]
+fn prop_pipeline_ideal_matches_eval_ideal_chain() {
+    // a Fidelity::Ideal pipeline is EXACTLY the fold of Crossbar::eval_ideal
+    // over its layers — bit-for-bit, no tolerance
+    check("pipeline-ideal-exact", 25, gen_stack_dims, |(dims, seed)| {
+        let dev = default_device();
+        let mut p = PipelineBuilder::new()
+            .fidelity(Fidelity::Ideal)
+            .build_fc_stack(dims, &dev, *seed)
+            .unwrap();
+        let cbs = synthetic_stack_crossbars(dims, dev.levels, MapMode::Inverted, *seed);
+        let mut rng = Rng::new(seed ^ 0x9A);
+        let x: Vec<f64> = (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+        let got = p.forward(&x).unwrap();
+        let mut want = x;
+        for cb in &cbs {
+            want = cb.eval_ideal(&want);
+        }
+        got == want
+    });
+}
+
+#[test]
+fn prop_pipeline_spice_matches_ideal_within_tolerance() {
+    // the Spice-fidelity pipeline (resident CrossbarSim per layer, batched
+    // multi-RHS reads) stays within the op-amp finite-gain tolerance of the
+    // ideal chain on random small FC stacks
+    check(
+        "pipeline-spice-tol",
+        6,
+        |rng: &mut Rng, _| {
+            let dims = vec![2 + rng.below(5), 1 + rng.below(4), 1 + rng.below(3)];
+            (dims, rng.next_u64())
+        },
+        |(dims, seed)| {
+            let dev = default_device();
+            let base = PipelineBuilder::new().segment(2).workers(2);
+            let mut spice = base
+                .clone()
+                .fidelity(Fidelity::Spice)
+                .build_fc_stack(dims, &dev, *seed)
+                .unwrap();
+            let mut ideal = base
+                .fidelity(Fidelity::Ideal)
+                .build_fc_stack(dims, &dev, *seed)
+                .unwrap();
+            let mut rng = Rng::new(seed ^ 0x5C);
+            let batch: Vec<Vec<f64>> = (0..2)
+                .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+                .collect();
+            let got = spice.forward_batch(&batch).unwrap();
+            let want = ideal.forward_batch(&batch).unwrap();
+            got.iter().zip(&want).all(|(g_row, w_row)| {
+                g_row
+                    .iter()
+                    .zip(w_row)
+                    .all(|(g, w)| (g - w).abs() < 1e-3 * (1.0 + w.abs()))
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_forward_batch_equals_forward() {
+    // regression: forward_batch(&[x]) == forward(x), and batching commutes
+    // with per-item evaluation on the behavioural path
+    check("pipeline-batch-single", 20, gen_stack_dims, |(dims, seed)| {
+        let dev = default_device();
+        let mut p = PipelineBuilder::new()
+            .fidelity(Fidelity::Behavioural)
+            .build_fc_stack(dims, &dev, *seed)
+            .unwrap();
+        let mut rng = Rng::new(seed ^ 0x33);
+        let batch: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+            .collect();
+        let batched = p.forward_batch(&batch).unwrap();
+        batch
+            .iter()
+            .zip(&batched)
+            .all(|(x, row)| p.forward(x).unwrap() == *row)
+    });
 }
 
 #[test]
