@@ -4,35 +4,35 @@
 //!
 //!   cargo run --release --example serve_cifar [n_requests]
 //!
-//! Flow: the coordinator starts its service thread (PJRT engine + dynamic
+//! Flow: the coordinator starts its service thread (executor + dynamic
 //! batcher), four closed-loop clients stream the held-out synth-cifar test
 //! split as individual classification requests, and we report accuracy,
-//! latency percentiles and throughput for BOTH the memristor analog model
-//! and the digital fp32 baseline — the Table 1 row plus the Fig 8 "this
-//! testbed" columns. Results are recorded in EXPERIMENTS.md §E1.
+//! latency percentiles and throughput. The offline build serves the analog
+//! crossbar pipeline (behavioural fidelity, pipelined stage scheduler);
+//! with `--features runtime-xla` the digital fp32 PJRT baseline is served
+//! too — the Table 1 row plus the Fig 8 "this testbed" columns. Results
+//! are recorded in EXPERIMENTS.md §E1.
 
-#[cfg(feature = "runtime-xla")]
 use std::path::Path;
-#[cfg(feature = "runtime-xla")]
 use std::sync::atomic::{AtomicUsize, Ordering};
-#[cfg(feature = "runtime-xla")]
 use std::time::Instant;
 
-#[cfg(feature = "runtime-xla")]
-use memx::coordinator::{Server, ServerConfig};
-#[cfg(feature = "runtime-xla")]
-use memx::runtime::Model;
-#[cfg(feature = "runtime-xla")]
+use memx::coordinator::{Backend, Server, ServerConfig};
 use memx::util::bin::Dataset;
 
-#[cfg(feature = "runtime-xla")]
-fn run_model(dir: &Path, model: Model, ds: &Dataset, n: usize) -> anyhow::Result<f64> {
-    println!("\n=== {model:?} model, {n} requests, 4 closed-loop clients ===");
+fn run_backend(
+    dir: &Path,
+    label: &str,
+    backend: Backend,
+    ds: &Dataset,
+    n: usize,
+) -> anyhow::Result<f64> {
+    println!("\n=== {label}, {n} requests, 4 closed-loop clients ===");
     let server = Server::start(
         dir,
-        ServerConfig { model, max_wait: std::time::Duration::from_millis(5) },
+        ServerConfig { backend, max_wait: std::time::Duration::from_millis(5) },
     )?;
-    println!("warmup (engine + XLA compile of all batch variants): {:?}", server.warmup);
+    println!("warmup (compile / factor-cache priming): {:?}", server.warmup);
 
     let client = server.client();
     let correct = AtomicUsize::new(0);
@@ -64,7 +64,6 @@ fn run_model(dir: &Path, model: Model, ds: &Dataset, n: usize) -> anyhow::Result
     Ok(acc)
 }
 
-#[cfg(feature = "runtime-xla")]
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
@@ -77,22 +76,30 @@ fn main() -> anyhow::Result<()> {
         manifest.arch, manifest.width, manifest.num_classes
     );
 
-    let acc_analog = run_model(dir, Model::Analog, &ds, n)?;
-    let acc_digital = run_model(dir, Model::Digital, &ds, n)?;
+    let analog = Backend::Analog {
+        fidelity: memx::pipeline::Fidelity::Behavioural,
+        workers: 0,
+    };
+    let acc_analog = run_backend(dir, "analog crossbar pipeline", analog, &ds, n)?;
 
-    println!("\n=== Table 1 row (this work) ===");
-    println!("digital fp32 baseline : {:.2}%", acc_digital * 100.0);
-    println!("memristor analog model: {:.2}%", acc_analog * 100.0);
-    println!("paper target          : > 90% and analog ≈ digital");
-    let ok = acc_analog > 0.9 && (acc_digital - acc_analog).abs() < 0.02;
-    println!("reproduction          : {}", if ok { "PASS" } else { "CHECK" });
+    #[cfg(feature = "runtime-xla")]
+    {
+        let digital = Backend::Pjrt { model: memx::runtime::Model::Digital };
+        let acc_digital = run_backend(dir, "digital fp32 (PJRT)", digital, &ds, n)?;
+        println!("\n=== Table 1 row (this work) ===");
+        println!("digital fp32 baseline : {:.2}%", acc_digital * 100.0);
+        println!("memristor analog model: {:.2}%", acc_analog * 100.0);
+        println!("paper target          : > 90% and analog ≈ digital");
+        let ok = acc_analog > 0.9 && (acc_digital - acc_analog).abs() < 0.02;
+        println!("reproduction          : {}", if ok { "PASS" } else { "CHECK" });
+    }
+    #[cfg(not(feature = "runtime-xla"))]
+    {
+        println!("\nmemristor analog model: {:.2}%", acc_analog * 100.0);
+        println!(
+            "(digital fp32 baseline needs the PJRT runtime: rebuild with \
+             --features runtime-xla)"
+        );
+    }
     Ok(())
-}
-
-#[cfg(not(feature = "runtime-xla"))]
-fn main() {
-    eprintln!(
-        "this example needs the PJRT runtime: rebuild with --features runtime-xla \
-         (requires the xla crate + libxla_extension; see Cargo.toml)"
-    );
 }

@@ -1,9 +1,11 @@
 //! E5/E6/E10 / Fig 8 — inference latency + energy: the pipeline end-to-end
 //! batched-forward workload (batch 1 vs 16 vs 64 through
-//! `Pipeline::forward_batch`, appended to BENCH_pipeline.json), the
-//! analytical crossbar models (Eqs 17/18) against the paper's GPU/CPU
-//! baselines, and — with the `runtime-xla` feature — the *measured* digital
-//! PJRT latency on this host per batch size.
+//! `Pipeline::forward_batch`, appended to BENCH_pipeline.json), the serve
+//! path (batcher queue + pipelined stage scheduler at workers 1/2/4,
+//! appended to BENCH_serve.json), the analytical crossbar models
+//! (Eqs 17/18) against the paper's GPU/CPU baselines, and — with the
+//! `runtime-xla` feature — the *measured* digital PJRT latency on this
+//! host per batch size.
 //!
 //!   cargo bench --bench bench_inference
 
@@ -53,6 +55,81 @@ fn pipeline_workload() -> anyhow::Result<()> {
     {
         Ok(()) => println!("(appended to BENCH_pipeline.json)"),
         Err(e) => eprintln!("warning: could not append BENCH_pipeline.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Serve-path workload: the batcher queue + pipelined stage scheduler end
+/// to end over a synthetic pipeline, four closed-loop clients, scheduler
+/// workers 1/2/4 — the §5.2 operating point as served throughput.
+fn serve_workload() -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use memx::coordinator::{InferenceExecutor, PipelineExecutor, Server};
+
+    let (h, w, c, classes) = (8usize, 8usize, 3usize, 10usize);
+    let dims = [h * w * c, 96, 48, classes];
+    let n = 256usize;
+    let mut rng = Rng::new(23);
+    let images: Vec<f32> = (0..n * h * w * c).map(|_| rng.f32()).collect();
+
+    println!("\n== serve path: batcher + pipelined scheduler (fc {dims:?}, behavioural) ==");
+    let mut b = Bench::quick();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut thr_w1 = 0.0f64;
+    for &workers in &[1usize, 2, 4] {
+        let server = Server::start_with(std::time::Duration::from_millis(2), move || {
+            // scheduler width is the knob under test; module solves stay
+            // single-threaded so thread counts don't multiply
+            let pipeline = PipelineBuilder::new()
+                .fidelity(Fidelity::Behavioural)
+                .workers(1)
+                .build_fc_stack(&dims, &default_device(), 23)?;
+            Ok(Box::new(PipelineExecutor::new(pipeline, (h, w, c), &[1, 8, 32], workers)?)
+                as Box<dyn InferenceExecutor>)
+        })?;
+        let client = server.client();
+        let next = AtomicUsize::new(0);
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cl = client.clone();
+                let next = &next;
+                let images = &images;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let img = images[i * h * w * c..(i + 1) * h * w * c].to_vec();
+                    cl.classify(img).expect("serve");
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        // serving is a workload, not a micro-op: one timed pass per config
+        b.record_once(&format!("serve behavioural w{workers} n{n}"), wall);
+        let thr = n as f64 / wall.as_secs_f64().max(1e-9);
+        let snap = server.metrics().snapshot();
+        println!(
+            "    -> {thr:.0} img/s, {} batches ({} padded), executor busy {:?} ({:.0}%)",
+            snap.batches,
+            snap.padded_slots,
+            snap.exec_busy,
+            snap.utilization(wall) * 100.0
+        );
+        derived.push((format!("serve_throughput_w{workers}_img_per_s"), thr));
+        if workers == 1 {
+            thr_w1 = thr;
+        } else {
+            derived.push((format!("serve_speedup_w{workers}_vs_w1"), thr / thr_w1.max(1e-9)));
+        }
+        server.shutdown();
+    }
+    b.table("serve path (batcher + pipelined scheduler)");
+    match append_json_report("BENCH_serve.json", "bench_inference_serve", &b.rows, &derived) {
+        Ok(()) => println!("(appended to BENCH_serve.json)"),
+        Err(e) => eprintln!("warning: could not append BENCH_serve.json: {e}"),
     }
     Ok(())
 }
@@ -133,6 +210,7 @@ fn pjrt_workload() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     pipeline_workload()?;
+    serve_workload()?;
     analytical_workload()?;
     #[cfg(feature = "runtime-xla")]
     pjrt_workload()?;

@@ -1,8 +1,16 @@
-//! Serving metrics: request counters, latency histogram, throughput.
+//! Serving metrics: request counters, latency histogram, throughput,
+//! executor utilization and per-stage wall time.
+//!
+//! The batcher thread records queue/end-to-end latencies and how long the
+//! executor itself was busy per dispatched batch; pipeline-backed executors
+//! additionally surface the scheduler's per-unit wall-time accounting
+//! ([`StageStat`]) which is merged here and printed with the snapshot.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::pipeline::StageStat;
 
 /// Fixed log-scale latency histogram from 1 µs to ~67 s.
 const BUCKETS: usize = 27;
@@ -14,8 +22,18 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// nanoseconds the executor spent inside `run_batch`
+    exec_busy_ns: AtomicU64,
     lat: Mutex<Hist>,
     queue_lat: Mutex<Hist>,
+    /// per-stage (unit) wall time merged from the scheduler, chain order
+    stages: Mutex<Vec<StageCell>>,
+}
+
+struct StageCell {
+    name: String,
+    ns: u128,
+    calls: u64,
 }
 
 #[derive(Default, Clone)]
@@ -73,6 +91,10 @@ pub struct Snapshot {
     pub lat_p99: Duration,
     pub lat_max: Duration,
     pub queue_mean: Duration,
+    /// total time the executor spent answering batches
+    pub exec_busy: Duration,
+    /// per-stage wall time in chain order (pipeline executors only)
+    pub stages: Vec<StageStat>,
 }
 
 impl Metrics {
@@ -84,9 +106,51 @@ impl Metrics {
         self.queue_lat.lock().unwrap().record(d);
     }
 
+    /// Account one executor dispatch (time spent inside `run_batch`).
+    pub fn record_exec(&self, d: Duration) {
+        self.exec_busy_ns
+            .fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// Merge a scheduler stage-time drain into the per-stage table
+    /// (first-seen order is kept, which is chain order for a pipeline).
+    pub fn record_stage_stats(&self, stats: &[StageStat]) {
+        if stats.is_empty() {
+            return;
+        }
+        let mut table = self.stages.lock().unwrap();
+        for s in stats {
+            if s.calls == 0 && s.total.is_zero() {
+                continue;
+            }
+            match table.iter_mut().find(|c| c.name == s.name) {
+                Some(cell) => {
+                    cell.ns += s.total.as_nanos();
+                    cell.calls += s.calls;
+                }
+                None => table.push(StageCell {
+                    name: s.name.clone(),
+                    ns: s.total.as_nanos(),
+                    calls: s.calls,
+                }),
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.lat.lock().unwrap().clone();
         let q = self.queue_lat.lock().unwrap().clone();
+        let stages = self
+            .stages
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| StageStat {
+                name: c.name.clone(),
+                total: Duration::from_nanos(c.ns.min(u64::MAX as u128) as u64),
+                calls: c.calls,
+            })
+            .collect();
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -99,11 +163,21 @@ impl Metrics {
             lat_p99: lat.quantile(0.99),
             lat_max: Duration::from_micros(lat.max_us),
             queue_mean: q.mean(),
+            exec_busy: Duration::from_nanos(self.exec_busy_ns.load(Ordering::Relaxed)),
+            stages,
         }
     }
 }
 
 impl Snapshot {
+    /// Fraction of the wall the executor spent answering batches.
+    pub fn utilization(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.exec_busy.as_secs_f64() / wall.as_secs_f64()
+    }
+
     pub fn print(&self, wall: Duration) {
         let thr = self.completed as f64 / wall.as_secs_f64().max(1e-9);
         println!("  requests      {}", self.requests);
@@ -116,6 +190,29 @@ impl Snapshot {
             self.lat_mean, self.lat_p50, self.lat_p95, self.lat_p99, self.lat_max
         );
         println!("  queue wait    mean {:?}", self.queue_mean);
+        println!(
+            "  executor busy {:?} ({:.1}% of wall)",
+            self.exec_busy,
+            self.utilization(wall) * 100.0
+        );
+        if !self.stages.is_empty() {
+            // heaviest stages first; the chain is long, keep the tail quiet
+            let mut by_cost: Vec<&StageStat> = self.stages.iter().collect();
+            by_cost.sort_by(|a, b| b.total.cmp(&a.total));
+            let shown = by_cost.len().min(8);
+            println!("  stage wall    (top {shown} of {})", self.stages.len());
+            for s in &by_cost[..shown] {
+                let mean = if s.calls > 0 {
+                    s.total / s.calls.max(1) as u32
+                } else {
+                    Duration::ZERO
+                };
+                println!(
+                    "    {:<18} total {:?}  calls {}  mean {:?}",
+                    s.name, s.total, s.calls, mean
+                );
+            }
+        }
     }
 }
 
@@ -141,5 +238,48 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.lat_mean, Duration::ZERO);
         assert_eq!(s.lat_p99, Duration::ZERO);
+        assert_eq!(s.exec_busy, Duration::ZERO);
+        assert!(s.stages.is_empty());
+    }
+
+    #[test]
+    fn exec_busy_and_utilization() {
+        let m = Metrics::default();
+        m.record_exec(Duration::from_millis(30));
+        m.record_exec(Duration::from_millis(20));
+        let s = m.snapshot();
+        assert_eq!(s.exec_busy, Duration::from_millis(50));
+        let u = s.utilization(Duration::from_millis(100));
+        assert!((u - 0.5).abs() < 1e-9, "utilization {u}");
+        assert_eq!(s.utilization(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn stage_stats_merge_by_name_in_order() {
+        let m = Metrics::default();
+        let drain = |a_ms: u64, b_ms: u64| {
+            vec![
+                StageStat {
+                    name: "bneck1".into(),
+                    total: Duration::from_millis(a_ms),
+                    calls: 2,
+                },
+                StageStat {
+                    name: "bneck2".into(),
+                    total: Duration::from_millis(b_ms),
+                    calls: 2,
+                },
+                // zero rows (drained twice between batches) are dropped
+                StageStat { name: "idle".into(), total: Duration::ZERO, calls: 0 },
+            ]
+        };
+        m.record_stage_stats(&drain(3, 5));
+        m.record_stage_stats(&drain(1, 2));
+        let s = m.snapshot();
+        assert_eq!(s.stages.len(), 2);
+        assert_eq!(s.stages[0].name, "bneck1");
+        assert_eq!(s.stages[0].total, Duration::from_millis(4));
+        assert_eq!(s.stages[0].calls, 4);
+        assert_eq!(s.stages[1].total, Duration::from_millis(7));
     }
 }

@@ -1,69 +1,310 @@
-//! L3 coordinator — the inference service.
+//! L3 coordinator — the backend-agnostic inference service.
 //!
-//! Topology (PJRT wrappers are !Send, so the engine is pinned):
+//! Topology (executors are built ON the service thread, so even !Send
+//! backends like the PJRT engine fit behind the queue):
 //!
 //! ```text
 //!   clients ──mpsc──► batcher thread ──(assembled batches)──► executor
-//!   (Client::classify)  plan_batch()        same thread owns Engine
+//!   (Client::classify)  plan_batch()     same thread owns the executor
 //!        ◄──────────── per-request oneshot responses ◄────────┘
 //! ```
 //!
 //! The batcher+executor run on a single dedicated thread: it drains the
-//! queue, assembles a batch per [`batcher::plan_batch`], executes via PJRT
-//! and answers each request through its response channel. This mirrors the
-//! paper's deployment model where one analog accelerator serves a stream of
-//! sensor frames; metrics capture latency/throughput for Fig 8-style runs.
-
-//! The batching policy ([`batcher`]), metrics ([`metrics`]), [`accuracy`]
-//! and the crossbar-pipeline analog path ([`classify_dataset_analog`],
-//! batching images through
-//! [`Pipeline::forward_batch`](crate::pipeline::Pipeline::forward_batch))
-//! are pure and always available; the PJRT-backed service (`Server`,
-//! `classify_dataset`) needs the `runtime-xla` feature.
+//! queue, assembles a batch per [`batcher::plan_batch`], answers it through
+//! one [`InferenceExecutor`] and responds to each request through its
+//! response channel. The executor is the pluggable piece:
+//!
+//! * [`PipelineExecutor`] — the analog crossbar [`Pipeline`] with the
+//!   §5.2 pipelined stage scheduler
+//!   ([`Pipeline::forward_batch_pipelined`]); always available, so
+//!   `memx serve --model analog` works in the default offline build.
+//! * `EngineExecutor` — the PJRT engine (digital / analog-model HLO
+//!   executables); needs the `runtime-xla` feature.
+//!
+//! This mirrors the paper's deployment model where one analog accelerator
+//! serves a stream of sensor frames; [`metrics`] capture queue/end-to-end
+//! latency, executor utilization and per-stage wall time for Fig 8-style
+//! runs. The batching policy ([`batcher`]), [`accuracy`] and the bulk
+//! paths ([`classify_dataset_analog`], and `classify_dataset` with
+//! `runtime-xla`) are pure library calls.
 
 pub mod batcher;
 pub mod metrics;
 
-#[cfg(feature = "runtime-xla")]
 use std::path::Path;
-#[cfg(feature = "runtime-xla")]
 use std::sync::atomic::{AtomicBool, Ordering};
-#[cfg(feature = "runtime-xla")]
 use std::sync::mpsc::{channel, Receiver, Sender};
-#[cfg(feature = "runtime-xla")]
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-#[cfg(feature = "runtime-xla")]
-use anyhow::anyhow;
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
-use crate::pipeline::{image_to_input, Pipeline};
+use crate::pipeline::{image_to_input, Fidelity, Pipeline, PipelineBuilder, StageStat};
+use crate::util::argmax_rows;
 use crate::util::bin::Dataset;
-
-#[cfg(feature = "runtime-xla")]
-use crate::runtime::{argmax_rows, Engine, Model};
-#[cfg(feature = "runtime-xla")]
 use metrics::Metrics;
 
 #[cfg(feature = "runtime-xla")]
+use crate::runtime::{Engine, Model};
+
+// ---------------------------------------------------------------------------
+// InferenceExecutor — the serving core's backend contract
+// ---------------------------------------------------------------------------
+
+/// A batched flat-image → logits backend the serving thread can drive.
+///
+/// The contract is deliberately small: the batcher assembles padded
+/// batches of `img_elems()`-float HWC images at one of the
+/// `available_batches()` sizes and expects `batch * num_classes()` logits
+/// back. Executors are constructed on the service thread (see
+/// [`Server::start_with`]), so implementations need not be `Send`.
+pub trait InferenceExecutor {
+    /// Human-readable backend summary for logs.
+    fn describe(&self) -> String;
+
+    /// Floats per input image (h*w*c, HWC row-major).
+    fn img_elems(&self) -> usize;
+
+    /// Logits per image.
+    fn num_classes(&self) -> usize;
+
+    /// Batch sizes this executor serves efficiently (the batcher plans
+    /// over these; any positive, deduplicated set works).
+    fn available_batches(&self) -> Vec<usize>;
+
+    /// Prepare the hot path (compile executables, prime factor caches).
+    /// Runs once on the service thread before the first request.
+    fn warmup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Answer one assembled batch: `images.len()` is a multiple of
+    /// [`InferenceExecutor::img_elems`]; returns row-major logits
+    /// (`batch * num_classes` floats).
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>>;
+
+    /// Drain per-stage wall-time accounting since the last call (pipeline
+    /// schedulers report their unit timings here; default: none).
+    fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        Vec::new()
+    }
+}
+
+/// Positive, ascending, deduplicated batch-size plan set (the batcher's
+/// contract), with `fallback` substituted when nothing survives.
+fn sanitize_batch_sizes(sizes: &[usize], fallback: &[usize]) -> Vec<usize> {
+    let mut out: Vec<usize> = sizes.iter().copied().filter(|&b| b > 0).collect();
+    if out.is_empty() {
+        out = fallback.to_vec();
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// PipelineExecutor — the analog crossbar backend (always available)
+// ---------------------------------------------------------------------------
+
+/// [`InferenceExecutor`] over the analog crossbar [`Pipeline`]: converts
+/// each HWC image to channel-major planes and answers batches through the
+/// pipelined stage scheduler
+/// ([`Pipeline::forward_batch_pipelined`] — workers > 1 overlaps unit
+/// groups across micro-batches; per-image results stay bit-identical to
+/// the sequential path).
+pub struct PipelineExecutor {
+    pipeline: Pipeline,
+    h: usize,
+    w: usize,
+    c: usize,
+    batches: Vec<usize>,
+    workers: usize,
+    micro_batch: usize,
+}
+
+impl PipelineExecutor {
+    /// Wrap a compiled pipeline. `batches` is the batcher's plan set
+    /// (sanitized here); `workers` is the scheduler width (0 = auto).
+    pub fn new(
+        pipeline: Pipeline,
+        (h, w, c): (usize, usize, usize),
+        batches: &[usize],
+        workers: usize,
+    ) -> Result<PipelineExecutor> {
+        if pipeline.in_dim() != h * w * c {
+            bail!(
+                "pipeline expects {} inputs, images are {h}x{w}x{c} = {}",
+                pipeline.in_dim(),
+                h * w * c
+            );
+        }
+        let workers = if workers == 0 { crate::util::pool::default_workers() } else { workers };
+        Ok(PipelineExecutor {
+            pipeline,
+            h,
+            w,
+            c,
+            batches: sanitize_batch_sizes(batches, &[1, 8, 32]),
+            workers,
+            micro_batch: 0, // auto: sized from batch / unit-group count
+        })
+    }
+
+    /// Compile the trained artifacts into a pipeline-backed executor.
+    ///
+    /// The scheduler owns the thread budget: when unit groups overlap
+    /// (`workers` > 1, or auto on a multi-core host) the modules are built
+    /// with single-threaded internal solves, so SPICE segment workers do
+    /// not multiply under the group threads into `workers²`
+    /// oversubscription.
+    pub fn from_artifacts(
+        dir: &Path,
+        fidelity: Fidelity,
+        workers: usize,
+    ) -> Result<PipelineExecutor> {
+        let m = crate::nn::Manifest::load(dir)?;
+        let ws = crate::nn::WeightStore::load(dir, &m)?;
+        let sched = if workers == 0 { crate::util::pool::default_workers() } else { workers };
+        // overlapping groups -> single-threaded module solves; a width-1
+        // scheduler (sequential units) keeps the modules' own parallelism
+        // (0 = builder auto)
+        let pipeline = PipelineBuilder::new()
+            .fidelity(fidelity)
+            .workers(if sched > 1 { 1 } else { 0 })
+            .build(&m, &ws)?;
+        Self::new(pipeline, (m.img, m.img, 3), &m.batch_sizes, sched)
+    }
+
+    /// Override the scheduler's micro-batch size (0 = auto).
+    pub fn micro_batch(mut self, micro_batch: usize) -> Self {
+        self.micro_batch = micro_batch;
+        self
+    }
+
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+}
+
+impl InferenceExecutor for PipelineExecutor {
+    fn describe(&self) -> String {
+        format!("analog pipeline [{}], {} workers", self.pipeline.describe(), self.workers)
+    }
+
+    fn img_elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    fn num_classes(&self) -> usize {
+        self.pipeline.out_dim()
+    }
+
+    fn available_batches(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        // one zero image primes every resident simulator's factorization so
+        // the first served batch is already cached re-solves
+        let zero = vec![vec![0.0; self.pipeline.in_dim()]];
+        self.pipeline.forward_batch(&zero)?;
+        self.pipeline.take_stage_stats(); // warmup time is not serving time
+        Ok(())
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        let img = self.img_elems();
+        if img == 0 || images.len() % img != 0 {
+            bail!("batch of {} floats is not a multiple of {img}", images.len());
+        }
+        let batch: Vec<Vec<f64>> = images
+            .chunks(img)
+            .map(|chunk| image_to_input(chunk, self.h, self.w, self.c))
+            .collect();
+        let rows = self.pipeline.forward_batch_pipelined(&batch, self.workers, self.micro_batch)?;
+        Ok(rows.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect())
+    }
+
+    fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        self.pipeline.take_stage_stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EngineExecutor — the PJRT backend (runtime-xla)
+// ---------------------------------------------------------------------------
+
+/// [`InferenceExecutor`] over the PJRT [`Engine`] (pre-compiled HLO batch
+/// variants). Built on the service thread because PJRT handles are !Send.
+#[cfg(feature = "runtime-xla")]
+pub struct EngineExecutor {
+    engine: Engine,
+    model: Model,
+}
+
+#[cfg(feature = "runtime-xla")]
+impl EngineExecutor {
+    pub fn new(dir: &Path, model: Model) -> Result<EngineExecutor> {
+        Ok(EngineExecutor { engine: Engine::new(dir)?, model })
+    }
+}
+
+#[cfg(feature = "runtime-xla")]
+impl InferenceExecutor for EngineExecutor {
+    fn describe(&self) -> String {
+        format!("pjrt {:?} on {}", self.model, self.engine.platform())
+    }
+
+    fn img_elems(&self) -> usize {
+        let m = self.engine.manifest();
+        m.img * m.img * 3
+    }
+
+    fn num_classes(&self) -> usize {
+        self.engine.manifest().num_classes
+    }
+
+    fn available_batches(&self) -> Vec<usize> {
+        self.engine.available_batches()
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        // pre-compile every batch variant so serving never JITs
+        for b in self.engine.available_batches() {
+            self.engine.get(self.model, b)?;
+        }
+        Ok(())
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        let img = self.img_elems();
+        if img == 0 || images.len() % img != 0 {
+            bail!("batch of {} floats is not a multiple of {img}", images.len());
+        }
+        let exec = self.engine.get(self.model, images.len() / img)?;
+        exec.run(images)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server — queue + batcher thread over any executor
+// ---------------------------------------------------------------------------
+
 /// One classification result.
 #[derive(Debug, Clone)]
 pub struct Prediction {
     pub label: usize,
     pub logits: Vec<f32>,
     /// end-to-end latency observed by the server
-    pub latency: std::time::Duration,
+    pub latency: Duration,
 }
 
-#[cfg(feature = "runtime-xla")]
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
     resp: Sender<Result<Prediction>>,
 }
 
-#[cfg(feature = "runtime-xla")]
 /// Cloneable submission handle.
 #[derive(Clone)]
 pub struct Client {
@@ -72,7 +313,6 @@ pub struct Client {
     metrics: Arc<Metrics>,
 }
 
-#[cfg(feature = "runtime-xla")]
 impl Client {
     /// Blocking classify of one NHWC image.
     pub fn classify(&self, image: Vec<f32>) -> Result<Prediction> {
@@ -92,51 +332,86 @@ impl Client {
     }
 }
 
-#[cfg(feature = "runtime-xla")]
-/// Server configuration.
+/// Which backend [`Server::start`] should build on its service thread.
 #[derive(Debug, Clone)]
-pub struct ServerConfig {
-    pub model: Model,
-    pub max_wait: std::time::Duration,
+pub enum Backend {
+    /// The offline analog crossbar pipeline ([`PipelineExecutor`]).
+    Analog {
+        fidelity: Fidelity,
+        /// pipelined-scheduler width (0 = auto)
+        workers: usize,
+    },
+    /// The PJRT engine ([`EngineExecutor`]).
+    #[cfg(feature = "runtime-xla")]
+    Pjrt { model: Model },
 }
 
-#[cfg(feature = "runtime-xla")]
-impl Default for ServerConfig {
-    fn default() -> Self {
-        Self { model: Model::Analog, max_wait: batcher::default_max_wait() }
+impl Backend {
+    fn build(self, dir: &Path) -> Result<Box<dyn InferenceExecutor>> {
+        match self {
+            Backend::Analog { fidelity, workers } => {
+                Ok(Box::new(PipelineExecutor::from_artifacts(dir, fidelity, workers)?))
+            }
+            #[cfg(feature = "runtime-xla")]
+            Backend::Pjrt { model } => Ok(Box::new(EngineExecutor::new(dir, model)?)),
+        }
     }
 }
 
-#[cfg(feature = "runtime-xla")]
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub backend: Backend,
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Analog { fidelity: Fidelity::Behavioural, workers: 0 },
+            max_wait: batcher::default_max_wait(),
+        }
+    }
+}
+
 pub struct Server {
     client: Client,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
-    pub warmup: std::time::Duration,
+    pub warmup: Duration,
 }
 
-#[cfg(feature = "runtime-xla")]
 impl Server {
-    /// Start the service: builds the engine on the service thread (PJRT
-    /// handles are !Send), pre-compiles all batch variants, then serves.
+    /// Start the service over the trained artifacts: the configured
+    /// backend is built and warmed on the service thread (PJRT handles are
+    /// !Send; pipeline warmup primes the factor caches), then serves.
     pub fn start(artifacts_dir: &Path, cfg: ServerConfig) -> Result<Server> {
+        let dir = artifacts_dir.to_path_buf();
+        let backend = cfg.backend;
+        Self::start_with(cfg.max_wait, move || backend.build(&dir))
+    }
+
+    /// Start the service over an explicit executor factory. The factory
+    /// runs on the service thread, so it may capture paths/configs (it
+    /// must be `Send`) while producing a !Send executor. This is also the
+    /// seam tests use to serve stub or synthetic executors without
+    /// artifacts.
+    pub fn start_with<F>(max_wait: Duration, factory: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceExecutor>> + Send + 'static,
+    {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
-        let dir = artifacts_dir.to_path_buf();
         let m2 = metrics.clone();
         let stop2 = stop.clone();
 
-        // probe the manifest on the caller thread for early errors + geometry
-        let manifest = crate::nn::Manifest::load(artifacts_dir)?;
-        let img_elems = manifest.img * manifest.img * 3;
-
-        let (ready_tx, ready_rx) = channel::<Result<std::time::Duration>>();
+        let (ready_tx, ready_rx) = channel::<Result<(Duration, usize)>>();
         let join = std::thread::Builder::new()
             .name("memx-serve".into())
-            .spawn(move || serve_thread(dir, cfg, rx, m2, stop2, ready_tx))
+            .spawn(move || serve_thread(factory, max_wait, rx, m2, stop2, ready_tx))
             .expect("spawn server thread");
-        let warmup = ready_rx
+        let (warmup, img_elems) = ready_rx
             .recv()
             .map_err(|_| anyhow!("server thread died during warmup"))??;
         Ok(Server {
@@ -155,55 +430,66 @@ impl Server {
         self.client.metrics.clone()
     }
 
-    pub fn shutdown(mut self) {
+    /// The one stop/join sequence (shared by [`Server::shutdown`] and
+    /// `Drop`): raise the stop flag and wait for the service thread.
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.join.take() {
             j.join().ok();
         }
     }
+
+    /// Graceful shutdown (also performed on drop).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
 }
 
-#[cfg(feature = "runtime-xla")]
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            j.join().ok();
-        }
+        self.stop_and_join();
     }
 }
 
-#[cfg(feature = "runtime-xla")]
-fn serve_thread(
-    dir: std::path::PathBuf,
-    cfg: ServerConfig,
+fn serve_thread<F>(
+    factory: F,
+    max_wait: Duration,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
-    ready: Sender<Result<std::time::Duration>>,
-) {
-    // build + warm the engine
+    ready: Sender<Result<(Duration, usize)>>,
+) where
+    F: FnOnce() -> Result<Box<dyn InferenceExecutor>>,
+{
+    // build + warm the executor
     let t0 = Instant::now();
-    let engine = match Engine::new(&dir) {
+    let mut exec = match factory().and_then(|mut e| {
+        e.warmup()?;
+        Ok(e)
+    }) {
         Ok(e) => e,
         Err(e) => {
             ready.send(Err(e)).ok();
             return;
         }
     };
-    let sizes = engine.available_batches();
-    for &b in &sizes {
-        if let Err(e) = engine.get(cfg.model, b) {
-            ready.send(Err(e)).ok();
-            return;
-        }
+    let sizes = sanitize_batch_sizes(&exec.available_batches(), &[1]);
+    let img_elems = exec.img_elems();
+    let classes = exec.num_classes();
+    if img_elems == 0 || classes == 0 {
+        ready
+            .send(Err(anyhow!(
+                "executor '{}' reports a degenerate shape ({img_elems} image floats, {classes} classes)",
+                exec.describe()
+            )))
+            .ok();
+        return;
     }
-    ready.send(Ok(t0.elapsed())).ok();
+    ready.send(Ok((t0.elapsed(), img_elems))).ok();
 
     let mut queue: Vec<Request> = Vec::new();
     // reusable input buffer — hot path stays allocation-free after warmup
-    let largest = sizes.iter().copied().max().unwrap_or(1);
-    let img_elems = engine.manifest().img * engine.manifest().img * 3;
+    let largest = *sizes.last().expect("non-empty batch sizes");
     let mut input = vec![0f32; largest * img_elems];
 
     while !stop.load(Ordering::Relaxed) {
@@ -213,11 +499,11 @@ fn serve_thread(
         }
         let waited_out = queue
             .first()
-            .map(|r| r.enqueued.elapsed() >= cfg.max_wait)
+            .map(|r| r.enqueued.elapsed() >= max_wait)
             .unwrap_or(false);
         let Some(plan) = batcher::plan_batch(&sizes, queue.len(), waited_out) else {
             // nothing to do: block briefly for the next request
-            match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+            match rx.recv_timeout(Duration::from_millis(1)) {
                 Ok(r) => queue.push(r),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
@@ -245,10 +531,18 @@ fn serve_thread(
             .padded_slots
             .fetch_add((plan.size - plan.real) as u64, Ordering::Relaxed);
 
-        let exec = engine.get(cfg.model, plan.size).expect("precompiled");
-        match exec.run(buf) {
+        let t_run = Instant::now();
+        let run = exec.run_batch(buf);
+        metrics.record_exec(t_run.elapsed());
+        metrics.record_stage_stats(&exec.take_stage_stats());
+        let run = run.and_then(|logits| {
+            if logits.len() != plan.size * classes {
+                bail!("executor returned {} logits for a batch of {}", logits.len(), plan.size);
+            }
+            Ok(logits)
+        });
+        match run {
             Ok(logits) => {
-                let classes = exec.num_classes;
                 let labels = argmax_rows(&logits, classes);
                 for (i, r) in batch.into_iter().enumerate() {
                     let latency = r.enqueued.elapsed();
@@ -272,6 +566,10 @@ fn serve_thread(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bulk evaluation paths
+// ---------------------------------------------------------------------------
+
 #[cfg(feature = "runtime-xla")]
 /// Synchronous bulk evaluation (no batcher thread): classify `n` images from
 /// a dataset with greedy largest-batch packing. Returns (labels, wall time).
@@ -280,7 +578,7 @@ pub fn classify_dataset(
     model: Model,
     ds: &crate::util::bin::Dataset,
     n: usize,
-) -> Result<(Vec<usize>, std::time::Duration)> {
+) -> Result<(Vec<usize>, Duration)> {
     let n = n.min(ds.n);
     let img = ds.image_len();
     let mut labels = Vec::with_capacity(n);
@@ -306,12 +604,11 @@ pub fn classify_dataset(
 }
 
 /// Synchronous bulk evaluation through the analog crossbar [`Pipeline`] —
-/// the offline counterpart of the PJRT `classify_dataset` and the serving
-/// path the ROADMAP asked for: images are packed with the same [`batcher::plan_batch`]
-/// policy the PJRT server uses, and each batch is answered by one
-/// [`Pipeline::forward_batch`] call — so at
-/// [`Fidelity::Spice`](crate::pipeline::Fidelity::Spice) every crossbar read
-/// amortizes the whole batch over a single multi-RHS
+/// the offline counterpart of the PJRT `classify_dataset`: images are
+/// packed with the same [`batcher::plan_batch`] policy the server uses,
+/// and each batch is answered by one [`Pipeline::forward_batch`] call — so
+/// at [`Fidelity::Spice`](crate::pipeline::Fidelity::Spice) every crossbar
+/// read amortizes the whole batch over a single multi-RHS
 /// [`CrossbarSim::solve_batch`](crate::netlist::CrossbarSim::solve_batch)
 /// substitution pass per segment. Returns (labels, wall time).
 pub fn classify_dataset_analog(
@@ -319,14 +616,9 @@ pub fn classify_dataset_analog(
     ds: &Dataset,
     n: usize,
     batch_sizes: &[usize],
-) -> Result<(Vec<usize>, std::time::Duration)> {
+) -> Result<(Vec<usize>, Duration)> {
     let n = n.min(ds.n);
-    let mut sizes: Vec<usize> = batch_sizes.iter().copied().filter(|&b| b > 0).collect();
-    if sizes.is_empty() {
-        sizes.push(16);
-    }
-    sizes.sort_unstable();
-    sizes.dedup();
+    let sizes = sanitize_batch_sizes(batch_sizes, &[16]);
     let mut labels = Vec::with_capacity(n);
     let t0 = Instant::now();
     let mut i = 0;
@@ -357,6 +649,7 @@ pub fn accuracy(labels: &[usize], truth: &[u8]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::{argmax, default_device, PipelineBuilder};
 
     #[test]
     fn accuracy_counts() {
@@ -364,19 +657,22 @@ mod tests {
         assert_eq!(accuracy(&[], &[]), 0.0);
     }
 
-    #[test]
-    fn analog_path_batches_and_classifies() {
-        use crate::pipeline::{argmax, default_device, Fidelity, PipelineBuilder};
-        let (h, w, c) = (2, 2, 3);
-        let n = 5;
-        let ds = Dataset {
+    fn tiny_dataset(n: usize, h: usize, w: usize, c: usize) -> Dataset {
+        Dataset {
             n,
             h,
             w,
             c,
             data: (0..n * h * w * c).map(|i| (i % 7) as f32 / 7.0).collect(),
             labels: vec![0; n],
-        };
+        }
+    }
+
+    #[test]
+    fn analog_path_batches_and_classifies() {
+        let (h, w, c) = (2, 2, 3);
+        let n = 5;
+        let ds = tiny_dataset(n, h, w, c);
         let dev = default_device();
         let mut p = PipelineBuilder::new()
             .fidelity(Fidelity::Ideal)
@@ -390,5 +686,47 @@ mod tests {
             let x = image_to_input(ds.image(i), h, w, c);
             assert_eq!(label, argmax(&p.forward(&x).unwrap()), "image {i}");
         }
+    }
+
+    #[test]
+    fn server_serves_pipeline_executor_offline() {
+        let (h, w, c) = (2, 2, 3);
+        let n = 9;
+        let ds = tiny_dataset(n, h, w, c);
+        let server = Server::start_with(Duration::from_millis(1), move || {
+            let dev = default_device();
+            let pipeline = PipelineBuilder::new()
+                .fidelity(Fidelity::Behavioural)
+                .build_fc_stack(&[h * w * c, 6, 4], &dev, 11)?;
+            // explicit micro-batch of 1: maximum overlap between the two
+            // unit groups for every served batch
+            Ok(Box::new(
+                PipelineExecutor::new(pipeline, (h, w, c), &[1, 4], 2)?.micro_batch(1),
+            ) as Box<dyn InferenceExecutor>)
+        })
+        .unwrap();
+        let client = server.client();
+        // served labels must equal the direct pipeline forward
+        let mut reference = PipelineBuilder::new()
+            .fidelity(Fidelity::Behavioural)
+            .build_fc_stack(&[h * w * c, 6, 4], &default_device(), 11)
+            .unwrap();
+        for i in 0..n {
+            let p = client.classify(ds.image(i).to_vec()).unwrap();
+            assert_eq!(p.logits.len(), 4);
+            let x = image_to_input(ds.image(i), h, w, c);
+            // the executor rounds logits through f32 — mirror it exactly
+            let want: Vec<f64> =
+                reference.forward(&x).unwrap().iter().map(|&v| v as f32 as f64).collect();
+            assert_eq!(p.label, argmax(&want), "image {i}");
+        }
+        // malformed images are rejected at the client
+        assert!(client.classify(vec![0.0; 5]).is_err());
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, n as u64);
+        assert_eq!(snap.errors, 0);
+        assert!(snap.exec_busy > Duration::ZERO);
+        assert!(!snap.stages.is_empty(), "pipeline executor reports stage times");
+        server.shutdown();
     }
 }

@@ -6,7 +6,10 @@
 //! rust coordinator via PJRT; the paper's automated mapping framework
 //! (crossbar layout -> SPICE netlists -> MNA simulation) lives here too,
 //! unified behind the trait-based [`pipeline`] inference API (manifest ->
-//! analog module chain -> batched crossbar logits).
+//! analog module chain -> batched crossbar logits, with the §5.2 pipelined
+//! stage scheduler) and served through the backend-agnostic
+//! [`coordinator`] queue (`InferenceExecutor`: analog pipeline offline,
+//! PJRT engine under `runtime-xla`).
 pub mod analog;
 pub mod coordinator;
 pub mod dataset;

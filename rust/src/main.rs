@@ -5,7 +5,10 @@
 //!   accuracy [--model analog|digital] [--n N] [--fidelity F]  Table 1 row
 //!            (analog runs offline through the crossbar pipeline;
 //!             digital needs the PJRT runtime)
-//!   serve    [--n N] [--model ...] [--max-wait-us U]  demo serving run
+//!   serve    [--n N] [--model ...] [--max-wait-us U] [--fidelity F]
+//!            [--workers W]          demo serving run (analog serves the
+//!            crossbar pipeline offline, with a synthetic demo network
+//!            when no artifacts exist; digital needs the PJRT runtime)
 //!   verify                       runtime vs python expected logits
 //!   map      [--mode inverted|dual]                Table 4 resources
 //!   netlist  --layer NAME [--outdir DIR] [--segment N]   emit SPICE
@@ -19,10 +22,10 @@ use std::str::FromStr;
 
 use anyhow::{bail, Result};
 
-use memx::coordinator;
-#[cfg(feature = "runtime-xla")]
-use memx::coordinator::{Server, ServerConfig};
-use memx::pipeline::{Fidelity, PipelineBuilder};
+use memx::coordinator::{
+    self, Backend, InferenceExecutor, PipelineExecutor, Server, ServerConfig,
+};
+use memx::pipeline::{default_device, image_to_input, Fidelity, PipelineBuilder};
 #[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
 use memx::util::bin::Dataset;
@@ -71,17 +74,6 @@ impl FromStr for ModelChoice {
             "analog" => Ok(ModelChoice::Analog),
             "digital" => Ok(ModelChoice::Digital),
             other => bail!("unknown model '{other}' (analog|digital)"),
-        }
-    }
-}
-
-#[cfg(feature = "runtime-xla")]
-impl ModelChoice {
-    /// The PJRT-compiled model variant this choice maps to.
-    fn runtime(self) -> Model {
-        match self {
-            ModelChoice::Analog => Model::Analog,
-            ModelChoice::Digital => Model::Digital,
         }
     }
 }
@@ -194,29 +186,43 @@ fn accuracy_digital(_dir: &Path, _a: &Args) -> Result<()> {
     no_runtime("accuracy --model digital")
 }
 
-#[cfg(feature = "runtime-xla")]
 fn cmd_serve(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us"])?;
+    let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us", "fidelity", "workers"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
-    let model = parse_model(a.get_or("model", "analog"))?.runtime();
     let n = a.get_usize("n", 256)?;
     let max_wait = std::time::Duration::from_micros(a.get_usize("max-wait-us", 2000)? as u64);
+    match parse_model(a.get_or("model", "analog"))? {
+        ModelChoice::Analog => {
+            let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
+            let workers = a.get_usize("workers", 0)?;
+            serve_analog(dir, n, max_wait, fidelity, workers)
+        }
+        ModelChoice::Digital => {
+            // the PJRT engine serves fixed pre-compiled executables — the
+            // analog pipeline's fidelity/worker knobs do not apply to it
+            for flag in ["fidelity", "workers"] {
+                if a.get(flag).is_some() {
+                    bail!(
+                        "--{flag} configures the analog pipeline executor and does not \
+                         apply to the PJRT backend; drop it or use --model analog"
+                    );
+                }
+            }
+            serve_digital(dir, n, max_wait)
+        }
+    }
+}
 
-    let manifest = memx::nn::Manifest::load(dir)?;
-    let ds = Dataset::load(&dir.join(&manifest.dataset_file))?;
-    let n = n.min(ds.n);
-
-    let server = Server::start(dir, ServerConfig { model, max_wait })?;
-    println!("server up ({model:?}), warmup {:?}", server.warmup);
+/// Closed-loop serving drive: four submitter threads stream `n` dataset
+/// images through the server. Returns (wall time, accuracy vs ds.labels).
+fn drive_requests(server: &Server, ds: &Dataset, n: usize) -> (std::time::Duration, f64) {
     let t0 = std::time::Instant::now();
     let client = server.client();
-    // closed-loop clients: a few submitter threads
     let correct = std::sync::atomic::AtomicUsize::new(0);
     let next = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..4 {
             let c = client.clone();
-            let ds = &ds;
             let correct = &correct;
             let next = &next;
             s.spawn(move || loop {
@@ -234,11 +240,113 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         }
     });
     let wall = t0.elapsed();
-    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64;
+    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n.max(1) as f64;
+    (wall, acc)
+}
+
+/// Serve the analog crossbar pipeline behind the batcher queue — fully
+/// offline. With trained artifacts the manifest is compiled into the
+/// pipeline executor; without them a synthetic FC-stack network (labeled
+/// by its own sequential forward, so served accuracy must be 1.0) keeps
+/// the request loop honest — the CI smoke run relies on this.
+fn serve_analog(
+    dir: &Path,
+    n: usize,
+    max_wait: std::time::Duration,
+    fidelity: Fidelity,
+    workers: usize,
+) -> Result<()> {
+    let synthetic = !dir.join("manifest.json").exists();
+    let (server, ds) = if synthetic {
+        println!("no artifacts at {dir:?} — serving the synthetic FC-stack demo network");
+        synthetic_server(n, max_wait, fidelity, workers)?
+    } else {
+        let m = memx::nn::Manifest::load(dir)?;
+        let ds = Dataset::load(&dir.join(&m.dataset_file))?;
+        let cfg = ServerConfig { backend: Backend::Analog { fidelity, workers }, max_wait };
+        (Server::start(dir, cfg)?, ds)
+    };
+    let n = n.min(ds.n);
+    println!(
+        "server up (analog pipeline, {fidelity} fidelity, workers {}), warmup {:?}",
+        if workers == 0 { "auto".to_string() } else { workers.to_string() },
+        server.warmup
+    );
+    let (wall, acc) = drive_requests(&server, &ds, n);
+    println!("served {n} requests in {wall:?}  accuracy {acc:.4}");
+    server.metrics().snapshot().print(wall);
+    server.shutdown();
+    if synthetic && n > 0 && acc < 1.0 {
+        bail!("synthetic serve smoke: served labels diverged from the sequential forward ({acc:.4})");
+    }
+    Ok(())
+}
+
+/// A manifest-free serving rig: deterministic random images through a
+/// synthetic FC stack, labels pinned to the sequential pipeline's own
+/// classification so the served (batched, pipelined) path is checked
+/// end to end.
+fn synthetic_server(
+    n: usize,
+    max_wait: std::time::Duration,
+    fidelity: Fidelity,
+    workers: usize,
+) -> Result<(Server, Dataset)> {
+    const SEED: u64 = 0xC1F0;
+    let (h, w, c, classes) = (8usize, 8usize, 3usize, 10usize);
+    let dims = [h * w * c, 32, classes];
+    let dev = default_device();
+    let n = n.clamp(1, 4096);
+
+    let mut rng = memx::util::prng::Rng::new(SEED ^ 0xDA7A);
+    let data: Vec<f32> = (0..n * h * w * c).map(|_| rng.f32()).collect();
+    let mut ds = Dataset { n, h, w, c, data, labels: vec![0; n] };
+
+    // ground truth = the sequential reference path
+    let mut reference =
+        PipelineBuilder::new().fidelity(fidelity).build_fc_stack(&dims, &dev, SEED)?;
+    for i in 0..n {
+        let x = image_to_input(ds.image(i), h, w, c);
+        // round through f32 exactly like the serving executor's logits do,
+        // so label comparison is immune to f32 near-ties
+        let logits: Vec<f64> =
+            reference.forward(&x)?.iter().map(|&v| v as f32 as f64).collect();
+        ds.labels[i] = memx::pipeline::argmax(&logits) as u8;
+    }
+
+    let server = Server::start_with(max_wait, move || {
+        // module-internal solves stay single-threaded: the pipelined
+        // scheduler (PipelineExecutor workers) owns the thread budget
+        let pipeline = PipelineBuilder::new()
+            .fidelity(fidelity)
+            .workers(1)
+            .build_fc_stack(&dims, &default_device(), SEED)?;
+        Ok(Box::new(PipelineExecutor::new(pipeline, (h, w, c), &[1, 4, 8], workers)?)
+            as Box<dyn InferenceExecutor>)
+    })?;
+    Ok((server, ds))
+}
+
+#[cfg(feature = "runtime-xla")]
+fn serve_digital(dir: &Path, n: usize, max_wait: std::time::Duration) -> Result<()> {
+    let manifest = memx::nn::Manifest::load(dir)?;
+    let ds = Dataset::load(&dir.join(&manifest.dataset_file))?;
+    let n = n.min(ds.n);
+    let server = Server::start(
+        dir,
+        ServerConfig { backend: Backend::Pjrt { model: Model::Digital }, max_wait },
+    )?;
+    println!("server up (pjrt digital), warmup {:?}", server.warmup);
+    let (wall, acc) = drive_requests(&server, &ds, n);
     println!("served {n} requests in {wall:?}  accuracy {acc:.4}");
     server.metrics().snapshot().print(wall);
     server.shutdown();
     Ok(())
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+fn serve_digital(_dir: &Path, _n: usize, _max_wait: std::time::Duration) -> Result<()> {
+    no_runtime("serve --model digital")
 }
 
 #[cfg(feature = "runtime-xla")]
@@ -283,11 +391,6 @@ fn cmd_verify(rest: &[String]) -> Result<()> {
     }
     println!("verification OK");
     Ok(())
-}
-
-#[cfg(not(feature = "runtime-xla"))]
-fn cmd_serve(_rest: &[String]) -> Result<()> {
-    no_runtime("serve")
 }
 
 #[cfg(not(feature = "runtime-xla"))]

@@ -53,6 +53,35 @@
 //!   and hard-sigmoid / hard-swish run through their Fig 4 op-amp circuits
 //!   ([`ActCircuit`](crate::analog::ActCircuit)).
 //!
+//! # Execution units and the pipelined scheduler
+//!
+//! A compiled pipeline is a sequence of [`ExecUnit`]s — the spans between
+//! residual checkpoints: a manifest unit that closes with a residual adder
+//! is one atomic span (its entry snapshots the batch the adder consumes),
+//! and every residual-free stage is its own span. Each unit is internally
+//! sequential, so skip semantics never cross a unit boundary, and units
+//! are free to run on different threads as long as micro-batches traverse
+//! them in order.
+//!
+//! [`Pipeline::forward_batch`] executes units strictly in sequence — the
+//! bit-exact reference path. [`Pipeline::forward_batch_pipelined`] is the
+//! paper's §5.2 pipelined operating point: the batch is split into
+//! micro-batches, the units are partitioned into contiguous groups (one per
+//! worker, balanced by device weight), and groups are chained through
+//! [`pool::pipeline_stream`](crate::util::pool::pipeline_stream) — bounded
+//! rendezvous channels (capacity 1 — a double-buffered hand-off: each group
+//! works on micro-batch k while micro-batch k+1 waits in its mailbox). So
+//! stage N of micro-batch k overlaps stage N+1 of micro-batch k−1.
+//! Sharding is only ever across images (micro-batches) and across
+//! independent module leaves (conv channel banks inside a stage, via the
+//! module's own worker pool — [`AnalogModule::shardable_leaves`] counts
+//! them), never inside one analog accumulation, so per-image results are
+//! bit-identical to the sequential path; the `forward_batch == forward`
+//! proptests are the oracle.
+//!
+//! The scheduler records per-unit wall time ([`Pipeline::take_stage_stats`])
+//! which the serving tier folds into its metrics snapshot.
+//!
 //! Data layout between modules: spatial tensors travel as channel-major
 //! planes `[c][h*w]` (row-major within a plane); vectors are plain `[c]`.
 //! [`image_to_input`] converts the dataset's HWC images.
@@ -60,7 +89,11 @@
 pub mod builder;
 pub mod modules;
 
+use std::time::{Duration, Instant};
+
 use anyhow::{bail, Result};
+
+use crate::util::pool;
 
 pub use builder::{default_device, synthetic_stack_crossbars, PipelineBuilder};
 pub use modules::{ActivationModule, BatchNormModule, CrossbarModule, GapModule, SeModule};
@@ -102,8 +135,11 @@ impl std::fmt::Display for Fidelity {
 /// One analog stage of the paper's module chain. Implementations own their
 /// device state (crossbars, resident simulators, activation circuits) and
 /// answer whole batches per call — the batch-first contract the serving
-/// tier scales on.
-pub trait AnalogModule {
+/// tier scales on. `Send` is part of the contract: module state is owned
+/// device state (no shared interior aliasing), so a compiled [`Pipeline`]
+/// can move between threads and its units can be distributed over the
+/// pipelined scheduler's workers.
+pub trait AnalogModule: Send {
     /// Layer name (manifest name or a synthetic label).
     fn name(&self) -> &str;
 
@@ -144,6 +180,17 @@ pub trait AnalogModule {
     fn memristor_stages(&self) -> usize {
         0
     }
+
+    /// Independently schedulable sub-executions inside this module — the
+    /// per-channel-pair conv banks, or the crossbars of the SE side branch.
+    /// Each leaf is one complete analog accumulation, so the module's own
+    /// worker pool may shard leaves within a stage (conv banks do, see
+    /// `ConvBanks::forward_spice`) without ever splitting a dot product;
+    /// the count is surfaced through [`Pipeline::shardable_leaves`] for
+    /// balancing and resource reports. 1 = the module is atomic.
+    fn shardable_leaves(&self) -> usize {
+        1
+    }
 }
 
 /// One stage of a compiled [`Pipeline`].
@@ -165,15 +212,124 @@ impl Stage {
     }
 }
 
-/// A runnable analog network: the paper's module chain compiled by
-/// [`PipelineBuilder`], with end-to-end [`Pipeline::forward_batch`] /
-/// [`Pipeline::classify_batch`].
-pub struct Pipeline {
+/// Wall-time accounting for one execution unit, as recorded by the
+/// schedulers ([`Pipeline::take_stage_stats`]).
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    /// unit name (manifest unit, e.g. "bneck3")
+    pub name: String,
+    /// total wall time spent inside the unit
+    pub total: Duration,
+    /// forward calls accumulated into `total` (one per micro-batch)
+    pub calls: u64,
+}
+
+/// One schedulable span of a compiled [`Pipeline`]: either the contiguous
+/// stages of a residual-closing manifest unit (checkpoint included — skip
+/// semantics never cross a unit boundary) or a single residual-free stage.
+/// Units are internally sequential; the pipelined scheduler distributes
+/// whole units across worker threads.
+pub struct ExecUnit {
+    name: String,
     stages: Vec<Stage>,
-    /// `checkpoint[i]`: snapshot the batch before stage `i` — set on the
-    /// first stage of every unit that ends in a residual adder, so
-    /// `forward_batch` only clones where a skip connection consumes it.
-    checkpoint: Vec<bool>,
+    /// snapshot the entering batch — set when the unit closes a residual
+    checkpoint: bool,
+    /// accumulated wall time / calls (scheduler-recorded)
+    ns: u64,
+    calls: u64,
+}
+
+impl ExecUnit {
+    /// Manifest unit name this span executes.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stages inside this unit.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Does this unit end in a residual summing amplifier (and therefore
+    /// checkpoint its input)?
+    pub fn closes_residual(&self) -> bool {
+        self.checkpoint
+    }
+
+    /// Independently schedulable module leaves in this unit (conv banks,
+    /// SE branch crossbars; residual adders count 1).
+    pub fn shardable_leaves(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Module { module, .. } => module.shardable_leaves(),
+                Stage::Residual { .. } => 1,
+            })
+            .sum()
+    }
+
+    /// Scheduling weight for partitioning units across workers: placed
+    /// devices dominate crossbar cost, vector length dominates the
+    /// per-element activation circuits.
+    fn weight(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Module { module, .. } => {
+                    (module.memristors().max(module.in_dim()) as u64).max(1)
+                }
+                Stage::Residual { dim, .. } => *dim as u64,
+            })
+            .sum::<u64>()
+            .max(1)
+    }
+
+    /// Run the whole batch through this unit's stages (checkpoint + modules
+    /// + residual add). Exactly the per-unit slice of the sequential path.
+    fn forward_batch(&mut self, batch: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        let t0 = Instant::now();
+        let unit_input: Vec<Vec<f64>> = if self.checkpoint { batch.clone() } else { Vec::new() };
+        let mut cur = batch;
+        for stage in self.stages.iter_mut() {
+            match stage {
+                Stage::Module { module, .. } => {
+                    cur = module.forward_batch(&cur)?;
+                }
+                Stage::Residual { name, dim, .. } => {
+                    if unit_input.len() != cur.len() {
+                        bail!(
+                            "residual '{name}': {} checkpointed inputs for a batch of {}",
+                            unit_input.len(),
+                            cur.len()
+                        );
+                    }
+                    for (y, x0) in cur.iter_mut().zip(&unit_input) {
+                        if y.len() != *dim || x0.len() != *dim {
+                            bail!(
+                                "residual '{name}': {} outputs vs {} unit inputs (expected {dim})",
+                                y.len(),
+                                x0.len()
+                            );
+                        }
+                        for (a, b) in y.iter_mut().zip(x0) {
+                            *a += b;
+                        }
+                    }
+                }
+            }
+        }
+        self.ns += t0.elapsed().as_nanos() as u64;
+        self.calls += 1;
+        Ok(cur)
+    }
+}
+
+/// A runnable analog network: the paper's module chain compiled by
+/// [`PipelineBuilder`] into [`ExecUnit`]s, with end-to-end
+/// [`Pipeline::forward_batch`] (sequential reference) and
+/// [`Pipeline::forward_batch_pipelined`] (§5.2 overlapped schedule).
+pub struct Pipeline {
+    units: Vec<ExecUnit>,
     fidelity: Fidelity,
     in_dim: usize,
     out_dim: usize,
@@ -181,7 +337,9 @@ pub struct Pipeline {
 
 impl Pipeline {
     /// Assemble a pipeline from explicit stages, validating that every
-    /// module's input length matches its predecessor's output.
+    /// module's input length matches its predecessor's output, then
+    /// grouping the flat stage list into [`ExecUnit`]s (one per contiguous
+    /// run of a manifest unit name).
     pub fn from_stages(stages: Vec<Stage>, fidelity: Fidelity) -> Result<Pipeline> {
         let mut dims: Option<(usize, usize)> = None; // (in, current)
         for s in &stages {
@@ -216,18 +374,54 @@ impl Pipeline {
         let Some((in_dim, out_dim)) = dims else {
             bail!("pipeline needs at least one module");
         };
-        // mark the first stage of each residual-closing unit for checkpoint
-        let mut checkpoint = vec![false; stages.len()];
-        for (i, s) in stages.iter().enumerate() {
-            if let Stage::Residual { unit, .. } = s {
-                let mut first = i;
-                while first > 0 && stages[first - 1].unit() == unit {
-                    first -= 1;
+        // group into execution units — the spans between residual
+        // checkpoints: a contiguous same-unit span containing a residual is
+        // atomic (its entry is the checkpoint the adder consumes, exactly
+        // the first-stage-of-span snapshot the old flat walk marked), while
+        // stages of residual-free spans each become their own unit so the
+        // scheduler gets the finest safe granularity
+        let mut runs: Vec<(usize, bool)> = Vec::new(); // (span length, has residual)
+        let mut idx = 0;
+        while idx < stages.len() {
+            let unit = stages[idx].unit().to_string();
+            let mut j = idx;
+            let mut has_res = false;
+            while j < stages.len() && stages[j].unit() == unit {
+                has_res |= matches!(stages[j], Stage::Residual { .. });
+                j += 1;
+            }
+            runs.push((j - idx, has_res));
+            idx = j;
+        }
+        let mut units: Vec<ExecUnit> = Vec::new();
+        let mut iter = stages.into_iter();
+        for (len, has_res) in runs {
+            if has_res {
+                let span: Vec<Stage> = iter.by_ref().take(len).collect();
+                units.push(ExecUnit {
+                    name: span[0].unit().to_string(),
+                    stages: span,
+                    checkpoint: true,
+                    ns: 0,
+                    calls: 0,
+                });
+            } else {
+                for stage in iter.by_ref().take(len) {
+                    let name = match &stage {
+                        Stage::Module { module, .. } => module.name().to_string(),
+                        Stage::Residual { name, .. } => name.clone(),
+                    };
+                    units.push(ExecUnit {
+                        name,
+                        stages: vec![stage],
+                        checkpoint: false,
+                        ns: 0,
+                        calls: 0,
+                    });
                 }
-                checkpoint[first] = true;
             }
         }
-        Ok(Pipeline { stages, checkpoint, fidelity, in_dim, out_dim })
+        Ok(Pipeline { units, fidelity, in_dim, out_dim })
     }
 
     /// Assemble a single-unit pipeline from bare modules.
@@ -255,13 +449,26 @@ impl Pipeline {
     }
 
     pub fn n_stages(&self) -> usize {
-        self.stages.len()
+        self.units.iter().map(|u| u.stages.len()).sum()
+    }
+
+    /// Schedulable execution units (spans between residual checkpoints).
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// The compiled execution units, in chain order.
+    pub fn units(&self) -> &[ExecUnit] {
+        &self.units
+    }
+
+    fn stages(&self) -> impl Iterator<Item = &Stage> {
+        self.units.iter().flat_map(|u| u.stages.iter())
     }
 
     /// Total placed memristors across all stages (Table 4 bottom row).
     pub fn memristors(&self) -> usize {
-        self.stages
-            .iter()
+        self.stages()
             .map(|s| match s {
                 Stage::Module { module, .. } => module.memristors(),
                 Stage::Residual { .. } => 0,
@@ -272,8 +479,7 @@ impl Pipeline {
     /// Total op-amps across all stages (residual adders count one summing
     /// amplifier per channel, as in the mapper).
     pub fn opamps(&self) -> usize {
-        self.stages
-            .iter()
+        self.stages()
             .map(|s| match s {
                 Stage::Module { module, .. } => module.opamps(),
                 Stage::Residual { channels, .. } => *channels,
@@ -283,8 +489,7 @@ impl Pipeline {
 
     /// Memristor-crossbar stages on the critical path (Eq 17 N_m).
     pub fn memristor_stages(&self) -> usize {
-        self.stages
-            .iter()
+        self.stages()
             .map(|s| match s {
                 Stage::Module { module, .. } => module.memristor_stages(),
                 Stage::Residual { .. } => 0,
@@ -292,11 +497,20 @@ impl Pipeline {
             .sum()
     }
 
+    /// Total independently schedulable module leaves across all units
+    /// (conv banks, SE branch crossbars — the intra-stage sharding width
+    /// available to module worker pools).
+    pub fn shardable_leaves(&self) -> usize {
+        self.units.iter().map(|u| u.shardable_leaves()).sum()
+    }
+
     /// One-line summary for logs and demos.
     pub fn describe(&self) -> String {
         format!(
-            "{} stages ({} fidelity), {} -> {} dims, {} memristors / {} op-amps / N_m {}",
+            "{} stages in {} units ({} leaves, {} fidelity), {} -> {} dims, {} memristors / {} op-amps / N_m {}",
             self.n_stages(),
+            self.n_units(),
+            self.shardable_leaves(),
             self.fidelity,
             self.in_dim,
             self.out_dim,
@@ -306,54 +520,116 @@ impl Pipeline {
         )
     }
 
-    /// End-to-end batched inference: every stage answers the whole batch
-    /// before the next begins, so each crossbar read is one multi-RHS
-    /// substitution pass per segment at [`Fidelity::Spice`].
-    pub fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        if inputs.is_empty() {
-            return Ok(Vec::new());
-        }
+    fn check_inputs(&self, inputs: &[Vec<f64>]) -> Result<()> {
         for (k, x) in inputs.iter().enumerate() {
             if x.len() != self.in_dim {
                 bail!("input {k} has {} values, pipeline expects {}", x.len(), self.in_dim);
             }
         }
+        Ok(())
+    }
+
+    /// End-to-end batched inference, units strictly in sequence: every
+    /// stage answers the whole batch before the next begins, so each
+    /// crossbar read is one multi-RHS substitution pass per segment at
+    /// [`Fidelity::Spice`]. This is the bit-exact reference the pipelined
+    /// schedule is checked against.
+    pub fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.check_inputs(inputs)?;
         let mut cur: Vec<Vec<f64>> = inputs.to_vec();
-        // the batch entering the current residual-closing unit (cloned only
-        // at stages `from_stages` marked — units without a skip pay nothing)
-        let mut unit_input: Vec<Vec<f64>> = Vec::new();
-        for (idx, stage) in self.stages.iter_mut().enumerate() {
-            if self.checkpoint[idx] {
-                unit_input = cur.clone();
-            }
-            match stage {
-                Stage::Module { module, .. } => {
-                    cur = module.forward_batch(&cur)?;
-                }
-                Stage::Residual { name, dim, .. } => {
-                    if unit_input.len() != cur.len() {
-                        bail!(
-                            "residual '{name}': {} checkpointed inputs for a batch of {}",
-                            unit_input.len(),
-                            cur.len()
-                        );
-                    }
-                    for (y, x0) in cur.iter_mut().zip(&unit_input) {
-                        if y.len() != *dim || x0.len() != *dim {
-                            bail!(
-                                "residual '{name}': {} outputs vs {} unit inputs (expected {dim})",
-                                y.len(),
-                                x0.len()
-                            );
-                        }
-                        for (a, b) in y.iter_mut().zip(x0) {
-                            *a += b;
-                        }
-                    }
-                }
-            }
+        for unit in self.units.iter_mut() {
+            cur = unit.forward_batch(cur)?;
         }
         Ok(cur)
+    }
+
+    /// The §5.2 pipelined operating point: split `inputs` into micro-batches
+    /// of `micro_batch` images (0 = auto), partition the units into up to
+    /// `workers` contiguous groups, and stream micro-batches through the
+    /// group chain over capacity-1 rendezvous channels (double-buffered
+    /// hand-off) so consecutive micro-batches occupy different unit groups
+    /// concurrently.
+    ///
+    /// Per-image results are bit-identical to [`Pipeline::forward_batch`]:
+    /// micro-batching only re-slices the batch dimension, and every module
+    /// evaluates each image independently (crossbar multi-RHS solves are
+    /// per-column, activation circuits per-element). Falls back to the
+    /// sequential path when there is nothing to overlap (one worker, one
+    /// unit, or a single micro-batch).
+    pub fn forward_batch_pipelined(
+        &mut self,
+        inputs: &[Vec<f64>],
+        workers: usize,
+        micro_batch: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.check_inputs(inputs)?;
+        let n_groups = workers.min(self.units.len()).max(1);
+        let micro = if micro_batch == 0 {
+            // enough micro-batches to fill the pipe twice over
+            inputs.len().div_ceil(2 * n_groups).max(1)
+        } else {
+            micro_batch
+        };
+        if n_groups <= 1 || inputs.len() <= micro {
+            return self.forward_batch(inputs);
+        }
+
+        // contiguous unit groups balanced by device weight
+        let weights: Vec<u64> = self.units.iter().map(|u| u.weight()).collect();
+        let sizes = partition_sizes(&weights, n_groups);
+        let mut groups: Vec<&mut [ExecUnit]> = Vec::with_capacity(sizes.len());
+        let mut rest: &mut [ExecUnit] = &mut self.units;
+        for &sz in &sizes {
+            let (head, tail) = rest.split_at_mut(sz);
+            groups.push(head);
+            rest = tail;
+        }
+
+        // stream the micro-batches through the group chain (capacity-1
+        // double-buffered hand-off per boundary — see pool::pipeline_stream)
+        let micro_batches: Vec<Vec<Vec<f64>>> =
+            inputs.chunks(micro).map(|c| c.to_vec()).collect();
+        let solved = pool::pipeline_stream(groups, micro_batches, |group, batch| {
+            run_units(group, batch)
+        })?;
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(inputs.len());
+        for rows in solved {
+            out.extend(rows);
+        }
+        if out.len() != inputs.len() {
+            bail!("pipelined scheduler produced {} rows for {} inputs", out.len(), inputs.len());
+        }
+        Ok(out)
+    }
+
+    /// Per-unit wall-time accounting accumulated by both schedulers since
+    /// the last [`Pipeline::take_stage_stats`] call.
+    pub fn stage_stats(&self) -> Vec<StageStat> {
+        self.units
+            .iter()
+            .map(|u| StageStat {
+                name: u.name.clone(),
+                total: Duration::from_nanos(u.ns),
+                calls: u.calls,
+            })
+            .collect()
+    }
+
+    /// Drain the per-unit wall-time counters (returns the snapshot and
+    /// resets the accumulators — the serving tier calls this per batch).
+    pub fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        let stats = self.stage_stats();
+        for u in self.units.iter_mut() {
+            u.ns = 0;
+            u.calls = 0;
+        }
+        stats
     }
 
     /// Single-vector forward — a batch of one.
@@ -367,6 +643,44 @@ impl Pipeline {
     pub fn classify_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<usize>> {
         Ok(self.forward_batch(inputs)?.iter().map(|row| argmax(row)).collect())
     }
+}
+
+/// Drive one micro-batch through a contiguous group of units.
+fn run_units(units: &mut [ExecUnit], batch: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+    let mut cur = batch;
+    for u in units.iter_mut() {
+        cur = u.forward_batch(cur)?;
+    }
+    Ok(cur)
+}
+
+/// Contiguous partition of `weights.len()` items into up to `groups`
+/// non-empty runs with roughly equal weight. Returns the run lengths
+/// (summing to `weights.len()`).
+fn partition_sizes(weights: &[u64], groups: usize) -> Vec<usize> {
+    let n = weights.len();
+    let groups = groups.min(n).max(1);
+    let total: u64 = weights.iter().sum::<u64>().max(1);
+    let mut sizes = Vec::with_capacity(groups);
+    let mut acc = 0u64; // prefix weight over all closed groups + the open one
+    let mut in_group = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        in_group += 1;
+        let open_after = groups - sizes.len() - 1; // groups still to open
+        let remaining_units = n - i - 1;
+        // close at the ideal prefix boundary, or when the tail must be
+        // reserved one-unit-per-remaining-group
+        let boundary = total * (sizes.len() as u64 + 1) / groups as u64;
+        if open_after > 0 && (acc >= boundary || remaining_units == open_after) {
+            sizes.push(in_group);
+            in_group = 0;
+        }
+    }
+    if in_group > 0 {
+        sizes.push(in_group);
+    }
+    sizes
 }
 
 /// Index of the largest logit (0 for an empty slice).
@@ -427,5 +741,175 @@ mod tests {
     #[test]
     fn empty_pipeline_rejected() {
         assert!(Pipeline::from_modules(Vec::new(), Fidelity::Ideal).is_err());
+    }
+
+    #[test]
+    fn partition_sizes_cover_and_respect_groups() {
+        assert_eq!(partition_sizes(&[1, 1, 1, 1], 2), vec![2, 2]);
+        assert_eq!(partition_sizes(&[1], 4), vec![1]);
+        // heavy head: first group closes early, tail split by reservation
+        let s = partition_sizes(&[100, 1, 1, 1], 3);
+        assert_eq!(s.iter().sum::<usize>(), 4);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|&x| x > 0));
+        // every unit lands in exactly one group for awkward weights too
+        let w = [3u64, 9, 2, 2, 8, 1, 5];
+        for g in 1..=8 {
+            let s = partition_sizes(&w, g);
+            assert_eq!(s.iter().sum::<usize>(), w.len(), "groups {g}");
+            assert!(s.len() <= g.min(w.len()), "groups {g}");
+            assert!(s.iter().all(|&x| x > 0), "groups {g}");
+        }
+    }
+
+    /// A unit-less synthetic module for scheduler tests: affine y = a*x + b
+    /// per element, arbitrary dims.
+    struct TestAffine {
+        name: String,
+        unit_dim: (usize, usize),
+        a: f64,
+        b: f64,
+    }
+
+    impl AnalogModule for TestAffine {
+        fn name(&self) -> &str {
+            &self.name
+        }
+
+        fn kind(&self) -> &'static str {
+            "Test"
+        }
+
+        fn in_dim(&self) -> usize {
+            self.unit_dim.0
+        }
+
+        fn out_dim(&self) -> usize {
+            self.unit_dim.1
+        }
+
+        fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            Ok(inputs
+                .iter()
+                .map(|x| {
+                    (0..self.unit_dim.1)
+                        .map(|i| self.a * x[i % self.unit_dim.0] + self.b)
+                        .collect()
+                })
+                .collect())
+        }
+    }
+
+    fn affine(unit: &str, name: &str, din: usize, dout: usize, a: f64, b: f64) -> Stage {
+        Stage::Module {
+            unit: unit.into(),
+            module: Box::new(TestAffine {
+                name: name.into(),
+                unit_dim: (din, dout),
+                a,
+                b,
+            }),
+        }
+    }
+
+    fn residual(unit: &str, dim: usize) -> Stage {
+        Stage::Residual { name: format!("{unit}.add"), unit: unit.into(), dim, channels: dim }
+    }
+
+    fn test_pipeline() -> Pipeline {
+        // u0: 4 -> 4 with residual, u1: plain 4 -> 6, u2: 6 -> 6 residual
+        let stages = vec![
+            affine("u0", "m0", 4, 4, 1.25, 0.5),
+            affine("u0", "m1", 4, 4, -0.75, 0.25),
+            residual("u0", 4),
+            affine("u1", "m2", 4, 6, 0.5, -1.0),
+            affine("u2", "m3", 6, 6, 2.0, 0.125),
+            residual("u2", 6),
+        ];
+        Pipeline::from_stages(stages, Fidelity::Ideal).unwrap()
+    }
+
+    #[test]
+    fn stages_group_into_units_with_checkpoints() {
+        let p = test_pipeline();
+        assert_eq!(p.n_units(), 3);
+        assert_eq!(p.n_stages(), 6);
+        let flags: Vec<bool> = p.units().iter().map(|u| u.closes_residual()).collect();
+        assert_eq!(flags, vec![true, false, true]);
+        assert_eq!(p.units()[0].name(), "u0");
+        assert_eq!(p.units()[0].n_stages(), 3);
+        // residual-free spans split into single-stage units, named after
+        // the module for the stage-time table
+        assert_eq!(p.units()[1].name(), "m2");
+        assert_eq!(p.units()[1].n_stages(), 1);
+    }
+
+    #[test]
+    fn pipelined_matches_sequential_exactly() {
+        let inputs: Vec<Vec<f64>> = (0..7)
+            .map(|k| (0..4).map(|i| (k * 4 + i) as f64 * 0.17 - 1.3).collect())
+            .collect();
+        let mut seq = test_pipeline();
+        let want = seq.forward_batch(&inputs).unwrap();
+        for workers in [2, 3, 8] {
+            for micro in [1, 2, 3] {
+                let mut p = test_pipeline();
+                let got = p.forward_batch_pipelined(&inputs, workers, micro).unwrap();
+                assert_eq!(got, want, "workers {workers} micro {micro}");
+            }
+        }
+        // auto micro-batch and degenerate workers fall back cleanly
+        let mut p = test_pipeline();
+        assert_eq!(p.forward_batch_pipelined(&inputs, 4, 0).unwrap(), want);
+        let mut p = test_pipeline();
+        assert_eq!(p.forward_batch_pipelined(&inputs, 1, 2).unwrap(), want);
+    }
+
+    #[test]
+    fn pipelined_records_stage_stats() {
+        let inputs: Vec<Vec<f64>> = (0..6).map(|_| vec![0.1; 4]).collect();
+        let mut p = test_pipeline();
+        p.forward_batch_pipelined(&inputs, 3, 2).unwrap();
+        let stats = p.take_stage_stats();
+        assert_eq!(stats.len(), 3);
+        // 3 micro-batches traversed every unit
+        assert!(stats.iter().all(|s| s.calls == 3), "{stats:?}");
+        // drained: second take is zeroed
+        assert!(p.take_stage_stats().iter().all(|s| s.calls == 0));
+    }
+
+    #[test]
+    fn pipelined_propagates_module_errors() {
+        let mut p = test_pipeline();
+        let bad = vec![vec![0.0; 3]];
+        assert!(p.forward_batch_pipelined(&bad, 2, 1).is_err());
+        // dim mismatch mid-chain: feed through a stage that rejects
+        struct Failing;
+        impl AnalogModule for Failing {
+            fn name(&self) -> &str {
+                "fail"
+            }
+            fn kind(&self) -> &'static str {
+                "Test"
+            }
+            fn in_dim(&self) -> usize {
+                2
+            }
+            fn out_dim(&self) -> usize {
+                2
+            }
+            fn forward_batch(&mut self, _inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+                bail!("injected failure")
+            }
+        }
+        let stages = vec![
+            affine("a", "ok", 2, 2, 1.0, 0.0),
+            Stage::Module { unit: "b".into(), module: Box::new(Failing) },
+            affine("c", "after", 2, 2, 1.0, 0.0),
+        ];
+        let mut p = Pipeline::from_stages(stages, Fidelity::Ideal).unwrap();
+        let inputs: Vec<Vec<f64>> = (0..5).map(|_| vec![0.3, -0.1]).collect();
+        let err = p.forward_batch_pipelined(&inputs, 3, 1).unwrap_err();
+        assert!(format!("{err}").contains("injected failure"), "{err}");
     }
 }

@@ -91,6 +91,9 @@ struct BankSim {
     sim: CrossbarSim,
 }
 
+/// One bank's solve result: (output channel, per-input column reads).
+type BankSolve = Result<(usize, Vec<Vec<f64>>)>;
+
 /// Construction parameters for a conv [`CrossbarModule`]
 /// (crate-internal; built by the [`super::PipelineBuilder`]).
 pub(crate) struct ConvModuleCfg {
@@ -171,7 +174,13 @@ impl ConvBanks {
     }
 
     /// SPICE transfer: every bank answers the whole batch via its resident
-    /// simulator's multi-RHS path, accumulated per output channel.
+    /// simulator's multi-RHS path, accumulated per output channel. Banks
+    /// are the shardable leaves: when there are at least as many banks as
+    /// workers, whole banks are distributed across the pool (each bank's
+    /// solve is one complete analog accumulation); otherwise each bank
+    /// keeps its internal per-segment parallelism. Bank contributions are
+    /// summed in bank order either way, so the result is bit-identical to
+    /// the sequential walk.
     fn forward_spice(&mut self, inputs: &[Vec<f64>], workers: usize) -> Result<Vec<Vec<f64>>> {
         let cols = self.geom.cols();
         let mut out = vec![vec![0.0; self.cout * cols]; inputs.len()];
@@ -180,10 +189,23 @@ impl ConvBanks {
         for ci in 0..self.cin {
             planes.push(inputs.iter().map(|x| self.padded_plane(x, ci)).collect());
         }
-        for bank in self.sims.iter_mut() {
-            let solved = bank.sim.solve_batch(&planes[bank.ci], workers)?;
-            for (k, cols_out) in solved.into_iter().enumerate() {
-                let dst = &mut out[k][bank.co * cols..(bank.co + 1) * cols];
+        // per bank, in bank order
+        let solved: Vec<BankSolve> =
+            if workers > 1 && self.sims.len() >= workers {
+                let planes = &planes;
+                par_map_mut(&mut self.sims, workers, |bank| {
+                    Ok((bank.co, bank.sim.solve_batch(&planes[bank.ci], 1)?))
+                })
+            } else {
+                self.sims
+                    .iter_mut()
+                    .map(|bank| Ok((bank.co, bank.sim.solve_batch(&planes[bank.ci], workers)?)))
+                    .collect()
+            };
+        for res in solved {
+            let (co, per_input) = res?;
+            for (k, cols_out) in per_input.into_iter().enumerate() {
+                let dst = &mut out[k][co * cols..(co + 1) * cols];
                 for (d, s) in dst.iter_mut().zip(&cols_out) {
                     *d += s;
                 }
@@ -192,11 +214,19 @@ impl ConvBanks {
         Ok(out)
     }
 
+    /// Independent per-channel(-pair) banks — one leaf each.
+    fn n_banks(&self) -> usize {
+        if self.depthwise {
+            self.cout
+        } else {
+            self.cin * self.cout
+        }
+    }
+
     fn memristors(&self) -> usize {
         let cols = self.geom.cols();
         let kk = self.kk();
-        let n_banks = if self.depthwise { self.cout } else { self.cin * self.cout };
-        (0..n_banks)
+        (0..self.n_banks())
             .map(|b| {
                 self.kernels[b * kk..(b + 1) * kk]
                     .iter()
@@ -367,6 +397,13 @@ impl AnalogModule for CrossbarModule {
 
     fn memristor_stages(&self) -> usize {
         1
+    }
+
+    fn shardable_leaves(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { .. } => 1,
+            Inner::Conv(cv) => cv.n_banks().max(1),
+        }
     }
 }
 
@@ -803,5 +840,15 @@ impl AnalogModule for SeModule {
         self.gap.memristor_stages()
             + self.fc1.memristor_stages()
             + self.fc2.memristor_stages()
+    }
+
+    fn shardable_leaves(&self) -> usize {
+        // the side branch's five sub-modules are each a complete analog
+        // accumulation the scheduler may place independently of the trunk
+        self.gap.shardable_leaves()
+            + self.fc1.shardable_leaves()
+            + self.act1.shardable_leaves()
+            + self.fc2.shardable_leaves()
+            + self.act2.shardable_leaves()
     }
 }

@@ -168,19 +168,11 @@ impl Engine {
     }
 }
 
-/// argmax over each row of logits.
-pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
-    logits
-        .chunks_exact(classes)
-        .map(|row| {
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i)
-                .unwrap_or(0)
-        })
-        .collect()
-}
+/// argmax over each row of logits (shared with the serving coordinator).
+/// Ties resolve to the FIRST maximum — the crate-wide convention
+/// (`pipeline::argmax`); the previous local implementation picked the
+/// last, which only differed on exactly-tied f32 rows.
+pub use crate::util::argmax_rows;
 
 #[cfg(test)]
 mod tests {

@@ -9,3 +9,33 @@ pub mod json;
 pub mod pool;
 pub mod prng;
 pub mod prop;
+
+/// Row-major argmax over `classes`-wide logit rows (first maximum wins —
+/// the same tie convention as [`crate::pipeline::argmax`]). Shared by the
+/// PJRT runtime and the serving coordinator.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for (i, &v) in row.iter().enumerate() {
+                if v > best.1 {
+                    best = (i, v);
+                }
+            }
+            best.0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_picks_first_max_per_row() {
+        assert_eq!(argmax_rows(&[0.1, 0.9, 0.8, 0.2], 2), vec![1, 0]);
+        assert_eq!(argmax_rows(&[1.0, 1.0, 0.5], 3), vec![0], "first max wins ties");
+        assert!(argmax_rows(&[], 4).is_empty());
+    }
+}

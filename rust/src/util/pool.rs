@@ -1,8 +1,10 @@
-//! Tiny scoped parallel-map built on std::thread::scope.
+//! Tiny scoped parallel primitives built on std::thread::scope.
 //!
 //! rayon is not in the offline crate cache; the coordinator and the
-//! segmented SPICE scheduler only need a static work-split map, which
-//! std::thread::scope provides without unsafe.
+//! segmented SPICE scheduler only need a static work-split map
+//! ([`par_map`]/[`par_map_mut`]) and a streamed stage chain
+//! ([`pipeline_stream`]), which std::thread::scope provides without
+//! unsafe.
 
 /// Parallel map over `items` with up to `workers` OS threads.
 /// Results are returned in input order. Panics in workers propagate.
@@ -71,6 +73,90 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Streamed pipeline over a chain of stage groups — the §5.2-style
+/// overlapped schedule: each group runs on its own scoped thread, items
+/// flow group-to-group through capacity-1 rendezvous channels (a
+/// double-buffered hand-off: a group works on item k while item k+1 waits
+/// in its mailbox), so group N processes item k concurrently with group
+/// N+1 processing item k−1.
+///
+/// Items are returned in input order. On the first `Err` the failing item
+/// stops flowing, upstream groups unwind (their sends fail once the chain
+/// collapses), and that error is returned; items already past the failure
+/// point are discarded. Panics in group threads propagate. An empty group
+/// chain returns the items untouched.
+pub fn pipeline_stream<G, T, E, F>(groups: Vec<G>, inputs: Vec<T>, run: F) -> Result<Vec<T>, E>
+where
+    G: Send,
+    T: Send,
+    E: Send,
+    F: Fn(&mut G, T) -> Result<T, E> + Sync,
+{
+    if groups.is_empty() {
+        return Ok(inputs);
+    }
+    let n = inputs.len();
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let mut failure: Option<E> = None;
+    std::thread::scope(|s| {
+        let run = &run;
+        let mut rx_prev: Option<std::sync::mpsc::Receiver<Result<T, E>>> = None;
+        let mut feed = Some(inputs);
+        for mut group in groups {
+            // capacity 1: one item in flight per hand-off buffer
+            let (tx, rx_next) = std::sync::mpsc::sync_channel::<Result<T, E>>(1);
+            let rx_in = rx_prev.take();
+            let feed_items = if rx_in.is_none() { feed.take() } else { None };
+            s.spawn(move || match rx_in {
+                // head group: feeds the input items into the chain
+                None => {
+                    for item in feed_items.expect("head group owns the inputs") {
+                        let r = run(&mut group, item);
+                        let failed = r.is_err();
+                        if tx.send(r).is_err() || failed {
+                            break;
+                        }
+                    }
+                }
+                // interior/tail groups: drain the upstream mailbox
+                Some(rx) => {
+                    for msg in rx {
+                        let r = match msg {
+                            Ok(item) => run(&mut group, item),
+                            Err(e) => Err(e),
+                        };
+                        let failed = r.is_err();
+                        if tx.send(r).is_err() || failed {
+                            break;
+                        }
+                    }
+                }
+            });
+            rx_prev = Some(rx_next);
+        }
+        let rx_last = rx_prev.take().expect("non-empty group chain");
+        while let Ok(msg) = rx_last.recv() {
+            match msg {
+                Ok(item) => out.push(item),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        // dropping the tail receiver unblocks any upstream sender so the
+        // scope can join after an early error
+        drop(rx_last);
+    });
+    match failure {
+        Some(e) => Err(e),
+        None => {
+            debug_assert_eq!(out.len(), n, "every item must flow through the chain");
+            Ok(out)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +203,48 @@ mod tests {
         assert!(par_map_mut(&mut xs, 4, |x| *x).is_empty());
         let mut one = vec![7u32];
         assert_eq!(par_map_mut(&mut one, 8, |x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn pipeline_stream_orders_and_applies_all_groups() {
+        // three stage groups, each with its own state, applied in chain
+        // order to every item; results must come back in input order
+        let groups: Vec<(u64, u64)> = vec![(1, 0), (10, 0), (100, 0)];
+        let items: Vec<u64> = (0..17).collect();
+        let got = pipeline_stream(groups, items.clone(), |g, x| {
+            g.1 += 1; // per-group call counter (exclusive &mut state)
+            Ok::<u64, ()>(x + g.0)
+        })
+        .unwrap();
+        assert_eq!(got, items.iter().map(|x| x + 111).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_stream_empty_chain_and_empty_items() {
+        let none: Vec<u32> = vec![];
+        assert_eq!(
+            pipeline_stream(Vec::<u8>::new(), vec![1u32, 2], |_, x| Ok::<u32, ()>(x)).unwrap(),
+            vec![1, 2]
+        );
+        assert!(pipeline_stream(vec![0u8], none, |_, x| Ok::<u32, ()>(x))
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn pipeline_stream_propagates_first_error_and_joins() {
+        // middle group fails on item 3: the error must surface, and all
+        // threads must unwind (scope join) without deadlock
+        let groups: Vec<usize> = vec![0, 1, 2];
+        let items: Vec<u64> = (0..50).collect();
+        let err = pipeline_stream(groups, items, |g, x| {
+            if *g == 1 && x == 3 {
+                Err(format!("boom at {x}"))
+            } else {
+                Ok(x)
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err, "boom at 3");
     }
 }

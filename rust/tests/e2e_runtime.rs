@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use memx::coordinator::{accuracy, classify_dataset, Server, ServerConfig};
+use memx::coordinator::{accuracy, classify_dataset, Backend, Server, ServerConfig};
 use memx::runtime::{argmax_rows, Engine, Model};
 use memx::util::bin::{read_expected_logits, Dataset};
 
@@ -152,7 +152,7 @@ fn server_serves_concurrent_clients() {
     let server = Server::start(
         &dir,
         ServerConfig {
-            model: Model::Digital,
+            backend: Backend::Pjrt { model: Model::Digital },
             max_wait: std::time::Duration::from_millis(1),
         },
     )

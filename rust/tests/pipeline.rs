@@ -383,6 +383,75 @@ fn spice_activation_circuit_matches_behavioural_within_knee() {
 }
 
 #[test]
+fn pipelined_spice_stack_matches_sequential_when_warm() {
+    // pipelined scheduling only re-slices the batch across unit groups;
+    // once every resident factorization is primed (first forward), the
+    // overlapped schedule must reproduce the sequential SPICE path
+    // bit for bit
+    let dev = default_device();
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(3)
+        .workers(2)
+        .build_fc_stack(&[10, 8, 8, 6], &dev, 33)
+        .unwrap();
+    assert!(p.n_units() >= 3, "fc stack stages must be independently schedulable");
+    let mut rng = Rng::new(5);
+    let batch: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..10).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    p.forward_batch(&batch).unwrap(); // warm the factor caches
+    let want = p.forward_batch(&batch).unwrap();
+    for (workers, micro) in [(2, 2), (3, 1), (4, 0)] {
+        let got = p.forward_batch_pipelined(&batch, workers, micro).unwrap();
+        assert_eq!(got, want, "workers {workers} micro {micro}");
+    }
+}
+
+#[test]
+fn pipelined_se_and_conv_unit_graph_matches_sequential() {
+    // a manifest walk with conv banks, BN, activations, an SE side branch
+    // and a residual-closing unit — the pipelined schedule over real module
+    // types must equal the sequential walk exactly (behavioural arithmetic
+    // is pure, so bit-identical)
+    let layers = r#"
+        {"unit":"b1","layer":"conv","name":"c0","k":3,"stride":1,"padding":1,
+         "cin":2,"cout":2,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"c0.w"},
+        {"unit":"b1","layer":"bn","name":"bn0","c":2,"weight":"bn0.gamma"},
+        {"unit":"b1","layer":"relu","name":"a0","c":2},
+        {"unit":"b1","layer":"gapool","name":"se.gap","c":2,"h_in":4,"w_in":4},
+        {"unit":"b1","layer":"pconv","name":"se.fc1","cin":2,"cout":2,"weight":"s1.w"},
+        {"unit":"b1","layer":"relu","name":"se.act1","c":2},
+        {"unit":"b1","layer":"pconv","name":"se.fc2","cin":2,"cout":2,"weight":"s2.w"},
+        {"unit":"b1","layer":"hsigmoid","name":"se.act2","c":2},
+        {"unit":"b1","layer":"residual","name":"b1.add","c":2},
+        {"unit":"cls","layer":"gapool","name":"pool","c":2,"h_in":4,"w_in":4},
+        {"unit":"cls","layer":"fc","name":"fc","cin":2,"cout":3,"weight":"f.w"}"#;
+    let weights = r#"
+        {"name":"c0.w","shape":[3,3,2,2],"offset":0,"len":36,"scale":0.5},
+        {"name":"bn0.gamma","shape":[2],"offset":36,"len":2},
+        {"name":"s1.w","shape":[2,2],"offset":38,"len":4,"scale":0.5},
+        {"name":"s2.w","shape":[2,2],"offset":42,"len":4,"scale":0.5},
+        {"name":"f.w","shape":[2,3],"offset":46,"len":6,"scale":0.5}"#;
+    let (m, ws) = load(layers, weights, rand_blob(52, 0.5, 71));
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Behavioural)
+        .build(&m, &ws)
+        .unwrap();
+    // b1 closes a residual: its span is one atomic unit; cls splits
+    assert!(p.units().iter().any(|u| u.closes_residual()));
+    let mut rng = Rng::new(17);
+    let batch: Vec<Vec<f64>> = (0..5)
+        .map(|_| (0..p.in_dim()).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+    let want = p.forward_batch(&batch).unwrap();
+    for (workers, micro) in [(2, 1), (3, 2), (2, 0)] {
+        let got = p.forward_batch_pipelined(&batch, workers, micro).unwrap();
+        assert_eq!(got, want, "workers {workers} micro {micro}");
+    }
+}
+
+#[test]
 fn prog_noise_perturbs_but_preserves_structure() {
     let dev = default_device();
     let mut clean = PipelineBuilder::new()

@@ -468,6 +468,81 @@ fn prop_pipeline_spice_matches_ideal_within_tolerance() {
     );
 }
 
+/// Deterministic random unit chain (FC crossbar stages, some units closed
+/// by residual adders) — the "random stage graph" the pipelined scheduler
+/// is checked on. Returns the pipeline and its input dim.
+fn build_random_unit_pipeline(
+    seed: u64,
+    n_units: usize,
+    fidelity: Fidelity,
+) -> (memx::pipeline::Pipeline, usize) {
+    use memx::pipeline::{Pipeline, Stage};
+
+    let dev = default_device();
+    let builder = PipelineBuilder::new().fidelity(fidelity);
+    let mut rng = Rng::new(seed);
+    let mut dim = 2 + rng.below(6);
+    let in_dim = dim;
+    let mut stages: Vec<Stage> = Vec::new();
+    for u in 0..n_units {
+        let unit = format!("u{u}");
+        // residual units keep their dim so the skip adds elementwise
+        let residual = rng.bool();
+        let n_mods = 1 + rng.below(2);
+        for m in 0..n_mods {
+            let dout = if residual { dim } else { 1 + rng.below(6) };
+            let cb = mapper::build_synthetic_fc(
+                dim,
+                dout,
+                dev.levels,
+                MapMode::Inverted,
+                seed ^ (u as u64 * 977 + m as u64 * 131 + 7),
+            );
+            let module = builder.crossbar_module(cb, &dev).unwrap();
+            stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+            dim = dout;
+        }
+        if residual {
+            stages.push(Stage::Residual {
+                name: format!("{unit}.add"),
+                unit: unit.clone(),
+                dim,
+                channels: dim,
+            });
+        }
+    }
+    (Pipeline::from_stages(stages, fidelity).unwrap(), in_dim)
+}
+
+#[test]
+fn prop_pipelined_scheduler_matches_sequential() {
+    // the §5.2 overlapped schedule must be bit-identical to the sequential
+    // unit walk on random stage graphs, for any worker count / micro-batch
+    check(
+        "pipelined-scheduler-exact",
+        20,
+        |rng: &mut Rng, size: usize| {
+            (
+                rng.next_u64(),
+                1 + rng.below(3 + size.min(3)), // units
+                1 + rng.below(4),               // workers
+                rng.below(4),                   // micro-batch (0 = auto)
+            )
+        },
+        |&(seed, n_units, workers, micro)| {
+            let (mut p, in_dim) =
+                build_random_unit_pipeline(seed, n_units, Fidelity::Behavioural);
+            let mut rng = Rng::new(seed ^ 0xF00D);
+            let batch: Vec<Vec<f64>> = (0..5 + rng.below(4))
+                .map(|_| (0..in_dim).map(|_| rng.range_f64(-0.6, 0.6)).collect())
+                .collect();
+            let want = p.forward_batch(&batch).unwrap();
+            let got = p.forward_batch_pipelined(&batch, workers, micro).unwrap();
+            got == want
+        },
+    );
+}
+
 #[test]
 fn prop_pipeline_forward_batch_equals_forward() {
     // regression: forward_batch(&[x]) == forward(x), and batching commutes

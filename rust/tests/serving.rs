@@ -1,0 +1,223 @@
+//! Serving-tier tests over stub executors — no artifacts, no PJRT: the
+//! ungated `coordinator::Server` queue + batcher thread is driven end to
+//! end, including its behavior under a deliberately slow executor (queue
+//! latency, waited-out partial batches) and error propagation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use memx::coordinator::{InferenceExecutor, Server};
+use memx::pipeline::StageStat;
+
+/// A deterministic stub backend: label = floor(first pixel * classes),
+/// optional fixed delay per batch, optional injected failure. The struct is
+/// `Send`, so tests build it, keep clones of its counters, and move it into
+/// the server's executor factory.
+struct StubExec {
+    img_elems: usize,
+    classes: usize,
+    batches: Vec<usize>,
+    delay: Duration,
+    fail: bool,
+    calls: Arc<AtomicU64>,
+    served_batch_sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl StubExec {
+    fn new(img_elems: usize, classes: usize, batches: &[usize], delay: Duration) -> StubExec {
+        StubExec {
+            img_elems,
+            classes,
+            batches: batches.to_vec(),
+            delay,
+            fail: false,
+            calls: Arc::new(AtomicU64::new(0)),
+            served_batch_sizes: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl InferenceExecutor for StubExec {
+    fn describe(&self) -> String {
+        "stub".into()
+    }
+
+    fn img_elems(&self) -> usize {
+        self.img_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn available_batches(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let b = images.len() / self.img_elems;
+        self.served_batch_sizes.lock().unwrap().push(b);
+        if self.fail {
+            bail!("stub executor down");
+        }
+        std::thread::sleep(self.delay);
+        let mut logits = vec![0f32; b * self.classes];
+        for i in 0..b {
+            let label = ((images[i * self.img_elems] * self.classes as f32) as usize)
+                .min(self.classes - 1);
+            logits[i * self.classes + label] = 1.0;
+        }
+        Ok(logits)
+    }
+
+    fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        vec![StageStat { name: "stub-stage".into(), total: self.delay, calls: 1 }]
+    }
+}
+
+/// image whose stub label is `l` (first pixel encodes the class)
+fn img_for(l: usize, classes: usize, img_elems: usize) -> Vec<f32> {
+    let mut v = vec![0.0; img_elems];
+    v[0] = (l as f32 + 0.5) / classes as f32;
+    v
+}
+
+#[test]
+fn slow_executor_partial_batch_waits_out_and_pads() {
+    // one request against a [4]-only executor: the batcher must hold it for
+    // max_wait, then dispatch a padded partial batch of 4
+    let (img, classes) = (6, 4);
+    let max_wait = Duration::from_millis(5);
+    let stub = StubExec::new(img, classes, &[4], Duration::from_millis(10));
+    let server = Server::start_with(max_wait, move || {
+        Ok(Box::new(stub) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap();
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let pred = client.classify(img_for(2, classes, img)).unwrap();
+    assert_eq!(pred.label, 2);
+    // end-to-end latency covers the deadline wait plus the slow executor
+    assert!(t0.elapsed() >= max_wait, "deadline must gate the partial batch");
+    assert!(pred.latency >= max_wait);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.batches, 1);
+    assert_eq!(snap.padded_slots, 3, "batch of 4 carried 1 real request");
+    assert!(snap.queue_mean >= Duration::from_millis(1), "queue wait recorded");
+    assert!(snap.exec_busy >= Duration::from_millis(10), "executor busy time recorded");
+    // the stub's stage drain lands in the snapshot table
+    assert!(snap.stages.iter().any(|s| s.name == "stub-stage"));
+    server.shutdown();
+}
+
+#[test]
+fn slow_executor_accumulates_full_batches_under_load() {
+    // a slow executor makes requests pile up; once >= 8 are queued the
+    // batcher must prefer the full compiled size over b1 dispatches
+    let (img, classes) = (4, 5);
+    let n = 24;
+    let stub = StubExec::new(img, classes, &[1, 8], Duration::from_millis(4));
+    let sizes = stub.served_batch_sizes.clone();
+    let server = Server::start_with(Duration::from_millis(2), move || {
+        Ok(Box::new(stub) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap();
+    let client = server.client();
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let c = client.clone();
+            let correct = &correct;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let want = i % classes;
+                if c.classify(img_for(want, classes, img)).unwrap().label == want {
+                    correct.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(correct.load(Ordering::Relaxed), n);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.errors, 0);
+    let served = sizes.lock().unwrap().clone();
+    assert_eq!(served.iter().sum::<usize>() as u64, snap.completed + snap.padded_slots);
+    assert!(
+        served.iter().any(|&b| b == 8),
+        "8 closed-loop clients against a slow executor must fill a b8 batch at least once: {served:?}"
+    );
+    assert!(snap.queue_mean > Duration::ZERO);
+    server.shutdown();
+}
+
+#[test]
+fn executor_failure_surfaces_to_clients_and_metrics() {
+    let (img, classes) = (3, 2);
+    let mut stub = StubExec::new(img, classes, &[1], Duration::ZERO);
+    stub.fail = true;
+    let server = Server::start_with(Duration::from_millis(1), move || {
+        Ok(Box::new(stub) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap();
+    let client = server.client();
+    let err = client.classify(vec![0.2; img]).unwrap_err();
+    assert!(format!("{err}").contains("stub executor down"), "{err}");
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.completed, 0);
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_malformed_image_offline() {
+    let stub = StubExec::new(8, 3, &[1, 2], Duration::ZERO);
+    let server = Server::start_with(Duration::from_millis(1), move || {
+        Ok(Box::new(stub) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap();
+    let client = server.client();
+    assert!(client.classify(vec![0.0; 5]).is_err());
+    // well-formed requests still flow afterwards
+    assert_eq!(client.classify(img_for(1, 3, 8)).unwrap().label, 1);
+    server.shutdown();
+}
+
+#[test]
+fn warmup_failure_reports_at_start() {
+    struct BadWarmup;
+    impl InferenceExecutor for BadWarmup {
+        fn describe(&self) -> String {
+            "bad".into()
+        }
+        fn img_elems(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            1
+        }
+        fn available_batches(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn warmup(&mut self) -> Result<()> {
+            bail!("no device")
+        }
+        fn run_batch(&mut self, _images: &[f32]) -> Result<Vec<f32>> {
+            unreachable!("warmup failed")
+        }
+    }
+    let err = Server::start_with(Duration::from_millis(1), || {
+        Ok(Box::new(BadWarmup) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap_err();
+    assert!(format!("{err}").contains("no device"), "{err}");
+}
