@@ -14,7 +14,9 @@ use std::path::Path;
 
 use memx::mapper::{self, MapMode};
 use memx::nn::{Manifest, WeightStore};
-use memx::pipeline::{argmax, default_device, image_to_input, Fidelity, PipelineBuilder};
+use memx::pipeline::{
+    argmax, default_device, image_to_input, Fidelity, PipelineBuilder, SolverStrategy,
+};
 use memx::power;
 use memx::util::bin::Dataset;
 use memx::util::prng::Rng;
@@ -38,8 +40,13 @@ fn synthetic_tour() -> anyhow::Result<()> {
         .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
         .collect();
     for fidelity in [Fidelity::Ideal, Fidelity::Behavioural, Fidelity::Spice] {
+        // SolverStrategy::Auto (the default) keeps small segmented
+        // circuits on the direct factor engine and moves giant monolithic
+        // crossbars (the paper's 2050x1024 case) onto preconditioned GMRES
+        // — see spice::krylov
         let mut pipe = PipelineBuilder::new()
             .fidelity(fidelity)
+            .solver(SolverStrategy::Auto)
             .segment(8)
             .build_fc_stack(&dims, &dev, 7)?;
         let logits = pipe.forward_batch(&batch)?;

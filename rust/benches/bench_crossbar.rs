@@ -1,12 +1,25 @@
 //! Crossbar microbenchmark — behavioural VMM throughput and SPICE solve
-//! cost per crossbar size (supports the §Perf L3 iteration log).
+//! cost per crossbar size (supports the §Perf L3 iteration log), plus the
+//! monolithic direct-vs-GMRES sweep for `spice::krylov`: one MNA system
+//! per crossbar (no segmentation) solved by the direct factor engine and
+//! by ILU(0)-preconditioned GMRES, up to the paper's 2050x1024 case and a
+//! beyond-paper 4096x2048 point, appending the peak-resident-entries
+//! proxy per strategy to BENCH_spice.json.
 //!
 //!   cargo bench --bench bench_crossbar
+//!
+//! `MEMX_BENCH_QUICK=1` runs the reduced CI smoke variant: one small
+//! behavioural/seg64 size plus one monolithic iterative-vs-direct
+//! comparison at 512x256.
+
+use std::time::Instant;
 
 use memx::mapper::{self, MapMode};
 use memx::netlist;
 use memx::nn::DeviceJson;
+use memx::spice::krylov::SolverStrategy;
 use memx::spice::solve::Ordering;
+use memx::spice::{synthetic_crossbar_circuit, Circuit};
 use memx::util::bench::{append_json_report, black_box, Bench};
 use memx::util::pool;
 
@@ -29,11 +42,13 @@ fn device() -> DeviceJson {
 }
 
 fn main() {
+    let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
     let dev = device();
-    let mut b = Bench::default();
+    let mut b = if quick { Bench::quick() } else { Bench::default() };
     let mut derived: Vec<(String, f64)> = Vec::new();
 
-    for &n in &[64usize, 256, 512] {
+    let seg_sizes: &[usize] = if quick { &[64] } else { &[64, 256, 512] };
+    for &n in seg_sizes {
         let cb = mapper::build_synthetic_fc(n, n, 64, MapMode::Inverted, 5);
         let inputs: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.31).sin() * 0.4).collect();
 
@@ -57,7 +72,7 @@ fn main() {
         // factor-once/solve-many: same read served from cached per-segment
         // LU factorizations, new inputs every iteration (RHS-only re-solves)
         let workers = pool::default_workers();
-        let mut sim = cb.sim(&dev, 64, Ordering::Smart).unwrap();
+        let mut sim = cb.sim(&dev, 64, Ordering::Smart, SolverStrategy::Auto).unwrap();
         let mut k = 0usize;
         let warm = b.run(&format!("spice seg64 {n}x{n} cached resolve"), || {
             k += 1;
@@ -69,6 +84,79 @@ fn main() {
         println!("    -> cached-resolve median speedup {speedup:.1}x");
         derived.push((format!("seg64_{n}x{n}_cold_vs_cached"), speedup));
     }
+
+    // --- monolithic sweep: direct factor vs GMRES cold/warm -------------
+    // One MNA system per size (no segmentation). Cold = first solve
+    // (analysis + factor/ILU); warm = RHS-only re-reads off the cached
+    // engine state. Direct is skipped beyond the paper's 2050x1024 — the
+    // memory-bound regime the iterative path exists for.
+    let mono_sizes: &[(usize, usize)] = if quick {
+        &[(512, 256)]
+    } else {
+        &[(512, 256), (1024, 512), (2050, 1024), (4096, 2048)]
+    };
+    let iterative = SolverStrategy::Iterative { restart: 24, tol: 1e-11, max_iter: 600 };
+    for &(inputs, cols) in mono_sizes {
+        let tag = format!("mono_{inputs}x{cols}");
+        let seed = 77 ^ (inputs as u64);
+        let bump = |c: &mut Circuit, vidx: &[usize], k: usize| {
+            for (r, &i) in vidx.iter().enumerate() {
+                c.set_vsource_at(i, ((r * 7 + k) as f64 * 0.13).sin() * 0.3).unwrap();
+            }
+        };
+
+        // GMRES cold + warm
+        let mut gc = synthetic_crossbar_circuit(inputs, cols, 100.0, seed);
+        gc.set_solver(iterative);
+        let vidx: Vec<usize> =
+            (0..inputs).map(|r| gc.vsource_index(&format!("V{r}")).unwrap()).collect();
+        let t0 = Instant::now();
+        let (_, cold_st) = gc.dc_op_stats(Ordering::Smart).unwrap();
+        b.record_once(&format!("{tag} gmres cold (ilu0 analysis+solve)"), t0.elapsed());
+        let mut k = 0usize;
+        let mut warm_iters = 0usize;
+        let warm = b.run(&format!("{tag} gmres warm re-read"), || {
+            k += 1;
+            bump(&mut gc, &vidx, k);
+            let (x, st) = gc.dc_op_stats(Ordering::Smart).unwrap();
+            warm_iters += st.iterations;
+            black_box(x);
+        });
+        println!(
+            "    -> gmres: peak {} entries, cold {} iters, warm {:.1} iters/read",
+            cold_st.peak_entries,
+            cold_st.iterations,
+            warm_iters as f64 / warm.iters.max(1) as f64
+        );
+        derived.push((format!("{tag}_peak_entries_gmres"), cold_st.peak_entries as f64));
+        derived.push((format!("{tag}_gmres_cold_iters"), cold_st.iterations as f64));
+        derived.push((format!("{tag}_gmres_relres"), cold_st.residual));
+
+        // direct factor (reference memory/time point)
+        if inputs * cols <= 2050 * 1024 {
+            let mut dc = synthetic_crossbar_circuit(inputs, cols, 100.0, seed);
+            dc.set_solver(SolverStrategy::Direct);
+            let t0 = Instant::now();
+            let (_, dst) = dc.dc_op_stats(Ordering::Smart).unwrap();
+            b.record_once(&format!("{tag} direct cold (analysis+factor)"), t0.elapsed());
+            let mut k = 0usize;
+            b.run(&format!("{tag} direct warm re-read"), || {
+                k += 1;
+                bump(&mut dc, &vidx, k);
+                black_box(dc.dc_op().unwrap());
+            });
+            let ratio = dst.peak_entries as f64 / cold_st.peak_entries.max(1) as f64;
+            println!(
+                "    -> direct: peak {} entries ({ratio:.2}x the gmres footprint)",
+                dst.peak_entries
+            );
+            derived.push((format!("{tag}_peak_entries_direct"), dst.peak_entries as f64));
+            derived.push((format!("{tag}_peak_direct_over_gmres"), ratio));
+        } else {
+            println!("    -> direct factorization skipped beyond the paper scale (memory)");
+        }
+    }
+
     b.table("crossbar microbenchmarks");
     if let Err(e) = append_json_report("BENCH_spice.json", "bench_crossbar", &b.rows, &derived) {
         eprintln!("warning: could not write BENCH_spice.json: {e}");

@@ -133,8 +133,14 @@ fn main() {
         let reference = simulate(&cb, &dev, SEG, Ordering::Smart, &inputs);
 
         let t0 = Instant::now();
-        let mut sim = netlist::CrossbarSim::new(&cb, &dev, SEG, Ordering::Smart)
-            .expect("build sim");
+        let mut sim = netlist::CrossbarSim::new(
+            &cb,
+            &dev,
+            SEG,
+            Ordering::Smart,
+            memx::spice::krylov::SolverStrategy::Auto,
+        )
+        .expect("build sim");
         let first = sim.solve_par(&inputs, workers).expect("cold read");
         let cold = t0.elapsed();
 

@@ -11,29 +11,21 @@
 //! Appends a run record (rows + cached-vs-cold speedups) to
 //! BENCH_spice.json at the repo root.
 
+use memx::spice::krylov::SolverStrategy;
 use memx::spice::solve::{solve_dense, Ordering, SparseSys};
-use memx::spice::Circuit;
+use memx::spice::{synthetic_crossbar_circuit, Circuit, Element};
 use memx::util::bench::{append_json_report, black_box, Bench};
 use memx::util::prng::Rng;
 
-/// Build the MNA system of an n-input, c-column ideal-TIA crossbar.
-fn crossbar_circuit(inputs: usize, cols: usize, rng: &mut Rng) -> Circuit {
-    let mut c = Circuit::new("bench crossbar");
-    let in_nodes: Vec<usize> = (0..inputs).map(|r| c.node(&format!("in{r}"))).collect();
-    for (r, &node) in in_nodes.iter().enumerate() {
-        c.vsource(&format!("V{r}"), node, 0, (r as f64 * 0.7).sin() * 0.3);
-    }
-    for col in 0..cols {
-        let vcol = c.node(&format!("vcol{col}"));
-        let vout = c.node(&format!("vout{col}"));
-        for (r, &node) in in_nodes.iter().enumerate() {
-            let g = 0.05 + 0.9 * rng.f64();
-            c.resistor(&format!("RM{r}_{col}"), node, vcol, 100.0 / g);
+/// Programming-noise-style value drift on the memristor stamps: changes
+/// matrix *values* (not pattern), so the direct engine must refactor while
+/// warm GMRES re-solves off the stale cached LU.
+fn drift_values(c: &mut Circuit, rm_idx: &[usize], k: usize) {
+    for (d, &i) in rm_idx.iter().enumerate() {
+        if let Element::Resistor(_, _, _, r) = &mut c.elements[i] {
+            *r *= 1.0 + 1e-4 * ((d + k) as f64 * 0.37).sin();
         }
-        c.resistor(&format!("RF{col}"), vcol, vout, 50.0);
-        c.opamp(&format!("E{col}"), 0, vcol, vout);
     }
-    c
 }
 
 fn main() {
@@ -58,7 +50,7 @@ fn main() {
 
     // sparse orderings on crossbar MNA systems (per-call reference engine)
     for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
-        let circuit = crossbar_circuit(inputs, cols, &mut rng);
+        let circuit = synthetic_crossbar_circuit(inputs, cols, 100.0, 31 ^ inputs as u64);
         for ord in [Ordering::Smart, Ordering::Natural] {
             b.run(&format!("mna {inputs}x{cols} {ord:?} reference"), || {
                 black_box(circuit.dc_op_stats_reference(ord).unwrap());
@@ -92,7 +84,7 @@ fn main() {
     // (pure re-solves at O(nnz(L+U))).
     let mut derived: Vec<(String, f64)> = Vec::new();
     for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
-        let mut circuit = crossbar_circuit(inputs, cols, &mut rng);
+        let mut circuit = synthetic_crossbar_circuit(inputs, cols, 100.0, 33 ^ inputs as u64);
         let vidx: Vec<usize> = (0..inputs)
             .map(|r| circuit.vsource_index(&format!("V{r}")).unwrap())
             .collect();
@@ -116,6 +108,98 @@ fn main() {
             cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
         println!("    -> cached-resolve median speedup {speedup:.1}x");
         derived.push((format!("sweep_{inputs}x{cols}_median_speedup"), speedup));
+    }
+
+    // --- spice::krylov: iterative vs direct on monolithic systems ------
+    // Two workloads per size: (a) value drift — direct must refactor every
+    // point, warm GMRES reuses the stale complete LU as preconditioner
+    // with no refactorization; (b) RHS-only sweep served from the cached
+    // ILU(0) pattern. Iteration counts, final residuals, preconditioner
+    // reuse hits and per-strategy peak entries land in `derived`
+    // (BENCH_spice.json schema).
+    let iterative = SolverStrategy::Iterative { restart: 24, tol: 1e-11, max_iter: 600 };
+    for &(inputs, cols) in &[(256usize, 64usize), (512, 128)] {
+        let mut direct_c = synthetic_crossbar_circuit(inputs, cols, 100.0, 35 ^ inputs as u64);
+        direct_c.set_solver(SolverStrategy::Direct);
+        let rm_idx: Vec<usize> = direct_c
+            .elements
+            .iter()
+            .enumerate()
+            .filter(|&(_, e)| matches!(e, Element::Resistor(n, ..) if n.starts_with("RM")))
+            .map(|(i, _)| i)
+            .collect();
+        let mut warm_c = direct_c.clone();
+        let mut sweep_c = direct_c.clone();
+
+        let mut point = 0usize;
+        let mut peak_direct = 0usize;
+        let dstats = b.run(&format!("drift {inputs}x{cols} direct refactor"), || {
+            point += 1;
+            drift_values(&mut direct_c, &rm_idx, point);
+            let (x, st) = direct_c.dc_op_stats(Ordering::Smart).unwrap();
+            peak_direct = st.peak_entries;
+            black_box(x);
+        });
+
+        warm_c.dc_op().unwrap(); // prime the complete LU once
+        warm_c.set_solver(iterative);
+        let mut point = 0usize;
+        let mut warm_iters = 0usize;
+        let mut reuse_hits = 0usize;
+        let mut worst_res = 0f64;
+        let wstats = b.run(&format!("drift {inputs}x{cols} warm gmres cached-lu"), || {
+            point += 1;
+            drift_values(&mut warm_c, &rm_idx, point);
+            let (x, st) = warm_c.dc_op_stats(Ordering::Smart).unwrap();
+            warm_iters += st.iterations;
+            reuse_hits += st.precond_reused as usize;
+            worst_res = worst_res.max(st.residual);
+            black_box(x);
+        });
+        let warm_speedup =
+            dstats.median.as_secs_f64() / wstats.median.as_secs_f64().max(1e-12);
+        println!(
+            "    -> warm gmres {:.1}x vs refactor; {:.1} iters/solve, {} reuse hits",
+            warm_speedup,
+            warm_iters as f64 / wstats.iters.max(1) as f64,
+            reuse_hits
+        );
+
+        sweep_c.set_solver(iterative);
+        let vidx: Vec<usize> = (0..inputs)
+            .map(|r| sweep_c.vsource_index(&format!("V{r}")).unwrap())
+            .collect();
+        let mut point = 0usize;
+        let mut sweep_iters = 0usize;
+        let mut peak_gmres = 0usize;
+        let sstats = b.run(&format!("sweep {inputs}x{cols} gmres cached ilu0"), || {
+            point += 1;
+            for (r, &i) in vidx.iter().enumerate() {
+                sweep_c
+                    .set_vsource_at(i, ((r * 7 + point) as f64 * 0.13).sin() * 0.3)
+                    .unwrap();
+            }
+            let (x, st) = sweep_c.dc_op_stats(Ordering::Smart).unwrap();
+            sweep_iters += st.iterations;
+            peak_gmres = st.peak_entries;
+            worst_res = worst_res.max(st.residual);
+            black_box(x);
+        });
+
+        let tag = format!("mono_{inputs}x{cols}");
+        derived.push((format!("{tag}_warm_gmres_vs_refactor_speedup"), warm_speedup));
+        derived.push((
+            format!("{tag}_warm_iters_per_solve"),
+            warm_iters as f64 / wstats.iters.max(1) as f64,
+        ));
+        derived.push((format!("{tag}_precond_reuse_hits"), reuse_hits as f64));
+        derived.push((
+            format!("{tag}_sweep_iters_per_solve"),
+            sweep_iters as f64 / sstats.iters.max(1) as f64,
+        ));
+        derived.push((format!("{tag}_gmres_worst_relres"), worst_res));
+        derived.push((format!("{tag}_peak_entries_direct"), peak_direct as f64));
+        derived.push((format!("{tag}_peak_entries_gmres"), peak_gmres as f64));
     }
 
     b.table("SPICE solver scaling");

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   info                         artifact + manifest summary
-//!   accuracy [--model analog|digital] [--n N] [--fidelity F]  Table 1 row
+//!   accuracy [--model analog|digital] [--n N] [--fidelity F]
+//!            [--solver direct|iterative|auto]        Table 1 row
 //!            (analog runs offline through the crossbar pipeline;
 //!             digital needs the PJRT runtime)
 //!   serve    [--n N] [--model ...] [--max-wait-us U] [--fidelity F]
@@ -12,7 +13,8 @@
 //!   verify                       runtime vs python expected logits
 //!   map      [--mode inverted|dual]                Table 4 resources
 //!   netlist  --layer NAME [--outdir DIR] [--segment N]   emit SPICE
-//!   spice    --layer NAME [--segment N] [--n N]    simulate a layer
+//!   spice    --layer NAME [--segment N] [--n N]
+//!            [--solver direct|iterative|auto]        simulate a layer
 //!   report   --table4|--fig4|--fig7|--fig8|--fig9  paper artifacts
 //!
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
@@ -26,6 +28,7 @@ use memx::coordinator::{
     self, Backend, InferenceExecutor, PipelineExecutor, Server, ServerConfig,
 };
 use memx::pipeline::{default_device, image_to_input, Fidelity, PipelineBuilder};
+use memx::spice::krylov::SolverStrategy;
 #[cfg(feature = "runtime-xla")]
 use memx::runtime::{Engine, Model};
 use memx::util::bin::Dataset;
@@ -120,11 +123,24 @@ fn cmd_info(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "model", "n", "fidelity", "mode", "segment"])?;
+    let a = Args::parse(
+        rest,
+        &["artifacts", "model", "n", "fidelity", "mode", "segment", "solver"],
+    )?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     match parse_model(a.get_or("model", "analog"))? {
         ModelChoice::Analog => accuracy_analog(dir, &a),
-        ModelChoice::Digital => accuracy_digital(dir, &a),
+        ModelChoice::Digital => {
+            // the PJRT engine runs pre-compiled executables — the SPICE
+            // engine's linear-solver knob does not apply to it
+            if a.get("solver").is_some() {
+                bail!(
+                    "--solver selects the analog SPICE engine's linear solver and does \
+                     not apply to the digital PJRT model; drop it or use --model analog"
+                );
+            }
+            accuracy_digital(dir, &a)
+        }
     }
 }
 
@@ -134,17 +150,20 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
 fn accuracy_analog(dir: &Path, a: &Args) -> Result<()> {
     let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
     let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
+    let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
     let m = memx::nn::Manifest::load(dir)?;
     let ws = memx::nn::WeightStore::load(dir, &m)?;
     let mut pipe = PipelineBuilder::new()
         .mode(mode)
         .fidelity(fidelity)
+        .solver(solver)
         .segment(a.get_usize("segment", 64)?)
         .build(&m, &ws)?;
     let ds = Dataset::load(&dir.join(&m.dataset_file))?;
     let n = a.get_usize("n", ds.n)?;
     println!(
-        "classifying {n} images through the analog pipeline ({fidelity} fidelity, mode {mode}): {}",
+        "classifying {n} images through the analog pipeline ({fidelity} fidelity, mode {mode}, \
+         solver {solver}): {}",
         pipe.describe()
     );
     let (labels, wall) = coordinator::classify_dataset_analog(&mut pipe, &ds, n, &m.batch_sizes)?;
@@ -439,13 +458,14 @@ fn cmd_netlist(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_spice(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode"])?;
+    let a = Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode", "solver"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let layer = a.get("layer").unwrap_or("cls.fc2");
     let segment = a.get_usize("segment", 64)?;
     let n = a.get_usize("n", 4)?;
     let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
-    memx::report::spice_layer_demo(dir, layer, mode, segment, n)
+    let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
+    memx::report::spice_layer_demo(dir, layer, mode, segment, n, solver)
 }
 
 fn cmd_report(rest: &[String]) -> Result<()> {

@@ -402,15 +402,19 @@ pub struct Crossbar {
 impl Crossbar {
     /// SPICE-level reader for this crossbar: emits + parses the segmented
     /// netlists once and answers every subsequent input vector from the
-    /// cached LU factorization (see [`crate::netlist::CrossbarSim`]).
-    /// `segment` = columns per netlist file (0 = monolithic).
+    /// cached LU factorization or Krylov preconditioner (see
+    /// [`crate::netlist::CrossbarSim`]). `segment` = columns per netlist
+    /// file (0 = monolithic); `solver` selects direct vs GMRES per segment
+    /// ([`crate::spice::krylov::SolverStrategy::Auto`] keeps small
+    /// segments direct and giant monolithic solves iterative).
     pub fn sim(
         &self,
         dev: &crate::nn::DeviceJson,
         segment: usize,
         ordering: crate::spice::solve::Ordering,
+        solver: crate::spice::krylov::SolverStrategy,
     ) -> Result<crate::netlist::CrossbarSim> {
-        crate::netlist::CrossbarSim::new(self, dev, segment, ordering)
+        crate::netlist::CrossbarSim::new(self, dev, segment, ordering, solver)
     }
 
     /// Behavioural evaluation (ideal TIA): inputs `v` of len `region` (the

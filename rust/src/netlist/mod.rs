@@ -30,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::mapper::{build_fc_crossbar, Crossbar, MapMode};
 use crate::nn::{DeviceJson, Manifest, WeightStore};
+use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 use crate::spice::{Circuit, Element};
 use crate::util::pool::par_map_mut;
@@ -257,19 +258,25 @@ struct SegmentSim {
 
 impl CrossbarSim {
     /// Emit + parse + index every segment (`segment` = columns per file,
-    /// 0 = monolithic). All sources start at 0 V / bias levels.
+    /// 0 = monolithic). All sources start at 0 V / bias levels. `solver`
+    /// selects each segment circuit's linear engine —
+    /// [`SolverStrategy::Auto`] keeps segmented circuits on the direct
+    /// factor path and moves giant monolithic ones onto preconditioned
+    /// GMRES (see [`crate::spice::krylov`]).
     pub fn new(
         cb: &Crossbar,
         dev: &DeviceJson,
         segment: usize,
         ordering: Ordering,
+        solver: SolverStrategy,
     ) -> Result<CrossbarSim> {
         let segs = plan_segments(cb.cols, segment);
         let n_segments = segs.len();
         let mut segments = Vec::with_capacity(n_segments);
         for seg in &segs {
             let text = emit_crossbar(cb, dev, seg, None, n_segments);
-            let circuit = parse(&text)?;
+            let mut circuit = parse(&text)?;
+            circuit.set_solver(solver);
             // one pass over the element list (vsource_index per row would
             // make construction quadratic in the crossbar size)
             let vin: Vec<(usize, usize)> = {
@@ -330,9 +337,11 @@ impl CrossbarSim {
         Ok(out)
     }
 
-    /// Batched reads: outputs for each input vector, one factorization and
-    /// a single multi-RHS substitution pass per segment
-    /// ([`Circuit::dc_op_batch`]), segments parallel over `workers`.
+    /// Batched reads: outputs for each input vector, one factorization
+    /// (or one shared Krylov preconditioner) and a single multi-RHS pass
+    /// per segment ([`Circuit::dc_op_batch_par`]), segments parallel over
+    /// `workers`. A monolithic (single-segment) simulator hands the whole
+    /// worker budget to the per-RHS Krylov sweeps instead.
     pub fn solve_batch(
         &mut self,
         inputs: &[Vec<f64>],
@@ -343,6 +352,7 @@ impl CrossbarSim {
                 bail!("crossbar sim: {} inputs, region is {}", iv.len(), self.region);
             }
         }
+        let inner_workers = if self.segments.len() == 1 { workers.max(1) } else { 1 };
         let (region, ordering, cols) = (self.region, self.ordering, self.cols);
         let per_seg = par_map_mut(&mut self.segments, workers, |seg| -> Result<Vec<Vec<f64>>> {
             let overrides: Vec<Vec<(usize, f64)>> = inputs
@@ -354,7 +364,7 @@ impl CrossbarSim {
                         .collect()
                 })
                 .collect();
-            let sols = seg.circuit.dc_op_batch(&overrides, ordering)?;
+            let sols = seg.circuit.dc_op_batch_par(&overrides, ordering, inner_workers)?;
             Ok(sols
                 .into_iter()
                 .map(|sol| seg.out_nodes.iter().map(|&n| sol[n]).collect())
@@ -532,7 +542,8 @@ mod tests {
     fn crossbar_sim_matches_ideal_and_oneshot() {
         let cb = build_synthetic_fc(14, 6, 64, MapMode::Inverted, 31);
         let dev = test_device();
-        let mut sim = CrossbarSim::new(&cb, &dev, 2, Ordering::Smart).unwrap();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 2, Ordering::Smart, SolverStrategy::Auto).unwrap();
         assert_eq!(sim.n_segments(), 3);
         for trial in 0..3 {
             let inputs: Vec<f64> =
@@ -558,7 +569,8 @@ mod tests {
     fn crossbar_sim_batch_matches_sequential() {
         let cb = build_synthetic_fc(10, 4, 64, MapMode::Dual, 12);
         let dev = test_device();
-        let mut sim = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart).unwrap();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
         let batch: Vec<Vec<f64>> = (0..5)
             .map(|k| (0..10).map(|i| ((i * 2 + k) as f64 * 0.29).cos() * 0.3).collect())
             .collect();
@@ -568,6 +580,25 @@ mod tests {
             let seq = sim.solve(iv).unwrap();
             for (a, b) in batched[k].iter().zip(&seq) {
                 assert!((a - b).abs() < 1e-9, "batch {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossbar_sim_iterative_solver_matches_direct() {
+        let cb = build_synthetic_fc(12, 5, 64, MapMode::Inverted, 44);
+        let dev = test_device();
+        let iterative = SolverStrategy::Iterative { restart: 16, tol: 1e-11, max_iter: 300 };
+        let mut direct =
+            CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Direct).unwrap();
+        let mut gmres = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, iterative).unwrap();
+        for trial in 0..3 {
+            let inputs: Vec<f64> =
+                (0..12).map(|i| ((i + trial) as f64 * 0.41).sin() * 0.4).collect();
+            let want = direct.solve(&inputs).unwrap();
+            let got = gmres.solve(&inputs).unwrap();
+            for (c, (x, y)) in want.iter().zip(&got).enumerate() {
+                assert!((x - y).abs() < 1e-6, "trial {trial} col {c}: {x} vs {y}");
             }
         }
     }

@@ -17,6 +17,7 @@ use crate::mapper::{
     Crossbar, MapMode,
 };
 use crate::nn::{ActKind, ConvGeom, DeviceJson, Layer, Manifest, WeightStore};
+use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 use crate::util::pool;
 use crate::util::prng::Rng;
@@ -107,6 +108,7 @@ pub struct PipelineBuilder {
     segment: usize,
     workers: usize,
     ordering: Ordering,
+    solver: SolverStrategy,
 }
 
 impl Default for PipelineBuilder {
@@ -126,6 +128,7 @@ impl PipelineBuilder {
             segment: 64,
             workers: 0,
             ordering: Ordering::Smart,
+            solver: SolverStrategy::Auto,
         }
     }
 
@@ -171,6 +174,15 @@ impl PipelineBuilder {
     /// Elimination ordering for the SPICE engine.
     pub fn ordering(mut self, ordering: Ordering) -> Self {
         self.ordering = ordering;
+        self
+    }
+
+    /// Linear-solver strategy for the SPICE engine (default
+    /// [`SolverStrategy::Auto`]: direct factorization below the monolithic
+    /// thresholds, preconditioned GMRES above them — see
+    /// [`crate::spice::krylov`]).
+    pub fn solver(mut self, solver: SolverStrategy) -> Self {
+        self.solver = solver;
         self
     }
 
@@ -322,6 +334,7 @@ impl PipelineBuilder {
             self.fidelity,
             self.segment,
             self.ordering,
+            self.solver,
             self.resolved_workers(),
         )
     }
@@ -344,6 +357,7 @@ impl PipelineBuilder {
             self.fidelity,
             self.segment,
             self.ordering,
+            self.solver,
             self.resolved_workers(),
         )
     }
@@ -400,6 +414,7 @@ impl PipelineBuilder {
                 fidelity: self.fidelity,
                 segment: self.segment,
                 ordering: self.ordering,
+                solver: self.solver,
                 workers: self.resolved_workers(),
             },
             &m.device,

@@ -97,6 +97,9 @@ use crate::util::pool;
 
 pub use builder::{default_device, synthetic_stack_crossbars, PipelineBuilder};
 pub use modules::{ActivationModule, BatchNormModule, CrossbarModule, GapModule, SeModule};
+/// Re-exported for builder callers: the SPICE engine's direct-vs-GMRES
+/// selection ([`PipelineBuilder::solver`]).
+pub use crate::spice::krylov::SolverStrategy;
 
 /// Execution fidelity of a compiled [`Pipeline`] (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -22,6 +22,7 @@ use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom};
 use crate::mapper::{Crossbar, MapMode};
 use crate::netlist::CrossbarSim;
 use crate::nn::{ActKind, ConvGeom, DeviceJson};
+use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 use crate::util::pool::par_map_mut;
 
@@ -108,6 +109,7 @@ pub(crate) struct ConvModuleCfg {
     pub fidelity: Fidelity,
     pub segment: usize,
     pub ordering: Ordering,
+    pub solver: SolverStrategy,
     pub workers: usize,
 }
 
@@ -250,10 +252,11 @@ impl CrossbarModule {
         fidelity: Fidelity,
         segment: usize,
         ordering: Ordering,
+        solver: SolverStrategy,
         workers: usize,
     ) -> Result<CrossbarModule> {
         let sim = match fidelity {
-            Fidelity::Spice => Some(CrossbarSim::new(&cb, dev, segment, ordering)?),
+            Fidelity::Spice => Some(CrossbarSim::new(&cb, dev, segment, ordering, solver)?),
             _ => None,
         };
         Ok(CrossbarModule {
@@ -310,7 +313,8 @@ impl CrossbarModule {
                         rf_scale: cfg.scale,
                         mode: cfg.mode,
                     };
-                    let sim = CrossbarSim::new(&cb, dev, cfg.segment, cfg.ordering)?;
+                    let sim =
+                        CrossbarSim::new(&cb, dev, cfg.segment, cfg.ordering, cfg.solver)?;
                     banks.sims.push(BankSim { ci, co, sim });
                 }
             }

@@ -19,6 +19,7 @@ use crate::netlist;
 use crate::nn::{Manifest, WeightStore};
 use crate::pipeline::{AnalogModule, Fidelity, PipelineBuilder};
 use crate::power;
+use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 
 /// Table 4: size / memristors / op-amps / parallelism per layer.
@@ -256,14 +257,15 @@ pub fn spice_layer_demo(
     mode: MapMode,
     segment: usize,
     n_vectors: usize,
+    solver: SolverStrategy,
 ) -> Result<()> {
     let m = Manifest::load(dir)?;
     let ws = WeightStore::load(dir, &m)?;
-    let base = PipelineBuilder::new().mode(mode).segment(segment);
+    let base = PipelineBuilder::new().mode(mode).segment(segment).solver(solver);
     let t0 = Instant::now();
     let mut spice = base.clone().fidelity(Fidelity::Spice).build_layer(&m, &ws, layer)?;
     println!(
-        "layer {layer} (mode {mode}): {}; compiled for SPICE in {:?}",
+        "layer {layer} (mode {mode}, solver {solver}): {}; compiled for SPICE in {:?}",
         spice.describe(),
         t0.elapsed()
     );

@@ -74,17 +74,7 @@ impl Symbolic {
     /// Does this analysis apply to `sys`? True iff the triplet (i, j)
     /// stream is identical (same stamp order, same topology).
     pub fn matches(&self, sys: &SparseSys) -> bool {
-        if sys.n != self.n {
-            return false;
-        }
-        let mut k = 0usize;
-        for &(i, j, _) in sys.iter_triplets() {
-            match self.pattern.get(k) {
-                Some(&(pi, pj)) if pi as usize == i && pj as usize == j => k += 1,
-                _ => return false,
-            }
-        }
-        k == self.pattern.len()
+        sys.n == self.n && super::solve::pattern_matches(&self.pattern, sys)
     }
 
     /// Resident L+U entries (assembled + fill + multipliers) — the Fig 7
@@ -107,7 +97,7 @@ impl Symbolic {
     }
 
     pub fn stats(&self) -> SolveStats {
-        SolveStats { peak_entries: self.factor_entries(), unknowns: self.n }
+        SolveStats::direct(self.factor_entries(), self.n)
     }
 }
 
@@ -309,6 +299,13 @@ impl Numeric {
 
     pub fn symbolic(&self) -> &Arc<Symbolic> {
         &self.sym
+    }
+
+    /// Does this factorization hold a valid (possibly value-stale) LU?
+    /// The Krylov engine uses a stale-but-factored [`Numeric`] as a warm
+    /// preconditioner without reassembling (which would clear the factor).
+    pub fn is_factored(&self) -> bool {
+        self.factored
     }
 
     /// Accumulate the triplet values of `sys` into the assembled slots.

@@ -1,0 +1,825 @@
+//! `spice::krylov` — preconditioned iterative solver for giant monolithic
+//! crossbar systems.
+//!
+//! The direct engine ([`crate::spice::factor`]) holds the complete L+U
+//! factorization resident: assembled entries, fill-in, and one multiplier
+//! per (pivot, target) pair. On the paper's monolithic 2050x1024 crossbar
+//! that roughly doubles the matrix footprint — the exact regime where even
+//! one full factorization is memory-bound. This module solves the same MNA
+//! systems with restarted GMRES(m), whose resident state is only the
+//! preconditioner (never larger than the assembled pattern) plus an
+//! (m+1)-vector Krylov basis.
+//!
+//! Two preconditioners, selected by the caller
+//! ([`crate::spice::Circuit`]):
+//!
+//! * [`Ilu0`] — incomplete LU with zero fill, computed on the assembled
+//!   circuit pattern. MNA matrices carry structurally zero diagonals on
+//!   every V-source/VCVS branch row, so the factorization runs on a
+//!   row-permuted matrix: a max-transversal matching (MC21-style
+//!   augmenting paths) first places a structural nonzero on every
+//!   diagonal. On ideal-TIA crossbar patterns the permuted ILU(0) drops
+//!   almost nothing and GMRES converges in a handful of iterations.
+//! * A cached complete [`Numeric`] factorization — when a circuit was
+//!   already factored directly and only stamp *values* drifted
+//!   (programming noise, conductance drift, Newton updates), the stale
+//!   factorization is a near-perfect preconditioner: warm re-solves
+//!   converge in a few iterations with **no refactorization**.
+//!
+//! [`SolverStrategy`] is the knob threaded from `PipelineBuilder`/CLI down
+//! to [`crate::spice::Circuit`]: `Direct` (the factor engine), `Iterative`
+//! (always GMRES, with explicit restart/tol/max_iter), or `Auto` (GMRES
+//! above the [`AUTO_NNZ_THRESHOLD`] pattern size, direct below).
+//! Every iterative solution is residual-certified by the caller and falls
+//! back to the direct engine, so enabling the iterative path can never
+//! make results worse — only cheaper.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use super::factor::Numeric;
+use super::solve::{SolveStats, SparseSys};
+use crate::util::pool;
+
+/// `Auto` switches to GMRES at this many raw stamped triplets. Pattern
+/// size — not system dimension — is the memory driver (the direct factor
+/// holds roughly assembled + multipliers ≈ 2x the pattern), and it keeps
+/// *segmented* sims of wide-input layers on the direct path: a 64-column
+/// segment of the paper's 2050-input layer has a large dim (the input
+/// rows are shared) but a small pattern, and direct multi-RHS
+/// substitution is the right engine for it.
+pub const AUTO_NNZ_THRESHOLD: usize = 1_000_000;
+
+/// Default Krylov-subspace size before a restart.
+pub const DEFAULT_RESTART: usize = 32;
+/// Default relative-residual convergence target (‖b − Ax‖ / ‖b‖).
+pub const DEFAULT_TOL: f64 = 1e-11;
+/// Default total inner-iteration budget across restarts.
+pub const DEFAULT_MAX_ITER: usize = 1000;
+
+/// Linear-solver selection for the SPICE engine (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SolverStrategy {
+    /// Always the factor-once/solve-many direct engine.
+    Direct,
+    /// Always preconditioned GMRES with these parameters.
+    Iterative { restart: usize, tol: f64, max_iter: usize },
+    /// Direct below the monolithic thresholds, GMRES above them.
+    #[default]
+    Auto,
+}
+
+impl std::str::FromStr for SolverStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SolverStrategy> {
+        match s {
+            "direct" => Ok(SolverStrategy::Direct),
+            "iterative" => Ok(SolverStrategy::Iterative {
+                restart: DEFAULT_RESTART,
+                tol: DEFAULT_TOL,
+                max_iter: DEFAULT_MAX_ITER,
+            }),
+            "auto" => Ok(SolverStrategy::Auto),
+            other => bail!("unknown solver '{other}' (direct|iterative|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SolverStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SolverStrategy::Direct => "direct",
+            SolverStrategy::Iterative { .. } => "iterative",
+            SolverStrategy::Auto => "auto",
+        })
+    }
+}
+
+impl SolverStrategy {
+    /// Should a system with this many stamped triplets take the iterative
+    /// path?
+    pub fn wants_iterative(&self, nnz: usize) -> bool {
+        match self {
+            SolverStrategy::Direct => false,
+            SolverStrategy::Iterative { .. } => true,
+            SolverStrategy::Auto => nnz >= AUTO_NNZ_THRESHOLD,
+        }
+    }
+
+    /// GMRES parameters for this strategy (defaults unless `Iterative`).
+    pub fn cfg(&self) -> KrylovCfg {
+        match *self {
+            SolverStrategy::Iterative { restart, tol, max_iter } => {
+                KrylovCfg { restart, tol, max_iter }
+            }
+            _ => KrylovCfg::default(),
+        }
+    }
+}
+
+/// GMRES(m) parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct KrylovCfg {
+    /// Krylov-subspace size before a restart (the memory knob: the basis
+    /// holds `restart + 1` dense vectors).
+    pub restart: usize,
+    /// Relative-residual convergence target.
+    pub tol: f64,
+    /// Total inner-iteration budget across restarts; exhausting it without
+    /// convergence is a clean error (callers fall back to direct).
+    pub max_iter: usize,
+}
+
+impl Default for KrylovCfg {
+    fn default() -> Self {
+        KrylovCfg { restart: DEFAULT_RESTART, tol: DEFAULT_TOL, max_iter: DEFAULT_MAX_ITER }
+    }
+}
+
+/// A right preconditioner: applies `z = M⁻¹ r` for an approximation
+/// `M ≈ A`. `Sync` so batched sweeps can share one preconditioner across
+/// worker threads.
+pub trait Precond: Sync {
+    /// Solve `M z = r`.
+    fn apply(&self, r: &[f64]) -> Result<Vec<f64>>;
+    /// Resident value slots backing this preconditioner (the peak-memory
+    /// proxy reported in [`SolveStats::peak_entries`]).
+    fn entries(&self) -> usize;
+    fn label(&self) -> &'static str;
+}
+
+/// A cached complete LU (possibly factored for *stale* values) is the
+/// perfect warm preconditioner — see the module docs.
+impl Precond for Numeric {
+    fn apply(&self, r: &[f64]) -> Result<Vec<f64>> {
+        self.solve(r)
+    }
+
+    fn entries(&self) -> usize {
+        self.symbolic().factor_entries()
+    }
+
+    fn label(&self) -> &'static str {
+        "cached-lu"
+    }
+}
+
+/// Zero-fill incomplete LU over the row-permuted assembled pattern.
+///
+/// Mirrors the [`Numeric`] lifecycle: [`Ilu0::analyze`] once per topology
+/// (pattern + transversal + CSR layout), then [`Ilu0::assemble`] /
+/// [`Ilu0::factor`] per value set (flat index arithmetic, no hashing).
+#[derive(Debug, Clone)]
+pub struct Ilu0 {
+    n: usize,
+    /// (i, j) of every triplet in the stream this analysis was built from
+    pattern: Vec<(u32, u32)>,
+    /// triplet k accumulates into `assembled[triplet_slot[k]]`
+    triplet_slot: Vec<usize>,
+    /// original row placed at position p (row permutation giving a
+    /// zero-free diagonal); position index == column index
+    perm: Vec<usize>,
+    /// CSR of the permuted pattern: row p spans `ptr[p]..ptr[p+1]`
+    ptr: Vec<usize>,
+    cols: Vec<usize>,
+    /// absolute index of the diagonal entry of each permuted row
+    diag: Vec<usize>,
+    /// assembled values (pre-factor snapshot, CSR order)
+    assembled: Vec<f64>,
+    /// factored values: strictly-lower = L multipliers, rest = U
+    vals: Vec<f64>,
+    factored: bool,
+}
+
+/// Maximum bipartite matching rows→columns over the sparsity pattern
+/// (iterative augmenting-path DFS). Returns `perm` with `perm[p]` = the
+/// row carrying a structural nonzero in column `p`, or `None` if the
+/// matrix is structurally singular.
+fn max_transversal(row_cols: &[Vec<usize>], n: usize) -> Option<Vec<usize>> {
+    let mut row_of_col = vec![usize::MAX; n];
+    let mut col_of_row = vec![usize::MAX; n];
+    // cheap greedy pass resolves almost every row of an MNA system
+    for (r, cols) in row_cols.iter().enumerate() {
+        for &j in cols {
+            if row_of_col[j] == usize::MAX {
+                row_of_col[j] = r;
+                col_of_row[r] = j;
+                break;
+            }
+        }
+    }
+    let mut visited = vec![usize::MAX; n]; // per-phase column stamp
+    for r0 in 0..n {
+        if col_of_row[r0] != usize::MAX {
+            continue;
+        }
+        // iterative DFS: stack of (row, cursor into its column list);
+        // chosen[d] = the column frame d committed to before descending
+        let mut stack: Vec<(usize, usize)> = vec![(r0, 0)];
+        let mut chosen: Vec<usize> = vec![usize::MAX];
+        let mut augmented = false;
+        'dfs: while let Some(top) = stack.len().checked_sub(1) {
+            let (r, mut cur) = stack[top];
+            let cols = &row_cols[r];
+            // MC21 cheap-assignment lookahead: grab a free column of this
+            // row outright before descending into matched ones. Without it
+            // the crossbar structure (every V-branch row's free column at
+            // the end of a long alternating chain) degrades each phase to
+            // O(nnz); with it a phase costs the rows on the short path.
+            if cur == 0 {
+                if let Some(&j) = cols.iter().find(|&&j| row_of_col[j] == usize::MAX) {
+                    chosen[top] = j;
+                    for t in (0..stack.len()).rev() {
+                        row_of_col[chosen[t]] = stack[t].0;
+                        col_of_row[stack[t].0] = chosen[t];
+                    }
+                    augmented = true;
+                    break 'dfs;
+                }
+            }
+            while cur < cols.len() {
+                let j = cols[cur];
+                cur += 1;
+                if visited[j] == r0 {
+                    continue;
+                }
+                visited[j] = r0;
+                stack[top] = (r, cur);
+                chosen[top] = j;
+                if row_of_col[j] == usize::MAX {
+                    // free column: flip the alternating path
+                    for t in (0..stack.len()).rev() {
+                        row_of_col[chosen[t]] = stack[t].0;
+                        col_of_row[stack[t].0] = chosen[t];
+                    }
+                    augmented = true;
+                    break 'dfs;
+                }
+                stack.push((row_of_col[j], 0));
+                chosen.push(usize::MAX);
+                continue 'dfs;
+            }
+            stack.pop();
+            chosen.pop();
+        }
+        if !augmented {
+            return None;
+        }
+    }
+    Some(row_of_col)
+}
+
+impl Ilu0 {
+    /// Pattern analysis: deduplicate the triplet stream, find a zero-free
+    /// diagonal transversal, and lay out the permuted CSR pattern.
+    pub fn analyze(sys: &SparseSys) -> Result<Ilu0> {
+        let n = sys.n;
+        let mut pattern = Vec::with_capacity(sys.nnz());
+        let mut row_sets: Vec<HashSet<usize>> = vec![HashSet::new(); n];
+        for &(i, j, _) in sys.iter_triplets() {
+            if i >= n || j >= n {
+                bail!("ilu0: triplet ({i},{j}) out of range for n={n}");
+            }
+            pattern.push((i as u32, j as u32));
+            row_sets[i].insert(j);
+        }
+        let row_cols: Vec<Vec<usize>> = row_sets
+            .iter()
+            .map(|s| {
+                let mut v: Vec<usize> = s.iter().copied().collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let Some(perm) = max_transversal(&row_cols, n) else {
+            bail!("ilu0: structurally singular (no zero-free diagonal transversal)");
+        };
+        let mut pos_of_row = vec![0usize; n];
+        for (p, &r) in perm.iter().enumerate() {
+            pos_of_row[r] = p;
+        }
+        let mut ptr = Vec::with_capacity(n + 1);
+        ptr.push(0usize);
+        let mut cols = Vec::new();
+        let mut diag = vec![0usize; n];
+        for (p, &r) in perm.iter().enumerate() {
+            let rc = &row_cols[r];
+            let base = cols.len();
+            cols.extend_from_slice(rc);
+            let Ok(off) = rc.binary_search(&p) else {
+                bail!("ilu0: transversal missed diagonal {p}");
+            };
+            diag[p] = base + off;
+            ptr.push(cols.len());
+        }
+        let mut triplet_slot = Vec::with_capacity(pattern.len());
+        for &(i, j) in &pattern {
+            let p = pos_of_row[i as usize];
+            let row = &cols[ptr[p]..ptr[p + 1]];
+            let off = row.binary_search(&(j as usize)).expect("pattern entry present");
+            triplet_slot.push(ptr[p] + off);
+        }
+        let slots = cols.len();
+        Ok(Ilu0 {
+            n,
+            pattern,
+            triplet_slot,
+            perm,
+            ptr,
+            cols,
+            diag,
+            assembled: vec![0.0; slots],
+            vals: vec![0.0; slots],
+            factored: false,
+        })
+    }
+
+    /// Does this analysis apply to `sys`? True iff the triplet (i, j)
+    /// stream is identical (same stamp order, same topology).
+    pub fn matches(&self, sys: &SparseSys) -> bool {
+        sys.n == self.n && super::solve::pattern_matches(&self.pattern, sys)
+    }
+
+    /// Cheap fingerprint (dimension + triplet count). Cache lookups gate
+    /// on this before [`Ilu0::assemble`] performs the full pattern
+    /// comparison, so a warm solve pays one O(nnz) check, not two.
+    pub fn dims_match(&self, sys: &SparseSys) -> bool {
+        sys.n == self.n && sys.nnz() == self.pattern.len()
+    }
+
+    /// Accumulate the triplet values of `sys` into the assembled slots.
+    /// Returns `true` if the values are identical to the previous assembly
+    /// (and a valid factorization exists) — the numeric sweep can be
+    /// skipped. Errors if `sys` does not match this analysis' pattern.
+    pub fn assemble(&mut self, sys: &SparseSys) -> Result<bool> {
+        if !self.matches(sys) {
+            bail!("ilu0: circuit topology changed — re-analysis required");
+        }
+        let mut fresh = vec![0.0; self.cols.len()];
+        for (k, &(_, _, v)) in sys.iter_triplets().enumerate() {
+            fresh[self.triplet_slot[k]] += v;
+        }
+        if self.factored && fresh == self.assembled {
+            return Ok(true);
+        }
+        self.assembled = fresh;
+        self.factored = false;
+        Ok(false)
+    }
+
+    /// Numeric ILU(0) sweep over the fixed pattern (IKJ order; updates
+    /// restricted to existing entries, so zero fill by construction).
+    pub fn factor(&mut self) -> Result<()> {
+        self.factored = false;
+        self.vals.copy_from_slice(&self.assembled);
+        let n = self.n;
+        let ptr = &self.ptr;
+        let cols = &self.cols;
+        let diag = &self.diag;
+        let vals = &mut self.vals;
+        for i in 0..n {
+            let ri1 = ptr[i + 1];
+            let di = diag[i];
+            for t in ptr[i]..di {
+                let k = cols[t];
+                let piv = vals[diag[k]];
+                if piv.abs() < 1e-300 {
+                    bail!("ilu0: pivot collapsed at column {k}");
+                }
+                let f = vals[t] / piv;
+                vals[t] = f;
+                if f == 0.0 {
+                    continue;
+                }
+                // intersect upper(k) with the tail of row i: both column
+                // lists ascend, so the search window only moves forward
+                let mut lo = t + 1;
+                for u in (diag[k] + 1)..ptr[k + 1] {
+                    if lo >= ri1 {
+                        break;
+                    }
+                    let j = cols[u];
+                    match cols[lo..ri1].binary_search(&j) {
+                        Ok(off) => {
+                            vals[lo + off] -= f * vals[u];
+                            lo += off + 1;
+                        }
+                        Err(off) => lo += off,
+                    }
+                }
+            }
+        }
+        self.factored = true;
+        Ok(())
+    }
+
+    /// Solve `(LU) z = P r` (the preconditioner application).
+    pub fn solve(&self, r: &[f64]) -> Result<Vec<f64>> {
+        if !self.factored {
+            bail!("ilu0: solve before factor");
+        }
+        let n = self.n;
+        if r.len() != n {
+            bail!("ilu0: rhs has {} entries, system has {n}", r.len());
+        }
+        let mut w: Vec<f64> = self.perm.iter().map(|&p| r[p]).collect();
+        // forward: unit-diagonal L (strictly-lower slots hold multipliers)
+        for i in 0..n {
+            let mut acc = w[i];
+            for t in self.ptr[i]..self.diag[i] {
+                acc -= self.vals[t] * w[self.cols[t]];
+            }
+            w[i] = acc;
+        }
+        // backward: U
+        for i in (0..n).rev() {
+            let d = self.diag[i];
+            let mut acc = w[i];
+            for t in (d + 1)..self.ptr[i + 1] {
+                acc -= self.vals[t] * w[self.cols[t]];
+            }
+            let dv = self.vals[d];
+            if dv.abs() < 1e-300 {
+                bail!("ilu0: zero diagonal in back-substitution at column {i}");
+            }
+            w[i] = acc / dv;
+        }
+        Ok(w)
+    }
+}
+
+impl Precond for Ilu0 {
+    fn apply(&self, r: &[f64]) -> Result<Vec<f64>> {
+        self.solve(r)
+    }
+
+    fn entries(&self) -> usize {
+        self.cols.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "ilu0"
+    }
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Restarted, right-preconditioned GMRES(m) over the triplet stream of
+/// `sys` (the matrix; `sys.b` is ignored — the right-hand side is the
+/// explicit `b`). Right preconditioning keeps the monitored residual the
+/// *true* residual, so the convergence test needs no back-transformation.
+///
+/// Returns the solution plus [`SolveStats`] whose `peak_entries` counts
+/// the preconditioner's resident slots and the Krylov basis — the
+/// iterative path's answer to the direct engine's `factor_entries`.
+/// Exhausting `cfg.max_iter` without reaching `cfg.tol` is a clean `Err`.
+pub fn gmres<P: Precond + ?Sized>(
+    sys: &SparseSys,
+    b: &[f64],
+    pre: &P,
+    cfg: &KrylovCfg,
+) -> Result<(Vec<f64>, SolveStats)> {
+    let n = sys.n;
+    if b.len() != n {
+        bail!("krylov: rhs has {} entries, system has {n}", b.len());
+    }
+    for &(i, j, _) in sys.iter_triplets() {
+        if i >= n || j >= n {
+            bail!("krylov: triplet ({i},{j}) out of range for n={n}");
+        }
+    }
+    let m = cfg.restart.clamp(1, n.max(1));
+    let mut stats = SolveStats::direct(pre.entries() + (m + 1) * n, n);
+    let bnorm = norm2(b);
+    if bnorm == 0.0 {
+        return Ok((vec![0.0; n], stats));
+    }
+    let matvec = |x: &[f64]| {
+        let mut y = vec![0.0; n];
+        for &(i, j, v) in sys.iter_triplets() {
+            y[i] += v * x[j];
+        }
+        y
+    };
+    let mut x = vec![0.0; n];
+    let mut iters = 0usize;
+    while iters < cfg.max_iter {
+        let ax = matvec(&x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let beta = norm2(&r);
+        if beta <= cfg.tol * bnorm {
+            stats.iterations = iters;
+            stats.residual = beta / bnorm;
+            return Ok((x, stats));
+        }
+        // Arnoldi (modified Gram-Schmidt) with Givens-rotated Hessenberg:
+        // h[k] is column k (length k+2); g tracks the rotated residual
+        let mut v_basis: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+        v_basis.push(r.iter().map(|t| t / beta).collect());
+        let mut h: Vec<Vec<f64>> = Vec::with_capacity(m);
+        let mut cs = vec![0.0f64; m];
+        let mut sn = vec![0.0f64; m];
+        let mut g = vec![0.0f64; m + 1];
+        g[0] = beta;
+        let mut k_used = 0usize;
+        for k in 0..m {
+            if iters >= cfg.max_iter {
+                break;
+            }
+            iters += 1;
+            let z = pre.apply(&v_basis[k])?;
+            let mut w = matvec(&z);
+            let mut hk = vec![0.0f64; k + 2];
+            for (i, vb) in v_basis.iter().enumerate().take(k + 1) {
+                let hik: f64 = w.iter().zip(vb).map(|(a, c)| a * c).sum();
+                hk[i] = hik;
+                for (wv, vv) in w.iter_mut().zip(vb) {
+                    *wv -= hik * vv;
+                }
+            }
+            let wnorm = norm2(&w);
+            hk[k + 1] = wnorm;
+            if wnorm > 1e-300 {
+                for wv in w.iter_mut() {
+                    *wv /= wnorm;
+                }
+                v_basis.push(w);
+            } else {
+                // happy breakdown: the subspace is invariant; the rotated
+                // residual below goes to ~0 and the cycle closes
+                v_basis.push(vec![0.0; n]);
+            }
+            for i in 0..k {
+                let t = cs[i] * hk[i] + sn[i] * hk[i + 1];
+                hk[i + 1] = -sn[i] * hk[i] + cs[i] * hk[i + 1];
+                hk[i] = t;
+            }
+            let d = hk[k].hypot(hk[k + 1]);
+            if d < 1e-300 {
+                cs[k] = 1.0;
+                sn[k] = 0.0;
+            } else {
+                cs[k] = hk[k] / d;
+                sn[k] = hk[k + 1] / d;
+            }
+            hk[k] = cs[k] * hk[k] + sn[k] * hk[k + 1];
+            hk[k + 1] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] = cs[k] * g[k];
+            h.push(hk);
+            k_used = k + 1;
+            if g[k + 1].abs() <= cfg.tol * bnorm {
+                break;
+            }
+        }
+        if k_used == 0 {
+            break;
+        }
+        // back-substitute y from the rotated (upper-triangular) H
+        let mut y = vec![0.0f64; k_used];
+        for i in (0..k_used).rev() {
+            let mut acc = g[i];
+            for (j, yj) in y.iter().enumerate().skip(i + 1) {
+                acc -= h[j][i] * yj;
+            }
+            let hii = h[i][i];
+            if hii.abs() < 1e-300 {
+                bail!("krylov: singular least-squares system at column {i}");
+            }
+            y[i] = acc / hii;
+        }
+        // x += M⁻¹ (V y)  (right preconditioning)
+        let mut corr = vec![0.0f64; n];
+        for (yi, vb) in y.iter().zip(&v_basis) {
+            for (c, vv) in corr.iter_mut().zip(vb) {
+                *c += yi * vv;
+            }
+        }
+        let zc = pre.apply(&corr)?;
+        for (xv, zv) in x.iter_mut().zip(&zc) {
+            *xv += zv;
+        }
+    }
+    let ax = matvec(&x);
+    let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+    let relres = norm2(&r) / bnorm;
+    // the rotated-residual estimate can be slightly optimistic; accept a
+    // small slack against the true residual before declaring failure
+    if relres <= cfg.tol * 10.0 {
+        stats.iterations = iters;
+        stats.residual = relres;
+        return Ok((x, stats));
+    }
+    bail!(
+        "krylov: gmres({}) with {} preconditioner failed to converge within {} iterations \
+         (relative residual {relres:.3e}, tol {:.1e})",
+        m,
+        pre.label(),
+        cfg.max_iter,
+        cfg.tol
+    )
+}
+
+/// Batched GMRES: every right-hand side shares `pre` (built once), with
+/// the per-column Krylov sweeps pipelined across `workers` threads via
+/// [`pool::par_map`] — the iterative twin of
+/// [`Numeric::solve_multi`](super::factor::Numeric::solve_multi).
+/// Aggregated stats: `iterations` sums the per-column counts, `residual`
+/// is the worst column, `peak_entries` counts the shared preconditioner
+/// once plus one Krylov basis per concurrent worker.
+pub fn gmres_batch<P: Precond + ?Sized>(
+    sys: &SparseSys,
+    bs: &[Vec<f64>],
+    pre: &P,
+    cfg: &KrylovCfg,
+    workers: usize,
+) -> Result<(Vec<Vec<f64>>, SolveStats)> {
+    if bs.is_empty() {
+        return Ok((Vec::new(), SolveStats::direct(pre.entries(), sys.n)));
+    }
+    let results = pool::par_map(bs, workers.max(1), |b| gmres(sys, b, pre, cfg));
+    let m = cfg.restart.clamp(1, sys.n.max(1));
+    let concurrency = workers.max(1).min(bs.len());
+    let mut stats = SolveStats::direct(pre.entries() + concurrency * (m + 1) * sys.n, sys.n);
+    let mut xs = Vec::with_capacity(bs.len());
+    for r in results {
+        let (x, st) = r?;
+        stats.iterations += st.iterations;
+        stats.residual = stats.residual.max(st.residual);
+        xs.push(x);
+    }
+    Ok((xs, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::factor;
+    use crate::spice::solve::{solve_dense, Ordering};
+    use crate::util::prng::Rng;
+
+    fn random_system(n: usize, diag: f64, rng: &mut Rng) -> (Vec<Vec<f64>>, SparseSys) {
+        let mut dense = vec![vec![0.0; n]; n];
+        let mut sys = SparseSys::new(n);
+        for i in 0..n {
+            for _ in 0..3 {
+                let j = rng.below(n);
+                let v = rng.range_f64(-1.0, 1.0);
+                dense[i][j] += v;
+                sys.add(i, j, v);
+            }
+            dense[i][i] += diag;
+            sys.add(i, i, diag);
+        }
+        for i in 0..n {
+            sys.add_b(i, rng.range_f64(-2.0, 2.0));
+        }
+        (dense, sys)
+    }
+
+    fn gmres_vs_dense(n: usize, diag: f64, seed: u64, cfg: &KrylovCfg) {
+        let mut rng = Rng::new(seed);
+        let (dense, sys) = random_system(n, diag, &mut rng);
+        let xd = solve_dense(&dense, &sys.b).unwrap();
+        let mut pre = Ilu0::analyze(&sys).unwrap();
+        assert!(!pre.assemble(&sys).unwrap());
+        pre.factor().unwrap();
+        let (x, st) = gmres(&sys, &sys.b, &pre, cfg).unwrap();
+        assert!(st.iterations > 0 && st.residual <= cfg.tol * 10.0);
+        for i in 0..n {
+            assert!((x[i] - xd[i]).abs() < 1e-7, "n={n} diag={diag} x[{i}]: {} vs {}", x[i], xd[i]);
+        }
+    }
+
+    #[test]
+    fn gmres_ilu0_matches_dense() {
+        let cfg = KrylovCfg::default();
+        gmres_vs_dense(12, 5.0, 3, &cfg);
+        gmres_vs_dense(40, 5.0, 7, &cfg);
+        gmres_vs_dense(80, 5.0, 11, &cfg);
+    }
+
+    #[test]
+    fn gmres_restarts_on_weakly_preconditioned_system() {
+        // weak diagonal: ILU(0) is genuinely incomplete, forcing several
+        // restart cycles through the small subspace
+        let cfg = KrylovCfg { restart: 8, tol: 1e-10, max_iter: 4000 };
+        gmres_vs_dense(60, 1.3, 17, &cfg);
+    }
+
+    #[test]
+    fn zero_diagonal_handled_by_transversal() {
+        // the PR 1 pivot case: both diagonals structurally zero
+        let mut s = SparseSys::new(2);
+        s.add(0, 1, 1.0);
+        s.add(1, 0, 1.0);
+        s.add_b(0, 3.0);
+        s.add_b(1, 7.0);
+        let mut pre = Ilu0::analyze(&s).unwrap();
+        pre.assemble(&s).unwrap();
+        pre.factor().unwrap();
+        let (x, _) = gmres(&s, &s.b, &pre, &KrylovCfg::default()).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-10 && (x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn structurally_singular_rejected() {
+        let mut s = SparseSys::new(2);
+        s.add(0, 0, 1.0);
+        s.add(1, 0, 1.0); // column 1 empty
+        assert!(Ilu0::analyze(&s).is_err());
+    }
+
+    #[test]
+    fn max_iter_exhaustion_is_clean_error() {
+        let mut rng = Rng::new(5);
+        let (_, sys) = random_system(30, 1.1, &mut rng);
+        let mut pre = Ilu0::analyze(&sys).unwrap();
+        pre.assemble(&sys).unwrap();
+        pre.factor().unwrap();
+        let cfg = KrylovCfg { restart: 2, tol: 1e-14, max_iter: 1 };
+        let err = gmres(&sys, &sys.b, &pre, &cfg).unwrap_err();
+        assert!(err.to_string().contains("failed to converge"), "{err}");
+    }
+
+    #[test]
+    fn assemble_rejects_different_pattern() {
+        let mut a = SparseSys::new(2);
+        a.add(0, 0, 1.0);
+        a.add(1, 1, 1.0);
+        let mut pre = Ilu0::analyze(&a).unwrap();
+        let mut b = SparseSys::new(2);
+        b.add(0, 1, 1.0);
+        b.add(1, 0, 1.0);
+        assert!(pre.assemble(&b).is_err());
+    }
+
+    #[test]
+    fn assemble_detects_unchanged_values() {
+        let mut rng = Rng::new(9);
+        let (_, sys) = random_system(10, 4.0, &mut rng);
+        let mut pre = Ilu0::analyze(&sys).unwrap();
+        assert!(!pre.assemble(&sys).unwrap());
+        pre.factor().unwrap();
+        assert!(pre.assemble(&sys).unwrap(), "identical values must skip the sweep");
+    }
+
+    #[test]
+    fn cached_numeric_is_perfect_preconditioner() {
+        // complete LU of the same values: GMRES must converge immediately
+        let mut rng = Rng::new(21);
+        let (dense, sys) = random_system(25, 5.0, &mut rng);
+        let xd = solve_dense(&dense, &sys.b).unwrap();
+        let (_, num) = factor::factor_solve(&sys, Ordering::Smart).unwrap();
+        let (x, st) = gmres(&sys, &sys.b, &num, &KrylovCfg::default()).unwrap();
+        assert!(st.iterations <= 2, "perfect preconditioner took {} iters", st.iterations);
+        for i in 0..25 {
+            assert!((x[i] - xd[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(31);
+        let (_, sys) = random_system(20, 5.0, &mut rng);
+        let mut pre = Ilu0::analyze(&sys).unwrap();
+        pre.assemble(&sys).unwrap();
+        pre.factor().unwrap();
+        let bs: Vec<Vec<f64>> = (0..5)
+            .map(|k| (0..20).map(|i| ((i + 3 * k) as f64 * 0.37).sin()).collect())
+            .collect();
+        let cfg = KrylovCfg::default();
+        let (xs, st) = gmres_batch(&sys, &bs, &pre, &cfg, 3).unwrap();
+        assert!(st.iterations > 0);
+        for (b, x) in bs.iter().zip(&xs) {
+            let (xi, _) = gmres(&sys, b, &pre, &cfg).unwrap();
+            for (a, c) in x.iter().zip(&xi) {
+                assert!((a - c).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_parse_display_roundtrip() {
+        for s in ["direct", "iterative", "auto"] {
+            let parsed: SolverStrategy = s.parse().unwrap();
+            assert_eq!(parsed.to_string(), s);
+        }
+        assert!("gmres".parse::<SolverStrategy>().is_err());
+        assert_eq!(SolverStrategy::default(), SolverStrategy::Auto);
+    }
+
+    #[test]
+    fn auto_threshold_selects_by_pattern_size() {
+        let auto = SolverStrategy::Auto;
+        assert!(!auto.wants_iterative(1000));
+        assert!(!auto.wants_iterative(AUTO_NNZ_THRESHOLD - 1));
+        assert!(auto.wants_iterative(AUTO_NNZ_THRESHOLD));
+        assert!(!SolverStrategy::Direct.wants_iterative(1 << 30));
+        assert!("iterative".parse::<SolverStrategy>().unwrap().wants_iterative(2));
+    }
+}

@@ -20,8 +20,34 @@
 //! fall back to the reference solver ([`solve::SparseSys::solve_with_stats`],
 //! reachable directly via [`Circuit::dc_op_stats_reference`]) whenever the
 //! cached pivot order goes stale.
+//!
+//! # Direct vs iterative selection
+//!
+//! Giant monolithic crossbars (the paper's 2050x1024 case and beyond) are
+//! memory-bound under even one complete factorization. [`Circuit`]
+//! therefore carries a [`krylov::SolverStrategy`]
+//! ([`Circuit::set_solver`], threaded from `PipelineBuilder` and the
+//! `--solver` CLI flag): `Direct` always uses the factor engine,
+//! `Iterative` always runs preconditioned restarted GMRES
+//! ([`krylov::gmres`]), and the default `Auto` switches to GMRES above the
+//! monolithic pattern-size threshold ([`krylov::AUTO_NNZ_THRESHOLD`]) so
+//! segmented circuits keep the exact direct behaviour.
+//!
+//! **Preconditioner-reuse contract**: an iterative solve preconditions
+//! with, in order of preference, (1) an already-cached complete
+//! [`factor::Numeric`] whose pattern matches — even when its *values* are
+//! stale (programming noise, drift, Newton updates), the old LU is a
+//! near-perfect preconditioner, so warm re-solves converge in a handful of
+//! iterations with no refactorization; (2) the cached [`krylov::Ilu0`]
+//! pattern, re-swept in place only when stamp values changed; (3) a fresh
+//! ILU(0) analysis (cold solve), cached for the next call. Every iterative
+//! solution passes the same scaled-residual gate as the factored path and
+//! falls back to the direct engine on any failure, so the iterative path
+//! is never less accurate — solutions agree with direct solves within the
+//! 1e-6 pinned test tolerance (typically ~1e-10).
 
 pub mod factor;
+pub mod krylov;
 pub mod solve;
 
 use std::collections::BTreeMap;
@@ -77,6 +103,9 @@ enum CacheState {
     /// fill-in explosion) — skip re-attempting it while the cheap
     /// fingerprint matches, and go straight to the reference solver
     Unusable { ordering: solve::Ordering, dim: usize, nnz: usize },
+    /// the iterative path's ILU(0) preconditioner for the current topology
+    /// (pattern + transversal cached; values re-swept in place on change)
+    Ilu(krylov::Ilu0),
 }
 
 #[derive(Debug, Clone)]
@@ -123,6 +152,7 @@ pub struct Circuit {
     next_node: usize,
     names: BTreeMap<String, usize>,
     factor_cache: FactorCache,
+    solver: krylov::SolverStrategy,
 }
 
 impl Circuit {
@@ -224,6 +254,16 @@ impl Circuit {
         }
     }
 
+    /// Select the linear-solver strategy for subsequent solves (see the
+    /// module docs; default [`krylov::SolverStrategy::Auto`]).
+    pub fn set_solver(&mut self, solver: krylov::SolverStrategy) {
+        self.solver = solver;
+    }
+
+    pub fn solver(&self) -> krylov::SolverStrategy {
+        self.solver
+    }
+
     fn num_branches(&self) -> usize {
         self.elements
             .iter()
@@ -284,12 +324,21 @@ impl Circuit {
             .any(|e| matches!(e, Element::Diode(..) | Element::Mult(..)));
 
         let mut v_nodes = vec![0.0; n_nodes];
-        let mut stats = solve::SolveStats { peak_entries: 0, unknowns: dim };
+        let mut stats = solve::SolveStats::direct(0, dim);
         let max_newton = if has_diodes { 200 } else { 1 };
         for _it in 0..max_newton {
             let sys = self.stamp(dim, n_nodes, &v_nodes)?;
             let x = if factored {
-                let (x, st) = self.solve_factored(&sys, ordering)?;
+                let (x, st) = if self.solver.wants_iterative(sys.nnz()) {
+                    match self.solve_krylov(&sys) {
+                        Some(r) => r,
+                        // iterative failure (non-convergence, structural
+                        // singularity, residual gate): direct semantics
+                        None => self.solve_factored(&sys, ordering)?,
+                    }
+                } else {
+                    self.solve_factored(&sys, ordering)?
+                };
                 stats = st;
                 x
             } else if dim <= 220 {
@@ -298,7 +347,7 @@ impl Circuit {
                 for &(i, j, v) in sys.iter_triplets() {
                     a[i][j] += v;
                 }
-                stats = solve::SolveStats { peak_entries: dim * dim, unknowns: dim };
+                stats = solve::SolveStats::direct(dim * dim, dim);
                 solve_dense(&a, &sys.b).context("dense MNA solve")?
             } else {
                 let (x, st) = sys.solve_with_stats(ordering).context("sparse MNA solve")?;
@@ -386,6 +435,93 @@ impl Circuit {
         }
     }
 
+    /// Resolve a preconditioner per the module-docs reuse contract and run
+    /// `run` against it under the cache lock. Returns the result plus
+    /// whether a cached preconditioner was reused (vs a fresh analysis);
+    /// `None` means the caller should fall back to the direct engine.
+    fn solve_krylov_with<R>(
+        &self,
+        sys: &SparseSys,
+        run: impl Fn(&dyn krylov::Precond) -> Result<R>,
+    ) -> Option<(R, bool)> {
+        let mut guard = self.factor_cache.0.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.as_mut() {
+            Some(CacheState::Ready(entry))
+                if entry.numeric.is_factored() && entry.numeric.symbolic().matches(sys) =>
+            {
+                // warm: the (possibly value-stale) complete LU — no
+                // reassembly, no refactorization; on failure leave the
+                // entry intact so the direct fallback can refactor it
+                return run(&entry.numeric).ok().map(|r| (r, true));
+            }
+            Some(CacheState::Ilu(pre)) if pre.dims_match(sys) => {
+                // assemble performs the full pattern comparison; its Err
+                // means the topology truly changed — rebuild below
+                let swept = match pre.assemble(sys) {
+                    Ok(true) => Some(true),
+                    Ok(false) => Some(pre.factor().is_ok()),
+                    Err(_) => None,
+                };
+                match swept {
+                    Some(true) => return run(&*pre).ok().map(|r| (r, true)),
+                    // value-dependent breakdown: keep the analysis (the
+                    // pattern is still valid — the next value set may
+                    // sweep fine) and fall back to the direct engine
+                    Some(false) => return None,
+                    None => {}
+                }
+            }
+            _ => {}
+        }
+        // cold: fresh pattern analysis + ILU(0) sweep. The analysis is
+        // cached even when the numeric sweep or the solve fails — those
+        // failures are value-dependent, and later solves must retry the
+        // cheap sweep, not repeat the O(nnz) pattern analysis.
+        let mut pre = krylov::Ilu0::analyze(sys).ok()?;
+        let out = if pre.assemble(sys).is_err() || pre.factor().is_err() {
+            None
+        } else {
+            run(&pre).ok()
+        };
+        *guard = Some(CacheState::Ilu(pre));
+        out.map(|r| (r, false))
+    }
+
+    /// One iterative solve of the stamped system (GMRES + cached
+    /// preconditioner), residual-certified. `None` => use the direct path.
+    fn solve_krylov(&self, sys: &SparseSys) -> Option<(Vec<f64>, solve::SolveStats)> {
+        let cfg = self.solver.cfg();
+        let run = |pre: &dyn krylov::Precond| -> Result<(Vec<f64>, solve::SolveStats)> {
+            let (x, st) = krylov::gmres(sys, &sys.b, pre, &cfg)?;
+            if !residual_ok(sys, &sys.b, &x) {
+                bail!("krylov: converged solution failed the residual gate");
+            }
+            Ok((x, st))
+        };
+        let ((x, mut st), reused) = self.solve_krylov_with(sys, run)?;
+        st.precond_reused = reused;
+        Some((x, st))
+    }
+
+    /// Iterative multi-RHS solve: one shared preconditioner, Krylov sweeps
+    /// pipelined across RHS columns over `workers` threads.
+    fn solve_krylov_batch(
+        &self,
+        sys: &SparseSys,
+        rhss: &[Vec<f64>],
+        workers: usize,
+    ) -> Option<Vec<Vec<f64>>> {
+        let cfg = self.solver.cfg();
+        let run = |pre: &dyn krylov::Precond| -> Result<Vec<Vec<f64>>> {
+            let (xs, _st) = krylov::gmres_batch(sys, rhss, pre, &cfg, workers)?;
+            if !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
+                bail!("krylov: batch solution failed the residual gate");
+            }
+            Ok(xs)
+        };
+        self.solve_krylov_with(sys, run).map(|(xs, _)| xs)
+    }
+
     /// Batched DC operating points over a fixed topology. Each batch entry
     /// is a list of `(vsource element index, volts)` overrides (see
     /// [`Circuit::vsource_index`]); entries are applied in order and the
@@ -393,13 +529,26 @@ impl Circuit {
     ///
     /// Linear circuits (no diodes/multipliers — i.e. crossbar reads) pay
     /// one factorization plus a single multi-RHS substitution pass for the
-    /// whole batch; nonlinear circuits fall back to sequential (still
-    /// symbolic-cached) Newton solves. Returns node-voltage vectors like
-    /// [`Circuit::dc_op`].
+    /// whole batch (or, under an iterative [`krylov::SolverStrategy`], one
+    /// shared preconditioner plus per-RHS GMRES sweeps); nonlinear
+    /// circuits fall back to sequential (still symbolic-cached) Newton
+    /// solves. Returns node-voltage vectors like [`Circuit::dc_op`].
     pub fn dc_op_batch(
         &mut self,
         overrides: &[Vec<(usize, f64)>],
         ordering: solve::Ordering,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.dc_op_batch_par(overrides, ordering, 1)
+    }
+
+    /// [`Circuit::dc_op_batch`] with the iterative path's per-RHS Krylov
+    /// sweeps distributed over `workers` threads (direct multi-RHS
+    /// substitution is single-pass and ignores `workers`).
+    pub fn dc_op_batch_par(
+        &mut self,
+        overrides: &[Vec<(usize, f64)>],
+        ordering: solve::Ordering,
+        workers: usize,
     ) -> Result<Vec<Vec<f64>>> {
         if overrides.is_empty() {
             return Ok(Vec::new());
@@ -424,6 +573,19 @@ impl Circuit {
                 self.set_vsource_at(idx, v)?;
             }
             rhss.push(self.stamp_rhs(dim, n_nodes));
+        }
+
+        if self.solver.wants_iterative(sys.nnz()) {
+            if let Some(xs) = self.solve_krylov_batch(&sys, &rhss, workers) {
+                return Ok(xs
+                    .into_iter()
+                    .map(|x| {
+                        let mut v_nodes = vec![0.0; n_nodes];
+                        v_nodes[1..].copy_from_slice(&x[..n_nodes - 1]);
+                        v_nodes
+                    })
+                    .collect());
+            }
         }
 
         let solved = {
@@ -645,6 +807,38 @@ impl Circuit {
     }
 }
 
+/// Synthetic n-input, c-column ideal-TIA crossbar as one monolithic MNA
+/// [`Circuit`] — bench/test scaffolding shared by the solver benches, the
+/// Krylov integration tests and the property tests. Same shape the
+/// netlist emitter produces for an FC layer (input V sources, memristor
+/// resistors `r_base/g` with g in (0.05, 0.95), feedback `r_base/2`,
+/// 1e6-gain TIA op-amps), stamped directly so giant sizes skip the
+/// netlist-text round trip.
+pub fn synthetic_crossbar_circuit(
+    inputs: usize,
+    cols: usize,
+    r_base: f64,
+    seed: u64,
+) -> Circuit {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut c = Circuit::new("synthetic monolithic crossbar");
+    let in_nodes: Vec<usize> = (0..inputs).map(|r| c.node(&format!("in{r}"))).collect();
+    for (r, &node) in in_nodes.iter().enumerate() {
+        c.vsource(&format!("V{r}"), node, 0, (r as f64 * 0.7).sin() * 0.3);
+    }
+    for col in 0..cols {
+        let vcol = c.node(&format!("vcol{col}"));
+        let vout = c.node(&format!("vout{col}"));
+        for (r, &node) in in_nodes.iter().enumerate() {
+            let g = 0.05 + 0.9 * rng.f64();
+            c.resistor(&format!("RM{r}_{col}"), node, vcol, r_base / g);
+        }
+        c.resistor(&format!("RF{col}"), vcol, vout, r_base / 2.0);
+        c.opamp(&format!("E{col}"), 0, vcol, vout);
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -832,6 +1026,108 @@ mod tests {
             c.set_vsource_at(ov[0].0, ov[0].1).unwrap();
             let seq = c.dc_op().unwrap();
             assert!((out[k][mid] - seq[mid]).abs() < 1e-9, "point {k}");
+        }
+    }
+
+    #[test]
+    fn iterative_solver_matches_direct_on_crossbar() {
+        let mut c = crossbar_like(24, 6);
+        c.set_solver(krylov::SolverStrategy::Iterative {
+            restart: 16,
+            tol: 1e-11,
+            max_iter: 400,
+        });
+        let idxs: Vec<usize> =
+            (0..24).map(|r| c.vsource_index(&format!("V{r}")).unwrap()).collect();
+        for sweep in 0..3 {
+            for (r, &i) in idxs.iter().enumerate() {
+                c.set_vsource_at(i, ((r + sweep) as f64 * 0.29).sin() * 0.4).unwrap();
+            }
+            let (x, st) = c.dc_op_stats(solve::Ordering::Smart).unwrap();
+            assert!(st.iterations > 0, "iterative path must have run");
+            assert_eq!(st.precond_reused, sweep > 0, "ILU pattern cached after sweep 0");
+            let (reference, _) = c.dc_op_stats_reference(solve::Ordering::Smart).unwrap();
+            for (a, b) in x.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-6, "sweep {sweep}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_gmres_reuses_cached_lu_after_value_drift() {
+        // factor once directly, drift memristor values, then iterative
+        // re-solves must converge off the stale LU with no refactorization
+        let mut c = crossbar_like(16, 4);
+        c.set_solver(krylov::SolverStrategy::Direct);
+        let (_, st0) = c.dc_op_stats(solve::Ordering::Smart).unwrap();
+        assert_eq!(st0.iterations, 0);
+        for e in c.elements.iter_mut() {
+            if let Element::Resistor(name, _, _, r) = e {
+                if name.starts_with("RM") {
+                    *r *= 1.02; // programming-noise-style value drift
+                }
+            }
+        }
+        c.set_solver(krylov::SolverStrategy::Iterative {
+            restart: 16,
+            tol: 1e-11,
+            max_iter: 400,
+        });
+        let (x, st) = c.dc_op_stats(solve::Ordering::Smart).unwrap();
+        assert!(st.precond_reused, "stale complete LU must serve as preconditioner");
+        assert!(st.iterations > 0 && st.iterations <= 16, "handful of iterations");
+        let (reference, _) = c.dc_op_stats_reference(solve::Ordering::Smart).unwrap();
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn iterative_batch_matches_sequential() {
+        let mut c = crossbar_like(12, 4);
+        c.set_solver(krylov::SolverStrategy::Iterative {
+            restart: 16,
+            tol: 1e-11,
+            max_iter: 400,
+        });
+        let idxs: Vec<usize> =
+            (0..12).map(|r| c.vsource_index(&format!("V{r}")).unwrap()).collect();
+        let batches: Vec<Vec<(usize, f64)>> = (0..4)
+            .map(|k| {
+                idxs.iter()
+                    .enumerate()
+                    .map(|(r, &i)| (i, ((r * 5 + k) as f64 * 0.19).sin() * 0.5))
+                    .collect()
+            })
+            .collect();
+        let batched =
+            c.clone().dc_op_batch_par(&batches, solve::Ordering::Smart, 2).unwrap();
+        for (k, ov) in batches.iter().enumerate() {
+            for &(i, v) in ov {
+                c.set_vsource_at(i, v).unwrap();
+            }
+            let (seq, _) = c.dc_op_stats_reference(solve::Ordering::Smart).unwrap();
+            for (a, b) in batched[k].iter().zip(&seq) {
+                assert!((a - b).abs() < 1e-6, "batch {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn unconvergeable_iterative_config_falls_back_to_direct() {
+        // max_iter 0 can never converge: the solve must silently take the
+        // direct path and stay exact (no panic, no error)
+        let mut c = crossbar_like(10, 3);
+        c.set_solver(krylov::SolverStrategy::Iterative {
+            restart: 4,
+            tol: 1e-15,
+            max_iter: 0,
+        });
+        let (x, st) = c.dc_op_stats(solve::Ordering::Smart).unwrap();
+        assert_eq!(st.iterations, 0, "fallback solve is direct");
+        let (reference, _) = c.dc_op_stats_reference(solve::Ordering::Smart).unwrap();
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-9);
         }
     }
 

@@ -78,11 +78,44 @@ pub enum Ordering {
 }
 
 /// Work/memory counters from one sparse solve.
+///
+/// Direct solves report only the first two fields; the iterative engine
+/// ([`crate::spice::krylov`]) additionally fills the Krylov counters so
+/// benches and the `BENCH_spice.json` schema can contrast the paths.
 #[derive(Debug, Clone, Copy)]
 pub struct SolveStats {
-    /// resident matrix entries at the end of elimination (original + fill)
+    /// resident matrix entries: elimination peak (original + fill +
+    /// multipliers) for direct solves, preconditioner slots + Krylov basis
+    /// for iterative ones
     pub peak_entries: usize,
     pub unknowns: usize,
+    /// GMRES inner iterations (0 = direct solve)
+    pub iterations: usize,
+    /// final relative residual of an iterative solve (0.0 for direct)
+    pub residual: f64,
+    /// a warm iterative solve reused a cached preconditioner (complete-LU
+    /// or ILU pattern) without any fresh analysis/refactorization
+    pub precond_reused: bool,
+}
+
+impl SolveStats {
+    /// Counters of a direct (non-Krylov) solve.
+    pub fn direct(peak_entries: usize, unknowns: usize) -> SolveStats {
+        SolveStats { peak_entries, unknowns, iterations: 0, residual: 0.0, precond_reused: false }
+    }
+}
+
+/// Does `pattern` equal the (i, j) triplet stream of `sys` (same stamp
+/// order, same topology)? Shared by the factor and krylov engines'
+/// cache-validity checks.
+pub(crate) fn pattern_matches(pattern: &[(u32, u32)], sys: &SparseSys) -> bool {
+    if sys.nnz() != pattern.len() {
+        return false;
+    }
+    pattern
+        .iter()
+        .zip(sys.iter_triplets())
+        .all(|(&(pi, pj), &(i, j, _))| pi as usize == i && pj as usize == j)
 }
 
 /// Sparse linear system `A x = b` assembled from triplets.
@@ -264,7 +297,7 @@ impl SparseSys {
             x[col] = s / diag;
         }
         let peak = rows.iter().map(|r| r.len()).sum::<usize>().max(assembled_nnz);
-        Ok((x, SolveStats { peak_entries: peak, unknowns: n }))
+        Ok((x, SolveStats::direct(peak, n)))
     }
 
     /// Residual max-norm ||Ax - b||_inf (for tests / diagnostics).

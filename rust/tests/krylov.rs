@@ -1,0 +1,149 @@
+//! Integration tests for `spice::krylov` — the preconditioned iterative
+//! path for giant monolithic crossbars.
+//!
+//! Pins the subsystem's acceptance contract on a monolithic ideal-TIA
+//! crossbar MNA system:
+//!   * GMRES+ILU(0) outputs match the direct factor engine within the
+//!     documented 1e-6 tolerance,
+//!   * the iterative path's peak resident entries (preconditioner +
+//!     Krylov basis) stay strictly below the direct LU's factor entries,
+//!   * warm re-solves after value-only restamps reuse the cached
+//!     preconditioner and converge without refactorization.
+//!
+//! The paper-scale 2050x1024 run is the same code path at full size; it is
+//! exercised by `cargo bench --bench bench_crossbar` and by the env-gated
+//! test below (`MEMX_FULL_SCALE=1`, release profile recommended).
+
+use memx::spice::krylov::SolverStrategy;
+use memx::spice::solve::Ordering;
+use memx::spice::{synthetic_crossbar_circuit as monolithic_crossbar, Element};
+
+fn iterative(restart: usize) -> SolverStrategy {
+    SolverStrategy::Iterative { restart, tol: 1e-11, max_iter: 600 }
+}
+
+#[test]
+fn monolithic_gmres_matches_direct_with_strictly_less_memory() {
+    let mut direct = monolithic_crossbar(320, 128, 100.0, 42);
+    direct.set_solver(SolverStrategy::Direct);
+    let (xd, sd) = direct.dc_op_stats(Ordering::Smart).unwrap();
+    assert_eq!(sd.iterations, 0);
+
+    let mut gmres = monolithic_crossbar(320, 128, 100.0, 42);
+    gmres.set_solver(iterative(16));
+    let (xi, si) = gmres.dc_op_stats(Ordering::Smart).unwrap();
+    assert!(si.iterations > 0, "iterative path must have run");
+    assert!(
+        si.peak_entries < sd.peak_entries,
+        "iterative peak {} must be strictly below direct factor peak {}",
+        si.peak_entries,
+        sd.peak_entries
+    );
+    for (a, b) in xi.iter().zip(&xd) {
+        assert!((a - b).abs() < 1e-6, "documented tolerance: {a} vs {b}");
+    }
+}
+
+#[test]
+fn warm_resolves_after_value_restamps_skip_refactorization() {
+    // cold iterative solve caches the ILU pattern; value-only restamps
+    // (drifted conductances) re-solve off the cached preconditioner
+    let mut c = monolithic_crossbar(96, 48, 100.0, 7);
+    c.set_solver(iterative(16));
+    let (_, cold) = c.dc_op_stats(Ordering::Smart).unwrap();
+    assert!(!cold.precond_reused, "first solve is cold");
+    for drift in 1..=3 {
+        for e in c.elements.iter_mut() {
+            if let Element::Resistor(name, _, _, r) = e {
+                if name.starts_with("RM") {
+                    *r *= 1.0 + 0.003 * drift as f64;
+                }
+            }
+        }
+        let (x, warm) = c.dc_op_stats(Ordering::Smart).unwrap();
+        assert!(warm.precond_reused, "drift {drift}: cached preconditioner must be reused");
+        assert!(warm.iterations > 0);
+        let (reference, _) = c.dc_op_stats_reference(Ordering::Smart).unwrap();
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-6, "drift {drift}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn wire_resistance_extremes_stay_within_tolerance() {
+    // r_base spans 1e-2 .. 1e5 ohms — conductances from 1e2 down to 1e-6
+    // siemens against the 1e6 op-amp gains
+    for &r_base in &[1e-2, 1e2, 1e5] {
+        let mut direct = monolithic_crossbar(48, 16, r_base, 11);
+        direct.set_solver(SolverStrategy::Direct);
+        let (xd, _) = direct.dc_op_stats(Ordering::Smart).unwrap();
+        let mut gmres = monolithic_crossbar(48, 16, r_base, 11);
+        gmres.set_solver(iterative(16));
+        let (xi, si) = gmres.dc_op_stats(Ordering::Smart).unwrap();
+        assert!(si.iterations > 0, "r_base {r_base}");
+        let scale = xd.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        for (a, b) in xi.iter().zip(&xd) {
+            assert!(
+                (a - b).abs() < 1e-6 * scale,
+                "r_base {r_base}: {a} vs {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_reads_share_one_preconditioner() {
+    let mut c = monolithic_crossbar(64, 24, 100.0, 13);
+    c.set_solver(iterative(16));
+    let idxs: Vec<usize> = (0..64).map(|r| c.vsource_index(&format!("V{r}")).unwrap()).collect();
+    let batches: Vec<Vec<(usize, f64)>> = (0..6)
+        .map(|k| {
+            idxs.iter()
+                .enumerate()
+                .map(|(r, &i)| (i, ((r * 3 + k) as f64 * 0.23).sin() * 0.4))
+                .collect()
+        })
+        .collect();
+    let batched = c.clone().dc_op_batch_par(&batches, Ordering::Smart, 3).unwrap();
+    assert_eq!(batched.len(), 6);
+    for (k, ov) in batches.iter().enumerate() {
+        for &(i, v) in ov {
+            c.set_vsource_at(i, v).unwrap();
+        }
+        let (seq, _) = c.dc_op_stats_reference(Ordering::Smart).unwrap();
+        for (a, b) in batched[k].iter().zip(&seq) {
+            assert!((a - b).abs() < 1e-6, "batch {k}: {a} vs {b}");
+        }
+    }
+}
+
+/// The paper's monolithic 2050x1024 case end to end. Heavy — opt in with
+/// `MEMX_FULL_SCALE=1 cargo test --release --test krylov -- full_scale`;
+/// `cargo bench --bench bench_crossbar` sweeps the same sizes on every
+/// full bench run.
+#[test]
+fn full_scale_2050x1024_gmres_beats_direct_factorization() {
+    if std::env::var("MEMX_FULL_SCALE").is_err() {
+        eprintln!("skipping full-scale 2050x1024 run (set MEMX_FULL_SCALE=1 to enable)");
+        return;
+    }
+    let mut direct = monolithic_crossbar(2050, 1024, 100.0, 99);
+    direct.set_solver(SolverStrategy::Direct);
+    let (xd, sd) = direct.dc_op_stats(Ordering::Smart).unwrap();
+
+    let mut gmres = monolithic_crossbar(2050, 1024, 100.0, 99);
+    gmres.set_solver(iterative(24));
+    let (xi, si) = gmres.dc_op_stats(Ordering::Smart).unwrap();
+    assert!(si.iterations > 0);
+    assert!(
+        si.peak_entries < sd.peak_entries,
+        "2050x1024: iterative peak {} vs direct {}",
+        si.peak_entries,
+        sd.peak_entries
+    );
+    let scale = xd.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+    for (a, b) in xi.iter().zip(&xd) {
+        assert!((a - b).abs() < 1e-6 * scale.max(1.0));
+    }
+}
