@@ -9,6 +9,13 @@
 //! Eq 17/18 latency + energy estimates. Without artifacts it falls back to
 //! a synthetic FC stack, so the tour always runs — no PJRT required
 //! (see examples/serve_cifar.rs for the PJRT serving demo).
+//!
+//! `Fidelity::Spice` (the CLI's `--fidelity spice`) now covers the whole
+//! module chain: batch-norm runs its §3.3 subtraction + scale/offset
+//! netlists and global average pooling its §3.5 averaging column, next to
+//! the crossbar layers and the Fig 4 activation circuits — no module falls
+//! back to its exact transfer (`memx report --coverage` prints the
+//! per-stage table; rust/tests/fidelity.rs pins it).
 
 use std::path::Path;
 
@@ -52,8 +59,15 @@ fn synthetic_tour() -> anyhow::Result<()> {
         let logits = pipe.forward_batch(&batch)?;
         let labels: Vec<usize> = logits.iter().map(|row| argmax(row)).collect();
         let tag = fidelity.to_string();
+        // at spice fidelity every module holds its emitted netlist — the
+        // resident-circuit count is the no-fidelity-holes evidence
+        let circuits = if fidelity == Fidelity::Spice {
+            format!(" ({} resident circuits)", pipe.spice_circuits())
+        } else {
+            String::new()
+        };
         println!(
-            "{tag:<11} {} -> labels {labels:?}, logits[0][0] = {:+.5}",
+            "{tag:<11} {} -> labels {labels:?}, logits[0][0] = {:+.5}{circuits}",
             pipe.describe(),
             logits[0][0]
         );

@@ -8,6 +8,11 @@
 //! host per batch size.
 //!
 //!   cargo bench --bench bench_inference
+//!
+//! `MEMX_BENCH_QUICK=1` runs the reduced CI smoke variant: only the
+//! full-chain spice conformance workload (the demo network with every §3
+//! module circuit-simulated — BN pair, GAP column, conv banks, Fig 4
+//! activations — pinned against the behavioural reference).
 
 use memx::pipeline::{default_device, Fidelity, PipelineBuilder};
 use memx::util::bench::{append_json_report, black_box, Bench};
@@ -134,6 +139,64 @@ fn serve_workload() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Full-chain demo network at Behavioural vs Spice — times the end-to-end
+/// batched forward with every §3 module circuit-simulated (the BN §3.3
+/// subtraction + scale/offset pair, the GAP §3.5 averaging column, conv
+/// banks, Fig 4 activation circuits) and asserts the spice chain stays
+/// within the conformance tolerance of behavioural. Under
+/// `MEMX_BENCH_QUICK=1` this is the only workload that runs — the CI smoke
+/// exercising the whole-chain spice path on every push.
+fn fidelity_chain_workload() -> anyhow::Result<()> {
+    use memx::pipeline::demo_network;
+
+    let (m, ws) = demo_network(0xD311)?;
+    let mut rng = Rng::new(77);
+    println!("\n== full-chain demo network: behavioural vs spice (conformance smoke) ==");
+    let mut b = Bench::quick();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut behav = PipelineBuilder::new().fidelity(Fidelity::Behavioural).build(&m, &ws)?;
+    let mut spice = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(8)
+        .workers(2)
+        .build(&m, &ws)?;
+    println!("    spice chain: {}", spice.describe());
+    let batch: Vec<Vec<f64>> = (0..8)
+        .map(|_| (0..behav.in_dim()).map(|_| rng.range_f64(-0.3, 0.3)).collect())
+        .collect();
+    let want = behav.forward_batch(&batch)?;
+    spice.forward_batch(&batch)?; // cold pass primes the factor caches
+    b.run("chain behavioural b8", || {
+        black_box(behav.forward_batch(&batch).expect("behavioural chain"));
+    });
+    let stats = b.run("chain spice b8", || {
+        black_box(spice.forward_batch(&batch).expect("spice chain"));
+    });
+    println!("    -> spice per-image {:.2} ms", stats.mean_secs() * 1e3 / 8.0);
+    let got = spice.forward_batch(&batch)?;
+    let mut worst = 0f64;
+    for (g_row, w_row) in got.iter().zip(&want) {
+        for (g, w) in g_row.iter().zip(w_row) {
+            worst = worst.max((g - w).abs());
+        }
+    }
+    assert!(worst < 0.3, "spice chain diverged from behavioural by {worst}");
+    assert!(spice.spice_circuits() > 0, "no resident circuits at spice fidelity");
+    derived.push(("chain_spice_vs_behavioural_worst_abs_err".into(), worst));
+    derived.push(("chain_spice_circuits".into(), spice.spice_circuits() as f64));
+    b.table("full-chain fidelity conformance");
+    match append_json_report(
+        "BENCH_pipeline.json",
+        "bench_inference_fidelity_chain",
+        &b.rows,
+        &derived,
+    ) {
+        Ok(()) => println!("(appended to BENCH_pipeline.json)"),
+        Err(e) => eprintln!("warning: could not append BENCH_pipeline.json: {e}"),
+    }
+    Ok(())
+}
+
 /// Eq 17/18 analytical figures over the trained manifest (skipped without
 /// artifacts).
 fn analytical_workload() -> anyhow::Result<()> {
@@ -209,8 +272,13 @@ fn pjrt_workload() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    if std::env::var("MEMX_BENCH_QUICK").is_ok() {
+        // CI smoke: the full-chain spice conformance workload only
+        return fidelity_chain_workload();
+    }
     pipeline_workload()?;
     serve_workload()?;
+    fidelity_chain_workload()?;
     analytical_workload()?;
     #[cfg(feature = "runtime-xla")]
     pjrt_workload()?;

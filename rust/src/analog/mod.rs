@@ -1,14 +1,25 @@
 //! Analog circuit modules — transistor-level models of the paper's §3.4
-//! activation circuits (Fig 4) plus fast behavioural equivalents.
+//! activation circuits (Fig 4) plus fast behavioural equivalents, and the
+//! netlist builders for the "boring" linear stages: the §3.3 batch-norm
+//! circuit ([`build_bn_crossbars`]: subtraction crossbar + scale/offset
+//! conductance pairs with the mean/variance fold programmed into the
+//! conductances) and the §3.5 global-average-pooling column
+//! ([`build_gap_crossbar`]: `1/N` conductances into the op-amp summing
+//! node).
 //!
 //! The circuit builders produce real [`Circuit`]s (op-amp adders /
 //! dividers, diode+source limiters, a Gilbert-cell multiplier abstraction);
 //! `sweep` reproduces Fig 4(c)/(d). The behavioural functions are the
 //! rail-clipped piecewise forms the L2 JAX model uses — tests pin the SPICE
-//! curves to them within the diode-knee tolerance.
+//! curves to them within the diode-knee tolerance. The BN/GAP builders
+//! return [`Crossbar`]s ready for [`crate::netlist::emit_crossbar`] and the
+//! resident [`crate::netlist::CrossbarSim`] the pipeline modules hold at
+//! `Fidelity::Spice`.
 
 use anyhow::{anyhow, Result};
 
+use crate::mapper::layout::{place_gap, Placed};
+use crate::mapper::{Crossbar, MapMode};
 use crate::spice::Circuit;
 
 /// Software hard sigmoid: relu6(x + 3) / 6.
@@ -134,9 +145,239 @@ pub fn build_hard_swish() -> ActCircuit {
 /// SPICE curves to the piecewise software model.
 pub const KNEE_TOL: f64 = 0.12;
 
+/// Place one affine-term device under the differential crossbar
+/// convention: weight `w` on input line `line` (None = the constant term,
+/// realized on the ±1 V bias rows), sign handled by region selection
+/// exactly like [`crate::mapper::layout::place_fc`]. `scale` normalizes
+/// `|w|` into the (0, 1] conductance range; zero weights place nothing.
+fn place_affine_device(
+    devices: &mut Vec<Placed>,
+    region: usize,
+    inverted: bool,
+    col: usize,
+    line: Option<usize>,
+    w: f64,
+    scale: f64,
+) {
+    if w == 0.0 {
+        return;
+    }
+    let to_neg = if inverted { w > 0.0 } else { w < 0.0 };
+    let row = match line {
+        Some(r) => {
+            if to_neg {
+                r + region
+            } else {
+                r
+            }
+        }
+        // bias lines: row 2*region is held at +1 V, 2*region + 1 at -1 V
+        None => 2 * region + usize::from(to_neg),
+    };
+    devices.push(Placed { row, col, g_norm: w.abs() / scale });
+}
+
+/// §3.3 batch-normalization circuit as two cascaded crossbars, one column
+/// per processed element (channel-major, `spatial` elements per channel):
+///
+/// * **subtraction crossbar** (`<name>.sub`): `u = g1 * (x - mean[ch])` —
+///   the element's input line plus the folded mean as a programmed
+///   conductance on a bias row;
+/// * **scale/offset pairs** (`<name>.scale`): `y = (k[ch]/g1) * u +
+///   beta[ch]` with `k = gamma / sqrt(var + BN_EPS)` folded at compile
+///   time ([`crate::mapper::BnFold`]) — the scale conductance on the
+///   stage's differential input (region by sign, so negative scales need
+///   no extra inverter) and the offset conductance on a bias row.
+///
+/// The fold's gain is **balanced across the cascade**: `g1 =
+/// max(1, sqrt(|k|))` per channel, so each inverting stage's noise gain
+/// stays ~`sqrt(|k|)`. Putting the whole gain in one stage would give the
+/// finite-gain (1e6) TIA a closed-loop error of `(1 + |k|)/1e6` — ~5e-4
+/// for the near-zero-variance folds (|k| ~ 500), outside the 1e-4
+/// conformance band the fidelity suite pins; the balanced split keeps it
+/// ~`2*sqrt(|k|)/1e6`. Each crossbar also normalizes its conductances into
+/// (0, 1] through its TIA feedback (`rf_scale`), so arbitrarily large
+/// folds stay programmable. The exact composite transfer is the affine
+/// fold `(x - mean) * k + beta` — `rust/tests/fidelity.rs` pins the
+/// netlists against it.
+///
+/// [`crate::pipeline::BatchNormModule`] and the netlist emitter
+/// instantiate the per-channel form (`spatial = 1`, the Eq 10/11
+/// hardware) and fold spatial positions into multi-RHS reads; larger
+/// `spatial` values spatially unroll the same circuit.
+pub fn build_bn_crossbars(
+    name: &str,
+    c: usize,
+    spatial: usize,
+    k: &[f64],
+    mean: &[f64],
+    beta: &[f64],
+    mode: MapMode,
+) -> (Crossbar, Crossbar) {
+    assert!(c > 0 && spatial > 0, "bn crossbars need channels and elements");
+    assert_eq!(k.len(), c, "k length != channels");
+    assert_eq!(mean.len(), c, "mean length != channels");
+    assert_eq!(beta.len(), c, "beta length != channels");
+    let n = c * spatial;
+    let inverted = mode.inverted();
+    let g1: Vec<f64> = k.iter().map(|v| v.abs().sqrt().max(1.0)).collect();
+    let w2: Vec<f64> = k.iter().zip(&g1).map(|(v, g)| v / g).collect();
+    let s_sub = (0..c).fold(1.0f64, |a, ch| a.max(g1[ch]).max(mean[ch].abs() * g1[ch]));
+    let s_scale = w2.iter().chain(beta).fold(1e-12f64, |a, v| a.max(v.abs()));
+    let mut sub = Vec::with_capacity(2 * n);
+    let mut scale = Vec::with_capacity(2 * n);
+    for j in 0..n {
+        let ch = j / spatial;
+        place_affine_device(&mut sub, n, inverted, j, Some(j), g1[ch], s_sub);
+        place_affine_device(&mut sub, n, inverted, j, None, -mean[ch] * g1[ch], s_sub);
+        place_affine_device(&mut scale, n, inverted, j, Some(j), w2[ch], s_scale);
+        place_affine_device(&mut scale, n, inverted, j, None, beta[ch], s_scale);
+    }
+    let crossbar = |suffix: &str, devices: Vec<Placed>, rf_scale: f64| Crossbar {
+        name: format!("{name}.{suffix}"),
+        rows: 2 * n + 2,
+        cols: n,
+        region: n,
+        devices,
+        rf_scale,
+        mode,
+    };
+    (crossbar("sub", sub, s_sub), crossbar("scale", scale, s_scale))
+}
+
+/// §3.5 global-average-pooling crossbar: one averaging column per channel,
+/// `1/N` conductances ([`place_gap`]) from the channel's `N = spatial`
+/// input lines into the column's op-amp summing node. All weights are
+/// positive, so the inverted convention places them on the negated-input
+/// region (the TIA's `-Rf` restores `+mean`); dual mode places them
+/// directly and re-inverts through the per-column inverter. The exact
+/// transfer is the per-channel mean.
+pub fn build_gap_crossbar(name: &str, c: usize, spatial: usize, mode: MapMode) -> Crossbar {
+    assert!(c > 0 && spatial > 0, "gap crossbar needs channels and a plane");
+    let region = c * spatial;
+    let column = place_gap(spatial);
+    let mut devices = Vec::with_capacity(region);
+    for ch in 0..c {
+        for p in &column {
+            let line = ch * spatial + p.row;
+            let row = if mode.inverted() { line + region } else { line };
+            devices.push(Placed { row, col: ch, g_norm: p.g_norm });
+        }
+    }
+    Crossbar {
+        name: name.to_string(),
+        rows: 2 * region + 2,
+        cols: c,
+        region,
+        devices,
+        rf_scale: 1.0,
+        mode,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netlist::{emit_crossbar, parse, plan_segments, solve_segment_outputs};
+    use crate::nn::DeviceJson;
+    use crate::spice::solve::Ordering;
+
+    fn test_device() -> DeviceJson {
+        DeviceJson {
+            r_on: 100.0,
+            r_off: 16000.0,
+            levels: 64,
+            prog_sigma: 0.0,
+            v_in: 2.5e-3,
+            v_rail: 8.0,
+            t_mem: 1e-10,
+            slew_rate: 1e7,
+            v_swing: 5.0,
+            p_opamp: 1e-3,
+            p_memristor: 1.1e-6,
+            p_aux: 5e-4,
+            t_opamp: 5e-7,
+        }
+    }
+
+    #[test]
+    fn bn_crossbars_eval_matches_affine_fold() {
+        // negative scale, a near-zero-variance-sized fold (|k| >> 1) and a
+        // dead channel (k = 0) in one draw, both conventions
+        let (c, spatial) = (3usize, 2usize);
+        let k = [1.4, -215.0, 0.0];
+        let mean = [0.2, -0.4, 0.1];
+        let beta = [-0.3, 0.25, 0.0];
+        for mode in [MapMode::Inverted, MapMode::Dual] {
+            let (sub, scale) = build_bn_crossbars("t.bn", c, spatial, &k, &mean, &beta, mode);
+            assert_eq!((sub.cols, scale.cols), (c * spatial, c * spatial));
+            let x: Vec<f64> =
+                (0..c * spatial).map(|i| (i as f64 * 0.37).sin() * 0.8).collect();
+            let y = scale.eval_ideal(&sub.eval_ideal(&x));
+            for j in 0..c * spatial {
+                let ch = j / spatial;
+                let want = (x[j] - mean[ch]) * k[ch] + beta[ch];
+                assert!(
+                    (y[j] - want).abs() < 1e-9 * (1.0 + want.abs()),
+                    "{mode} j={j}: {} vs {want}",
+                    y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bn_netlists_solve_to_affine_fold() {
+        let (c, spatial) = (2usize, 2usize);
+        let k = [2.5, -0.75];
+        let mean = [0.3, -0.2];
+        let beta = [0.1, -0.4];
+        let (sub, scale) =
+            build_bn_crossbars("t.bn", c, spatial, &k, &mean, &beta, MapMode::Inverted);
+        let dev = test_device();
+        let x = [0.5, -0.25, 0.8, 0.0];
+        let seg = &plan_segments(sub.cols, 0)[0];
+        let text = emit_crossbar(&sub, &dev, seg, Some(&x), 1);
+        let u = solve_segment_outputs(&parse(&text).unwrap(), seg, true, Ordering::Smart)
+            .unwrap();
+        let text = emit_crossbar(&scale, &dev, seg, Some(&u), 1);
+        let y = solve_segment_outputs(&parse(&text).unwrap(), seg, true, Ordering::Smart)
+            .unwrap();
+        for j in 0..c * spatial {
+            let ch = j / spatial;
+            let want = (x[j] - mean[ch]) * k[ch] + beta[ch];
+            assert!(
+                (y[j] - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "j={j}: spice {} vs fold {want}",
+                y[j]
+            );
+        }
+    }
+
+    #[test]
+    fn gap_crossbar_eval_and_netlist_match_mean() {
+        let (c, spatial) = (3usize, 4usize);
+        let x: Vec<f64> = (0..c * spatial).map(|i| (i as f64 * 0.7).cos() * 0.6).collect();
+        let mean =
+            |ch: usize| x[ch * spatial..(ch + 1) * spatial].iter().sum::<f64>() / spatial as f64;
+        for mode in [MapMode::Inverted, MapMode::Dual] {
+            let cb = build_gap_crossbar("t.gap", c, spatial, mode);
+            assert_eq!(cb.devices.len(), c * spatial); // Eq 12
+            assert_eq!(cb.cols, c);
+            let got = cb.eval_ideal(&x);
+            for ch in 0..c {
+                assert!((got[ch] - mean(ch)).abs() < 1e-12, "{mode} ch {ch}");
+            }
+            let seg = &plan_segments(c, 0)[0];
+            let text = emit_crossbar(&cb, &test_device(), seg, Some(&x), 1);
+            let outs =
+                solve_segment_outputs(&parse(&text).unwrap(), seg, mode.inverted(), Ordering::Smart)
+                    .unwrap();
+            for (ch, o) in outs.iter().enumerate() {
+                assert!((o - mean(ch)).abs() < 1e-4, "{mode} ch {ch}: {o} vs {}", mean(ch));
+            }
+        }
+    }
 
     #[test]
     fn behavioural_matches_software_inside_rails() {

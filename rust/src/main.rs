@@ -13,9 +13,13 @@
 //!   verify                       runtime vs python expected logits
 //!   map      [--mode inverted|dual]                Table 4 resources
 //!   netlist  --layer NAME [--outdir DIR] [--segment N]   emit SPICE
+//!            (FC/PConv crossbars, §3.3 BN pairs, §3.5 GAP columns)
 //!   spice    --layer NAME [--segment N] [--n N]
 //!            [--solver direct|iterative|auto]        simulate a layer
-//!   report   --table4|--fig4|--fig7|--fig8|--fig9  paper artifacts
+//!   report   --table4|--fig4|--fig7|--fig8|--fig9|--coverage  paper
+//!            artifacts (--coverage [--fidelity F]: per-stage module
+//!            fidelity/resource table + stage-hook Eq 17/18 — at spice
+//!            fidelity the counts come from the emitted netlists)
 //!
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
 
@@ -471,11 +475,24 @@ fn cmd_spice(rest: &[String]) -> Result<()> {
 fn cmd_report(rest: &[String]) -> Result<()> {
     let a = Args::parse(
         rest,
-        &["artifacts", "table4!", "fig4!", "fig7!", "fig8!", "fig9!", "all!", "out"],
+        &[
+            "artifacts", "table4!", "fig4!", "fig7!", "fig8!", "fig9!", "all!", "out",
+            "coverage!", "fidelity", "mode", "segment", "solver",
+        ],
     )?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let all = a.has("all");
     let mut any = false;
+    // not part of --all: at spice fidelity this compiles resident
+    // simulators for every crossbar of the network, which is a deliberate
+    // (potentially heavy) request
+    if a.has("coverage") {
+        let fidelity: Fidelity = a.get_or("fidelity", "spice").parse()?;
+        let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
+        let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
+        memx::report::report_coverage(dir, fidelity, mode, a.get_usize("segment", 64)?, solver)?;
+        any = true;
+    }
     if a.has("table4") || all {
         memx::report::report_table4(dir)?;
         any = true;
@@ -497,7 +514,7 @@ fn cmd_report(rest: &[String]) -> Result<()> {
         any = true;
     }
     if !any {
-        bail!("pick at least one of --table4 --fig4 --fig7 --fig8 --fig9 --all");
+        bail!("pick at least one of --table4 --fig4 --fig7 --fig8 --fig9 --coverage --all");
     }
     Ok(())
 }

@@ -159,11 +159,15 @@ pub fn place_fc(
     placed
 }
 
-/// Global-average-pool layout (paper §3.5): one column, conductances 1/N on
-/// the negated-input region so the TIA emits +mean (inverted by nature).
+/// Global-average-pool layout (paper §3.5): one averaging column of `1/N`
+/// conductances. Rows are *region-relative* input lines of one channel
+/// plane; [`crate::analog::build_gap_crossbar`] offsets them into the
+/// differential region (the negated-input region under the inverted
+/// convention, so the single TIA emits `+mean`) and tiles one such column
+/// per channel.
 pub fn place_gap(n_inputs: usize) -> Vec<Placed> {
     (0..n_inputs)
-        .map(|i| Placed { row: i, col: 0, g_norm: 1.0 })
+        .map(|i| Placed { row: i, col: 0, g_norm: 1.0 / n_inputs.max(1) as f64 })
         .collect()
 }
 
@@ -268,6 +272,9 @@ mod tests {
     fn gap_places_n_devices() {
         let placed = place_gap(16);
         assert_eq!(placed.len(), 16);
-        assert!(placed.iter().all(|p| p.col == 0 && p.g_norm == 1.0));
+        assert!(placed.iter().all(|p| p.col == 0 && p.g_norm == 1.0 / 16.0));
+        // the column sums to unity conductance — the §3.5 mean weighting
+        let total: f64 = placed.iter().map(|p| p.g_norm).sum();
+        assert!((total - 1.0).abs() < 1e-12);
     }
 }

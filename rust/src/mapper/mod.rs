@@ -98,6 +98,78 @@ pub fn apply_prog_noise(q: &mut [f64], sigma: f64, rng: &mut Rng) {
     }
 }
 
+/// Relative programming noise on *analog-valued* placed devices — the
+/// §3.3 batch-norm and §3.5 averaging-column conductances
+/// ([`crate::analog::build_bn_crossbars`] /
+/// [`crate::analog::build_gap_crossbar`]), which realize arbitrary reals
+/// rather than quantized weight levels. The level floor of
+/// [`apply_prog_noise_placed`] must NOT apply here: a GAP column's `1/N`
+/// conductance legitimately sits far below half the smallest quantized
+/// level and inflating it to the floor would scale the computed mean.
+/// Instead the multiplicative perturbation itself is floored (at 0.05) so
+/// no device crosses zero or vanishes from the netlist, and the result is
+/// capped at the normalized full-on conductance (or the device's own
+/// nominal, if larger) so no device leaves the HP model's resistance
+/// window — the same upper clamp as [`apply_prog_noise_placed`].
+pub fn apply_prog_noise_analog(devices: &mut [Placed], sigma: f64, rng: &mut Rng) {
+    if sigma <= 0.0 {
+        return;
+    }
+    for d in devices.iter_mut() {
+        let noisy = d.g_norm * (1.0 + sigma * rng.gaussian()).max(0.05);
+        d.g_norm = noisy.min(d.g_norm.max(1.0));
+    }
+}
+
+/// `gamma / sqrt(var + BN_EPS)` fold constant (python/compile/model.py
+/// mirror) — the single source shared by the pipeline's exact transfer and
+/// the §3.3 netlist builder.
+pub const BN_EPS: f64 = 1e-5;
+
+/// Folded batch-norm parameters: `y = (x - mean) * k + beta` with
+/// `k = gamma / sqrt(var + BN_EPS)` — the programmed-conductance form of
+/// the paper's §3.3 circuit (mean/variance folded at compile time).
+#[derive(Debug, Clone)]
+pub struct BnFold {
+    pub k: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub beta: Vec<f64>,
+}
+
+impl BnFold {
+    /// Fold raw batch statistics into the affine form.
+    pub fn from_stats(gamma: &[f64], beta: &[f64], mean: &[f64], var: &[f64]) -> BnFold {
+        BnFold {
+            k: gamma.iter().zip(var).map(|(g, v)| g / (v + BN_EPS).sqrt()).collect(),
+            mean: mean.to_vec(),
+            beta: beta.to_vec(),
+        }
+    }
+}
+
+/// Resolve a manifest BN layer's folded parameters from the weight store.
+/// `weight` names the gamma tensor (`<base>.gamma`); the companion
+/// beta/mean/var tensors are optional with identity defaults — python
+/// always emits them, synthetic manifests may not.
+pub fn bn_fold(ws: &WeightStore, weight: &str, c: usize) -> Result<BnFold> {
+    let base = weight.strip_suffix(".gamma").unwrap_or(weight);
+    let tensor = |suffix: &str| {
+        ws.get(&format!("{base}.{suffix}"))
+            .map(|t| t.data.iter().map(|&v| v as f64).collect::<Vec<f64>>())
+    };
+    let gamma = tensor("gamma")
+        .ok_or_else(|| anyhow!("bn fold: tensor '{base}.gamma' not in store"))?;
+    let beta = tensor("beta").unwrap_or_else(|| vec![0.0; c]);
+    let mean = tensor("mean").unwrap_or_else(|| vec![0.0; c]);
+    let var = tensor("var").unwrap_or_else(|| vec![1.0; c]);
+    for (label, t) in [("gamma", &gamma), ("beta", &beta), ("mean", &mean), ("var", &var)] {
+        if t.len() != c {
+            bail!("bn fold '{base}': {label} has {} values for {c} channels", t.len());
+        }
+    }
+    Ok(BnFold::from_stats(&gamma, &beta, &mean, &var))
+}
+
 /// Relative programming noise on placed crossbar devices — the [`Placed`]
 /// mirror of [`apply_prog_noise`]. Conductances stay physical: floored at
 /// half the smallest programmable level (so no device leaves the HP model's
@@ -628,6 +700,41 @@ mod tests {
         apply_prog_noise_placed(&mut devices, 0.05, 64, &mut rng);
         assert!(devices.iter().all(|d| d.g_norm > 1.0 && d.g_norm <= 8.0));
         assert!(devices.iter().any(|d| d.g_norm != 8.0));
+    }
+
+    #[test]
+    fn prog_noise_analog_keeps_tiny_conductances_unfloored() {
+        // a 1/N averaging conductance far below the quantized-level floor
+        // must stay near its nominal value (the placed-noise floor would
+        // inflate it and scale the computed mean)
+        let nominal = 1.0 / 1024.0;
+        let mut devices =
+            vec![layout::Placed { row: 0, col: 0, g_norm: nominal }; 64];
+        let mut rng = Rng::new(11);
+        apply_prog_noise_analog(&mut devices, 0.02, &mut rng);
+        assert!(devices.iter().any(|d| d.g_norm != nominal), "noise must perturb");
+        assert!(
+            devices.iter().all(|d| d.g_norm > 0.0 && (d.g_norm / nominal - 1.0).abs() < 0.2),
+            "noise must stay a small relative perturbation"
+        );
+        // sigma 0 is a no-op
+        let before = devices.clone();
+        apply_prog_noise_analog(&mut devices, 0.0, &mut rng);
+        assert!(devices.iter().zip(&before).all(|(a, b)| a.g_norm == b.g_norm));
+        // full-on devices stay inside the physical window (g_norm <= 1)
+        let mut full = vec![layout::Placed { row: 0, col: 0, g_norm: 1.0 }; 64];
+        apply_prog_noise_analog(&mut full, 0.3, &mut rng);
+        assert!(full.iter().all(|d| d.g_norm > 0.0 && d.g_norm <= 1.0));
+        assert!(full.iter().any(|d| d.g_norm != 1.0), "noise must still perturb downward");
+    }
+
+    #[test]
+    fn bn_fold_from_stats_matches_formula() {
+        let fold = BnFold::from_stats(&[1.5, -0.8], &[0.1, -0.2], &[0.05, 0.2], &[0.9, 0.4]);
+        assert!((fold.k[0] - 1.5 / (0.9f64 + BN_EPS).sqrt()).abs() < 1e-15);
+        assert!((fold.k[1] - -0.8 / (0.4f64 + BN_EPS).sqrt()).abs() < 1e-15);
+        assert_eq!(fold.mean, vec![0.05, 0.2]);
+        assert_eq!(fold.beta, vec![0.1, -0.2]);
     }
 
     #[test]

@@ -399,8 +399,33 @@ pub fn solve_segment_outputs(
         .collect()
 }
 
-/// Emit netlist files for a named FC/PConv layer of the trained network.
-/// `segment` = columns per file (0 = single monolithic file).
+/// Emit one crossbar's segmented netlist files under `outdir` (weights-only
+/// sources; file names derive from the crossbar's own name). `segment` =
+/// columns per file (0 = single monolithic file).
+pub fn emit_crossbar_files(
+    cb: &Crossbar,
+    dev: &DeviceJson,
+    segment: usize,
+    outdir: &Path,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(outdir)?;
+    let segs = plan_segments(cb.cols, segment);
+    let mut files = Vec::new();
+    for seg in &segs {
+        let text = emit_crossbar(cb, dev, seg, None, segs.len());
+        let path =
+            outdir.join(format!("{}_seg{:03}.sp", cb.name.replace('.', "_"), seg.index));
+        std::fs::write(&path, text)?;
+        files.push(path);
+    }
+    Ok(files)
+}
+
+/// Emit netlist files for a named layer of the trained network: FC/PConv
+/// crossbars, the §3.3 batch-norm pair (subtraction + scale/offset stages,
+/// one column per channel — spatial replication is a runtime property) or
+/// the §3.5 GAP averaging columns. `segment` = columns per file (0 = single
+/// monolithic file).
 pub fn emit_layer_netlists(
     m: &Manifest,
     ws: &WeightStore,
@@ -409,17 +434,29 @@ pub fn emit_layer_netlists(
     segment: usize,
     outdir: &Path,
 ) -> Result<Vec<PathBuf>> {
-    let cb = build_fc_crossbar(m, ws, layer, mode)?;
-    std::fs::create_dir_all(outdir)?;
-    let segs = plan_segments(cb.cols, segment);
-    let mut files = Vec::new();
-    for seg in &segs {
-        let text = emit_crossbar(&cb, &m.device, seg, None, segs.len());
-        let path = outdir.join(format!("{}_seg{:03}.sp", layer.replace('.', "_"), seg.index));
-        std::fs::write(&path, text)?;
-        files.push(path);
+    let found = m
+        .layers
+        .iter()
+        .find(|l| l.name() == layer)
+        .ok_or_else(|| anyhow!("layer '{layer}' not found"))?;
+    match found {
+        crate::nn::Layer::Bn { c, weight, .. } => {
+            let fold = crate::mapper::bn_fold(ws, weight, *c)?;
+            let (sub, scale) =
+                crate::analog::build_bn_crossbars(layer, *c, 1, &fold.k, &fold.mean, &fold.beta, mode);
+            let mut files = emit_crossbar_files(&sub, &m.device, segment, outdir)?;
+            files.extend(emit_crossbar_files(&scale, &m.device, segment, outdir)?);
+            Ok(files)
+        }
+        crate::nn::Layer::GaPool { c, h_in, w_in, .. } => {
+            let cb = crate::analog::build_gap_crossbar(layer, *c, h_in * w_in, mode);
+            emit_crossbar_files(&cb, &m.device, segment, outdir)
+        }
+        _ => {
+            let cb = build_fc_crossbar(m, ws, layer, mode)?;
+            emit_crossbar_files(&cb, &m.device, segment, outdir)
+        }
     }
-    Ok(files)
 }
 
 #[cfg(test)]

@@ -13,8 +13,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::mapper::{
-    apply_prog_noise, apply_prog_noise_placed, build_fc_crossbar, build_synthetic_fc, weight_q,
-    Crossbar, MapMode,
+    apply_prog_noise, apply_prog_noise_placed, bn_fold, build_fc_crossbar, build_synthetic_fc,
+    weight_q, Crossbar, MapMode,
 };
 use crate::nn::{ActKind, ConvGeom, DeviceJson, Layer, Manifest, WeightStore};
 use crate::spice::krylov::SolverStrategy;
@@ -23,7 +23,8 @@ use crate::util::pool;
 use crate::util::prng::Rng;
 
 use super::modules::{
-    ActivationModule, BatchNormModule, ConvModuleCfg, CrossbarModule, GapModule, SeModule,
+    ActivationModule, BatchNormModule, ConvModuleCfg, CrossbarModule, GapModule, ModuleCfg,
+    SeModule,
 };
 use super::{AnalogModule, Fidelity, Pipeline, Stage};
 
@@ -194,6 +195,23 @@ impl PipelineBuilder {
         }
     }
 
+    /// The circuit-compilation environment this builder resolves for module
+    /// constructors — one struct threading device config, fidelity, netlist
+    /// segmentation, solver strategy, workers and programming noise into
+    /// every [`super::AnalogModule`], so the §3.3/§3.5 BN and GAP netlists
+    /// honour exactly the same knobs as the crossbar layers.
+    pub fn module_cfg<'a>(&self, dev: &'a DeviceJson) -> ModuleCfg<'a> {
+        ModuleCfg {
+            dev,
+            fidelity: self.fidelity,
+            segment: self.segment,
+            ordering: self.ordering,
+            solver: self.solver,
+            workers: self.resolved_workers(),
+            prog_sigma: self.prog_sigma,
+        }
+    }
+
     /// Compile the full manifest into a runnable [`Pipeline`].
     pub fn build(&self, m: &Manifest, ws: &WeightStore) -> Result<Pipeline> {
         if m.layers.is_empty() {
@@ -204,6 +222,7 @@ impl PipelineBuilder {
             mm.device.levels = l;
         }
         let dev = mm.device.clone();
+        let cfg = self.module_cfg(&dev);
         let mut rng = Rng::new(self.noise_seed);
         let mut stages: Vec<Stage> = Vec::new();
         let mut shape = input_shape(&mm.layers[0]);
@@ -221,7 +240,8 @@ impl PipelineBuilder {
                 }
                 Layer::Bn { name, unit, c, weight } => {
                     ensure_channels(shape, *c, name)?;
-                    let module = self.bn_module(name, weight, *c, shape.spatial(), ws, &dev)?;
+                    let module =
+                        self.bn_module(name, weight, *c, shape.spatial(), ws, &cfg, &mut rng)?;
                     stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
                 }
                 Layer::Act { name, unit, kind, c } => {
@@ -240,13 +260,15 @@ impl PipelineBuilder {
                 Layer::GaPool { name, unit, c, h_in, w_in } => {
                     ensure_spatial(shape, *c, *h_in, *w_in, name)?;
                     if is_se_block(&mm.layers[i..]) {
-                        let module = self.se_module(&mm, ws, i, shape.spatial(), &mut rng)?;
+                        let module =
+                            self.se_module(&mm, ws, i, shape.spatial(), &cfg, &mut rng)?;
                         stages
                             .push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
                         i += 5;
                         continue;
                     }
-                    let module = GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode);
+                    let module =
+                        GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode, &cfg, &mut rng)?;
                     shape = Shape::Flat(*c);
                     stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
                 }
@@ -421,6 +443,7 @@ impl PipelineBuilder {
         )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn bn_module(
         &self,
         name: &str,
@@ -428,28 +451,14 @@ impl PipelineBuilder {
         c: usize,
         spatial: usize,
         ws: &WeightStore,
-        dev: &DeviceJson,
+        cfg: &ModuleCfg,
+        rng: &mut Rng,
     ) -> Result<BatchNormModule> {
-        let base = weight.strip_suffix(".gamma").unwrap_or(weight);
-        let gamma = tensor_f64(ws, &format!("{base}.gamma"))
-            .ok_or_else(|| anyhow!("bn '{name}': tensor '{base}.gamma' not in store"))?;
         // python always emits the companion stats; synthetic manifests may
-        // not — identity defaults keep the fold well-defined
-        let beta = tensor_f64(ws, &format!("{base}.beta")).unwrap_or_else(|| vec![0.0; c]);
-        let mean = tensor_f64(ws, &format!("{base}.mean")).unwrap_or_else(|| vec![0.0; c]);
-        let var = tensor_f64(ws, &format!("{base}.var")).unwrap_or_else(|| vec![1.0; c]);
-        BatchNormModule::new(
-            name,
-            c,
-            spatial,
-            &gamma,
-            &beta,
-            &mean,
-            &var,
-            self.mode,
-            self.fidelity,
-            dev.v_rail,
-        )
+        // not — bn_fold's identity defaults keep the fold well-defined
+        // (its errors already name the tensor base)
+        let fold = bn_fold(ws, weight, c)?;
+        BatchNormModule::new(name, c, spatial, fold, self.mode, cfg, rng)
     }
 
     fn se_module(
@@ -458,6 +467,7 @@ impl PipelineBuilder {
         ws: &WeightStore,
         i: usize,
         spatial: usize,
+        cfg: &ModuleCfg,
         rng: &mut Rng,
     ) -> Result<SeModule> {
         let dev = &m.device;
@@ -477,7 +487,7 @@ impl PipelineBuilder {
         else {
             bail!("squeeze-and-excite block structure mismatch at layer {i}");
         };
-        let gap = GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode);
+        let gap = GapModule::new(name.clone(), *c, *h_in, *w_in, self.mode, cfg, rng)?;
         let fc1 = self.fc_module(m, ws, n1, "PConv", rng)?;
         let act1 = ActivationModule::new(
             na1.clone(),
@@ -540,6 +550,94 @@ fn ensure_spatial(shape: Shape, c: usize, h: usize, w: usize, name: &str) -> Res
     }
 }
 
-fn tensor_f64(ws: &WeightStore, name: &str) -> Option<Vec<f64>> {
-    ws.get(name).map(|t| t.data.iter().map(|&v| v as f64).collect())
+/// A deterministic synthetic mini-MobileNetV3 over 4x4x3 inputs: stem conv
+/// + BN + h-swish, one bottleneck unit (depthwise conv + BN + ReLU +
+/// squeeze-and-excite + residual), then the GAP + FC classifier head —
+/// every paper module type in one chain. This is the manifest-free
+/// demo network the full-chain fidelity conformance suite
+/// (`rust/tests/fidelity.rs`), `report --coverage` without artifacts and
+/// the bench smoke all share. Weight magnitudes are kept small enough that
+/// no stage approaches the TIA rails, so Spice and Behavioural runs are
+/// comparable without clamp effects.
+pub fn demo_network(seed: u64) -> Result<(Manifest, WeightStore)> {
+    struct Blob {
+        data: Vec<f32>,
+        entries: Vec<String>,
+    }
+    impl Blob {
+        fn tensor(&mut self, name: &str, shape: &[usize], vals: Vec<f32>, scale: Option<f64>) {
+            let dims =
+                shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+            let scale_s = scale.map(|s| format!(",\"scale\":{s}")).unwrap_or_default();
+            self.entries.push(format!(
+                "{{\"name\":\"{name}\",\"shape\":[{dims}],\"offset\":{},\"len\":{}{scale_s}}}",
+                self.data.len(),
+                vals.len()
+            ));
+            self.data.extend(vals);
+        }
+
+        /// Gentle batch stats: one negative gamma (the §3.3 scale pair's
+        /// sign path), variances away from zero so the fold stays below
+        /// the rails on demo-scale activations.
+        fn bn(&mut self, base: &str, c: usize, rng: &mut Rng) {
+            let gamma: Vec<f32> =
+                (0..c).map(|i| if i == 0 { -0.9 } else { 0.6 + rng.f32() * 0.8 }).collect();
+            self.tensor(&format!("{base}.gamma"), &[c], gamma, None);
+            self.tensor(&format!("{base}.beta"), &[c], rand_vals(rng, c, 0.2), None);
+            self.tensor(&format!("{base}.mean"), &[c], rand_vals(rng, c, 0.2), None);
+            let var: Vec<f32> = (0..c).map(|_| 0.5 + rng.f32()).collect();
+            self.tensor(&format!("{base}.var"), &[c], var, None);
+        }
+    }
+    fn rand_vals(rng: &mut Rng, n: usize, amp: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * amp).collect()
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut b = Blob { data: Vec::new(), entries: Vec::new() };
+    b.tensor("stem.conv.w", &[3, 3, 3, 4], rand_vals(&mut rng, 108, 0.3), Some(0.3));
+    b.bn("stem.bn", 4, &mut rng);
+    b.tensor("b1.dw.w", &[3, 3, 1, 4], rand_vals(&mut rng, 36, 0.3), Some(0.3));
+    b.bn("b1.bn", 4, &mut rng);
+    b.tensor("b1.se.fc1.w", &[4, 2], rand_vals(&mut rng, 8, 0.4), Some(0.4));
+    b.tensor("b1.se.fc2.w", &[2, 4], rand_vals(&mut rng, 8, 0.4), Some(0.4));
+    b.tensor("cls.fc.w", &[4, 3], rand_vals(&mut rng, 12, 0.4), Some(0.4));
+
+    let layers = r#"
+        {"unit":"stem","layer":"conv","name":"stem.conv","k":3,"stride":1,"padding":1,
+         "cin":3,"cout":4,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"stem.conv.w"},
+        {"unit":"stem","layer":"bn","name":"stem.bn","c":4,"weight":"stem.bn.gamma"},
+        {"unit":"stem","layer":"hswish","name":"stem.act","c":4},
+        {"unit":"b1","layer":"dwconv","name":"b1.dw","k":3,"stride":1,"padding":1,
+         "cin":4,"cout":4,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"b1.dw.w"},
+        {"unit":"b1","layer":"bn","name":"b1.bn","c":4,"weight":"b1.bn.gamma"},
+        {"unit":"b1","layer":"relu","name":"b1.act","c":4},
+        {"unit":"b1","layer":"gapool","name":"b1.se.gap","c":4,"h_in":4,"w_in":4},
+        {"unit":"b1","layer":"pconv","name":"b1.se.fc1","cin":4,"cout":2,"weight":"b1.se.fc1.w"},
+        {"unit":"b1","layer":"relu","name":"b1.se.act1","c":2},
+        {"unit":"b1","layer":"pconv","name":"b1.se.fc2","cin":2,"cout":4,"weight":"b1.se.fc2.w"},
+        {"unit":"b1","layer":"hsigmoid","name":"b1.se.act2","c":4},
+        {"unit":"b1","layer":"residual","name":"b1.add","c":4},
+        {"unit":"cls","layer":"gapool","name":"cls.gap","c":4,"h_in":4,"w_in":4},
+        {"unit":"cls","layer":"fc","name":"cls.fc","cin":4,"cout":3,"weight":"cls.fc.w"}"#;
+    let json = format!(
+        r#"{{
+        "arch":"demo","width":1.0,"img":4,"num_classes":3,
+        "digital_test_acc":0.0,"batch_sizes":[1,4],
+        "artifacts":{{}},
+        "device":{{"r_on":100,"r_off":16000,"levels":64,"prog_sigma":0.0,
+          "v_in":0.0025,"v_rail":8.0,"t_mem":1e-10,"slew_rate":1e7,
+          "v_swing":5.0,"p_opamp":0.001,"p_memristor":1.1e-6,"p_aux":0.0005,
+          "t_opamp":5e-7}},
+        "dataset":{{"file":"dataset.bin","n":0}},
+        "expected_logits":{{"file":"expected.bin","n":0}},
+        "weights":[{weights}],
+        "layers":[{layers}]
+        }}"#,
+        weights = b.entries.join(",")
+    );
+    let m = Manifest::parse(&json)?;
+    let ws = WeightStore::from_parts(b.data, m.weights.clone())?;
+    Ok((m, ws))
 }

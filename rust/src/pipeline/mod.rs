@@ -95,8 +95,10 @@ use anyhow::{bail, Result};
 
 use crate::util::pool;
 
-pub use builder::{default_device, synthetic_stack_crossbars, PipelineBuilder};
-pub use modules::{ActivationModule, BatchNormModule, CrossbarModule, GapModule, SeModule};
+pub use builder::{default_device, demo_network, synthetic_stack_crossbars, PipelineBuilder};
+pub use modules::{
+    ActivationModule, BatchNormModule, CrossbarModule, GapModule, ModuleCfg, SeModule,
+};
 /// Re-exported for builder callers: the SPICE engine's direct-vs-GMRES
 /// selection ([`PipelineBuilder::solver`]).
 pub use crate::spice::krylov::SolverStrategy;
@@ -194,6 +196,26 @@ pub trait AnalogModule: Send {
     fn shardable_leaves(&self) -> usize {
         1
     }
+
+    /// Resident simulated circuits backing this module at
+    /// [`Fidelity::Spice`] — crossbar netlist simulators, Fig 4 op-amp
+    /// circuits. 0 means the module answers from its exact/behavioural
+    /// transfer; at spice fidelity that is a conformance hole unless the
+    /// module is CMOS by design (ReLU) — the fidelity suite
+    /// (`rust/tests/fidelity.rs`) pins exactly this.
+    fn spice_circuits(&self) -> usize {
+        0
+    }
+
+    /// Auxiliary CMOS processing elements of this module — the per-element
+    /// activation circuit instances (and, for the SE branch, its squeezed
+    /// activations plus the per-channel trunk multipliers). Feeds the
+    /// `p_aux` term of the stage-hook energy model
+    /// ([`crate::power::energy_coverage`]); crossbar/BN/GAP stages have
+    /// none (their op-amps are counted separately).
+    fn cmos_elements(&self) -> usize {
+        0
+    }
 }
 
 /// One stage of a compiled [`Pipeline`].
@@ -212,6 +234,38 @@ impl Stage {
         match self {
             Stage::Module { unit, .. } | Stage::Residual { unit, .. } => unit,
         }
+    }
+}
+
+/// Per-stage fidelity/resource record ([`Pipeline::stage_coverage`]): the
+/// module's kind and dims, its resource hooks (netlist-derived at
+/// [`Fidelity::Spice`], closed-form otherwise) and its resident
+/// simulated-circuit count. Residual adders appear as kind `"Add"` with no
+/// circuits (the summing amplifier is evaluated exactly).
+#[derive(Debug, Clone)]
+pub struct StageCoverage {
+    pub unit: String,
+    pub name: String,
+    pub kind: &'static str,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub memristors: usize,
+    pub opamps: usize,
+    pub memristor_stages: usize,
+    pub spice_circuits: usize,
+    /// auxiliary CMOS processing elements (activation circuit instances,
+    /// SE channel multipliers; residual adders count one per channel)
+    pub cmos_elements: usize,
+}
+
+impl StageCoverage {
+    /// Is this stage allowed to answer its exact transfer at
+    /// [`Fidelity::Spice`]? Only the CMOS ReLU (the paper realizes it
+    /// without op-amps) and the residual summing amplifiers are — the
+    /// single source of the exemption policy shared by `report --coverage`
+    /// and the conformance suite (`rust/tests/fidelity.rs`).
+    pub fn spice_exempt(&self) -> bool {
+        matches!(self.kind, "ReLU" | "Add")
     }
 }
 
@@ -505,6 +559,57 @@ impl Pipeline {
     /// available to module worker pools).
     pub fn shardable_leaves(&self) -> usize {
         self.units.iter().map(|u| u.shardable_leaves()).sum()
+    }
+
+    /// Total resident simulated circuits across all stages — non-zero only
+    /// at [`Fidelity::Spice`], where every module except the CMOS ReLU and
+    /// the residual summing amplifiers holds its emitted netlist
+    /// ([`AnalogModule::spice_circuits`]).
+    pub fn spice_circuits(&self) -> usize {
+        self.stages()
+            .map(|s| match s {
+                Stage::Module { module, .. } => module.spice_circuits(),
+                Stage::Residual { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Per-stage fidelity/resource coverage, in chain order — the record
+    /// the conformance suite, `report --coverage` and the stage-hook power
+    /// model ([`crate::power::latency_coverage`]) consume. At
+    /// [`Fidelity::Spice`] the counts come from the emitted netlists
+    /// (see the fidelity coverage matrix in [`modules`]).
+    pub fn stage_coverage(&self) -> Vec<StageCoverage> {
+        self.units
+            .iter()
+            .flat_map(|u| u.stages.iter())
+            .map(|s| match s {
+                Stage::Module { unit, module } => StageCoverage {
+                    unit: unit.clone(),
+                    name: module.name().to_string(),
+                    kind: module.kind(),
+                    in_dim: module.in_dim(),
+                    out_dim: module.out_dim(),
+                    memristors: module.memristors(),
+                    opamps: module.opamps(),
+                    memristor_stages: module.memristor_stages(),
+                    spice_circuits: module.spice_circuits(),
+                    cmos_elements: module.cmos_elements(),
+                },
+                Stage::Residual { name, unit, dim, channels } => StageCoverage {
+                    unit: unit.clone(),
+                    name: name.clone(),
+                    kind: "Add",
+                    in_dim: *dim,
+                    out_dim: *dim,
+                    memristors: 0,
+                    opamps: *channels,
+                    memristor_stages: 0,
+                    spice_circuits: 0,
+                    cmos_elements: *channels,
+                },
+            })
+            .collect()
     }
 
     /// One-line summary for logs and demos.

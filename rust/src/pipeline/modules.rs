@@ -6,30 +6,84 @@
 //!   [`CrossbarSim`] and batches are answered by
 //!   [`CrossbarSim::solve_batch`] — one multi-RHS substitution pass per
 //!   netlist segment.
-//! * [`BatchNormModule`] — the §3.3 subtraction + scale/offset crossbar,
-//!   folded to its exact affine form `(x - mean) * k + beta`.
+//! * [`BatchNormModule`] — the §3.3 subtraction + scale/offset circuit,
+//!   folded to its exact affine form `(x - mean) * k + beta`; at
+//!   [`Fidelity::Spice`] a resident netlist pair
+//!   ([`analog::build_bn_crossbars`]).
 //! * [`ActivationModule`] — behavioural fast path (software / rail-clipped
 //!   forms) with the SPICE-backed Fig 4 [`ActCircuit`] at
 //!   [`Fidelity::Spice`].
-//! * [`GapModule`] — the §3.5 averaging column (1/N conductances).
+//! * [`GapModule`] — the §3.5 averaging column (1/N conductances); at
+//!   [`Fidelity::Spice`] a resident [`analog::build_gap_crossbar`] netlist.
 //! * [`SeModule`] — the squeeze-and-excite side branch: pool → FC → ReLU →
 //!   FC → hard sigmoid → per-channel scale of the trunk tensor.
+//!
+//! # Fidelity coverage matrix
+//!
+//! What each module actually executes per [`Fidelity`] — pinned by the
+//! conformance suite in `rust/tests/fidelity.rs`, so a module can only
+//! claim a fidelity it passes:
+//!
+//! | Module | Ideal | Behavioural | Spice |
+//! |---|---|---|---|
+//! | [`CrossbarModule`] FC/PConv | `Crossbar::eval_ideal` | eval + rail clamp | resident [`CrossbarSim`] |
+//! | [`CrossbarModule`] Conv/DConv | direct-form bank transfer | + rail clamp | per-bank [`CrossbarSim`]s |
+//! | [`BatchNormModule`] | exact affine fold | fold + rail clamp | §3.3 subtraction + scale/offset netlists |
+//! | [`ActivationModule`] h-sigmoid/h-swish | software forms | rail-clipped analog forms | Fig 4 op-amp circuits |
+//! | [`ActivationModule`] ReLU | software | rail-clipped CMOS | rail-clipped CMOS (by design: the paper realizes ReLU in CMOS, not op-amps) |
+//! | [`GapModule`] | exact per-channel mean | exact mean | §3.5 averaging-column netlist |
+//! | [`SeModule`] | composes the above | composes the above | composes the above |
+//! | residual stages | exact add | exact add | exact add (the summing amplifier is not circuit-simulated) |
+//!
+//! At [`Fidelity::Spice`] the resource hooks (`memristors` / `opamps` /
+//! `memristor_stages`) count the *emitted netlists* — BN reports its
+//! per-channel two-stage circuit pair (the placed devices of the Eq 10
+//! hardware, two crossbar stages on the Eq 17 path) and conv its per-bank
+//! placements — so `report --coverage` and the stage-hook power model
+//! ([`crate::power::latency_coverage`] / `energy_coverage`) reflect the
+//! circuits actually simulated; at the other fidelities they report the
+//! paper's closed-form counts (Eqs 10-13). [`AnalogModule::spice_circuits`]
+//! exposes the resident-circuit count the conformance suite checks for
+//! fidelity holes.
 
 use anyhow::{bail, Result};
 
 use crate::analog::{self, ActCircuit};
 use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom};
-use crate::mapper::{Crossbar, MapMode};
+use crate::mapper::{apply_prog_noise_analog, BnFold, Crossbar, MapMode};
 use crate::netlist::CrossbarSim;
 use crate::nn::{ActKind, ConvGeom, DeviceJson};
 use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 use crate::util::pool::par_map_mut;
+use crate::util::prng::Rng;
 
 use super::{AnalogModule, Fidelity};
 
-/// `gamma / sqrt(var + EPS)` fold constant — python/compile/model.py mirror.
-pub const BN_EPS: f64 = 1e-5;
+/// `gamma / sqrt(var + EPS)` fold constant — re-exported from the mapper,
+/// the single source shared with [`crate::mapper::bn_fold`] and the §3.3
+/// netlist builder.
+pub use crate::mapper::BN_EPS;
+
+/// Circuit-compilation environment shared by the module constructors: the
+/// device model plus the SPICE-engine knobs the [`super::PipelineBuilder`]
+/// resolves once per build — execution fidelity, netlist segmentation,
+/// elimination ordering, linear-solver strategy
+/// ([`SolverStrategy::Auto`] keeps segmented circuits direct and giant
+/// monolithic ones on preconditioned GMRES), worker budget and programming
+/// noise. Threading one struct through every constructor is what
+/// guarantees the §3.3/§3.5 netlists honour the same device config /
+/// noise / solver selection as the crossbar layers.
+#[derive(Debug, Clone)]
+pub struct ModuleCfg<'a> {
+    pub dev: &'a DeviceJson,
+    pub fidelity: Fidelity,
+    pub segment: usize,
+    pub ordering: Ordering,
+    pub solver: SolverStrategy,
+    pub workers: usize,
+    pub prog_sigma: f64,
+}
 
 fn clamp_rails(batch: &mut [Vec<f64>], v_rail: f64) {
     for row in batch.iter_mut() {
@@ -409,6 +463,13 @@ impl AnalogModule for CrossbarModule {
             Inner::Conv(cv) => cv.n_banks().max(1),
         }
     }
+
+    fn spice_circuits(&self) -> usize {
+        match &self.inner {
+            Inner::Fc { sim, .. } => usize::from(sim.is_some()),
+            Inner::Conv(cv) => cv.sims.len(),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -416,58 +477,86 @@ impl AnalogModule for CrossbarModule {
 // ---------------------------------------------------------------------------
 
 /// Folded batch normalization: `y = (x - mean) * k + beta` per channel with
-/// `k = gamma / sqrt(var + BN_EPS)` — the exact transfer of the paper's
-/// §3.3 subtraction + scale/offset crossbar pair (unit conductances, so the
-/// SPICE netlist adds only TIA-gain error; the affine form is used at every
-/// fidelity, rail-clipped at [`Fidelity::Behavioural`]).
+/// `k = gamma / sqrt(var + BN_EPS)` ([`BnFold`]). At [`Fidelity::Ideal`] /
+/// [`Fidelity::Behavioural`] the exact affine fold is evaluated directly
+/// (rail-clipped at behavioural); at [`Fidelity::Spice`] the module owns
+/// the §3.3 circuit as a resident per-channel netlist pair — the
+/// subtraction crossbar feeding the scale/offset conductance pairs
+/// ([`analog::build_bn_crossbars`], gain-balanced across the cascade),
+/// each a factor-once [`CrossbarSim`] with the builder's device config,
+/// programming noise and [`SolverStrategy`] applied; spatial positions
+/// and batch items are folded into one multi-RHS solve per stage.
 pub struct BatchNormModule {
     name: String,
     c: usize,
     /// elements per channel (h*w for spatial tensors, 1 for vectors)
     spatial: usize,
-    k: Vec<f64>,
-    mean: Vec<f64>,
-    beta: Vec<f64>,
+    fold: BnFold,
     fidelity: Fidelity,
     v_rail: f64,
+    workers: usize,
+    /// Eq 10/11 closed-form counts (non-spice fidelities)
+    formula_memristors: usize,
+    formula_opamps: usize,
+    sims: Option<BnSims>,
+}
+
+/// Resident §3.3 netlist pair plus the counts of what was actually emitted.
+struct BnSims {
+    sub: CrossbarSim,
+    scale: CrossbarSim,
+    memristors: usize,
     opamps: usize,
 }
 
 impl BatchNormModule {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         name: impl Into<String>,
         c: usize,
         spatial: usize,
-        gamma: &[f64],
-        beta: &[f64],
-        mean: &[f64],
-        var: &[f64],
+        fold: BnFold,
         mode: MapMode,
-        fidelity: Fidelity,
-        v_rail: f64,
+        cfg: &ModuleCfg,
+        rng: &mut Rng,
     ) -> Result<BatchNormModule> {
         let name = name.into();
-        for (label, t) in [("gamma", gamma), ("beta", beta), ("mean", mean), ("var", var)] {
+        for (label, t) in [("k", &fold.k), ("mean", &fold.mean), ("beta", &fold.beta)] {
             if t.len() != c {
                 bail!("bn '{name}': {label} has {} values for {c} channels", t.len());
             }
         }
-        let k: Vec<f64> = gamma
-            .iter()
-            .zip(var)
-            .map(|(g, v)| g / (v + BN_EPS).sqrt())
-            .collect();
+        let sims = if cfg.fidelity == Fidelity::Spice {
+            // the per-channel §3.3 circuit pair — exactly the Eq 10/11
+            // hardware (4 devices / 2 TIAs per channel). Spatial positions
+            // and batch items are folded into the multi-RHS solve at
+            // forward time, so the netlist stays c columns regardless of
+            // the feature-map size (a per-element unrolling would emit
+            // c*spatial-column crossbars and make real-network spice
+            // builds intractable).
+            let (mut sub, mut scale) =
+                analog::build_bn_crossbars(&name, c, 1, &fold.k, &fold.mean, &fold.beta, mode);
+            apply_prog_noise_analog(&mut sub.devices, cfg.prog_sigma, rng);
+            apply_prog_noise_analog(&mut scale.devices, cfg.prog_sigma, rng);
+            Some(BnSims {
+                memristors: sub.devices.len() + scale.devices.len(),
+                opamps: (sub.cols + scale.cols) * mode.opamps_per_port(),
+                sub: CrossbarSim::new(&sub, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?,
+                scale: CrossbarSim::new(&scale, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?,
+            })
+        } else {
+            None
+        };
         Ok(BatchNormModule {
             name,
             c,
             spatial,
-            k,
-            mean: mean.to_vec(),
-            beta: beta.to_vec(),
-            fidelity,
-            v_rail,
-            opamps: 2 * c * mode.opamps_per_port(),
+            fold,
+            fidelity: cfg.fidelity,
+            v_rail: cfg.dev.v_rail,
+            workers: cfg.workers,
+            formula_memristors: 4 * c,
+            formula_opamps: 2 * c * mode.opamps_per_port(),
+            sims,
         })
     }
 }
@@ -490,15 +579,47 @@ impl AnalogModule for BatchNormModule {
     }
 
     fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
         let expect = self.in_dim();
-        let mut out = Vec::with_capacity(inputs.len());
         for (n, x) in inputs.iter().enumerate() {
             if x.len() != expect {
                 bail!("'{}': input {n} has {} values, expected {expect}", self.name, x.len());
             }
+        }
+        if let Some(sims) = self.sims.as_mut() {
+            // §3.3 per-channel circuit chain: every (batch item, spatial
+            // position) pair is one RHS column of the c-input netlists —
+            // subtraction stage, then scale/offset stage
+            let (c, spatial) = (self.c, self.spatial);
+            let rhs: Vec<Vec<f64>> = inputs
+                .iter()
+                .flat_map(|x| {
+                    (0..spatial)
+                        .map(move |s| (0..c).map(|ch| x[ch * spatial + s]).collect())
+                })
+                .collect();
+            let u = sims.sub.solve_batch(&rhs, self.workers)?;
+            let y = sims.scale.solve_batch(&u, self.workers)?;
+            return Ok((0..inputs.len())
+                .map(|b| {
+                    let mut row = vec![0.0; c * spatial];
+                    for s in 0..spatial {
+                        let col = &y[b * spatial + s];
+                        for ch in 0..c {
+                            row[ch * spatial + s] = col[ch];
+                        }
+                    }
+                    row
+                })
+                .collect());
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for x in inputs {
             let mut y = vec![0.0; expect];
             for ch in 0..self.c {
-                let (k, m, b) = (self.k[ch], self.mean[ch], self.beta[ch]);
+                let (k, m, b) = (self.fold.k[ch], self.fold.mean[ch], self.fold.beta[ch]);
                 for s in 0..self.spatial {
                     y[ch * self.spatial + s] = (x[ch * self.spatial + s] - m) * k + b;
                 }
@@ -512,15 +633,30 @@ impl AnalogModule for BatchNormModule {
     }
 
     fn memristors(&self) -> usize {
-        4 * self.c // Eq 10
+        // Eq 10 closed form, or the emitted §3.3 netlist pair at spice
+        self.sims.as_ref().map_or(self.formula_memristors, |s| s.memristors)
     }
 
     fn opamps(&self) -> usize {
-        self.opamps // Eq 11
+        // Eq 11 closed form, or one TIA per emitted column at spice
+        self.sims.as_ref().map_or(self.formula_opamps, |s| s.opamps)
     }
 
     fn memristor_stages(&self) -> usize {
-        1
+        // the emitted circuit is two cascaded crossbar+TIA stages
+        if self.sims.is_some() {
+            2
+        } else {
+            1
+        }
+    }
+
+    fn spice_circuits(&self) -> usize {
+        if self.sims.is_some() {
+            2
+        } else {
+            0
+        }
     }
 }
 
@@ -669,26 +805,76 @@ impl AnalogModule for ActivationModule {
     fn opamps(&self) -> usize {
         self.opamps
     }
+
+    fn spice_circuits(&self) -> usize {
+        // CMOS ReLU stays behavioural by design, so it holds no circuit
+        usize::from(self.circuit.is_some())
+    }
+
+    fn cmos_elements(&self) -> usize {
+        // every element passes through its own activation instance
+        self.dim
+    }
 }
 
 // ---------------------------------------------------------------------------
 // GapModule
 // ---------------------------------------------------------------------------
 
-/// Global average pooling: the §3.5 single-column crossbar with 1/N
-/// conductances. The transfer is exactly the per-channel mean (linear, unit
-/// devices), so every fidelity evaluates it directly.
+/// Global average pooling: the §3.5 averaging column — one crossbar column
+/// per channel with `1/N` conductances into the op-amp summing node. The
+/// exact transfer is the per-channel mean, evaluated directly at
+/// [`Fidelity::Ideal`] / [`Fidelity::Behavioural`]; at [`Fidelity::Spice`]
+/// the module owns the emitted column netlist
+/// ([`analog::build_gap_crossbar`]) as a resident factor-once
+/// [`CrossbarSim`] with the builder's device config, programming noise and
+/// [`SolverStrategy`] applied.
 pub struct GapModule {
     name: String,
     c: usize,
     h: usize,
     w: usize,
+    workers: usize,
+    /// placed averaging conductances (netlist-derived at spice; the count
+    /// coincides with Eq 12's `h*w*c`)
+    memristors: usize,
     opamps: usize,
+    sim: Option<CrossbarSim>,
 }
 
 impl GapModule {
-    pub fn new(name: impl Into<String>, c: usize, h: usize, w: usize, mode: MapMode) -> GapModule {
-        GapModule { name: name.into(), c, h, w, opamps: c * mode.opamps_per_port() }
+    pub fn new(
+        name: impl Into<String>,
+        c: usize,
+        h: usize,
+        w: usize,
+        mode: MapMode,
+        cfg: &ModuleCfg,
+        rng: &mut Rng,
+    ) -> Result<GapModule> {
+        let name = name.into();
+        let spatial = h * w;
+        let (sim, memristors) = if cfg.fidelity == Fidelity::Spice {
+            let mut cb = analog::build_gap_crossbar(&name, c, spatial, mode);
+            apply_prog_noise_analog(&mut cb.devices, cfg.prog_sigma, rng);
+            let placed = cb.devices.len();
+            (
+                Some(CrossbarSim::new(&cb, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?),
+                placed,
+            )
+        } else {
+            (None, spatial * c) // Eq 12
+        };
+        Ok(GapModule {
+            name,
+            c,
+            h,
+            w,
+            workers: cfg.workers,
+            memristors,
+            opamps: c * mode.opamps_per_port(), // Eq 13 == one TIA per emitted column
+            sim,
+        })
     }
 }
 
@@ -710,26 +896,33 @@ impl AnalogModule for GapModule {
     }
 
     fn forward_batch(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
         let spatial = self.h * self.w;
         let expect = self.c * spatial;
-        let mut out = Vec::with_capacity(inputs.len());
         for (n, x) in inputs.iter().enumerate() {
             if x.len() != expect {
                 bail!("'{}': input {n} has {} values, expected {expect}", self.name, x.len());
             }
-            out.push(
+        }
+        if let Some(sim) = self.sim.as_mut() {
+            return sim.solve_batch(inputs, self.workers);
+        }
+        Ok(inputs
+            .iter()
+            .map(|x| {
                 (0..self.c)
                     .map(|ch| {
                         x[ch * spatial..(ch + 1) * spatial].iter().sum::<f64>() / spatial as f64
                     })
-                    .collect(),
-            );
-        }
-        Ok(out)
+                    .collect()
+            })
+            .collect())
     }
 
     fn memristors(&self) -> usize {
-        self.h * self.w * self.c // Eq 12
+        self.memristors
     }
 
     fn opamps(&self) -> usize {
@@ -738,6 +931,10 @@ impl AnalogModule for GapModule {
 
     fn memristor_stages(&self) -> usize {
         1
+    }
+
+    fn spice_circuits(&self) -> usize {
+        usize::from(self.sim.is_some())
     }
 }
 
@@ -854,5 +1051,21 @@ impl AnalogModule for SeModule {
             + self.act1.shardable_leaves()
             + self.fc2.shardable_leaves()
             + self.act2.shardable_leaves()
+    }
+
+    fn spice_circuits(&self) -> usize {
+        self.gap.spice_circuits()
+            + self.fc1.spice_circuits()
+            + self.act1.spice_circuits()
+            + self.fc2.spice_circuits()
+            + self.act2.spice_circuits()
+    }
+
+    fn cmos_elements(&self) -> usize {
+        // the squeezed branch activations plus one trunk multiplier per
+        // channel (the implicit per-channel scale) — NOT the full trunk
+        // tensor: the c*spatial elements only pass through multipliers
+        // channel-wise
+        self.act1.cmos_elements() + self.act2.cmos_elements() + self.c
     }
 }

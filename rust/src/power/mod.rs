@@ -9,8 +9,9 @@
 //! 0.1654 ms, i7-12700 3.3924 ms — paper §5.2) are carried alongside the
 //! digital-PJRT latency *measured on this host* so Fig 8 shows both.
 
-use crate::mapper::MappedNetwork;
+use crate::mapper::{MapMode, MappedNetwork};
 use crate::nn::DeviceJson;
+use crate::pipeline::StageCoverage;
 
 /// Latency of non-memristor stages per layer type (paper's T_r: existing
 /// CMOS device data — activation, adder, multiplier each ~ns scale; the
@@ -48,17 +49,7 @@ pub fn latency(net: &MappedNetwork, dev: &DeviceJson) -> LatencyBreakdown {
     // T_o doubles in the conventional dual-op-amp mapping: two sequential
     // op-amp transitions per crossbar stage (§5.2's "1.30 µs" comparison).
     let t_o = dev.t_opamp * net.mode.opamps_per_port() as f64;
-    let t_rest: f64 = net
-        .layers
-        .iter()
-        .map(|l| match l.kind {
-            "HSwish" => T_ACT + T_MUL,
-            "HSigmoid" => T_ACT,
-            "ReLU" => T_ACT,
-            "Add" => T_ADD,
-            _ => 0.0,
-        })
-        .sum();
+    let t_rest: f64 = net.layers.iter().map(|l| t_rest_of(l.kind)).sum();
     let total = (dev.t_mem + t_o) * n_m as f64 + t_rest;
     LatencyBreakdown { n_m, t_mem: dev.t_mem, t_opamp: t_o, t_rest, total }
 }
@@ -74,6 +65,65 @@ pub fn latency_pipelined(net: &MappedNetwork, dev: &DeviceJson) -> LatencyBreakd
     let t_rest = T_ACT + T_MUL; // slowest CMOS stage in flight
     let total = dev.t_mem + t_o + t_rest;
     LatencyBreakdown { n_m: 1, t_mem: dev.t_mem, t_opamp: t_o, t_rest, total }
+}
+
+/// T_r contribution of one stage kind (CMOS activation / adder /
+/// multiplier constants) — shared by the mapper-based [`latency`] and the
+/// stage-hook [`latency_coverage`]. The composite SE stage folds its
+/// branch ReLU + hard sigmoid + channel multiplier.
+fn t_rest_of(kind: &str) -> f64 {
+    match kind {
+        "HSwish" => T_ACT + T_MUL,
+        "HSigmoid" | "ReLU" => T_ACT,
+        "SE" => 2.0 * T_ACT + T_MUL,
+        "Add" => T_ADD,
+        _ => 0.0,
+    }
+}
+
+/// Eq 17 over a compiled pipeline's per-stage resource hooks
+/// ([`crate::pipeline::Pipeline::stage_coverage`]) — the execution-side
+/// mirror of [`latency`]: at `Fidelity::Spice` the hooks count the
+/// *emitted netlists* (the §3.3 BN subtraction + scale/offset pair is two
+/// crossbar stages, conv banks report their placed devices), so the model
+/// reflects the circuits actually simulated rather than the closed-form
+/// mapper counts.
+pub fn latency_coverage(
+    stages: &[StageCoverage],
+    dev: &DeviceJson,
+    mode: MapMode,
+) -> LatencyBreakdown {
+    let n_m: usize = stages.iter().map(|s| s.memristor_stages).sum();
+    let t_o = dev.t_opamp * mode.opamps_per_port() as f64;
+    let t_rest: f64 = stages.iter().map(|s| t_rest_of(s.kind)).sum();
+    let total = (dev.t_mem + t_o) * n_m as f64 + t_rest;
+    LatencyBreakdown { n_m, t_mem: dev.t_mem, t_opamp: t_o, t_rest, total }
+}
+
+/// Eq 18 over stage coverage — the companion of [`latency_coverage`].
+/// Aux (CMOS) hardware is counted by each stage's `cmos_elements` record:
+/// per processed element for activation circuits (what the spice
+/// execution model drives), the squeezed activations + per-channel trunk
+/// multipliers for SE stages, one summing amplifier per channel for
+/// residual adders — whereas the mapper's [`energy`] counts per-channel
+/// banks throughout.
+pub fn energy_coverage(
+    stages: &[StageCoverage],
+    dev: &DeviceJson,
+    t: &LatencyBreakdown,
+) -> EnergyBreakdown {
+    let memristors: usize = stages.iter().map(|s| s.memristors).sum();
+    let opamps: usize = stages.iter().map(|s| s.opamps).sum();
+    let e_mem = memristors as f64 * dev.p_memristor * t.t_mem * t.n_m as f64;
+    let e_op = opamps as f64 * dev.p_opamp * dev.t_opamp;
+    let aux: usize = stages.iter().map(|s| s.cmos_elements).sum();
+    let e_rest = aux as f64 * dev.p_aux * t.t_rest.max(T_ACT);
+    EnergyBreakdown {
+        e_memristors: e_mem,
+        e_opamps: e_op,
+        e_rest,
+        total: e_mem + e_op + e_rest,
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -237,6 +287,54 @@ mod tests {
         let n = net(MapMode::Inverted);
         let t = latency(&n, &dev());
         let e = energy(&n, &dev(), &t);
+        assert!(e.e_memristors > 0.0 && e.e_opamps > 0.0 && e.e_rest > 0.0);
+        assert!((e.total - (e.e_memristors + e.e_opamps + e.e_rest)).abs() < 1e-18);
+    }
+
+    fn cov(kind: &'static str, mem: usize, ops: usize, stages: usize, dim: usize) -> StageCoverage {
+        StageCoverage {
+            unit: "u".into(),
+            name: "s".into(),
+            kind,
+            in_dim: dim,
+            out_dim: dim,
+            memristors: mem,
+            opamps: ops,
+            memristor_stages: stages,
+            spice_circuits: stages,
+            // aux CMOS hardware exists exactly for the T_r-contributing kinds
+            cmos_elements: if t_rest_of(kind) > 0.0 { dim } else { 0 },
+        }
+    }
+
+    #[test]
+    fn coverage_latency_counts_stage_hooks() {
+        // a spice-mode BN reports its two-stage netlist pair: N_m reflects it
+        let stages = vec![
+            cov("Conv", 1000, 16, 1, 64),
+            cov("BN", 256, 128, 2, 64),
+            cov("HSwish", 0, 64, 0, 64),
+            cov("GAPool", 64, 4, 1, 4),
+            cov("FC", 5000, 10, 1, 10),
+        ];
+        let t = latency_coverage(&stages, &dev(), MapMode::Inverted);
+        assert_eq!(t.n_m, 5);
+        let expect = (100e-12 + 0.5e-6) * 5.0 + (T_ACT + T_MUL);
+        assert!((t.total - expect).abs() < 1e-15);
+        // dual mode doubles the op-amp transition, as in the mapper model
+        let td = latency_coverage(&stages, &dev(), MapMode::Dual);
+        assert!(td.total > t.total);
+    }
+
+    #[test]
+    fn coverage_energy_components_positive_and_sum() {
+        let stages = vec![
+            cov("BN", 256, 128, 2, 64),
+            cov("HSigmoid", 0, 4, 0, 16),
+            cov("Add", 0, 16, 0, 16),
+        ];
+        let t = latency_coverage(&stages, &dev(), MapMode::Inverted);
+        let e = energy_coverage(&stages, &dev(), &t);
         assert!(e.e_memristors > 0.0 && e.e_opamps > 0.0 && e.e_rest > 0.0);
         assert!((e.total - (e.e_memristors + e.e_opamps + e.e_rest)).abs() < 1e-18);
     }

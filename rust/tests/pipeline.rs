@@ -452,6 +452,65 @@ fn pipelined_se_and_conv_unit_graph_matches_sequential() {
 }
 
 #[test]
+fn bn_gap_spice_chain_batch_single_and_pipelined_identity() {
+    // unit u0 closes a residual around conv + BN + ReLU; cls pools and
+    // classifies. At Fidelity::Spice the BN §3.3 pair and the GAP §3.5
+    // column are resident netlists, and (a) batched forwards equal
+    // per-image forwards within the multi-RHS guarantee, (b) once warm,
+    // the §5.2 pipelined schedule is bit-identical to the sequential walk.
+    let layers = r#"
+        {"unit":"u0","layer":"conv","name":"c0","k":3,"stride":1,"padding":1,
+         "cin":2,"cout":2,"h_in":4,"w_in":4,"h_out":4,"w_out":4,"weight":"c0.w"},
+        {"unit":"u0","layer":"bn","name":"bn0","c":2,"weight":"bn0.gamma"},
+        {"unit":"u0","layer":"relu","name":"a0","c":2},
+        {"unit":"u0","layer":"residual","name":"u0.add","c":2},
+        {"unit":"cls","layer":"gapool","name":"pool","c":2,"h_in":4,"w_in":4},
+        {"unit":"cls","layer":"fc","name":"fc","cin":2,"cout":3,"weight":"f.w"}"#;
+    let weights = r#"
+        {"name":"c0.w","shape":[3,3,2,2],"offset":0,"len":36,"scale":0.4},
+        {"name":"bn0.gamma","shape":[2],"offset":36,"len":2},
+        {"name":"bn0.beta","shape":[2],"offset":38,"len":2},
+        {"name":"bn0.mean","shape":[2],"offset":40,"len":2},
+        {"name":"bn0.var","shape":[2],"offset":42,"len":2},
+        {"name":"f.w","shape":[2,3],"offset":44,"len":6,"scale":0.4}"#;
+    let mut blob = rand_blob(36, 0.4, 61);
+    blob.extend([0.9f32, -1.1, 0.1, -0.2, 0.05, -0.1, 0.8, 1.2]); // γ(one negative) β μ σ²
+    blob.extend(rand_blob(6, 0.4, 62));
+    let (m, ws) = load(layers, weights, blob);
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(4)
+        .workers(2)
+        .build(&m, &ws)
+        .unwrap();
+    // the BN pair and the GAP column are resident circuits, not fallbacks
+    assert!(p.spice_circuits() > 0);
+    assert!(p
+        .stage_coverage()
+        .iter()
+        .filter(|s| matches!(s.kind, "BN" | "GAPool"))
+        .all(|s| s.spice_circuits >= 1));
+    let mut rng = Rng::new(19);
+    let batch: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..p.in_dim()).map(|_| rng.range_f64(-0.4, 0.4)).collect())
+        .collect();
+    // batch == single equivalence on the spice path
+    let batched = p.forward_batch(&batch).unwrap();
+    for (k, x) in batch.iter().enumerate() {
+        let single = p.forward(x).unwrap();
+        for (a, b) in single.iter().zip(&batched[k]) {
+            assert!((a - b).abs() < 1e-9, "batch {k}: single {a} vs batched {b}");
+        }
+    }
+    // warm pipelined == sequential, bit for bit
+    let want = p.forward_batch(&batch).unwrap();
+    for (workers, micro) in [(2, 2), (3, 1), (2, 0)] {
+        let got = p.forward_batch_pipelined(&batch, workers, micro).unwrap();
+        assert_eq!(got, want, "workers {workers} micro {micro}");
+    }
+}
+
+#[test]
 fn prog_noise_perturbs_but_preserves_structure() {
     let dev = default_device();
     let mut clean = PipelineBuilder::new()

@@ -7,9 +7,12 @@ use memx::coordinator::batcher::plan_batch;
 use memx::mapper::layout::{
     out_dim, p_neg, p_pos, place_conv_kernel, place_fc, ConvXbarGeom, FcXbarGeom,
 };
-use memx::mapper::{self, MapMode};
+use memx::mapper::{self, BnFold, MapMode, BN_EPS};
 use memx::netlist::plan_segments;
-use memx::pipeline::{default_device, synthetic_stack_crossbars, Fidelity, PipelineBuilder};
+use memx::pipeline::{
+    default_device, synthetic_stack_crossbars, AnalogModule, BatchNormModule, Fidelity,
+    ModuleCfg, PipelineBuilder,
+};
 use memx::spice::factor;
 use memx::spice::krylov::{gmres, Ilu0, KrylovCfg, SolverStrategy};
 use memx::spice::solve::{solve_dense, Ordering, SparseSys};
@@ -534,6 +537,68 @@ fn prop_sweep_cache_equivalence() {
     );
 }
 
+#[test]
+fn prop_bn_spice_netlists_match_affine_fold() {
+    // the §3.3 netlist pair (subtraction crossbar + scale/offset pairs,
+    // solved through the resident CrossbarSims) vs the exact affine fold
+    // over random gamma/beta/mean/var draws — including negative scales
+    // and near-zero variances — within 1e-4
+    check(
+        "bn-spice-affine-fold",
+        8,
+        |rng: &mut Rng, size: usize| {
+            let c = 1 + rng.below(3 + size.min(3));
+            let spatial = 1 + rng.below(3);
+            let gamma: Vec<f64> = (0..c).map(|_| rng.range_f64(-1.5, 1.5)).collect();
+            let beta: Vec<f64> = (0..c).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let mean: Vec<f64> = (0..c).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let var: Vec<f64> = (0..c)
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        rng.range_f64(0.0, 1e-4) // near-zero variance draw
+                    } else {
+                        rng.range_f64(0.05, 2.0)
+                    }
+                })
+                .collect();
+            (c, spatial, gamma, beta, mean, var, rng.next_u64())
+        },
+        |(c, spatial, gamma, beta, mean, var, seed)| {
+            let dev = default_device();
+            let cfg = ModuleCfg {
+                dev: &dev,
+                fidelity: Fidelity::Spice,
+                segment: 3,
+                ordering: Ordering::Smart,
+                solver: SolverStrategy::Auto,
+                workers: 1,
+                prog_sigma: 0.0,
+            };
+            let mut rng = Rng::new(seed ^ 0xB17);
+            let Ok(mut bn) = BatchNormModule::new(
+                "p.bn",
+                *c,
+                *spatial,
+                BnFold::from_stats(gamma, beta, mean, var),
+                MapMode::Inverted,
+                &cfg,
+                &mut rng,
+            ) else {
+                return false;
+            };
+            let x: Vec<f64> = (0..c * spatial).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let Ok(got) = bn.forward(&x) else { return false };
+            (0..*c).all(|ch| {
+                let k = gamma[ch] / (var[ch] + BN_EPS).sqrt();
+                (0..*spatial).all(|s| {
+                    let want = (x[ch * spatial + s] - mean[ch]) * k + beta[ch];
+                    (got[ch * spatial + s] - want).abs() < 1e-4 * (1.0 + want.abs())
+                })
+            })
+        },
+    );
+}
+
 /// Random small FC-stack dims (first entry = input dim) plus a layer seed.
 fn gen_stack_dims(rng: &mut Rng, size: usize) -> (Vec<usize>, u64) {
     let n_layers = 2 + rng.below(2); // 2-3 crossbars
@@ -606,18 +671,28 @@ fn prop_pipeline_spice_matches_ideal_within_tolerance() {
     );
 }
 
-/// Deterministic random unit chain (FC crossbar stages, some units closed
-/// by residual adders) — the "random stage graph" the pipelined scheduler
-/// is checked on. Returns the pipeline and its input dim.
+/// Deterministic random unit chain (FC crossbar stages interleaved with
+/// batch-norm stages and GAP averaging columns, some units closed by
+/// residual adders) — the "random stage graph" the pipelined scheduler is
+/// checked on. Returns the pipeline and its input dim.
 fn build_random_unit_pipeline(
     seed: u64,
     n_units: usize,
     fidelity: Fidelity,
 ) -> (memx::pipeline::Pipeline, usize) {
-    use memx::pipeline::{Pipeline, Stage};
+    use memx::pipeline::{GapModule, Pipeline, Stage};
 
     let dev = default_device();
     let builder = PipelineBuilder::new().fidelity(fidelity);
+    let cfg = ModuleCfg {
+        dev: &dev,
+        fidelity,
+        segment: 4,
+        ordering: Ordering::Smart,
+        solver: SolverStrategy::Auto,
+        workers: 1,
+        prog_sigma: 0.0,
+    };
     let mut rng = Rng::new(seed);
     let mut dim = 2 + rng.below(6);
     let in_dim = dim;
@@ -628,17 +703,70 @@ fn build_random_unit_pipeline(
         let residual = rng.bool();
         let n_mods = 1 + rng.below(2);
         for m in 0..n_mods {
-            let dout = if residual { dim } else { 1 + rng.below(6) };
-            let cb = mapper::build_synthetic_fc(
-                dim,
-                dout,
-                dev.levels,
-                MapMode::Inverted,
-                seed ^ (u as u64 * 977 + m as u64 * 131 + 7),
-            );
-            let module = builder.crossbar_module(cb, &dev).unwrap();
-            stages.push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
-            dim = dout;
+            match rng.below(4) {
+                // batch-norm stage: dim-preserving random affine fold
+                0 => {
+                    let gamma: Vec<f64> =
+                        (0..dim).map(|_| rng.range_f64(-1.5, 1.5)).collect();
+                    let beta: Vec<f64> = (0..dim).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+                    let mean: Vec<f64> = (0..dim).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+                    let var: Vec<f64> = (0..dim).map(|_| rng.range_f64(0.05, 2.0)).collect();
+                    let module = BatchNormModule::new(
+                        format!("{unit}.bn{m}"),
+                        dim,
+                        1,
+                        BnFold::from_stats(&gamma, &beta, &mean, &var),
+                        MapMode::Inverted,
+                        &cfg,
+                        &mut rng,
+                    )
+                    .unwrap();
+                    stages
+                        .push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                }
+                // averaging column: bridge crossbar into c*2, then GAP back
+                // to c (dim changes, so only inside residual-free units)
+                1 if !residual => {
+                    let c = 1 + rng.below(3);
+                    let cb = mapper::build_synthetic_fc(
+                        dim,
+                        c * 2,
+                        dev.levels,
+                        MapMode::Inverted,
+                        seed ^ (u as u64 * 977 + m as u64 * 131 + 19),
+                    );
+                    let module = builder.crossbar_module(cb, &dev).unwrap();
+                    stages
+                        .push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                    let gap = GapModule::new(
+                        format!("{unit}.gap{m}"),
+                        c,
+                        2,
+                        1,
+                        MapMode::Inverted,
+                        &cfg,
+                        &mut rng,
+                    )
+                    .unwrap();
+                    stages.push(Stage::Module { unit: unit.clone(), module: Box::new(gap) });
+                    dim = c;
+                }
+                // FC crossbar stage (the original generator arm)
+                _ => {
+                    let dout = if residual { dim } else { 1 + rng.below(6) };
+                    let cb = mapper::build_synthetic_fc(
+                        dim,
+                        dout,
+                        dev.levels,
+                        MapMode::Inverted,
+                        seed ^ (u as u64 * 977 + m as u64 * 131 + 7),
+                    );
+                    let module = builder.crossbar_module(cb, &dev).unwrap();
+                    stages
+                        .push(Stage::Module { unit: unit.clone(), module: Box::new(module) });
+                    dim = dout;
+                }
+            }
         }
         if residual {
             stages.push(Stage::Residual {
