@@ -19,6 +19,7 @@
 
 use std::path::Path;
 
+use memx::fault::{FaultConfig, FaultModel};
 use memx::mapper::{self, MapMode};
 use memx::nn::{Manifest, WeightStore};
 use memx::pipeline::{
@@ -72,6 +73,26 @@ fn synthetic_tour() -> anyhow::Result<()> {
             logits[0][0]
         );
     }
+
+    // device lifetime: age the resident crossbars in place with the
+    // memx::fault engine (log-time drift + read disturb + stuck cells),
+    // then reprogram — the write pass that a self-recalibrating server
+    // triggers from its logit-margin watchdog (see `memx drift` for the
+    // full accuracy/energy-vs-hours sweep)
+    let mut pipe = PipelineBuilder::new()
+        .fidelity(Fidelity::Behavioural)
+        .build_fc_stack(&dims, &dev, 7)?;
+    let fresh: Vec<usize> = pipe.classify_batch(&batch)?;
+    let mut clock = FaultModel::new(FaultConfig { stuck_off_frac: 0.05, ..Default::default() });
+    pipe.inject_faults(&clock.advance(10_000.0, 5_000_000));
+    let aged = pipe.classify_batch(&batch)?;
+    let rewritten = pipe.reprogram(0.0, clock.cfg().seed, 1);
+    clock.reset_clock();
+    let recovered = pipe.classify_batch(&batch)?;
+    println!(
+        "lifetime     labels fresh {fresh:?} -> aged 10kh {aged:?} -> \
+         reprogrammed {recovered:?} ({rewritten} devices rewritten)"
+    );
     Ok(())
 }
 

@@ -7,13 +7,20 @@
 //! ([`StageStat`]) which is merged here and printed with the snapshot.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::pipeline::StageStat;
 
 /// Fixed log-scale latency histogram from 1 µs to ~67 s.
 const BUCKETS: usize = 27;
+
+/// Poison-tolerant lock: a panicking batcher thread must not take the
+/// metrics down with it — a poisoned histogram is still a histogram, so
+/// recover the guard and keep serving reads.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -22,6 +29,10 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// batches whose logit-margin EWMA crossed the drift threshold
+    pub drift_detections: AtomicU64,
+    /// successful executor recalibrations (crossbar reprogram cycles)
+    pub recalibrations: AtomicU64,
     /// nanoseconds the executor spent inside `run_batch`
     exec_busy_ns: AtomicU64,
     lat: Mutex<Hist>,
@@ -93,17 +104,23 @@ pub struct Snapshot {
     pub queue_mean: Duration,
     /// total time the executor spent answering batches
     pub exec_busy: Duration,
+    /// drift-watchdog triggers and the reprogram cycles they caused
+    pub drift_detections: u64,
+    pub recalibrations: u64,
+    /// iterative-solver direct-factorization fallbacks (process-wide,
+    /// read from [`crate::spice::solver_fallbacks`] at snapshot time)
+    pub solver_fallbacks: u64,
     /// per-stage wall time in chain order (pipeline executors only)
     pub stages: Vec<StageStat>,
 }
 
 impl Metrics {
     pub fn record_latency(&self, d: Duration) {
-        self.lat.lock().unwrap().record(d);
+        locked(&self.lat).record(d);
     }
 
     pub fn record_queue(&self, d: Duration) {
-        self.queue_lat.lock().unwrap().record(d);
+        locked(&self.queue_lat).record(d);
     }
 
     /// Account one executor dispatch (time spent inside `run_batch`).
@@ -118,7 +135,7 @@ impl Metrics {
         if stats.is_empty() {
             return;
         }
-        let mut table = self.stages.lock().unwrap();
+        let mut table = locked(&self.stages);
         for s in stats {
             if s.calls == 0 && s.total.is_zero() {
                 continue;
@@ -138,12 +155,9 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let lat = self.lat.lock().unwrap().clone();
-        let q = self.queue_lat.lock().unwrap().clone();
-        let stages = self
-            .stages
-            .lock()
-            .unwrap()
+        let lat = locked(&self.lat).clone();
+        let q = locked(&self.queue_lat).clone();
+        let stages = locked(&self.stages)
             .iter()
             .map(|c| StageStat {
                 name: c.name.clone(),
@@ -164,6 +178,9 @@ impl Metrics {
             lat_max: Duration::from_micros(lat.max_us),
             queue_mean: q.mean(),
             exec_busy: Duration::from_nanos(self.exec_busy_ns.load(Ordering::Relaxed)),
+            drift_detections: self.drift_detections.load(Ordering::Relaxed),
+            recalibrations: self.recalibrations.load(Ordering::Relaxed),
+            solver_fallbacks: crate::spice::solver_fallbacks(),
             stages,
         }
     }
@@ -195,6 +212,15 @@ impl Snapshot {
             self.exec_busy,
             self.utilization(wall) * 100.0
         );
+        if self.drift_detections > 0 || self.recalibrations > 0 {
+            println!(
+                "  drift watch   {} detections, {} recalibrations",
+                self.drift_detections, self.recalibrations
+            );
+        }
+        if self.solver_fallbacks > 0 {
+            println!("  solver        {} iterative->direct fallbacks", self.solver_fallbacks);
+        }
         if !self.stages.is_empty() {
             // heaviest stages first; the chain is long, keep the tail quiet
             let mut by_cost: Vec<&StageStat> = self.stages.iter().collect();

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fault::FaultModel;
 use crate::pipeline::{image_to_input, Fidelity, Pipeline, PipelineBuilder, StageStat};
 use crate::util::argmax_rows;
 use crate::util::bin::Dataset;
@@ -88,7 +89,41 @@ pub trait InferenceExecutor {
     fn take_stage_stats(&mut self) -> Vec<StageStat> {
         Vec::new()
     }
+
+    /// Restore the backend to its as-programmed state (reprogram drifted
+    /// crossbars, refresh caches). Called by the serving thread's drift
+    /// watchdog between batches; returns how many devices were rewritten
+    /// (0 = nothing to recalibrate, the default for stateless backends).
+    fn recalibrate(&mut self) -> Result<u64> {
+        Ok(0)
+    }
 }
+
+/// Structured per-request failure the serving thread attaches when an
+/// executor errors mid-stream: which batch failed, how big it was, and the
+/// executor's own message. Clients can `downcast_ref::<ExecuteError>()` on
+/// the returned `anyhow::Error` to tell executor faults apart from
+/// submission/shape errors.
+#[derive(Debug, Clone)]
+pub struct ExecuteError {
+    /// 1-based batch ordinal (matches the `batches` metric)
+    pub batch: u64,
+    /// real (unpadded) requests that failed with it
+    pub batch_size: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for ExecuteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "execute failed on batch {} ({} requests): {}",
+            self.batch, self.batch_size, self.detail
+        )
+    }
+}
+
+impl std::error::Error for ExecuteError {}
 
 /// Positive, ascending, deduplicated batch-size plan set (the batcher's
 /// contract), with `fallback` substituted when nothing survives.
@@ -120,6 +155,23 @@ pub struct PipelineExecutor {
     batches: Vec<usize>,
     workers: usize,
     micro_batch: usize,
+    faults: Option<FaultDrive>,
+}
+
+/// Simulated deployment-time aging attached to a [`PipelineExecutor`]:
+/// every served batch advances the [`FaultModel`] clock and injects the
+/// increment into the resident crossbars; [`InferenceExecutor::recalibrate`]
+/// reprograms them back to the as-built weights (stuck cells persist).
+struct FaultDrive {
+    model: FaultModel,
+    /// simulated hours of aging per served batch
+    hours_per_batch: f64,
+    /// read-disturb events charged per image in a batch
+    reads_per_image: u64,
+    /// programming noise applied on each reprogram cycle
+    prog_sigma: f64,
+    /// reprogram generation counter (seeds fresh write noise per cycle)
+    generation: u64,
 }
 
 impl PipelineExecutor {
@@ -147,6 +199,7 @@ impl PipelineExecutor {
             batches: sanitize_batch_sizes(batches, &[1, 8, 32]),
             workers,
             micro_batch: 0, // auto: sized from batch / unit-group count
+            faults: None,
         })
     }
 
@@ -178,6 +231,28 @@ impl PipelineExecutor {
     /// Override the scheduler's micro-batch size (0 = auto).
     pub fn micro_batch(mut self, micro_batch: usize) -> Self {
         self.micro_batch = micro_batch;
+        self
+    }
+
+    /// Attach a device-lifetime fault clock: each served batch ages the
+    /// resident crossbars by `hours_per_batch` simulated hours and
+    /// `reads_per_image` read-disturb events per image, and
+    /// [`InferenceExecutor::recalibrate`] reprograms them (with
+    /// `prog_sigma` fresh write noise) when the drift watchdog fires.
+    pub fn with_faults(
+        mut self,
+        model: FaultModel,
+        hours_per_batch: f64,
+        reads_per_image: u64,
+        prog_sigma: f64,
+    ) -> Self {
+        self.faults = Some(FaultDrive {
+            model,
+            hours_per_batch,
+            reads_per_image,
+            prog_sigma,
+            generation: 0,
+        });
         self
     }
 
@@ -221,12 +296,29 @@ impl InferenceExecutor for PipelineExecutor {
             .chunks(img)
             .map(|chunk| image_to_input(chunk, self.h, self.w, self.c))
             .collect();
+        if let Some(f) = self.faults.as_mut() {
+            // age the crossbars in place before answering: value-only
+            // conductance updates, the cached factorizations survive
+            let step = f.model.advance(f.hours_per_batch, f.reads_per_image * batch.len() as u64);
+            self.pipeline.inject_faults(&step);
+        }
         let rows = self.pipeline.forward_batch_pipelined(&batch, self.workers, self.micro_batch)?;
         Ok(rows.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect())
     }
 
     fn take_stage_stats(&mut self) -> Vec<StageStat> {
         self.pipeline.take_stage_stats()
+    }
+
+    fn recalibrate(&mut self) -> Result<u64> {
+        let Some(f) = self.faults.as_mut() else {
+            return Ok(0);
+        };
+        f.generation += 1;
+        let rewritten = self.pipeline.reprogram(f.prog_sigma, f.model.cfg().seed, f.generation);
+        // drift restarts from the freshly written state
+        f.model.reset_clock();
+        Ok(rewritten as u64)
     }
 }
 
@@ -358,6 +450,93 @@ impl Backend {
     }
 }
 
+/// Online-recalibration policy: the serving thread tracks the per-batch
+/// mean top1−top2 logit margin as an EWMA; once a baseline is established
+/// over the first `warm_batches`, an EWMA below `margin_frac * baseline`
+/// flags drift and triggers [`InferenceExecutor::recalibrate`] between
+/// batches, rate-limited by `cooldown_batches`.
+#[derive(Debug, Clone, Copy)]
+pub struct RecalPolicy {
+    pub enabled: bool,
+    /// EWMA smoothing factor in (0, 1]; higher reacts faster
+    pub ewma_alpha: f64,
+    /// batches to average before the margin baseline is frozen
+    pub warm_batches: u64,
+    /// drift threshold as a fraction of the baseline margin
+    pub margin_frac: f64,
+    /// minimum batches between recalibration attempts
+    pub cooldown_batches: u64,
+}
+
+impl Default for RecalPolicy {
+    fn default() -> Self {
+        RecalPolicy {
+            enabled: true,
+            ewma_alpha: 0.3,
+            warm_batches: 3,
+            margin_frac: 0.6,
+            cooldown_batches: 5,
+        }
+    }
+}
+
+impl RecalPolicy {
+    /// No drift watching — the seed behavior of [`Server::start_with`].
+    pub fn disabled() -> Self {
+        RecalPolicy { enabled: false, ..Default::default() }
+    }
+}
+
+/// The serving thread's drift-watchdog state over [`RecalPolicy`].
+struct DriftWatch {
+    policy: RecalPolicy,
+    ewma: Option<f64>,
+    baseline: Option<f64>,
+    batches_seen: u64,
+    cooldown_until: u64,
+}
+
+impl DriftWatch {
+    fn new(policy: RecalPolicy) -> DriftWatch {
+        DriftWatch { policy, ewma: None, baseline: None, batches_seen: 0, cooldown_until: 0 }
+    }
+
+    /// Feed one batch's mean logit margin; true = drift flagged, the
+    /// caller should recalibrate now.
+    fn observe(&mut self, margin: f64) -> bool {
+        if !self.policy.enabled || !margin.is_finite() {
+            return false;
+        }
+        self.batches_seen += 1;
+        let a = self.policy.ewma_alpha.clamp(1e-6, 1.0);
+        let ewma = match self.ewma {
+            Some(prev) => a * margin + (1.0 - a) * prev,
+            None => margin,
+        };
+        self.ewma = Some(ewma);
+        if self.baseline.is_none() {
+            if self.batches_seen >= self.policy.warm_batches.max(1) {
+                self.baseline = Some(ewma);
+            }
+            return false;
+        }
+        let baseline = self.baseline.expect("baseline frozen above");
+        if ewma < self.policy.margin_frac * baseline && self.batches_seen >= self.cooldown_until {
+            self.cooldown_until = self.batches_seen + self.policy.cooldown_batches.max(1);
+            return true;
+        }
+        false
+    }
+
+    /// A recalibration landed: re-learn the baseline from the fresh state.
+    fn reset(&mut self) {
+        self.ewma = None;
+        self.baseline = None;
+        self.batches_seen = 0;
+        self.cooldown_until = 0;
+    }
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -400,6 +579,21 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn InferenceExecutor>> + Send + 'static,
     {
+        Self::start_with_policy(max_wait, RecalPolicy::disabled(), factory)
+    }
+
+    /// [`Server::start_with`] plus an online drift watchdog: the serving
+    /// thread monitors the per-batch logit-margin EWMA under `policy` and
+    /// calls [`InferenceExecutor::recalibrate`] between batches when it
+    /// degrades past the threshold.
+    pub fn start_with_policy<F>(
+        max_wait: Duration,
+        policy: RecalPolicy,
+        factory: F,
+    ) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceExecutor>> + Send + 'static,
+    {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
@@ -409,7 +603,7 @@ impl Server {
         let (ready_tx, ready_rx) = channel::<Result<(Duration, usize)>>();
         let join = std::thread::Builder::new()
             .name("memx-serve".into())
-            .spawn(move || serve_thread(factory, max_wait, rx, m2, stop2, ready_tx))
+            .spawn(move || serve_thread(factory, max_wait, policy, rx, m2, stop2, ready_tx))
             .expect("spawn server thread");
         let (warmup, img_elems) = ready_rx
             .recv()
@@ -454,6 +648,7 @@ impl Drop for Server {
 fn serve_thread<F>(
     factory: F,
     max_wait: Duration,
+    policy: RecalPolicy,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
@@ -491,6 +686,7 @@ fn serve_thread<F>(
     // reusable input buffer — hot path stays allocation-free after warmup
     let largest = *sizes.last().expect("non-empty batch sizes");
     let mut input = vec![0f32; largest * img_elems];
+    let mut watch = DriftWatch::new(policy);
 
     while !stop.load(Ordering::Relaxed) {
         // drain everything currently queued
@@ -555,15 +751,63 @@ fn serve_thread<F>(
                     };
                     r.resp.send(Ok(pred)).ok();
                 }
+                // drift watchdog: a collapsing top1-top2 margin over the
+                // real (unpadded) rows is the online symptom of conductance
+                // decay — recalibrate between batches, never mid-batch
+                if watch.policy.enabled
+                    && classes >= 2
+                    && watch.observe(mean_margin(&logits, classes, plan.real))
+                {
+                    metrics.drift_detections.fetch_add(1, Ordering::Relaxed);
+                    match exec.recalibrate() {
+                        Ok(n) if n > 0 => {
+                            metrics.recalibrations.fetch_add(1, Ordering::Relaxed);
+                            watch.reset();
+                        }
+                        // nothing reprogrammable, or the attempt failed:
+                        // the cooldown stops the watchdog from spinning
+                        _ => {}
+                    }
+                }
             }
             Err(e) => {
+                let batch_no = metrics.batches.load(Ordering::Relaxed);
                 for r in batch {
                     metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    r.resp.send(Err(anyhow!("execute failed: {e}"))).ok();
+                    r.resp
+                        .send(Err(anyhow::Error::new(ExecuteError {
+                            batch: batch_no,
+                            batch_size: plan.real,
+                            detail: e.to_string(),
+                        })))
+                        .ok();
                 }
             }
         }
     }
+}
+
+/// Mean top1−top2 logit margin over the first `rows` rows of a row-major
+/// logits buffer — the drift watchdog's confidence signal.
+fn mean_margin(logits: &[f32], classes: usize, rows: usize) -> f64 {
+    if rows == 0 || classes < 2 {
+        return f64::INFINITY;
+    }
+    let mut sum = 0.0;
+    for i in 0..rows {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let (mut top, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for &v in row {
+            if v > top {
+                second = top;
+                top = v;
+            } else if v > second {
+                second = v;
+            }
+        }
+        sum += (top - second) as f64;
+    }
+    sum / rows as f64
 }
 
 // ---------------------------------------------------------------------------

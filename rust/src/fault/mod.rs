@@ -1,0 +1,467 @@
+//! Device-lifetime fault engine: conductance drift, read disturb,
+//! temperature scaling, and stuck-at cells over simulated deployment time.
+//!
+//! The paper reports a single pristine-device accuracy number, but deployed
+//! memristor arrays degrade continuously. This module models the dominant
+//! lifetime failure modes and applies them **in place** to every resident
+//! crossbar, so the serving pipeline never rebuilds and the cached symbolic
+//! factorization (and the warm-GMRES preconditioner-reuse contract in
+//! [`crate::spice`]) carries across every update:
+//!
+//! - **Log-time drift** — each device relaxes as `g(t) = g0 · (t/t0)^-ν`
+//!   ([`FaultConfig::drift_nu`]); per-device exponents are spread by
+//!   [`FaultConfig::nu_sigma`] so drift is *not* a uniform logit scaling
+//!   (uniform decay is argmax-neutral and would hide real damage).
+//! - **Read disturb** — every read nudges conductance down; accumulated as
+//!   [`FaultConfig::read_disturb_rate`] fractional loss per 10⁶ reads.
+//! - **Temperature scaling** — the effective drift exponent grows with
+//!   operating temperature: `ν_eff = ν · (1 + temp_coeff·(T - T_ref))`.
+//! - **Stuck-at cells** — a fixed fraction of devices pin to the window
+//!   extremes (`stuck_on_frac` → `g_on`, `stuck_off_frac` → `g_off`). The
+//!   mask is a pure hash of `(seed, bank, index)`, so it is time-invariant
+//!   and survives recalibration — reprogramming cannot heal dead cells.
+//!
+//! # Usage
+//!
+//! A [`FaultModel`] owns the simulated clock. Each call to
+//! [`FaultModel::advance`] yields a [`FaultStep`] — an *incremental*
+//! multiplicative update carrying `ln((t2+t0)/(t1+t0))`, so successive steps
+//! compose exactly to the closed-form power law no matter how deployment
+//! time is sliced. The step is pushed through the module tree by
+//! `Pipeline::inject_faults` (every `AnalogModule` implements an
+//! `inject_faults` hook), which edits placed conductances and, at
+//! `Fidelity::Spice`, performs value-only netlist updates via
+//! `CrossbarSim::update_conductances` — no topology change, so post-drift
+//! re-solves ride the stale-LU/ILU warm paths.
+//!
+//! Recalibration (`Pipeline::reprogram`) restores pristine conductances,
+//! re-applies programming noise and the immutable stuck mask, and resets the
+//! model clock ([`FaultModel::reset_clock`]) — the online serving loop in
+//! [`crate::coordinator`] triggers this from logit-margin EWMA statistics.
+//! Sweep both with the `memx drift` subcommand.
+
+use crate::mapper::layout::Placed;
+use crate::util::prng::{Rng, SplitMix64};
+
+/// Lifetime fault-model parameters. The default is a drift-only model
+/// (no stuck cells) with a mild per-device exponent spread.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Base drift exponent ν in `g(t) = g0 · (t/t0)^-ν`.
+    pub drift_nu: f64,
+    /// Relative per-device spread of ν: device i draws
+    /// `ν_i = ν · (1 + nu_sigma · u_i)` with `u_i` uniform in [-1, 1].
+    pub nu_sigma: f64,
+    /// Drift reference time t0, in hours (drift is zero until t ≫ 0).
+    pub t0_hours: f64,
+    /// Fractional conductance loss per 10⁶ reads.
+    pub read_disturb_rate: f64,
+    /// Operating temperature, °C.
+    pub temp_c: f64,
+    /// Reference temperature at which ν was characterized, °C.
+    pub temp_ref_c: f64,
+    /// Per-°C relative increase of ν above `temp_ref_c`.
+    pub temp_coeff: f64,
+    /// Fraction of devices stuck at the window top (`g_on`).
+    pub stuck_on_frac: f64,
+    /// Fraction of devices stuck at the window bottom (`g_off`).
+    pub stuck_off_frac: f64,
+    /// Seed for the per-device hash streams (ν spread + stuck mask).
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            drift_nu: 0.05,
+            nu_sigma: 0.4,
+            t0_hours: 1.0,
+            read_disturb_rate: 0.01,
+            temp_c: 25.0,
+            temp_ref_c: 25.0,
+            temp_coeff: 0.02,
+            stuck_on_frac: 0.0,
+            stuck_off_frac: 0.0,
+            seed: 0xFA17,
+        }
+    }
+}
+
+/// Stuck-at classification of one device under a [`FaultStep`] mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stuck {
+    /// Pinned to the top of the conductance window (`g_on`).
+    On,
+    /// Pinned to the bottom of the window (`g_off`).
+    Off,
+    /// Healthy device — drift/disturb apply normally.
+    Free,
+}
+
+/// Simulated deployment clock. Produces incremental [`FaultStep`]s whose
+/// per-device decay factors compose exactly to the closed-form power law.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    cfg: FaultConfig,
+    hours: f64,
+    reads: u64,
+}
+
+impl FaultModel {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultModel { cfg, hours: 0.0, reads: 0 }
+    }
+
+    pub fn cfg(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Simulated hours since the last (re)programming.
+    pub fn hours(&self) -> f64 {
+        self.hours
+    }
+
+    /// Reads accumulated since the last (re)programming.
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    /// Advance the clock by `hours` and `reads`, returning the incremental
+    /// update to apply to every resident crossbar. Because the step carries
+    /// `ln((t2+t0)/(t1+t0))`, applying N small steps equals one big step:
+    /// `∏ exp(-ν·Δln) = exp(-ν·ln((t+t0)/t0)) = ((t+t0)/t0)^-ν`.
+    pub fn advance(&mut self, hours: f64, reads: u64) -> FaultStep {
+        let t0 = self.cfg.t0_hours.max(1e-9);
+        let t1 = self.hours;
+        let t2 = self.hours + hours.max(0.0);
+        self.hours = t2;
+        self.reads = self.reads.saturating_add(reads);
+        let nu_base = (self.cfg.drift_nu
+            * (1.0 + self.cfg.temp_coeff * (self.cfg.temp_c - self.cfg.temp_ref_c)))
+        .max(0.0);
+        FaultStep {
+            ln_ratio: ((t2 + t0) / (t1 + t0)).ln().max(0.0),
+            disturb: (self.cfg.read_disturb_rate * reads as f64 / 1e6).max(0.0),
+            nu_base,
+            nu_sigma: self.cfg.nu_sigma.max(0.0),
+            stuck_on_frac: self.cfg.stuck_on_frac.clamp(0.0, 1.0),
+            stuck_off_frac: self.cfg.stuck_off_frac.clamp(0.0, 1.0),
+            seed: self.cfg.seed,
+        }
+    }
+
+    /// Reset the drift clock after a reprogramming pass: freshly written
+    /// devices restart their relaxation from t = 0.
+    pub fn reset_clock(&mut self) {
+        self.hours = 0.0;
+        self.reads = 0;
+    }
+}
+
+/// One incremental fault update: multiplicative per-device decay plus the
+/// (time-invariant) stuck-at mask. `Copy`, so it is cheaply fanned out to
+/// every module of a pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultStep {
+    /// `ln((t2+t0)/(t1+t0))` for this increment (≥ 0).
+    pub ln_ratio: f64,
+    /// Read-disturb log-loss accumulated in this increment (≥ 0).
+    pub disturb: f64,
+    /// Temperature-adjusted base drift exponent.
+    pub nu_base: f64,
+    /// Relative per-device spread of the exponent.
+    pub nu_sigma: f64,
+    /// Fraction of devices stuck at `g_on`.
+    pub stuck_on_frac: f64,
+    /// Fraction of devices stuck at `g_off`.
+    pub stuck_off_frac: f64,
+    /// Hash seed shared with the owning [`FaultModel`].
+    pub seed: u64,
+}
+
+impl FaultStep {
+    /// A step that performs no drift and marks no stuck cells.
+    pub fn noop() -> Self {
+        FaultStep {
+            ln_ratio: 0.0,
+            disturb: 0.0,
+            nu_base: 0.0,
+            nu_sigma: 0.0,
+            stuck_on_frac: 0.0,
+            stuck_off_frac: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// This step with drift/disturb zeroed — only the stuck-at mask remains.
+    /// Used by `reprogram` hooks: rewriting a crossbar heals drift but not
+    /// dead cells.
+    pub fn stuck_only(&self) -> Self {
+        FaultStep { ln_ratio: 0.0, disturb: 0.0, ..*self }
+    }
+
+    /// True when applying this step cannot change any conductance.
+    pub fn is_noop(&self) -> bool {
+        self.ln_ratio == 0.0
+            && self.disturb == 0.0
+            && self.stuck_on_frac == 0.0
+            && self.stuck_off_frac == 0.0
+    }
+
+    /// Deterministic per-device hash: two independent uniforms for the ν
+    /// spread and the stuck lottery. Stable across steps, so increments
+    /// compose and the stuck mask is idempotent.
+    fn device_draws(&self, bank: u64, index: usize) -> (f64, f64) {
+        let mut h = SplitMix64::new(
+            self.seed ^ bank ^ (index as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let u = |x: u64| (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        (u(h.next_u64()), u(h.next_u64()))
+    }
+
+    /// Multiplicative decay for device `index` of `bank` over this
+    /// increment: `exp(-ν_i·Δln - disturb)`, always in (0, 1].
+    pub fn decay(&self, bank: u64, index: usize) -> f64 {
+        let (u, _) = self.device_draws(bank, index);
+        let nu_i = (self.nu_base * (1.0 + self.nu_sigma * (2.0 * u - 1.0))).max(0.0);
+        (-nu_i * self.ln_ratio - self.disturb).exp().min(1.0)
+    }
+
+    /// Stuck-at classification of device `index` of `bank` — a pure
+    /// function of `(seed, bank, index)`, independent of time.
+    pub fn stuck(&self, bank: u64, index: usize) -> Stuck {
+        if self.stuck_on_frac <= 0.0 && self.stuck_off_frac <= 0.0 {
+            return Stuck::Free;
+        }
+        let (_, v) = self.device_draws(bank, index);
+        if v < self.stuck_on_frac {
+            Stuck::On
+        } else if v < self.stuck_on_frac + self.stuck_off_frac {
+            Stuck::Off
+        } else {
+            Stuck::Free
+        }
+    }
+
+    /// Population-mean decay factor of this increment (drift + disturb,
+    /// ignoring the stuck mask) — the behavioural-fidelity scalar used by
+    /// BN/GAP modules and the energy scaling of the `memx drift` sweep.
+    pub fn mean_decay(&self) -> f64 {
+        (-self.nu_base * self.ln_ratio - self.disturb).exp().min(1.0)
+    }
+}
+
+/// FNV-1a hash of a module/bank name — each crossbar gets an independent
+/// device-hash stream so identical layouts don't drift in lockstep.
+pub fn bank_seed(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Apply one step to a bank of placed devices, in place. `g_min` is the
+/// bottom of the normalized conductance window (`r_on/r_off`); the top is
+/// the device's own programmed ceiling (`max(g0, 1.0)` — bias devices may
+/// legitimately sit above 1). Returns the mean multiplicative factor
+/// actually applied (1.0 for an empty bank). Conductances never leave
+/// `[g_min, cap]` and are never NaN or non-positive.
+pub fn apply_step(step: &FaultStep, bank: u64, devices: &mut [Placed], g_min: f64) -> f64 {
+    if devices.is_empty() {
+        return 1.0;
+    }
+    let g_min = g_min.max(1e-12);
+    let mut ratio_sum = 0.0;
+    for (i, d) in devices.iter_mut().enumerate() {
+        let before = d.g_norm.max(g_min);
+        let cap = before.max(1.0);
+        let after = match step.stuck(bank, i) {
+            Stuck::On => cap,
+            Stuck::Off => g_min,
+            Stuck::Free => (before * step.decay(bank, i)).clamp(g_min, cap),
+        };
+        d.g_norm = after;
+        ratio_sum += after / before;
+    }
+    ratio_sum / devices.len() as f64
+}
+
+/// Behavioural-fidelity analogue of [`apply_step`] for signed kernel
+/// weights in [-1, 1] (conv banks keep folded kernels, not placed
+/// devices, below `Fidelity::Spice`): drift shrinks magnitudes, stuck-ON
+/// saturates to ±1 preserving sign, stuck-OFF zeroes the weight.
+pub fn apply_step_signed(step: &FaultStep, bank: u64, weights: &mut [f64]) {
+    for (i, w) in weights.iter_mut().enumerate() {
+        *w = match step.stuck(bank, i) {
+            Stuck::On => {
+                if *w < 0.0 {
+                    -1.0
+                } else {
+                    1.0
+                }
+            }
+            Stuck::Off => 0.0,
+            Stuck::Free => (*w * step.decay(bank, i)).clamp(-1.0, 1.0),
+        };
+    }
+}
+
+/// Re-apply programming noise to a bank after a pristine restore — the
+/// write operation of a recalibration pass. Same statistics as
+/// [`crate::mapper::apply_prog_noise_analog`], but seeded per
+/// `(seed, bank, generation)` so successive recalibrations draw fresh
+/// noise instead of replaying the original write.
+pub fn reprogram_noise(
+    devices: &mut [Placed],
+    sigma: f64,
+    seed: u64,
+    bank: u64,
+    generation: u64,
+) {
+    if sigma <= 0.0 || devices.is_empty() {
+        return;
+    }
+    let mut rng = Rng::new(seed ^ bank ^ generation.wrapping_mul(0x9E3779B97F4A7C15));
+    crate::mapper::apply_prog_noise_analog(devices, sigma, &mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank(n: usize, g: f64) -> Vec<Placed> {
+        (0..n).map(|i| Placed { row: i, col: 0, g_norm: g }).collect()
+    }
+
+    #[test]
+    fn steps_compose_to_closed_form() {
+        // many small advances must equal one big advance, per device
+        let cfg = FaultConfig { nu_sigma: 0.5, ..Default::default() };
+        let mut split = FaultModel::new(cfg);
+        let mut whole = FaultModel::new(cfg);
+        let mut g_split = 1.0f64;
+        for _ in 0..10 {
+            let s = split.advance(10.0, 0);
+            g_split *= s.decay(7, 3);
+        }
+        let g_whole = whole.advance(100.0, 0).decay(7, 3);
+        assert!((g_split - g_whole).abs() < 1e-12, "{g_split} vs {g_whole}");
+    }
+
+    #[test]
+    fn decay_bounded_and_monotone() {
+        let cfg = FaultConfig { nu_sigma: 0.9, ..Default::default() };
+        let mut m = FaultModel::new(cfg);
+        let s = m.advance(1000.0, 5_000_000);
+        for i in 0..200 {
+            let d = s.decay(1, i);
+            assert!(d > 0.0 && d <= 1.0 && d.is_finite(), "decay {d}");
+        }
+        // longer exposure decays at least as much
+        let s2 = FaultModel::new(cfg).advance(10.0, 0);
+        let s3 = FaultModel::new(cfg).advance(10_000.0, 0);
+        for i in 0..50 {
+            assert!(s3.decay(2, i) <= s2.decay(2, i));
+        }
+    }
+
+    #[test]
+    fn stuck_mask_is_time_invariant() {
+        let cfg = FaultConfig {
+            stuck_on_frac: 0.1,
+            stuck_off_frac: 0.1,
+            ..Default::default()
+        };
+        let a = FaultModel::new(cfg).advance(1.0, 0);
+        let b = FaultModel::new(cfg).advance(5000.0, 99);
+        let mut on = 0;
+        let mut off = 0;
+        for i in 0..1000 {
+            assert_eq!(a.stuck(3, i), b.stuck(3, i), "mask must not depend on time");
+            match a.stuck(3, i) {
+                Stuck::On => on += 1,
+                Stuck::Off => off += 1,
+                Stuck::Free => {}
+            }
+        }
+        assert!((50..200).contains(&on), "stuck-on count {on}");
+        assert!((50..200).contains(&off), "stuck-off count {off}");
+    }
+
+    #[test]
+    fn apply_step_respects_window() {
+        let cfg = FaultConfig {
+            drift_nu: 0.3,
+            nu_sigma: 0.8,
+            stuck_on_frac: 0.05,
+            stuck_off_frac: 0.05,
+            ..Default::default()
+        };
+        let step = FaultModel::new(cfg).advance(10_000.0, 10_000_000);
+        let g_min = 100.0 / 16000.0;
+        let mut devs = bank(500, 0.7);
+        let factor = apply_step(&step, 11, &mut devs, g_min);
+        assert!(factor > 0.0 && factor <= 1.1, "mean factor {factor}");
+        for d in &devs {
+            assert!(d.g_norm.is_finite() && d.g_norm >= g_min && d.g_norm <= 1.0);
+        }
+    }
+
+    #[test]
+    fn stuck_only_heals_drift_not_cells() {
+        let cfg = FaultConfig {
+            drift_nu: 0.3,
+            stuck_off_frac: 0.2,
+            ..Default::default()
+        };
+        let step = FaultModel::new(cfg).advance(1000.0, 0);
+        let g_min = 1.0 / 160.0;
+        let mut devs = bank(200, 0.8);
+        apply_step(&step, 5, &mut devs, g_min);
+        // pristine restore + stuck-only re-application
+        let mut restored = bank(200, 0.8);
+        apply_step(&step.stuck_only(), 5, &mut restored, g_min);
+        for (i, d) in restored.iter().enumerate() {
+            match step.stuck(5, i) {
+                Stuck::Off => assert!((d.g_norm - g_min).abs() < 1e-15),
+                Stuck::Free => assert!((d.g_norm - 0.8).abs() < 1e-15, "drift must heal"),
+                Stuck::On => assert!((d.g_norm - 1.0).abs() < 1e-15),
+            }
+        }
+    }
+
+    #[test]
+    fn noop_step_changes_nothing() {
+        let step = FaultStep::noop();
+        assert!(step.is_noop());
+        let mut devs = bank(32, 0.42);
+        let f = apply_step(&step, 9, &mut devs, 1e-3);
+        assert!((f - 1.0).abs() < 1e-15);
+        assert!(devs.iter().all(|d| (d.g_norm - 0.42).abs() < 1e-15));
+    }
+
+    #[test]
+    fn signed_weights_stay_in_unit_interval() {
+        let cfg = FaultConfig {
+            drift_nu: 0.2,
+            nu_sigma: 0.7,
+            stuck_on_frac: 0.1,
+            stuck_off_frac: 0.1,
+            ..Default::default()
+        };
+        let step = FaultModel::new(cfg).advance(500.0, 1_000_000);
+        let mut w: Vec<f64> =
+            (0..300).map(|i| ((i as f64 * 0.37).sin())).collect();
+        apply_step_signed(&step, 21, &mut w);
+        for v in &w {
+            assert!(v.is_finite() && v.abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn bank_seeds_differ() {
+        assert_ne!(bank_seed("stem.conv_ci0_co1"), bank_seed("stem.conv_ci0_co2"));
+    }
+}

@@ -13,6 +13,7 @@
 pub mod analog;
 pub mod coordinator;
 pub mod dataset;
+pub mod fault;
 pub mod mapper;
 pub mod netlist;
 pub mod nn;

@@ -20,6 +20,14 @@
 //!            artifacts (--coverage [--fidelity F]: per-stage module
 //!            fidelity/resource table + stage-hook Eq 17/18 — at spice
 //!            fidelity the counts come from the emitted netlists)
+//!   drift    [--hours H1,H2,...] [--n N] [--fidelity F] [--nu V]
+//!            [--nu-sigma V] [--stuck-off F] [--stuck-on F]
+//!            [--prog-sigma S] [--out FILE]   device-lifetime sweep on the
+//!            synthetic demo network: age the crossbars along the hour
+//!            grid, track label agreement vs the pristine network and the
+//!            relative crossbar-read energy, then reprogram and report the
+//!            recovered agreement; appends BENCH_drift.json
+//!            (MEMX_BENCH_QUICK=1 shrinks the sweep for CI)
 //!
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
 
@@ -59,7 +67,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "memx — memristor crossbar computing paradigm for MobileNetV3\n\
-         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report> [flags]\n\
+         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report|drift> [flags]\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
 }
@@ -101,6 +109,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "netlist" => cmd_netlist(rest),
         "spice" => cmd_spice(rest),
         "report" => cmd_report(rest),
+        "drift" => cmd_drift(rest),
         _ => {
             usage();
             bail!("unknown command '{cmd}'")
@@ -516,5 +525,122 @@ fn cmd_report(rest: &[String]) -> Result<()> {
     if !any {
         bail!("pick at least one of --table4 --fig4 --fig7 --fig8 --fig9 --coverage --all");
     }
+    Ok(())
+}
+
+/// Device-lifetime drift sweep on the synthetic demo network: one pristine
+/// pipeline pins the reference labels, a second identical pipeline is aged
+/// in place along the simulated-hour grid (log-time conductance decay +
+/// read disturb + stuck cells from [`memx::fault`]), and each point reports
+/// label agreement and the relative crossbar-read energy (the mean
+/// conductance decay at fixed read voltage). A final reprogram cycle
+/// restores the surviving devices and reports the recovered agreement.
+fn cmd_drift(rest: &[String]) -> Result<()> {
+    let a = Args::parse(
+        rest,
+        &[
+            "hours", "n", "fidelity", "nu", "nu-sigma", "stuck-on", "stuck-off", "read-rate",
+            "prog-sigma", "seed", "out",
+        ],
+    )?;
+    let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
+    let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
+    let hours_spec = a.get_or("hours", if quick { "0,10" } else { "0,1,10,100,1000" });
+    let mut hours = Vec::new();
+    for tok in hours_spec.split(',') {
+        let h: f64 = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--hours: '{tok}' is not a number"))?;
+        if !h.is_finite() || h < 0.0 {
+            bail!("--hours: {h} is not a valid simulated time");
+        }
+        hours.push(h);
+    }
+    hours.sort_by(|x, y| x.total_cmp(y));
+    hours.dedup();
+    if hours.is_empty() {
+        bail!("--hours: empty sweep");
+    }
+    let n = a.get_usize("n", if quick { 16 } else { 64 })?.max(1);
+    let seed = a.get_usize("seed", 0xC1F0)? as u64;
+
+    let d = memx::fault::FaultConfig::default();
+    let cfg = memx::fault::FaultConfig {
+        drift_nu: a.get_f64("nu", d.drift_nu)?,
+        nu_sigma: a.get_f64("nu-sigma", d.nu_sigma)?,
+        stuck_on_frac: a.get_f64("stuck-on", d.stuck_on_frac)?,
+        stuck_off_frac: a.get_f64("stuck-off", d.stuck_off_frac)?,
+        read_disturb_rate: a.get_f64("read-rate", d.read_disturb_rate)?,
+        ..d
+    };
+    let prog_sigma = a.get_f64("prog-sigma", 0.0)?;
+
+    // the full-chain demo network (conv + BN + SE + GAP + FC) so every
+    // module type's fault hooks are exercised
+    let (m, ws) = memx::pipeline::demo_network(seed)?;
+    let builder = || {
+        PipelineBuilder::new().fidelity(fidelity).segment(8).build(&m, &ws)
+    };
+    let mut pristine = builder()?;
+    let mut aged = builder()?;
+
+    let mut rng = memx::util::prng::Rng::new(seed ^ 0xD21F7);
+    let in_dim = pristine.in_dim();
+    let batch: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..in_dim).map(|_| rng.f32() as f64 * 0.5).collect()).collect();
+    let reference = pristine.classify_batch(&batch)?;
+
+    println!(
+        "drift sweep on the demo network ({fidelity} fidelity, {n} inputs): \
+         nu {} (sigma {}), read rate {}, stuck on/off {}/{}",
+        cfg.drift_nu, cfg.nu_sigma, cfg.read_disturb_rate, cfg.stuck_on_frac, cfg.stuck_off_frac
+    );
+    let mut model = memx::fault::FaultModel::new(cfg);
+    let mut rows: Vec<memx::util::bench::Stats> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut energy = 1.0f64;
+    for &h in &hours {
+        let step = model.advance(h - model.hours(), n as u64);
+        energy *= step.mean_decay();
+        aged.inject_faults(&step);
+        let t0 = std::time::Instant::now();
+        let labels = aged.classify_batch(&batch)?;
+        let wall = t0.elapsed();
+        let agree = labels.iter().zip(&reference).filter(|(x, y)| x == y).count() as f64
+            / n as f64;
+        println!(
+            "  t={h:>7}h  agreement {agree:.4}  energy factor {energy:.4}  classify {wall:?}"
+        );
+        rows.push(memx::util::bench::Stats {
+            name: format!("classify_t{h}h"),
+            iters: 1,
+            mean: wall,
+            median: wall,
+            p95: wall,
+            min: wall,
+        });
+        derived.push((format!("agreement_t{h}h"), agree));
+    }
+    derived.push(("energy_factor_final".into(), energy));
+
+    // recalibrate: pristine weights rewritten (stuck cells persist), fresh
+    // programming noise, drift clock restarted
+    let rewritten = aged.reprogram(prog_sigma, cfg.seed, 1);
+    model.reset_clock();
+    let recovered = aged
+        .classify_batch(&batch)?
+        .iter()
+        .zip(&reference)
+        .filter(|(x, y)| x == y)
+        .count() as f64
+        / n as f64;
+    println!("  reprogrammed {rewritten} devices -> agreement {recovered:.4}");
+    derived.push(("agreement_recovered".into(), recovered));
+    derived.push(("devices_reprogrammed".into(), rewritten as f64));
+
+    let out = a.get_or("out", "BENCH_drift.json");
+    memx::util::bench::append_json_report(out, "drift", &rows, &derived)?;
+    println!("appended drift trajectory to {out}");
     Ok(())
 }

@@ -28,10 +28,11 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::mapper::layout::Placed;
 use crate::mapper::{build_fc_crossbar, Crossbar, MapMode};
 use crate::nn::{DeviceJson, Manifest, WeightStore};
 use crate::spice::krylov::SolverStrategy;
-use crate::spice::solve::Ordering;
+use crate::spice::solve::{Ordering, SolveStats};
 use crate::spice::{Circuit, Element};
 use crate::util::pool::par_map_mut;
 
@@ -307,6 +308,63 @@ impl CrossbarSim {
 
     pub fn n_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Value-only conductance update: rewrite every placed device's
+    /// `RM<row>_<col>` resistor to `device_resistance(g_norm, r_on)` without
+    /// touching the circuit topology, so each segment's cached symbolic
+    /// factorization (and the warm-GMRES preconditioner-reuse contract) is
+    /// preserved across the edit — the mechanism behind fault injection and
+    /// online recalibration ([`crate::fault`]). Devices whose column falls
+    /// outside a segment are simply skipped there; returns the number of
+    /// device resistors updated (each device lives in exactly one segment).
+    pub fn update_conductances(&mut self, devices: &[Placed], r_on: f64) -> usize {
+        let mut updated = 0;
+        for seg in &mut self.segments {
+            let mut by_name = std::collections::HashMap::new();
+            for (i, e) in seg.circuit.elements.iter().enumerate() {
+                if let Element::Resistor(n, ..) = e {
+                    if n.starts_with("RM") {
+                        by_name.insert(n.clone(), i);
+                    }
+                }
+            }
+            for d in devices {
+                let Some(&i) = by_name.get(&format!("RM{}_{}", d.row, d.col)) else {
+                    continue;
+                };
+                if let Some(Element::Resistor(_, _, _, r)) = seg.circuit.elements.get_mut(i)
+                {
+                    *r = device_resistance(d.g_norm, r_on);
+                    updated += 1;
+                }
+            }
+        }
+        updated
+    }
+
+    /// Like [`CrossbarSim::solve`], additionally returning each segment's
+    /// [`SolveStats`] — the drift tests pin that post-recalibration
+    /// re-solves reuse the cached factorization/preconditioner
+    /// (`precond_reused`, bounded iteration counts) instead of refactoring
+    /// cold.
+    pub fn solve_stats(&mut self, inputs: &[f64]) -> Result<(Vec<f64>, Vec<SolveStats>)> {
+        if inputs.len() != self.region {
+            bail!("crossbar sim: {} inputs, region is {}", inputs.len(), self.region);
+        }
+        let (region, ordering) = (self.region, self.ordering);
+        let mut out = Vec::with_capacity(self.cols);
+        let mut stats = Vec::with_capacity(self.segments.len());
+        for seg in &mut self.segments {
+            for &(idx, r) in &seg.vin {
+                seg.circuit
+                    .set_vsource_at(idx, input_voltage_region(region, r, Some(inputs)))?;
+            }
+            let (sol, st) = seg.circuit.dc_op_stats(ordering)?;
+            out.extend(seg.out_nodes.iter().map(|&n| sol[n]));
+            stats.push(st);
+        }
+        Ok((out, stats))
     }
 
     /// Per-column outputs for one input vector (len = crossbar region),
@@ -637,6 +695,51 @@ mod tests {
             for (c, (x, y)) in want.iter().zip(&got).enumerate() {
                 assert!((x - y).abs() < 1e-6, "trial {trial} col {c}: {x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn update_conductances_matches_rebuild() {
+        // value-only drift through the cached sim must equal a from-scratch
+        // emit+parse of the drifted crossbar
+        let mut cb = build_synthetic_fc(10, 4, 64, MapMode::Inverted, 9);
+        let dev = test_device();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 2, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        let inputs: Vec<f64> = (0..10).map(|i| (i as f64 * 0.33).sin() * 0.4).collect();
+        let pristine = sim.solve(&inputs).unwrap();
+        let g_min = dev.r_on / dev.r_off;
+        for d in cb.devices.iter_mut() {
+            d.g_norm = (d.g_norm * 0.9).max(g_min);
+        }
+        let n = sim.update_conductances(&cb.devices, dev.r_on);
+        assert_eq!(n, cb.devices.len(), "every placed device must be rewritten");
+        let got = sim.solve(&inputs).unwrap();
+        assert!(
+            got.iter().zip(&pristine).any(|(a, b)| (a - b).abs() > 1e-9),
+            "drift must move the outputs"
+        );
+        let mut fresh =
+            CrossbarSim::new(&cb, &dev, 2, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        let want = fresh.solve(&inputs).unwrap();
+        for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn solve_stats_reports_per_segment() {
+        let cb = build_synthetic_fc(8, 4, 64, MapMode::Inverted, 5);
+        let dev = test_device();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 2, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        let inputs = vec![0.1; 8];
+        let (out, stats) = sim.solve_stats(&inputs).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(stats.len(), sim.n_segments());
+        let plain = sim.solve(&inputs).unwrap();
+        for (a, b) in out.iter().zip(&plain) {
+            assert!((a - b).abs() < 1e-12);
         }
     }
 

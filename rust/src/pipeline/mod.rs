@@ -216,6 +216,25 @@ pub trait AnalogModule: Send {
     fn cmos_elements(&self) -> usize {
         0
     }
+
+    /// Evolve this module's resident device state by one lifetime
+    /// [`FaultStep`](crate::fault::FaultStep) — log-time drift, read
+    /// disturb, stuck-at cells — **in place**: placed conductances are
+    /// decayed and, at [`Fidelity::Spice`], pushed into the resident
+    /// simulators as value-only netlist edits
+    /// ([`CrossbarSim::update_conductances`](crate::netlist::CrossbarSim::update_conductances)),
+    /// so the cached symbolic factorization carries across every update.
+    /// Default: no device state, nothing to do.
+    fn inject_faults(&mut self, _step: &crate::fault::FaultStep) {}
+
+    /// Recalibration write pass: restore pristine conductances, draw fresh
+    /// programming noise (`prog_sigma`, seeded per `(seed, generation)`)
+    /// and re-apply the immutable stuck-at mask of the last injected step —
+    /// reprogramming heals drift, not dead cells. Returns the number of
+    /// devices rewritten (0 for stateless modules).
+    fn reprogram(&mut self, _prog_sigma: f64, _seed: u64, _generation: u64) -> usize {
+        0
+    }
 }
 
 /// One stage of a compiled [`Pipeline`].
@@ -738,6 +757,39 @@ impl Pipeline {
             u.calls = 0;
         }
         stats
+    }
+
+    /// Push one lifetime [`FaultStep`](crate::fault::FaultStep) through
+    /// every module of the chain (see
+    /// [`AnalogModule::inject_faults`]) — the serving tier calls this per
+    /// batch to age the resident crossbars in place.
+    pub fn inject_faults(&mut self, step: &crate::fault::FaultStep) {
+        if step.is_noop() {
+            return;
+        }
+        for unit in self.units.iter_mut() {
+            for stage in unit.stages.iter_mut() {
+                if let Stage::Module { module, .. } = stage {
+                    module.inject_faults(step);
+                }
+            }
+        }
+    }
+
+    /// Recalibration pass over every module (see
+    /// [`AnalogModule::reprogram`]): pristine restore + fresh programming
+    /// noise + stuck-mask re-application, all as value-only updates.
+    /// Returns the total number of devices rewritten.
+    pub fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
+        let mut rewritten = 0;
+        for unit in self.units.iter_mut() {
+            for stage in unit.stages.iter_mut() {
+                if let Stage::Module { module, .. } = stage {
+                    rewritten += module.reprogram(prog_sigma, seed, generation);
+                }
+            }
+        }
+        rewritten
     }
 
     /// Single-vector forward — a batch of one.

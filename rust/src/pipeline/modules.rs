@@ -45,11 +45,32 @@
 //! paper's closed-form counts (Eqs 10-13). [`AnalogModule::spice_circuits`]
 //! exposes the resident-circuit count the conformance suite checks for
 //! fidelity holes.
+//!
+//! # Device-lifetime faults and the coverage matrix
+//!
+//! Every module with resident device state implements
+//! [`AnalogModule::inject_faults`] / [`AnalogModule::reprogram`] (see
+//! [`crate::fault`]), and faults apply at **every** fidelity — but with
+//! the per-fidelity approximation implied by the matrix above. FC/PConv
+//! layers age their placed conductances, so `Crossbar::eval_ideal` (ideal
+//! and behavioural) and the resident [`CrossbarSim`] (spice) see the same
+//! per-device damage. Conv banks age placed devices at
+//! [`Fidelity::Spice`]; below it they age their signed kernels
+//! element-wise. BN and GAP have no per-device representation below
+//! spice, so there they apply the population-mean decay scalar
+//! ([`crate::fault::FaultStep::mean_decay`], squared for BN's two cascaded
+//! stages); at [`Fidelity::Spice`] their netlist pairs receive true
+//! per-device value-only updates via
+//! [`CrossbarSim::update_conductances`]. Injection never rebuilds a
+//! netlist, so cached factorizations and warm-GMRES preconditioners
+//! survive every step, and reprogramming heals drift but never stuck-at
+//! cells.
 
 use anyhow::{bail, Result};
 
 use crate::analog::{self, ActCircuit};
-use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom};
+use crate::fault::{self, FaultStep};
+use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom, Placed};
 use crate::mapper::{apply_prog_noise_analog, BnFold, Crossbar, MapMode};
 use crate::netlist::CrossbarSim;
 use crate::nn::{ActKind, ConvGeom, DeviceJson};
@@ -105,12 +126,22 @@ pub struct CrossbarModule {
     fidelity: Fidelity,
     workers: usize,
     v_rail: f64,
+    /// device-window parameters for lifetime-fault clamping
+    r_on: f64,
+    g_min: f64,
+    /// per-module device-hash stream ([`fault::bank_seed`])
+    bank: u64,
+    /// last injected step — its (time-invariant) stuck mask is re-applied
+    /// after a reprogram, because rewriting cannot heal dead cells
+    last_step: Option<FaultStep>,
     inner: Inner,
 }
 
 enum Inner {
     Fc {
         cb: Crossbar,
+        /// as-built conductances, restored by [`AnalogModule::reprogram`]
+        pristine: Vec<Placed>,
         /// resident factor-once simulator at `Fidelity::Spice`
         sim: Option<CrossbarSim>,
     },
@@ -135,6 +166,8 @@ struct ConvBanks {
     /// signed quantized kernels: depthwise `c*kk + a`, else
     /// `(co*cin + ci)*kk + a` with `a = kh*k + kw` row-major
     kernels: Vec<f64>,
+    /// as-built kernels, restored by the behavioural reprogram path
+    kernels_pristine: Vec<f64>,
     /// resident per-bank simulators at `Fidelity::Spice` (zero kernels
     /// place no bank)
     sims: Vec<BankSim>,
@@ -143,6 +176,12 @@ struct ConvBanks {
 struct BankSim {
     ci: usize,
     co: usize,
+    /// the bank's placed devices, aged in place by fault injection
+    devices: Vec<Placed>,
+    /// as-built conductances for the reprogram restore
+    pristine: Vec<Placed>,
+    /// per-bank device-hash stream
+    bank: u64,
     sim: CrossbarSim,
 }
 
@@ -313,13 +352,19 @@ impl CrossbarModule {
             Fidelity::Spice => Some(CrossbarSim::new(&cb, dev, segment, ordering, solver)?),
             _ => None,
         };
+        let bank = fault::bank_seed(&name);
+        let pristine = cb.devices.clone();
         Ok(CrossbarModule {
             name,
             kind,
             fidelity,
             workers,
             v_rail: dev.v_rail,
-            inner: Inner::Fc { cb, sim },
+            r_on: dev.r_on,
+            g_min: dev.r_on / dev.r_off,
+            bank,
+            last_step: None,
+            inner: Inner::Fc { cb, pristine, sim },
         })
     }
 
@@ -347,6 +392,7 @@ impl CrossbarModule {
             depthwise: cfg.depthwise,
             scale: cfg.scale,
             mode: cfg.mode,
+            kernels_pristine: cfg.kernels.clone(),
             kernels: cfg.kernels,
             sims: Vec::new(),
         };
@@ -369,16 +415,27 @@ impl CrossbarModule {
                     };
                     let sim =
                         CrossbarSim::new(&cb, dev, cfg.segment, cfg.ordering, cfg.solver)?;
-                    banks.sims.push(BankSim { ci, co, sim });
+                    banks.sims.push(BankSim {
+                        ci,
+                        co,
+                        bank: fault::bank_seed(&cb.name),
+                        pristine: cb.devices.clone(),
+                        devices: cb.devices,
+                        sim,
+                    });
                 }
             }
         }
         Ok(CrossbarModule {
-            name: cfg.name,
+            name: cfg.name.clone(),
             kind: cfg.kind,
             fidelity: cfg.fidelity,
             workers: cfg.workers,
             v_rail: dev.v_rail,
+            r_on: dev.r_on,
+            g_min: dev.r_on / dev.r_off,
+            bank: fault::bank_seed(&cfg.name),
+            last_step: None,
             inner: Inner::Conv(banks),
         })
     }
@@ -470,6 +527,72 @@ impl AnalogModule for CrossbarModule {
             Inner::Conv(cv) => cv.sims.len(),
         }
     }
+
+    fn inject_faults(&mut self, step: &FaultStep) {
+        self.last_step = Some(*step);
+        match &mut self.inner {
+            Inner::Fc { cb, sim, .. } => {
+                fault::apply_step(step, self.bank, &mut cb.devices, self.g_min);
+                if let Some(sim) = sim {
+                    sim.update_conductances(&cb.devices, self.r_on);
+                }
+            }
+            Inner::Conv(cv) => {
+                if cv.sims.is_empty() {
+                    fault::apply_step_signed(step, self.bank, &mut cv.kernels);
+                } else {
+                    for b in cv.sims.iter_mut() {
+                        fault::apply_step(step, b.bank, &mut b.devices, self.g_min);
+                        b.sim.update_conductances(&b.devices, self.r_on);
+                    }
+                }
+            }
+        }
+    }
+
+    fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
+        let stuck = self.last_step.map(|s| s.stuck_only());
+        match &mut self.inner {
+            Inner::Fc { cb, sim, pristine } => {
+                cb.devices.clone_from(pristine);
+                fault::reprogram_noise(&mut cb.devices, prog_sigma, seed, self.bank, generation);
+                if let Some(s) = &stuck {
+                    fault::apply_step(s, self.bank, &mut cb.devices, self.g_min);
+                }
+                if let Some(sim) = sim {
+                    sim.update_conductances(&cb.devices, self.r_on);
+                }
+                cb.devices.len()
+            }
+            Inner::Conv(cv) => {
+                if cv.sims.is_empty() {
+                    cv.kernels.clone_from(&cv.kernels_pristine);
+                    if let Some(s) = &stuck {
+                        fault::apply_step_signed(s, self.bank, &mut cv.kernels);
+                    }
+                    cv.kernels.iter().filter(|&&k| k != 0.0).count()
+                } else {
+                    let mut rewritten = 0;
+                    for b in cv.sims.iter_mut() {
+                        b.devices.clone_from(&b.pristine);
+                        fault::reprogram_noise(
+                            &mut b.devices,
+                            prog_sigma,
+                            seed,
+                            b.bank,
+                            generation,
+                        );
+                        if let Some(s) = &stuck {
+                            fault::apply_step(s, b.bank, &mut b.devices, self.g_min);
+                        }
+                        rewritten += b.devices.len();
+                        b.sim.update_conductances(&b.devices, self.r_on);
+                    }
+                    rewritten
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -498,6 +621,15 @@ pub struct BatchNormModule {
     /// Eq 10/11 closed-form counts (non-spice fidelities)
     formula_memristors: usize,
     formula_opamps: usize,
+    /// device-window parameters for lifetime-fault clamping
+    r_on: f64,
+    g_min: f64,
+    bank: u64,
+    /// cumulative population-mean drift factor applied below spice (the
+    /// coverage-matrix approximation: BN has no per-device state there);
+    /// squared per step — two cascaded crossbar stages
+    drift_gain: f64,
+    last_step: Option<FaultStep>,
     sims: Option<BnSims>,
 }
 
@@ -505,6 +637,12 @@ pub struct BatchNormModule {
 struct BnSims {
     sub: CrossbarSim,
     scale: CrossbarSim,
+    /// placed devices of the two stages, aged in place + their as-built
+    /// copies for the reprogram restore
+    sub_devices: Vec<Placed>,
+    sub_pristine: Vec<Placed>,
+    scale_devices: Vec<Placed>,
+    scale_pristine: Vec<Placed>,
     memristors: usize,
     opamps: usize,
 }
@@ -537,17 +675,24 @@ impl BatchNormModule {
                 analog::build_bn_crossbars(&name, c, 1, &fold.k, &fold.mean, &fold.beta, mode);
             apply_prog_noise_analog(&mut sub.devices, cfg.prog_sigma, rng);
             apply_prog_noise_analog(&mut scale.devices, cfg.prog_sigma, rng);
+            let sub_sim = CrossbarSim::new(&sub, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
+            let scale_sim =
+                CrossbarSim::new(&scale, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
             Some(BnSims {
                 memristors: sub.devices.len() + scale.devices.len(),
                 opamps: (sub.cols + scale.cols) * mode.opamps_per_port(),
-                sub: CrossbarSim::new(&sub, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?,
-                scale: CrossbarSim::new(&scale, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?,
+                sub: sub_sim,
+                scale: scale_sim,
+                sub_pristine: sub.devices.clone(),
+                sub_devices: sub.devices,
+                scale_pristine: scale.devices.clone(),
+                scale_devices: scale.devices,
             })
         } else {
             None
         };
         Ok(BatchNormModule {
-            name,
+            name: name.clone(),
             c,
             spatial,
             fold,
@@ -556,6 +701,11 @@ impl BatchNormModule {
             workers: cfg.workers,
             formula_memristors: 4 * c,
             formula_opamps: 2 * c * mode.opamps_per_port(),
+            r_on: cfg.dev.r_on,
+            g_min: cfg.dev.r_on / cfg.dev.r_off,
+            bank: fault::bank_seed(&name),
+            drift_gain: 1.0,
+            last_step: None,
             sims,
         })
     }
@@ -626,6 +776,15 @@ impl AnalogModule for BatchNormModule {
             }
             out.push(y);
         }
+        if self.drift_gain != 1.0 {
+            // coverage-matrix approximation of device aging below spice:
+            // the population-mean decay of the two cascaded §3.3 stages
+            for row in &mut out {
+                for v in row.iter_mut() {
+                    *v *= self.drift_gain;
+                }
+            }
+        }
         if self.fidelity == Fidelity::Behavioural {
             clamp_rails(&mut out, self.v_rail);
         }
@@ -656,6 +815,67 @@ impl AnalogModule for BatchNormModule {
             2
         } else {
             0
+        }
+    }
+
+    fn inject_faults(&mut self, step: &FaultStep) {
+        self.last_step = Some(*step);
+        if let Some(sims) = self.sims.as_mut() {
+            fault::apply_step(step, self.bank.wrapping_add(1), &mut sims.sub_devices, self.g_min);
+            fault::apply_step(
+                step,
+                self.bank.wrapping_add(2),
+                &mut sims.scale_devices,
+                self.g_min,
+            );
+            sims.sub.update_conductances(&sims.sub_devices, self.r_on);
+            sims.scale.update_conductances(&sims.scale_devices, self.r_on);
+        } else {
+            // two cascaded crossbar stages -> the mean decay compounds twice
+            let d = step.mean_decay();
+            self.drift_gain *= d * d;
+        }
+    }
+
+    fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
+        let stuck = self.last_step.map(|s| s.stuck_only());
+        if let Some(sims) = self.sims.as_mut() {
+            sims.sub_devices.clone_from(&sims.sub_pristine);
+            sims.scale_devices.clone_from(&sims.scale_pristine);
+            fault::reprogram_noise(
+                &mut sims.sub_devices,
+                prog_sigma,
+                seed,
+                self.bank.wrapping_add(1),
+                generation,
+            );
+            fault::reprogram_noise(
+                &mut sims.scale_devices,
+                prog_sigma,
+                seed,
+                self.bank.wrapping_add(2),
+                generation,
+            );
+            if let Some(stuck) = stuck {
+                fault::apply_step(
+                    &stuck,
+                    self.bank.wrapping_add(1),
+                    &mut sims.sub_devices,
+                    self.g_min,
+                );
+                fault::apply_step(
+                    &stuck,
+                    self.bank.wrapping_add(2),
+                    &mut sims.scale_devices,
+                    self.g_min,
+                );
+            }
+            sims.sub.update_conductances(&sims.sub_devices, self.r_on);
+            sims.scale.update_conductances(&sims.scale_devices, self.r_on);
+            sims.sub_devices.len() + sims.scale_devices.len()
+        } else {
+            self.drift_gain = 1.0;
+            self.formula_memristors
         }
     }
 }
@@ -839,6 +1059,15 @@ pub struct GapModule {
     /// coincides with Eq 12's `h*w*c`)
     memristors: usize,
     opamps: usize,
+    r_on: f64,
+    g_min: f64,
+    bank: u64,
+    /// cumulative population-mean drift factor below spice (one stage)
+    drift_gain: f64,
+    last_step: Option<FaultStep>,
+    /// aged + as-built averaging devices (empty below spice)
+    devices: Vec<Placed>,
+    pristine: Vec<Placed>,
     sim: Option<CrossbarSim>,
 }
 
@@ -854,25 +1083,33 @@ impl GapModule {
     ) -> Result<GapModule> {
         let name = name.into();
         let spatial = h * w;
-        let (sim, memristors) = if cfg.fidelity == Fidelity::Spice {
+        let (sim, devices, memristors) = if cfg.fidelity == Fidelity::Spice {
             let mut cb = analog::build_gap_crossbar(&name, c, spatial, mode);
             apply_prog_noise_analog(&mut cb.devices, cfg.prog_sigma, rng);
             let placed = cb.devices.len();
             (
                 Some(CrossbarSim::new(&cb, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?),
+                cb.devices,
                 placed,
             )
         } else {
-            (None, spatial * c) // Eq 12
+            (None, Vec::new(), spatial * c) // Eq 12
         };
         Ok(GapModule {
-            name,
+            name: name.clone(),
             c,
             h,
             w,
             workers: cfg.workers,
             memristors,
             opamps: c * mode.opamps_per_port(), // Eq 13 == one TIA per emitted column
+            r_on: cfg.dev.r_on,
+            g_min: cfg.dev.r_on / cfg.dev.r_off,
+            bank: fault::bank_seed(&name),
+            drift_gain: 1.0,
+            last_step: None,
+            pristine: devices.clone(),
+            devices,
             sim,
         })
     }
@@ -909,12 +1146,14 @@ impl AnalogModule for GapModule {
         if let Some(sim) = self.sim.as_mut() {
             return sim.solve_batch(inputs, self.workers);
         }
+        let gain = self.drift_gain;
         Ok(inputs
             .iter()
             .map(|x| {
                 (0..self.c)
                     .map(|ch| {
-                        x[ch * spatial..(ch + 1) * spatial].iter().sum::<f64>() / spatial as f64
+                        gain * x[ch * spatial..(ch + 1) * spatial].iter().sum::<f64>()
+                            / spatial as f64
                     })
                     .collect()
             })
@@ -935,6 +1174,32 @@ impl AnalogModule for GapModule {
 
     fn spice_circuits(&self) -> usize {
         usize::from(self.sim.is_some())
+    }
+
+    fn inject_faults(&mut self, step: &FaultStep) {
+        self.last_step = Some(*step);
+        if let Some(sim) = self.sim.as_mut() {
+            fault::apply_step(step, self.bank, &mut self.devices, self.g_min);
+            sim.update_conductances(&self.devices, self.r_on);
+        } else {
+            self.drift_gain *= step.mean_decay();
+        }
+    }
+
+    fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
+        let stuck = self.last_step.map(|s| s.stuck_only());
+        if let Some(sim) = self.sim.as_mut() {
+            self.devices.clone_from(&self.pristine);
+            fault::reprogram_noise(&mut self.devices, prog_sigma, seed, self.bank, generation);
+            if let Some(stuck) = stuck {
+                fault::apply_step(&stuck, self.bank, &mut self.devices, self.g_min);
+            }
+            sim.update_conductances(&self.devices, self.r_on);
+            self.devices.len()
+        } else {
+            self.drift_gain = 1.0;
+            self.memristors
+        }
     }
 }
 
@@ -1067,5 +1332,18 @@ impl AnalogModule for SeModule {
         // tensor: the c*spatial elements only pass through multipliers
         // channel-wise
         self.act1.cmos_elements() + self.act2.cmos_elements() + self.c
+    }
+
+    fn inject_faults(&mut self, step: &FaultStep) {
+        // activations are op-amp/CMOS circuits — no memristor state to age
+        self.gap.inject_faults(step);
+        self.fc1.inject_faults(step);
+        self.fc2.inject_faults(step);
+    }
+
+    fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
+        self.gap.reprogram(prog_sigma, seed, generation)
+            + self.fc1.reprogram(prog_sigma, seed, generation)
+            + self.fc2.reprogram(prog_sigma, seed, generation)
     }
 }

@@ -322,6 +322,13 @@ pub fn report_coverage(
         e.e_opamps * 1e6,
         e.e_rest * 1e6
     );
+    let fallbacks = crate::spice::solver_fallbacks();
+    if fallbacks > 0 {
+        println!(
+            "solver health: {fallbacks} iterative solve(s) fell back to direct factorization \
+             this process"
+        );
+    }
     Ok(())
 }
 

@@ -51,11 +51,27 @@ pub mod krylov;
 pub mod solve;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering as MemOrdering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use solve::{solve_dense, SparseSys};
+
+/// Process-wide count of iterative→direct fallback events: an
+/// [`krylov::SolverStrategy::Iterative`] (or `Auto`-promoted) solve that
+/// failed its residual gate, broke down, or did not converge, and was
+/// silently re-run on the direct factor engine. Accuracy is unaffected by
+/// construction, but a climbing count means the preconditioner has gone
+/// stale (e.g. heavy conductance drift) — surfaced by
+/// `coordinator::Snapshot` and `memx report` so the degradation is
+/// observable at serve time.
+static SOLVER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the process-wide iterative→direct fallback counter.
+pub fn solver_fallbacks() -> u64 {
+    SOLVER_FALLBACKS.load(MemOrdering::Relaxed)
+}
 
 /// Circuit element.
 #[derive(Debug, Clone, PartialEq)]
@@ -334,7 +350,10 @@ impl Circuit {
                         Some(r) => r,
                         // iterative failure (non-convergence, structural
                         // singularity, residual gate): direct semantics
-                        None => self.solve_factored(&sys, ordering)?,
+                        None => {
+                            SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+                            self.solve_factored(&sys, ordering)?
+                        }
                     }
                 } else {
                     self.solve_factored(&sys, ordering)?
@@ -586,6 +605,7 @@ impl Circuit {
                     })
                     .collect());
             }
+            SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
         }
 
         let solved = {

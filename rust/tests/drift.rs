@@ -1,0 +1,154 @@
+//! Device-lifetime fault engine, end to end: aging degrades the compiled
+//! pipeline, reprogramming recovers it, and post-recalibration SPICE
+//! re-solves ride the cached factorizations (the factor-once contract
+//! across in-place conductance updates).
+
+use memx::fault::{self, FaultConfig, FaultModel};
+use memx::mapper::{build_synthetic_fc, MapMode};
+use memx::netlist::CrossbarSim;
+use memx::pipeline::{default_device, demo_network, Fidelity, PipelineBuilder, SolverStrategy};
+use memx::spice::solve::Ordering;
+use memx::util::prng::Rng;
+
+fn demo_inputs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..dim).map(|_| rng.f32() as f64 * 0.5).collect()).collect()
+}
+
+fn agreement(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len().max(1) as f64
+}
+
+#[test]
+fn aggressive_aging_flips_labels_but_stays_finite() {
+    let (m, ws) = demo_network(0xD511).unwrap();
+    let mut pristine =
+        PipelineBuilder::new().fidelity(Fidelity::Behavioural).build(&m, &ws).unwrap();
+    let mut aged = PipelineBuilder::new().fidelity(Fidelity::Behavioural).build(&m, &ws).unwrap();
+    let batch = demo_inputs(24, pristine.in_dim(), 0x5EED);
+    let want = pristine.classify_batch(&batch).unwrap();
+
+    let cfg = FaultConfig {
+        drift_nu: 0.3,
+        nu_sigma: 0.8,
+        stuck_off_frac: 0.1,
+        ..FaultConfig::default()
+    };
+    let mut model = FaultModel::new(cfg);
+    let step = model.advance(10_000.0, 1_000_000);
+    aged.inject_faults(&step);
+    let drifted = aged.classify_batch(&batch).unwrap();
+    assert!(
+        agreement(&drifted, &want) < 1.0,
+        "a decade of heavy drift plus 10% stuck-OFF cells must flip at least one label"
+    );
+    for row in aged.forward_batch(&batch).unwrap() {
+        for v in row {
+            assert!(v.is_finite(), "faulted logits must stay finite");
+        }
+    }
+}
+
+#[test]
+fn reprogram_recovers_pristine_labels_under_default_drift() {
+    // the acceptance bar: after recalibration the network must classify
+    // within 1% of the pristine build under the default fault config
+    // (drift + read disturb, no stuck cells)
+    let (m, ws) = demo_network(0xD512).unwrap();
+    let mut pristine =
+        PipelineBuilder::new().fidelity(Fidelity::Behavioural).build(&m, &ws).unwrap();
+    let mut aged = PipelineBuilder::new().fidelity(Fidelity::Behavioural).build(&m, &ws).unwrap();
+    let batch = demo_inputs(32, pristine.in_dim(), 0x5EED2);
+    let want = pristine.classify_batch(&batch).unwrap();
+
+    let cfg = FaultConfig::default();
+    let mut model = FaultModel::new(cfg);
+    let step = model.advance(5_000.0, 500_000);
+    aged.inject_faults(&step);
+
+    let rewritten = aged.reprogram(0.0, cfg.seed, 1);
+    assert!(rewritten > 0, "behavioural pipeline still reports reprogrammed devices");
+    model.reset_clock();
+    assert_eq!(model.hours(), 0.0);
+    let recovered = aged.classify_batch(&batch).unwrap();
+    let agree = agreement(&recovered, &want);
+    assert!(agree >= 0.99, "post-recalibration agreement {agree} < 0.99");
+}
+
+#[test]
+fn recalibration_resolves_ride_warm_gmres() {
+    // factor once, age the devices, value-only update, and every
+    // post-recalibration re-solve must reuse the cached preconditioner
+    let mut cb = build_synthetic_fc(12, 6, 64, MapMode::Inverted, 7);
+    let dev = default_device();
+    let mut sim = CrossbarSim::new(
+        &cb,
+        &dev,
+        3,
+        Ordering::Smart,
+        SolverStrategy::Iterative { restart: 16, tol: 1e-11, max_iter: 400 },
+    )
+    .unwrap();
+    let inputs: Vec<f64> = (0..12).map(|i| (i as f64 * 0.37).sin() * 0.3).collect();
+    let (_, cold) = sim.solve_stats(&inputs).unwrap();
+    assert!(!cold.is_empty());
+    assert!(cold.iter().all(|s| s.iterations > 0), "iterative path must run cold too");
+
+    let mut model = FaultModel::new(FaultConfig::default());
+    let step = model.advance(100.0, 1_000);
+    let g_min = dev.r_on / dev.r_off;
+    fault::apply_step(&step, fault::bank_seed("warm-test"), &mut cb.devices, g_min);
+    let n = sim.update_conductances(&cb.devices, dev.r_on);
+    assert_eq!(n, cb.devices.len(), "every placed device is rewritten in place");
+
+    let (out, warm) = sim.solve_stats(&inputs).unwrap();
+    assert_eq!(warm.len(), sim.n_segments());
+    for st in &warm {
+        assert!(
+            st.precond_reused,
+            "post-recalibration re-solve must ride the cached preconditioner"
+        );
+        assert!(st.iterations > 0, "warm solve is still iterative");
+    }
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn spice_pipeline_survives_faults_and_reprograms() {
+    let (m, ws) = demo_network(0xD311).unwrap();
+    let mut spice = PipelineBuilder::new()
+        .segment(8)
+        .workers(2)
+        .fidelity(Fidelity::Spice)
+        .build(&m, &ws)
+        .unwrap();
+    let batch = demo_inputs(2, spice.in_dim(), 0xA11CE);
+    let before = spice.forward_batch(&batch).unwrap();
+
+    let cfg = FaultConfig { stuck_off_frac: 0.02, ..FaultConfig::default() };
+    let mut model = FaultModel::new(cfg);
+    let step = model.advance(1_000.0, 10_000);
+    spice.inject_faults(&step);
+    let after = spice.forward_batch(&batch).unwrap();
+    for row in &after {
+        for &v in row {
+            assert!(v.is_finite(), "faulted spice outputs must stay finite");
+        }
+    }
+    let moved = before
+        .iter()
+        .flatten()
+        .zip(after.iter().flatten())
+        .any(|(a, b)| (a - b).abs() > 1e-9);
+    assert!(moved, "aging must perturb the emitted-netlist outputs");
+
+    let rewritten = spice.reprogram(0.0, cfg.seed, 1);
+    assert!(rewritten > 0, "spice pipeline must reprogram its resident crossbars");
+    let restored = spice.forward_batch(&batch).unwrap();
+    for row in &restored {
+        for &v in row {
+            assert!(v.is_finite());
+        }
+    }
+}

@@ -4,8 +4,9 @@
 
 use memx::analog;
 use memx::coordinator::batcher::plan_batch;
+use memx::fault::{self, FaultConfig, FaultModel};
 use memx::mapper::layout::{
-    out_dim, p_neg, p_pos, place_conv_kernel, place_fc, ConvXbarGeom, FcXbarGeom,
+    out_dim, p_neg, p_pos, place_conv_kernel, place_fc, ConvXbarGeom, FcXbarGeom, Placed,
 };
 use memx::mapper::{self, BnFold, MapMode, BN_EPS};
 use memx::netlist::plan_segments;
@@ -855,6 +856,142 @@ fn prop_json_roundtrip() {
         120,
         |rng: &mut Rng, size: usize| gen_json(rng, (size / 6).min(3)),
         |v| Json::parse(&v.to_string()).map(|p| p == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn prop_prog_noise_stays_in_signed_window() {
+    // quantized signed weights stay in [-1, 1] under write noise, exact
+    // zeros stay zero (no device is placed for them), and nothing goes NaN
+    // for any noise amplitude
+    check(
+        "prog-noise-window",
+        120,
+        |rng: &mut Rng, size: usize| {
+            let n = 1 + rng.below(8 + 4 * size);
+            let q: Vec<f64> = (0..n)
+                .map(|_| if rng.f64() < 0.2 { 0.0 } else { rng.range_f64(-1.0, 1.0) })
+                .collect();
+            (q, rng.range_f64(0.0, 0.6), rng.next_u64())
+        },
+        |(q, sigma, seed)| {
+            let mut noisy = q.clone();
+            mapper::apply_prog_noise(&mut noisy, *sigma, &mut Rng::new(*seed));
+            q.iter().zip(&noisy).all(|(&b, &a)| {
+                a.is_finite() && (-1.0..=1.0).contains(&a) && (b != 0.0 || a == 0.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_prog_noise_analog_respects_conductance_window() {
+    // analog writes never leave (0, max(g0, 1)]: never NaN, never negative
+    // or zero, never above the device's own programmed ceiling (bias
+    // devices legitimately sit above g_norm = 1)
+    check(
+        "prog-noise-analog-window",
+        120,
+        |rng: &mut Rng, size: usize| {
+            let n = 1 + rng.below(8 + 4 * size);
+            let g: Vec<f64> = (0..n).map(|_| rng.range_f64(1e-4, 1.4)).collect();
+            (g, rng.range_f64(0.0, 0.8), rng.next_u64())
+        },
+        |(g, sigma, seed)| {
+            let mut devices: Vec<Placed> = g
+                .iter()
+                .enumerate()
+                .map(|(i, &g0)| Placed { row: i, col: 0, g_norm: g0 })
+                .collect();
+            mapper::apply_prog_noise_analog(&mut devices, *sigma, &mut Rng::new(*seed));
+            devices.iter().zip(g).all(|(d, &g0)| {
+                d.g_norm.is_finite() && d.g_norm > 0.0 && d.g_norm <= g0.max(1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_fault_engine_keeps_devices_in_window() {
+    // any drift/read-disturb/stuck-at history followed by a recalibration
+    // write keeps every conductance finite, positive, and at or below the
+    // device's programmed ceiling — the [g_off, g_on] window contract
+    check(
+        "fault-window",
+        100,
+        |rng: &mut Rng, size: usize| {
+            let n = 1 + rng.below(10 + 4 * size);
+            let g: Vec<f64> = (0..n).map(|_| rng.range_f64(1e-3, 1.3)).collect();
+            let cfg = FaultConfig {
+                drift_nu: rng.range_f64(0.0, 0.5),
+                nu_sigma: rng.range_f64(0.0, 1.5),
+                t0_hours: rng.range_f64(0.1, 10.0),
+                read_disturb_rate: rng.range_f64(0.0, 0.1),
+                temp_c: rng.range_f64(-20.0, 120.0),
+                stuck_on_frac: rng.range_f64(0.0, 0.2),
+                stuck_off_frac: rng.range_f64(0.0, 0.2),
+                seed: rng.next_u64(),
+                ..FaultConfig::default()
+            };
+            let hours: Vec<f64> =
+                (0..1 + rng.below(4)).map(|_| rng.range_f64(0.0, 5_000.0)).collect();
+            (g, cfg, hours, rng.next_u64())
+        },
+        |(g, cfg, hours, bank)| {
+            let g_min = 1e-3;
+            let mut devices: Vec<Placed> = g
+                .iter()
+                .enumerate()
+                .map(|(i, &g0)| Placed { row: i, col: 0, g_norm: g0 })
+                .collect();
+            let mut model = FaultModel::new(*cfg);
+            for &h in hours {
+                let step = model.advance(h, (h * 1e4) as u64);
+                let md = step.mean_decay();
+                if !(md > 0.0 && md <= 1.0) {
+                    return false;
+                }
+                let ratio = fault::apply_step(&step, *bank, &mut devices, g_min);
+                if !(ratio.is_finite() && ratio > 0.0) {
+                    return false;
+                }
+            }
+            fault::reprogram_noise(&mut devices, 0.1, cfg.seed, *bank, 2);
+            devices.iter().zip(g).all(|(d, &g0)| {
+                d.g_norm.is_finite() && d.g_norm > 0.0 && d.g_norm <= g0.max(1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_fault_step_signed_never_flips_sign_or_escapes() {
+    // behavioural (signed-kernel) drift: magnitudes only shrink or saturate,
+    // stuck-OFF zeroes, and no weight ever changes sign or leaves [-1, 1]
+    check(
+        "fault-signed-window",
+        100,
+        |rng: &mut Rng, size: usize| {
+            let n = 1 + rng.below(10 + 4 * size);
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let cfg = FaultConfig {
+                drift_nu: rng.range_f64(0.0, 0.4),
+                nu_sigma: rng.range_f64(0.0, 1.0),
+                stuck_on_frac: rng.range_f64(0.0, 0.3),
+                stuck_off_frac: rng.range_f64(0.0, 0.3),
+                seed: rng.next_u64(),
+                ..FaultConfig::default()
+            };
+            (w, cfg, rng.range_f64(0.0, 20_000.0), rng.next_u64())
+        },
+        |(w, cfg, hours, bank)| {
+            let mut drifted = w.clone();
+            let step = FaultModel::new(*cfg).advance(*hours, 100_000);
+            fault::apply_step_signed(&step, *bank, &mut drifted);
+            w.iter()
+                .zip(&drifted)
+                .all(|(&b, &a)| a.is_finite() && (-1.0..=1.0).contains(&a) && a * b >= 0.0)
+        },
     );
 }
 

@@ -3,13 +3,16 @@
 //! end, including its behavior under a deliberately slow executor (queue
 //! latency, waited-out partial batches) and error propagation.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use memx::coordinator::{InferenceExecutor, Server};
-use memx::pipeline::StageStat;
+use memx::coordinator::{
+    ExecuteError, InferenceExecutor, PipelineExecutor, RecalPolicy, Server,
+};
+use memx::fault::{FaultConfig, FaultModel};
+use memx::pipeline::{default_device, Fidelity, PipelineBuilder, StageStat};
 
 /// A deterministic stub backend: label = floor(first pixel * classes),
 /// optional fixed delay per batch, optional injected failure. The struct is
@@ -189,6 +192,114 @@ fn server_rejects_malformed_image_offline() {
     assert!(client.classify(vec![0.0; 5]).is_err());
     // well-formed requests still flow afterwards
     assert_eq!(client.classify(img_for(1, 3, 8)).unwrap().label, 1);
+    server.shutdown();
+}
+
+/// A real [`PipelineExecutor`] behind a test-controlled kill switch: the
+/// soak test flips `fail` mid-stream to model an executor that dies and
+/// later recovers, while the inner pipeline keeps its drift clock.
+struct FlakyPipeline {
+    inner: PipelineExecutor,
+    fail: Arc<AtomicBool>,
+}
+
+impl InferenceExecutor for FlakyPipeline {
+    fn describe(&self) -> String {
+        format!("flaky {}", self.inner.describe())
+    }
+
+    fn img_elems(&self) -> usize {
+        self.inner.img_elems()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+
+    fn available_batches(&self) -> Vec<usize> {
+        self.inner.available_batches()
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        self.inner.warmup()
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        if self.fail.load(Ordering::Relaxed) {
+            bail!("injected mid-stream fault");
+        }
+        self.inner.run_batch(images)
+    }
+
+    fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        self.inner.take_stage_stats()
+    }
+
+    fn recalibrate(&mut self) -> Result<u64> {
+        self.inner.recalibrate()
+    }
+}
+
+#[test]
+fn soak_drift_detection_recalibration_and_flaky_executor() {
+    // a pipeline executor aging under drift + read disturb + stuck cells,
+    // behind a failing-then-recovering wrapper: the server must never
+    // deadlock or panic, the watchdog must detect the margin collapse and
+    // recalibrate, and per-request errors must carry batch context
+    let fail = Arc::new(AtomicBool::new(false));
+    let fail2 = fail.clone();
+    let policy = RecalPolicy {
+        enabled: true,
+        ewma_alpha: 0.5,
+        warm_batches: 3,
+        margin_frac: 0.8,
+        cooldown_batches: 3,
+    };
+    let server = Server::start_with_policy(Duration::from_micros(200), policy, move || {
+        let pipeline = PipelineBuilder::new()
+            .fidelity(Fidelity::Behavioural)
+            .build_fc_stack(&[12, 8, 4], &default_device(), 42)?;
+        // read disturb dominates (2% conductance decay per served batch)
+        // so the margin EWMA degrades linearly and predictably; the 1%
+        // stuck-OFF cells persist across recalibrations
+        let cfg = FaultConfig { stuck_off_frac: 0.01, ..FaultConfig::default() };
+        let exec = PipelineExecutor::new(pipeline, (2, 2, 3), &[1], 1)?
+            .with_faults(FaultModel::new(cfg), 1.0, 2_000_000, 0.0);
+        Ok(Box::new(FlakyPipeline { inner: exec, fail: fail2 }) as Box<dyn InferenceExecutor>)
+    })
+    .unwrap();
+    let client = server.client();
+    let img: Vec<f32> = (0..12).map(|i| ((i as f32 * 0.17).sin().abs() * 0.5) + 0.1).collect();
+
+    let mut recalibrated = false;
+    for _ in 0..300 {
+        client.classify(img.clone()).unwrap();
+        if server.metrics().snapshot().recalibrations >= 1 {
+            recalibrated = true;
+            break;
+        }
+    }
+    assert!(recalibrated, "drift watchdog never recalibrated within 300 batches");
+    assert!(server.metrics().snapshot().drift_detections >= 1);
+
+    // mid-stream executor death: every queued request gets a structured
+    // error naming the failed batch ...
+    fail.store(true, Ordering::Relaxed);
+    let err = client.classify(img.clone()).unwrap_err();
+    let ee = err.downcast_ref::<ExecuteError>().expect("executor failure downcasts to ExecuteError");
+    assert!(ee.detail.contains("injected mid-stream fault"), "{ee}");
+    assert!(ee.batch >= 1 && ee.batch_size >= 1, "{ee}");
+
+    // ... and service resumes once the backend recovers
+    fail.store(false, Ordering::Relaxed);
+    let pred = client.classify(img.clone()).unwrap();
+    assert!(pred.label < 4);
+
+    let snap = server.metrics().snapshot();
+    assert!(snap.errors >= 1);
+    assert!(snap.completed >= 2);
+    // counters must survive the print path (drift/recal/fallback lines)
+    snap.print(Duration::from_secs(1));
     server.shutdown();
 }
 
