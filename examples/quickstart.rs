@@ -93,6 +93,37 @@ fn synthetic_tour() -> anyhow::Result<()> {
         "lifetime     labels fresh {fresh:?} -> aged 10kh {aged:?} -> \
          reprogrammed {recovered:?} ({rewritten} devices rewritten)"
     );
+
+    // time-domain: the DC operating points above say nothing about *when*
+    // a read settles — spice::transient replays one read pulse against a
+    // synthetic crossbar (pulsed inputs, column parasitics, an RC
+    // line-driver stage per output) and integrates the device energy,
+    // next to the paper's closed-form Eq 17/18 columns (see `memx tran`
+    // for the full integrator sweep appending BENCH_transient.json)
+    let cb = mapper::build_synthetic_fc(16, 4, dev.levels, MapMode::Inverted, 11);
+    let sim = memx::netlist::CrossbarSim::new(
+        &cb,
+        &dev,
+        0,
+        memx::spice::solve::Ordering::Smart,
+        SolverStrategy::Auto,
+    )?;
+    let inputs: Vec<f64> = (0..16).map(|i| (i as f64 * 0.4).sin() * 0.3).collect();
+    let read = sim.tran_read(&inputs, &memx::netlist::ReadPulse::default())?;
+    let cmp = power::ReadComparison::new(
+        &dev,
+        MapMode::Inverted,
+        cb.devices.len(),
+        &power::SimulatedRead { settle_s: read.settle_s, energy_j: read.energy_j },
+    );
+    println!(
+        "transient    read settles in {:.2} µs (analytical {:.2} µs), \
+         {:.3} nJ in the devices over {} adaptive steps",
+        read.settle_s * 1e6,
+        cmp.analytical_latency_s * 1e6,
+        read.energy_j * 1e9,
+        read.stats.steps_accepted
+    );
     Ok(())
 }
 

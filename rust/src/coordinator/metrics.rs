@@ -10,7 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
-use crate::pipeline::StageStat;
+use crate::pipeline::{ModuleDrift, StageStat};
 
 /// Fixed log-scale latency histogram from 1 µs to ~67 s.
 const BUCKETS: usize = 27;
@@ -39,6 +39,9 @@ pub struct Metrics {
     queue_lat: Mutex<Hist>,
     /// per-stage (unit) wall time merged from the scheduler, chain order
     stages: Mutex<Vec<StageCell>>,
+    /// latest per-module drift telemetry (cumulative state, so each
+    /// report replaces the table rather than accumulating)
+    drift: Mutex<Vec<ModuleDrift>>,
 }
 
 struct StageCell {
@@ -112,6 +115,9 @@ pub struct Snapshot {
     pub solver_fallbacks: u64,
     /// per-stage wall time in chain order (pipeline executors only)
     pub stages: Vec<StageStat>,
+    /// per-module drift telemetry in chain order (fault-capable modules
+    /// of pipeline executors only; see [`ModuleDrift`])
+    pub drift_modules: Vec<ModuleDrift>,
 }
 
 impl Metrics {
@@ -154,6 +160,16 @@ impl Metrics {
         }
     }
 
+    /// Replace the drift telemetry table with the pipeline's latest state
+    /// ([`crate::pipeline::Pipeline::drift_telemetry`] — already
+    /// cumulative, so the newest report wins).
+    pub fn record_drift(&self, telemetry: Vec<ModuleDrift>) {
+        if telemetry.is_empty() {
+            return;
+        }
+        *locked(&self.drift) = telemetry;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = locked(&self.lat).clone();
         let q = locked(&self.queue_lat).clone();
@@ -182,6 +198,7 @@ impl Metrics {
             recalibrations: self.recalibrations.load(Ordering::Relaxed),
             solver_fallbacks: crate::spice::solver_fallbacks(),
             stages,
+            drift_modules: locked(&self.drift).clone(),
         }
     }
 }
@@ -236,6 +253,26 @@ impl Snapshot {
                 println!(
                     "    {:<18} total {:?}  calls {}  mean {:?}",
                     s.name, s.total, s.calls, mean
+                );
+            }
+        }
+        // device-ageing table: only modules that have actually drifted or
+        // been rewritten, most-decayed first
+        let mut aged: Vec<&ModuleDrift> = self
+            .drift_modules
+            .iter()
+            .filter(|d| d.drift_gain != 1.0 || d.reprograms > 0)
+            .collect();
+        if !aged.is_empty() {
+            aged.sort_by(|a, b| {
+                a.drift_gain.partial_cmp(&b.drift_gain).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let shown = aged.len().min(8);
+            println!("  device drift  (worst {shown} of {})", aged.len());
+            for d in &aged[..shown] {
+                println!(
+                    "    {:<18} gain {:.4}  steps {}  reprograms {} (last rewrote {})",
+                    d.name, d.drift_gain, d.fault_steps, d.reprograms, d.devices_rewritten
                 );
             }
         }
@@ -307,5 +344,27 @@ mod tests {
         assert_eq!(s.stages[0].total, Duration::from_millis(4));
         assert_eq!(s.stages[0].calls, 4);
         assert_eq!(s.stages[1].total, Duration::from_millis(7));
+    }
+
+    #[test]
+    fn drift_table_replaces_not_accumulates() {
+        let m = Metrics::default();
+        let row = |gain: f64, steps: u64| ModuleDrift {
+            name: "fc1".into(),
+            kind: "FC",
+            drift_gain: gain,
+            fault_steps: steps,
+            reprograms: 0,
+            devices_rewritten: 0,
+        };
+        m.record_drift(vec![row(0.98, 1)]);
+        m.record_drift(vec![row(0.95, 2)]);
+        let s = m.snapshot();
+        assert_eq!(s.drift_modules.len(), 1);
+        assert!((s.drift_modules[0].drift_gain - 0.95).abs() < 1e-12);
+        assert_eq!(s.drift_modules[0].fault_steps, 2);
+        // empty reports keep the last table instead of wiping it
+        m.record_drift(Vec::new());
+        assert_eq!(m.snapshot().drift_modules.len(), 1);
     }
 }

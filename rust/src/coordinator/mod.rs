@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::fault::FaultModel;
-use crate::pipeline::{image_to_input, Fidelity, Pipeline, PipelineBuilder, StageStat};
+use crate::pipeline::{image_to_input, Fidelity, ModuleDrift, Pipeline, PipelineBuilder, StageStat};
 use crate::util::argmax_rows;
 use crate::util::bin::Dataset;
 use metrics::Metrics;
@@ -87,6 +87,13 @@ pub trait InferenceExecutor {
     /// Drain per-stage wall-time accounting since the last call (pipeline
     /// schedulers report their unit timings here; default: none).
     fn take_stage_stats(&mut self) -> Vec<StageStat> {
+        Vec::new()
+    }
+
+    /// Current per-module device-ageing telemetry (cumulative drift gain,
+    /// absorbed fault steps, reprogram counts). Default: none — only
+    /// fault-capable analog backends have device state to report.
+    fn drift_telemetry(&self) -> Vec<ModuleDrift> {
         Vec::new()
     }
 
@@ -308,6 +315,10 @@ impl InferenceExecutor for PipelineExecutor {
 
     fn take_stage_stats(&mut self) -> Vec<StageStat> {
         self.pipeline.take_stage_stats()
+    }
+
+    fn drift_telemetry(&self) -> Vec<ModuleDrift> {
+        self.pipeline.drift_telemetry()
     }
 
     fn recalibrate(&mut self) -> Result<u64> {
@@ -731,6 +742,7 @@ fn serve_thread<F>(
         let run = exec.run_batch(buf);
         metrics.record_exec(t_run.elapsed());
         metrics.record_stage_stats(&exec.take_stage_stats());
+        metrics.record_drift(exec.drift_telemetry());
         let run = run.and_then(|logits| {
             if logits.len() != plan.size * classes {
                 bail!("executor returned {} logits for a batch of {}", logits.len(), plan.size);

@@ -11,7 +11,10 @@
 //! - **Log-time drift** — each device relaxes as `g(t) = g0 · (t/t0)^-ν`
 //!   ([`FaultConfig::drift_nu`]); per-device exponents are spread by
 //!   [`FaultConfig::nu_sigma`] so drift is *not* a uniform logit scaling
-//!   (uniform decay is argmax-neutral and would hide real damage).
+//!   (uniform decay is argmax-neutral and would hide real damage), and
+//!   optionally scale with the as-programmed level ([`FaultConfig::nu_g`]:
+//!   low-conductance states relax faster) — keyed to the *pristine*
+//!   conductance so incremental steps still compose exactly.
 //! - **Read disturb** — every read nudges conductance down; accumulated as
 //!   [`FaultConfig::read_disturb_rate`] fractional loss per 10⁶ reads.
 //! - **Temperature scaling** — the effective drift exponent grows with
@@ -52,6 +55,15 @@ pub struct FaultConfig {
     /// Relative per-device spread of ν: device i draws
     /// `ν_i = ν · (1 + nu_sigma · u_i)` with `u_i` uniform in [-1, 1].
     pub nu_sigma: f64,
+    /// Conductance dependence of the drift exponent: a device programmed
+    /// at pristine level `g0` drifts with
+    /// `ν_i(g0) = ν_i · (1 + nu_g · (1 - g0))` (g0 clamped to [0, 1]) —
+    /// low-conductance states sit closer to the amorphous phase and relax
+    /// faster. 0.0 (default) restores the conductance-independent model.
+    /// Keyed to the *pristine* (as-programmed) level, not the current one,
+    /// so incremental steps still compose exactly to the closed-form power
+    /// law — see [`apply_step_from`].
+    pub nu_g: f64,
     /// Drift reference time t0, in hours (drift is zero until t ≫ 0).
     pub t0_hours: f64,
     /// Fractional conductance loss per 10⁶ reads.
@@ -75,6 +87,7 @@ impl Default for FaultConfig {
         FaultConfig {
             drift_nu: 0.05,
             nu_sigma: 0.4,
+            nu_g: 0.0,
             t0_hours: 1.0,
             read_disturb_rate: 0.01,
             temp_c: 25.0,
@@ -144,6 +157,7 @@ impl FaultModel {
             disturb: (self.cfg.read_disturb_rate * reads as f64 / 1e6).max(0.0),
             nu_base,
             nu_sigma: self.cfg.nu_sigma.max(0.0),
+            nu_g: self.cfg.nu_g.max(0.0),
             stuck_on_frac: self.cfg.stuck_on_frac.clamp(0.0, 1.0),
             stuck_off_frac: self.cfg.stuck_off_frac.clamp(0.0, 1.0),
             seed: self.cfg.seed,
@@ -171,6 +185,8 @@ pub struct FaultStep {
     pub nu_base: f64,
     /// Relative per-device spread of the exponent.
     pub nu_sigma: f64,
+    /// Conductance dependence of the exponent (see [`FaultConfig::nu_g`]).
+    pub nu_g: f64,
     /// Fraction of devices stuck at `g_on`.
     pub stuck_on_frac: f64,
     /// Fraction of devices stuck at `g_off`.
@@ -187,6 +203,7 @@ impl FaultStep {
             disturb: 0.0,
             nu_base: 0.0,
             nu_sigma: 0.0,
+            nu_g: 0.0,
             stuck_on_frac: 0.0,
             stuck_off_frac: 0.0,
             seed: 0,
@@ -220,10 +237,23 @@ impl FaultStep {
     }
 
     /// Multiplicative decay for device `index` of `bank` over this
-    /// increment: `exp(-ν_i·Δln - disturb)`, always in (0, 1].
+    /// increment: `exp(-ν_i·Δln - disturb)`, always in (0, 1]. Ignores the
+    /// conductance dependence (`g0 = 1`); use [`FaultStep::decay_for`]
+    /// when `nu_g > 0`.
     pub fn decay(&self, bank: u64, index: usize) -> f64 {
+        self.decay_for(bank, index, 1.0)
+    }
+
+    /// Like [`FaultStep::decay`] with the ν(g) conductance dependence:
+    /// `g0` is the device's *pristine* (as-programmed) normalized level.
+    /// Because `g0` is fixed at write time, per-device exponents are
+    /// constants of the deployment window and incremental steps still
+    /// compose exactly to the closed-form power law.
+    pub fn decay_for(&self, bank: u64, index: usize, g0: f64) -> f64 {
         let (u, _) = self.device_draws(bank, index);
-        let nu_i = (self.nu_base * (1.0 + self.nu_sigma * (2.0 * u - 1.0))).max(0.0);
+        let g_fac = 1.0 + self.nu_g * (1.0 - g0.clamp(0.0, 1.0));
+        let nu_i =
+            (self.nu_base * (1.0 + self.nu_sigma * (2.0 * u - 1.0)) * g_fac).max(0.0);
         (-nu_i * self.ln_ratio - self.disturb).exp().min(1.0)
     }
 
@@ -269,6 +299,24 @@ pub fn bank_seed(name: &str) -> u64 {
 /// actually applied (1.0 for an empty bank). Conductances never leave
 /// `[g_min, cap]` and are never NaN or non-positive.
 pub fn apply_step(step: &FaultStep, bank: u64, devices: &mut [Placed], g_min: f64) -> f64 {
+    apply_step_from(step, bank, devices, None, g_min)
+}
+
+/// [`apply_step`] with the ν(g) reference: `pristine[i]` is device i's
+/// as-programmed normalized conductance, the fixed anchor of its
+/// conductance-dependent exponent. Pass the same pristine array to every
+/// incremental step and N small steps compose exactly to one big step even
+/// with `nu_g > 0` (keying ν to the *current* conductance would make the
+/// effective exponent drift with the state and break the closed form).
+/// With `pristine = None` the current conductance is used as its own
+/// reference — exact only for a single application or when `nu_g == 0`.
+pub fn apply_step_from(
+    step: &FaultStep,
+    bank: u64,
+    devices: &mut [Placed],
+    pristine: Option<&[f64]>,
+    g_min: f64,
+) -> f64 {
     if devices.is_empty() {
         return 1.0;
     }
@@ -277,10 +325,11 @@ pub fn apply_step(step: &FaultStep, bank: u64, devices: &mut [Placed], g_min: f6
     for (i, d) in devices.iter_mut().enumerate() {
         let before = d.g_norm.max(g_min);
         let cap = before.max(1.0);
+        let g0 = pristine.and_then(|p| p.get(i).copied()).unwrap_or(before);
         let after = match step.stuck(bank, i) {
             Stuck::On => cap,
             Stuck::Off => g_min,
-            Stuck::Free => (before * step.decay(bank, i)).clamp(g_min, cap),
+            Stuck::Free => (before * step.decay_for(bank, i, g0)).clamp(g_min, cap),
         };
         d.g_norm = after;
         ratio_sum += after / before;
@@ -293,7 +342,20 @@ pub fn apply_step(step: &FaultStep, bank: u64, devices: &mut [Placed], g_min: f6
 /// devices, below `Fidelity::Spice`): drift shrinks magnitudes, stuck-ON
 /// saturates to ±1 preserving sign, stuck-OFF zeroes the weight.
 pub fn apply_step_signed(step: &FaultStep, bank: u64, weights: &mut [f64]) {
+    apply_step_signed_from(step, bank, weights, None);
+}
+
+/// [`apply_step_signed`] with the ν(g) reference (see [`apply_step_from`]):
+/// `pristine[i]` is the as-programmed signed weight; its magnitude is the
+/// conductance proxy anchoring the device's drift exponent.
+pub fn apply_step_signed_from(
+    step: &FaultStep,
+    bank: u64,
+    weights: &mut [f64],
+    pristine: Option<&[f64]>,
+) {
     for (i, w) in weights.iter_mut().enumerate() {
+        let g0 = pristine.and_then(|p| p.get(i).copied()).unwrap_or(*w).abs();
         *w = match step.stuck(bank, i) {
             Stuck::On => {
                 if *w < 0.0 {
@@ -303,7 +365,7 @@ pub fn apply_step_signed(step: &FaultStep, bank: u64, weights: &mut [f64]) {
                 }
             }
             Stuck::Off => 0.0,
-            Stuck::Free => (*w * step.decay(bank, i)).clamp(-1.0, 1.0),
+            Stuck::Free => (*w * step.decay_for(bank, i, g0)).clamp(-1.0, 1.0),
         };
     }
 }
@@ -348,6 +410,66 @@ mod tests {
         }
         let g_whole = whole.advance(100.0, 0).decay(7, 3);
         assert!((g_split - g_whole).abs() < 1e-12, "{g_split} vs {g_whole}");
+    }
+
+    #[test]
+    fn conductance_dependent_drift_composes() {
+        // with nu_g on, slicing the window must still telescope exactly,
+        // because the exponent is anchored to the fixed pristine level
+        let cfg = FaultConfig { nu_g: 1.5, nu_sigma: 0.5, ..Default::default() };
+        let mut split = FaultModel::new(cfg);
+        let mut g_split = 1.0f64;
+        for _ in 0..10 {
+            g_split *= split.advance(10.0, 0).decay_for(7, 3, 0.2);
+        }
+        let g_whole = FaultModel::new(cfg).advance(100.0, 0).decay_for(7, 3, 0.2);
+        assert!((g_split - g_whole).abs() < 1e-12, "{g_split} vs {g_whole}");
+    }
+
+    #[test]
+    fn low_conductance_devices_drift_faster() {
+        let cfg =
+            FaultConfig { nu_g: 2.0, nu_sigma: 0.0, read_disturb_rate: 0.0, ..Default::default() };
+        let s = FaultModel::new(cfg).advance(1000.0, 0);
+        assert!(s.decay_for(1, 0, 0.1) < s.decay_for(1, 0, 0.9));
+        // at the window top the dependence vanishes: decay() is the g0=1 case
+        assert_eq!(s.decay_for(1, 0, 1.0).to_bits(), s.decay(1, 0).to_bits());
+    }
+
+    #[test]
+    fn apply_step_from_pristine_slices_compose() {
+        let cfg = FaultConfig {
+            drift_nu: 0.1,
+            nu_sigma: 0.3,
+            nu_g: 1.0,
+            read_disturb_rate: 0.0,
+            ..Default::default()
+        };
+        let pristine: Vec<f64> = (0..100).map(|i| 0.1 + 0.8 * (i as f64) / 99.0).collect();
+        let mk = || -> Vec<Placed> {
+            pristine
+                .iter()
+                .enumerate()
+                .map(|(i, &g)| Placed { row: i, col: 0, g_norm: g })
+                .collect()
+        };
+        let g_min = 1e-4;
+        let mut split = FaultModel::new(cfg);
+        let mut sliced = mk();
+        for _ in 0..4 {
+            apply_step_from(&split.advance(25.0, 0), 3, &mut sliced, Some(&pristine), g_min);
+        }
+        let mut whole = mk();
+        apply_step_from(
+            &FaultModel::new(cfg).advance(100.0, 0),
+            3,
+            &mut whole,
+            Some(&pristine),
+            g_min,
+        );
+        for (a, b) in sliced.iter().zip(&whole) {
+            assert!((a.g_norm - b.g_norm).abs() < 1e-12, "{} vs {}", a.g_norm, b.g_norm);
+        }
     }
 
     #[test]

@@ -21,13 +21,24 @@
 //!            fidelity/resource table + stage-hook Eq 17/18 — at spice
 //!            fidelity the counts come from the emitted netlists)
 //!   drift    [--hours H1,H2,...] [--n N] [--fidelity F] [--nu V]
-//!            [--nu-sigma V] [--stuck-off F] [--stuck-on F]
-//!            [--prog-sigma S] [--out FILE]   device-lifetime sweep on the
-//!            synthetic demo network: age the crossbars along the hour
-//!            grid, track label agreement vs the pristine network and the
-//!            relative crossbar-read energy, then reprogram and report the
-//!            recovered agreement; appends BENCH_drift.json
-//!            (MEMX_BENCH_QUICK=1 shrinks the sweep for CI)
+//!            [--nu-sigma V] [--nu-g V] [--stuck-off F] [--stuck-on F]
+//!            [--prog-sigma S] [--tran] [--out FILE]   device-lifetime
+//!            sweep on the synthetic demo network: age the crossbars along
+//!            the hour grid, track label agreement vs the pristine network
+//!            and the relative crossbar-read energy, then reprogram and
+//!            report the recovered agreement; --tran additionally ages a
+//!            probe crossbar on the same fault clock and re-measures its
+//!            read-pulse settling time per hour point (the coarse
+//!            FaultModel clock driving the fine `spice::transient` clock);
+//!            appends BENCH_drift.json (MEMX_BENCH_QUICK=1 shrinks the
+//!            sweep for CI)
+//!   tran     [--rows R] [--cols C] [--mode inverted|dual]
+//!            [--integrators be,trap,trbdf2] [--rise-ns T] [--seed S]
+//!            [--out FILE]   time-domain read-pulse sweep on a synthetic
+//!            FC crossbar: settle each integrator to the DC operating
+//!            point and compare simulated settling latency / device energy
+//!            against the closed-form Eq 17/18 columns; appends
+//!            BENCH_transient.json (MEMX_BENCH_QUICK=1 shrinks the run)
 //!
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
 
@@ -67,7 +78,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "memx — memristor crossbar computing paradigm for MobileNetV3\n\
-         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report|drift> [flags]\n\
+         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report|drift|tran> [flags]\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
 }
@@ -110,6 +121,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "spice" => cmd_spice(rest),
         "report" => cmd_report(rest),
         "drift" => cmd_drift(rest),
+        "tran" => cmd_tran(rest),
         _ => {
             usage();
             bail!("unknown command '{cmd}'")
@@ -539,8 +551,8 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
     let a = Args::parse(
         rest,
         &[
-            "hours", "n", "fidelity", "nu", "nu-sigma", "stuck-on", "stuck-off", "read-rate",
-            "prog-sigma", "seed", "out",
+            "hours", "n", "fidelity", "nu", "nu-sigma", "nu-g", "stuck-on", "stuck-off",
+            "read-rate", "prog-sigma", "seed", "out", "tran!",
         ],
     )?;
     let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
@@ -569,6 +581,7 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
     let cfg = memx::fault::FaultConfig {
         drift_nu: a.get_f64("nu", d.drift_nu)?,
         nu_sigma: a.get_f64("nu-sigma", d.nu_sigma)?,
+        nu_g: a.get_f64("nu-g", d.nu_g)?,
         stuck_on_frac: a.get_f64("stuck-on", d.stuck_on_frac)?,
         stuck_off_frac: a.get_f64("stuck-off", d.stuck_off_frac)?,
         read_disturb_rate: a.get_f64("read-rate", d.read_disturb_rate)?,
@@ -584,6 +597,33 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
     };
     let mut pristine = builder()?;
     let mut aged = builder()?;
+
+    // --tran: a probe FC crossbar aged on the same FaultModel clock whose
+    // read-pulse transient is re-run at each hour point, so the coarse
+    // lifetime clock drives the fine `spice::transient` clock
+    let mut probe = if a.has("tran") {
+        let dev = default_device();
+        let cb = memx::mapper::build_synthetic_fc(
+            12,
+            4,
+            dev.levels,
+            memx::mapper::MapMode::Inverted,
+            seed ^ 0x7A,
+        );
+        let sim = memx::netlist::CrossbarSim::new(
+            &cb,
+            &dev,
+            0,
+            memx::spice::solve::Ordering::Smart,
+            SolverStrategy::Auto,
+        )?;
+        let pristine_g: Vec<f64> = cb.devices.iter().map(|p| p.g_norm).collect();
+        let mut prng = memx::util::prng::Rng::new(seed ^ 0x7A41);
+        let inputs: Vec<f64> = (0..12).map(|_| (prng.f64() * 2.0 - 1.0) * 0.3).collect();
+        Some((cb, sim, pristine_g, inputs, dev))
+    } else {
+        None
+    };
 
     let mut rng = memx::util::prng::Rng::new(seed ^ 0xD21F7);
     let in_dim = pristine.in_dim();
@@ -621,6 +661,23 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
             min: wall,
         });
         derived.push((format!("agreement_t{h}h"), agree));
+        if let Some((cb, sim, pristine_g, inputs, dev)) = probe.as_mut() {
+            let bank = memx::fault::bank_seed("tran_probe");
+            memx::fault::apply_step_from(
+                &step,
+                bank,
+                &mut cb.devices,
+                Some(pristine_g.as_slice()),
+                dev.r_on / dev.r_off,
+            );
+            sim.update_conductances(&cb.devices, dev.r_on);
+            let rd = sim.tran_read(inputs, &memx::netlist::ReadPulse::default())?;
+            println!(
+                "             read settle {:.3e}s  device energy {:.3e}J",
+                rd.settle_s, rd.energy_j
+            );
+            derived.push((format!("settle_s_t{h}h"), rd.settle_s));
+        }
     }
     derived.push(("energy_factor_final".into(), energy));
 
@@ -642,5 +699,96 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
     let out = a.get_or("out", "BENCH_drift.json");
     memx::util::bench::append_json_report(out, "drift", &rows, &derived)?;
     println!("appended drift trajectory to {out}");
+    Ok(())
+}
+
+/// Time-domain read-pulse sweep (`spice::transient`): a synthetic FC
+/// crossbar is read through [`memx::netlist::CrossbarSim::tran_read`]
+/// under each requested integrator, the settled outputs are checked
+/// against the DC operating point, and the simulated settling latency /
+/// integrated device energy are printed next to the paper's closed-form
+/// Eq 17/18 columns ([`memx::power::ReadComparison`]).
+fn cmd_tran(rest: &[String]) -> Result<()> {
+    use memx::netlist::{CrossbarSim, ReadPulse};
+    use memx::power::{ReadComparison, SimulatedRead};
+    use memx::spice::solve::Ordering;
+    use memx::spice::transient::Integrator;
+
+    let a = Args::parse(
+        rest,
+        &["rows", "cols", "mode", "integrators", "rise-ns", "seed", "out"],
+    )?;
+    let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
+    let rows = a.get_usize("rows", if quick { 8 } else { 24 })?;
+    let cols = a.get_usize("cols", if quick { 4 } else { 12 })?;
+    let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
+    let seed = a.get_usize("seed", 0xC1F0)? as u64;
+    let integ_spec = a.get_or("integrators", if quick { "be" } else { "be,trap,trbdf2" });
+    let mut integrators = Vec::new();
+    for tok in integ_spec.split(',') {
+        integrators.push(tok.trim().parse::<Integrator>()?);
+    }
+
+    let dev = default_device();
+    let cb = memx::mapper::build_synthetic_fc(rows, cols, dev.levels, mode, seed);
+    let mut sim = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto)?;
+    let mut rng = memx::util::prng::Rng::new(seed ^ 0x7A4);
+    let inputs: Vec<f64> = (0..rows).map(|_| (rng.f64() * 2.0 - 1.0) * 0.4).collect();
+    let dc = sim.solve(&inputs)?;
+
+    println!(
+        "transient read sweep: {rows}x{cols} synthetic FC crossbar ({mode} mode, {} devices)",
+        cb.devices.len()
+    );
+    let mut bench_rows: Vec<memx::util::bench::Stats> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    for &integ in &integrators {
+        let pulse = ReadPulse {
+            rise: a.get_f64("rise-ns", 10.0)? * 1e-9,
+            integrator: integ,
+            ..ReadPulse::default()
+        };
+        let t0 = std::time::Instant::now();
+        let rd = sim.tran_read(&inputs, &pulse)?;
+        let wall = t0.elapsed();
+        let worst =
+            rd.outputs.iter().zip(&dc).map(|(t, d)| (t - d).abs()).fold(0.0f64, f64::max);
+        let cmp = ReadComparison::new(
+            &dev,
+            mode,
+            cb.devices.len(),
+            &SimulatedRead { settle_s: rd.settle_s, energy_j: rd.energy_j },
+        );
+        let iname = integ.to_string();
+        println!(
+            "  {iname:<7} settle {:.3e}s (analytical {:.3e}s, x{:.2})  energy {:.3e}J \
+             (worst-case {:.3e}J, x{:.3})",
+            cmp.simulated_latency_s,
+            cmp.analytical_latency_s,
+            cmp.latency_ratio(),
+            cmp.simulated_energy_j,
+            cmp.analytical_energy_biased_j,
+            cmp.energy_ratio(),
+        );
+        println!(
+            "          steps {} (+{} rejected)  solves {}  max|tran-dc| {worst:.3e}  wall {wall:?}",
+            rd.stats.steps_accepted, rd.stats.steps_rejected, rd.stats.solves
+        );
+        bench_rows.push(memx::util::bench::Stats {
+            name: format!("tran_read_{iname}"),
+            iters: 1,
+            mean: wall,
+            median: wall,
+            p95: wall,
+            min: wall,
+        });
+        derived.push((format!("settle_s_{iname}"), rd.settle_s));
+        derived.push((format!("energy_j_{iname}"), rd.energy_j));
+        derived.push((format!("latency_ratio_{iname}"), cmp.latency_ratio()));
+        derived.push((format!("steps_{iname}"), rd.stats.steps_accepted as f64));
+    }
+    let out = a.get_or("out", "BENCH_transient.json");
+    memx::util::bench::append_json_report(out, "transient", &bench_rows, &derived)?;
+    println!("appended transient sweep to {out}");
     Ok(())
 }

@@ -33,6 +33,9 @@ use crate::mapper::{build_fc_crossbar, Crossbar, MapMode};
 use crate::nn::{DeviceJson, Manifest, WeightStore};
 use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::{Ordering, SolveStats};
+use crate::spice::transient::{
+    resistor_energy, settling_time, Integrator, TranConfig, TranStats, Waveform,
+};
 use crate::spice::{Circuit, Element};
 use crate::util::pool::par_map_mut;
 
@@ -436,6 +439,151 @@ impl CrossbarSim {
         }
         Ok(out)
     }
+
+    /// Simulate one read pulse in the time domain: settling latency +
+    /// integrated device energy, the simulated counterpart of the
+    /// analytical `power::` estimates.
+    ///
+    /// Builds a dynamic *twin* of each resident segment (the DC circuits
+    /// and their cached factorizations are untouched): every input source
+    /// becomes a rise-limited [`Waveform::Pulse`] from 0 V to its read
+    /// level, each TIA virtual ground gains a `c_col` parasitic, and each
+    /// output node drives an `r_out`/`c_load` line stage — the node the
+    /// settling time and final outputs are measured at. The twin is a
+    /// value-superset of the DC netlist, so the settled outputs converge
+    /// to [`CrossbarSim::solve`] for the same inputs.
+    pub fn tran_read(&self, inputs: &[f64], pulse: &ReadPulse) -> Result<TranRead> {
+        if inputs.len() != self.region {
+            bail!("crossbar sim: {} inputs, region is {}", inputs.len(), self.region);
+        }
+        if pulse.r_out <= 0.0 || pulse.c_load <= 0.0 {
+            bail!("read pulse: r_out and c_load must be positive");
+        }
+        let tau = pulse.r_out * pulse.c_load;
+        let t_stop = if pulse.t_stop > 0.0 { pulse.t_stop } else { pulse.rise + 12.0 * tau };
+        // resolve the input edge; the LTE controller grows h after it
+        let h0 = if pulse.rise > 0.0 {
+            (pulse.rise * 0.25).min(tau * 0.1)
+        } else {
+            tau * 0.02
+        };
+        let region = self.region;
+        let mut outputs = Vec::with_capacity(self.cols);
+        let mut settle = 0.0_f64;
+        let mut energy = 0.0_f64;
+        let mut stats = TranStats::default();
+        for seg in &self.segments {
+            let mut twin = seg.circuit.clone();
+            // launch every input line (incl. bias rows) as a read pulse
+            for &(idx, r) in &seg.vin {
+                let v = input_voltage_region(region, r, Some(inputs));
+                twin.set_waveform(
+                    idx,
+                    Waveform::Pulse {
+                        v1: 0.0,
+                        v2: v,
+                        delay: 0.0,
+                        rise: pulse.rise,
+                        fall: pulse.rise,
+                        width: 2.0 * t_stop,
+                        period: 0.0,
+                    },
+                )?;
+            }
+            // column-line parasitic at each TIA virtual ground (the RF
+            // feedback resistor's first node by emission convention)
+            let vcols: Vec<usize> = twin
+                .elements
+                .iter()
+                .filter_map(|e| match e {
+                    Element::Resistor(n, a, _, _) if n.starts_with("RF") => Some(*a),
+                    _ => None,
+                })
+                .collect();
+            for (k, &vc) in vcols.iter().enumerate() {
+                twin.capacitor(&format!("CC{k}"), vc, 0, pulse.c_col);
+            }
+            // output line-driver stage: the measured read node per column
+            let mut load_nodes = Vec::with_capacity(seg.out_nodes.len());
+            for (k, &on) in seg.out_nodes.iter().enumerate() {
+                let ld = twin.node(&format!("vload{k}"));
+                twin.resistor(&format!("RD{k}"), on, ld, pulse.r_out);
+                twin.capacitor(&format!("CL{k}"), ld, 0, pulse.c_load);
+                load_nodes.push(ld);
+            }
+            let mut cfg = TranConfig::new(t_stop, h0).with_integrator(pulse.integrator);
+            cfg.ordering = self.ordering;
+            let res = twin.tran(&cfg)?;
+            let last = res.voltages[0]
+                .last()
+                .ok_or_else(|| anyhow!("transient produced no time points"))?;
+            outputs.extend(load_nodes.iter().map(|&n| last[n]));
+            settle = settle.max(settling_time(&res, 0, &load_nodes, pulse.settle_rtol));
+            energy += resistor_energy(&twin, &res, 0, "RM");
+            stats.absorb(&res.stats);
+        }
+        Ok(TranRead { outputs, settle_s: settle, energy_j: energy, stats })
+    }
+}
+
+/// Read-pulse excitation + output-stage parasitics for
+/// [`CrossbarSim::tran_read`].
+///
+/// The resident DC netlists use ideal op-amps (VCVS, zero output
+/// impedance) — every node would settle instantaneously. The transient
+/// twin therefore adds the dynamics the analytical §4 latency model only
+/// estimates: a line-driver stage (`r_out` into `c_load`) hung off each
+/// column output, and a `c_col` parasitic at each TIA virtual ground.
+/// With the defaults, `r_out·c_load = 0.5 µs` — the paper's op-amp
+/// response time — so the simulated settling time is directly comparable
+/// to the analytical `t_mem + t_opamp` column.
+#[derive(Debug, Clone)]
+pub struct ReadPulse {
+    /// Input-source rise/fall time (s); every input line ramps from 0 V
+    /// to its read level over this window.
+    pub rise: f64,
+    /// Output line-driver resistance (Ω).
+    pub r_out: f64,
+    /// Line + sampling capacitance at each driven output (F).
+    pub c_load: f64,
+    /// Column-line parasitic at each TIA virtual ground (F).
+    pub c_col: f64,
+    /// Settling band as a fraction of the final output value.
+    pub settle_rtol: f64,
+    /// Simulation horizon (s); 0.0 = auto (`rise + 12·r_out·c_load`).
+    pub t_stop: f64,
+    pub integrator: Integrator,
+}
+
+impl Default for ReadPulse {
+    fn default() -> Self {
+        ReadPulse {
+            rise: 10e-9,
+            r_out: 1e3,
+            c_load: 0.5e-9,
+            c_col: 10e-12,
+            settle_rtol: 0.01,
+            t_stop: 0.0,
+            integrator: Integrator::TrBdf2,
+        }
+    }
+}
+
+/// Result of one simulated read pulse ([`CrossbarSim::tran_read`]).
+#[derive(Debug, Clone)]
+pub struct TranRead {
+    /// Per-column outputs sampled at the end of the pulse (settled).
+    pub outputs: Vec<f64>,
+    /// Worst-case (max over segments) output settling time (s),
+    /// measured from pulse launch to the last excursion outside the
+    /// `settle_rtol` band at any driven output node.
+    pub settle_s: f64,
+    /// Energy dissipated in the memristor devices over the read (J),
+    /// integrated from the transient trajectory (trapezoid rule).
+    pub energy_j: f64,
+    /// Merged transient-engine counters across segments (one symbolic
+    /// analysis per segment).
+    pub stats: TranStats,
 }
 
 /// Solve a parsed crossbar segment and extract the per-column outputs.
@@ -741,6 +889,61 @@ mod tests {
         for (a, b) in out.iter().zip(&plain) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn tran_read_settles_to_dc_outputs() {
+        let cb = build_synthetic_fc(8, 3, 64, MapMode::Inverted, 7);
+        let dev = test_device();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        let inputs: Vec<f64> = (0..8).map(|i| (i as f64 * 0.37).sin() * 0.4).collect();
+        let dc = sim.solve(&inputs).unwrap();
+        let pulse = ReadPulse::default();
+        let rd = sim.tran_read(&inputs, &pulse).unwrap();
+        assert_eq!(rd.outputs.len(), 3);
+        for (c, (got, want)) in rd.outputs.iter().zip(&dc).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-3 + 1e-3 * want.abs(),
+                "col {c}: tran {got} vs dc {want}"
+            );
+        }
+        // the load RC is the dominant pole: 1% settling of a driven RC is
+        // ~4.6 tau; allow slack for the input ramp and step granularity
+        let tau = pulse.r_out * pulse.c_load;
+        assert!(
+            rd.settle_s > 0.5 * tau && rd.settle_s < 11.0 * tau,
+            "settle {} vs tau {tau}",
+            rd.settle_s
+        );
+        assert!(rd.energy_j > 0.0, "devices must dissipate during the read");
+        assert_eq!(rd.stats.symbolic_analyses, 1, "one segment, one analysis");
+        assert!(rd.stats.steps_accepted > 10);
+        // the resident DC sim must be untouched by the transient twin
+        let dc2 = sim.solve(&inputs).unwrap();
+        for (a, b) in dc.iter().zip(&dc2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tran_read_dual_mode_segmented() {
+        let cb = build_synthetic_fc(6, 4, 64, MapMode::Dual, 3);
+        let dev = test_device();
+        let mut sim =
+            CrossbarSim::new(&cb, &dev, 2, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        assert_eq!(sim.n_segments(), 2);
+        let inputs: Vec<f64> = (0..6).map(|i| (i as f64 * 0.51).cos() * 0.3).collect();
+        let dc = sim.solve(&inputs).unwrap();
+        let rd = sim.tran_read(&inputs, &ReadPulse::default()).unwrap();
+        assert_eq!(rd.outputs.len(), 4);
+        for (c, (got, want)) in rd.outputs.iter().zip(&dc).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-3 + 1e-3 * want.abs(),
+                "col {c}: tran {got} vs dc {want}"
+            );
+        }
+        assert_eq!(rd.stats.symbolic_analyses, 2, "one analysis per segment");
     }
 
     #[test]

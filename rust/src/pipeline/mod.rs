@@ -235,6 +235,34 @@ pub trait AnalogModule: Send {
     fn reprogram(&mut self, _prog_sigma: f64, _seed: u64, _generation: u64) -> usize {
         0
     }
+
+    /// Lifetime telemetry snapshot: how far this module's devices have
+    /// drifted since their last write, and how often they have been
+    /// rewritten. `None` for modules with no fault-capable device state
+    /// (activations, residual adders) — the serving watchdog only tables
+    /// the modules that age. Cheap; called per metrics snapshot.
+    fn drift_stats(&self) -> Option<ModuleDrift> {
+        None
+    }
+}
+
+/// Per-module lifetime telemetry record ([`AnalogModule::drift_stats`],
+/// aggregated by [`Pipeline::drift_telemetry`] and printed in the serving
+/// `Snapshot` table).
+#[derive(Debug, Clone)]
+pub struct ModuleDrift {
+    pub name: String,
+    pub kind: &'static str,
+    /// Cumulative mean multiplicative conductance factor since the last
+    /// (re)programming — 1.0 pristine, decaying toward 0 as the module
+    /// ages. The product of each absorbed step's mean applied factor.
+    pub drift_gain: f64,
+    /// Fault steps absorbed since the last (re)programming.
+    pub fault_steps: u64,
+    /// Recalibration writes over this module's lifetime.
+    pub reprograms: u64,
+    /// Devices rewritten by the most recent reprogram (0 if never).
+    pub devices_rewritten: usize,
 }
 
 /// One stage of a compiled [`Pipeline`].
@@ -790,6 +818,20 @@ impl Pipeline {
             }
         }
         rewritten
+    }
+
+    /// Per-module drift telemetry, in chain order — one record per module
+    /// holding fault-capable device state (see
+    /// [`AnalogModule::drift_stats`]). The serving tier folds this into
+    /// its metrics snapshot so the watchdog sees *where* damage
+    /// accumulates, not just the global logit margins.
+    pub fn drift_telemetry(&self) -> Vec<ModuleDrift> {
+        self.stages()
+            .filter_map(|s| match s {
+                Stage::Module { module, .. } => module.drift_stats(),
+                Stage::Residual { .. } => None,
+            })
+            .collect()
     }
 
     /// Single-vector forward — a batch of one.

@@ -64,7 +64,12 @@
 //! [`CrossbarSim::update_conductances`]. Injection never rebuilds a
 //! netlist, so cached factorizations and warm-GMRES preconditioners
 //! survive every step, and reprogramming heals drift but never stuck-at
-//! cells.
+//! cells. Per-device injection passes the module's *pristine* conductances
+//! as the ν(g) anchor ([`fault::apply_step_from`]) so the
+//! conductance-dependent exponent ([`crate::fault::FaultConfig::nu_g`])
+//! keeps the closed-form compose-exactness, and every fault-capable module
+//! tracks its cumulative drift gain / reprogram counts for the
+//! [`AnalogModule::drift_stats`] telemetry the serving snapshot tables.
 
 use anyhow::{bail, Result};
 
@@ -79,7 +84,7 @@ use crate::spice::solve::Ordering;
 use crate::util::pool::par_map_mut;
 use crate::util::prng::Rng;
 
-use super::{AnalogModule, Fidelity};
+use super::{AnalogModule, Fidelity, ModuleDrift};
 
 /// `gamma / sqrt(var + EPS)` fold constant — re-exported from the mapper,
 /// the single source shared with [`crate::mapper::bn_fold`] and the §3.3
@@ -134,6 +139,15 @@ pub struct CrossbarModule {
     /// last injected step — its (time-invariant) stuck mask is re-applied
     /// after a reprogram, because rewriting cannot heal dead cells
     last_step: Option<FaultStep>,
+    /// cumulative mean multiplicative conductance factor since the last
+    /// write (1.0 = pristine) — [`AnalogModule::drift_stats`] telemetry
+    drift_gain: f64,
+    /// fault steps absorbed since the last (re)programming
+    fault_steps: u64,
+    /// recalibration writes over the module's lifetime
+    reprograms: u64,
+    /// devices rewritten by the most recent reprogram
+    devices_rewritten: usize,
     inner: Inner,
 }
 
@@ -364,6 +378,10 @@ impl CrossbarModule {
             g_min: dev.r_on / dev.r_off,
             bank,
             last_step: None,
+            drift_gain: 1.0,
+            fault_steps: 0,
+            reprograms: 0,
+            devices_rewritten: 0,
             inner: Inner::Fc { cb, pristine, sim },
         })
     }
@@ -436,6 +454,10 @@ impl CrossbarModule {
             g_min: dev.r_on / dev.r_off,
             bank: fault::bank_seed(&cfg.name),
             last_step: None,
+            drift_gain: 1.0,
+            fault_steps: 0,
+            reprograms: 0,
+            devices_rewritten: 0,
             inner: Inner::Conv(banks),
         })
     }
@@ -530,20 +552,49 @@ impl AnalogModule for CrossbarModule {
 
     fn inject_faults(&mut self, step: &FaultStep) {
         self.last_step = Some(*step);
+        self.fault_steps += 1;
         match &mut self.inner {
-            Inner::Fc { cb, sim, .. } => {
-                fault::apply_step(step, self.bank, &mut cb.devices, self.g_min);
+            Inner::Fc { cb, sim, pristine } => {
+                let g0: Vec<f64> = pristine.iter().map(|p| p.g_norm).collect();
+                let f = fault::apply_step_from(
+                    step,
+                    self.bank,
+                    &mut cb.devices,
+                    Some(&g0),
+                    self.g_min,
+                );
+                self.drift_gain *= f;
                 if let Some(sim) = sim {
                     sim.update_conductances(&cb.devices, self.r_on);
                 }
             }
             Inner::Conv(cv) => {
                 if cv.sims.is_empty() {
-                    fault::apply_step_signed(step, self.bank, &mut cv.kernels);
+                    fault::apply_step_signed_from(
+                        step,
+                        self.bank,
+                        &mut cv.kernels,
+                        Some(&cv.kernels_pristine),
+                    );
+                    self.drift_gain *= step.mean_decay();
                 } else {
+                    let (mut wsum, mut fsum) = (0.0, 0.0);
                     for b in cv.sims.iter_mut() {
-                        fault::apply_step(step, b.bank, &mut b.devices, self.g_min);
+                        let g0: Vec<f64> = b.pristine.iter().map(|p| p.g_norm).collect();
+                        let f = fault::apply_step_from(
+                            step,
+                            b.bank,
+                            &mut b.devices,
+                            Some(&g0),
+                            self.g_min,
+                        );
+                        let w = b.devices.len() as f64;
+                        wsum += w;
+                        fsum += w * f;
                         b.sim.update_conductances(&b.devices, self.r_on);
+                    }
+                    if wsum > 0.0 {
+                        self.drift_gain *= fsum / wsum;
                     }
                 }
             }
@@ -552,7 +603,7 @@ impl AnalogModule for CrossbarModule {
 
     fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
         let stuck = self.last_step.map(|s| s.stuck_only());
-        match &mut self.inner {
+        let rewritten = match &mut self.inner {
             Inner::Fc { cb, sim, pristine } => {
                 cb.devices.clone_from(pristine);
                 fault::reprogram_noise(&mut cb.devices, prog_sigma, seed, self.bank, generation);
@@ -591,7 +642,23 @@ impl AnalogModule for CrossbarModule {
                     rewritten
                 }
             }
-        }
+        };
+        self.drift_gain = 1.0;
+        self.fault_steps = 0;
+        self.reprograms += 1;
+        self.devices_rewritten = rewritten;
+        rewritten
+    }
+
+    fn drift_stats(&self) -> Option<ModuleDrift> {
+        Some(ModuleDrift {
+            name: self.name.clone(),
+            kind: self.kind,
+            drift_gain: self.drift_gain,
+            fault_steps: self.fault_steps,
+            reprograms: self.reprograms,
+            devices_rewritten: self.devices_rewritten,
+        })
     }
 }
 
@@ -625,10 +692,18 @@ pub struct BatchNormModule {
     r_on: f64,
     g_min: f64,
     bank: u64,
-    /// cumulative population-mean drift factor applied below spice (the
-    /// coverage-matrix approximation: BN has no per-device state there);
-    /// squared per step — two cascaded crossbar stages
+    /// cumulative drift factor across the cascade: below spice the
+    /// population-mean approximation squared per step (two cascaded
+    /// crossbar stages, no per-device state — applied to the outputs),
+    /// at spice the product of the per-stage mean applied factors
+    /// (telemetry only; the aged conductances carry the physics)
     drift_gain: f64,
+    /// fault steps absorbed since the last (re)programming
+    fault_steps: u64,
+    /// recalibration writes over the module's lifetime
+    reprograms: u64,
+    /// devices rewritten by the most recent reprogram
+    devices_rewritten: usize,
     last_step: Option<FaultStep>,
     sims: Option<BnSims>,
 }
@@ -705,6 +780,9 @@ impl BatchNormModule {
             g_min: cfg.dev.r_on / cfg.dev.r_off,
             bank: fault::bank_seed(&name),
             drift_gain: 1.0,
+            fault_steps: 0,
+            reprograms: 0,
+            devices_rewritten: 0,
             last_step: None,
             sims,
         })
@@ -820,16 +898,27 @@ impl AnalogModule for BatchNormModule {
 
     fn inject_faults(&mut self, step: &FaultStep) {
         self.last_step = Some(*step);
+        self.fault_steps += 1;
         if let Some(sims) = self.sims.as_mut() {
-            fault::apply_step(step, self.bank.wrapping_add(1), &mut sims.sub_devices, self.g_min);
-            fault::apply_step(
+            let g0: Vec<f64> = sims.sub_pristine.iter().map(|p| p.g_norm).collect();
+            let f_sub = fault::apply_step_from(
+                step,
+                self.bank.wrapping_add(1),
+                &mut sims.sub_devices,
+                Some(&g0),
+                self.g_min,
+            );
+            let g0: Vec<f64> = sims.scale_pristine.iter().map(|p| p.g_norm).collect();
+            let f_scale = fault::apply_step_from(
                 step,
                 self.bank.wrapping_add(2),
                 &mut sims.scale_devices,
+                Some(&g0),
                 self.g_min,
             );
             sims.sub.update_conductances(&sims.sub_devices, self.r_on);
             sims.scale.update_conductances(&sims.scale_devices, self.r_on);
+            self.drift_gain *= f_sub * f_scale;
         } else {
             // two cascaded crossbar stages -> the mean decay compounds twice
             let d = step.mean_decay();
@@ -839,7 +928,7 @@ impl AnalogModule for BatchNormModule {
 
     fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
         let stuck = self.last_step.map(|s| s.stuck_only());
-        if let Some(sims) = self.sims.as_mut() {
+        let rewritten = if let Some(sims) = self.sims.as_mut() {
             sims.sub_devices.clone_from(&sims.sub_pristine);
             sims.scale_devices.clone_from(&sims.scale_pristine);
             fault::reprogram_noise(
@@ -874,9 +963,24 @@ impl AnalogModule for BatchNormModule {
             sims.scale.update_conductances(&sims.scale_devices, self.r_on);
             sims.sub_devices.len() + sims.scale_devices.len()
         } else {
-            self.drift_gain = 1.0;
             self.formula_memristors
-        }
+        };
+        self.drift_gain = 1.0;
+        self.fault_steps = 0;
+        self.reprograms += 1;
+        self.devices_rewritten = rewritten;
+        rewritten
+    }
+
+    fn drift_stats(&self) -> Option<ModuleDrift> {
+        Some(ModuleDrift {
+            name: self.name.clone(),
+            kind: "BN",
+            drift_gain: self.drift_gain,
+            fault_steps: self.fault_steps,
+            reprograms: self.reprograms,
+            devices_rewritten: self.devices_rewritten,
+        })
     }
 }
 
@@ -1062,8 +1166,16 @@ pub struct GapModule {
     r_on: f64,
     g_min: f64,
     bank: u64,
-    /// cumulative population-mean drift factor below spice (one stage)
+    /// cumulative drift factor: population-mean approximation below spice
+    /// (one stage, applied to the outputs), mean applied conductance factor
+    /// at spice (telemetry only)
     drift_gain: f64,
+    /// fault steps absorbed since the last (re)programming
+    fault_steps: u64,
+    /// recalibration writes over the module's lifetime
+    reprograms: u64,
+    /// devices rewritten by the most recent reprogram
+    devices_rewritten: usize,
     last_step: Option<FaultStep>,
     /// aged + as-built averaging devices (empty below spice)
     devices: Vec<Placed>,
@@ -1107,6 +1219,9 @@ impl GapModule {
             g_min: cfg.dev.r_on / cfg.dev.r_off,
             bank: fault::bank_seed(&name),
             drift_gain: 1.0,
+            fault_steps: 0,
+            reprograms: 0,
+            devices_rewritten: 0,
             last_step: None,
             pristine: devices.clone(),
             devices,
@@ -1178,8 +1293,12 @@ impl AnalogModule for GapModule {
 
     fn inject_faults(&mut self, step: &FaultStep) {
         self.last_step = Some(*step);
+        self.fault_steps += 1;
         if let Some(sim) = self.sim.as_mut() {
-            fault::apply_step(step, self.bank, &mut self.devices, self.g_min);
+            let g0: Vec<f64> = self.pristine.iter().map(|p| p.g_norm).collect();
+            let f =
+                fault::apply_step_from(step, self.bank, &mut self.devices, Some(&g0), self.g_min);
+            self.drift_gain *= f;
             sim.update_conductances(&self.devices, self.r_on);
         } else {
             self.drift_gain *= step.mean_decay();
@@ -1188,7 +1307,7 @@ impl AnalogModule for GapModule {
 
     fn reprogram(&mut self, prog_sigma: f64, seed: u64, generation: u64) -> usize {
         let stuck = self.last_step.map(|s| s.stuck_only());
-        if let Some(sim) = self.sim.as_mut() {
+        let rewritten = if let Some(sim) = self.sim.as_mut() {
             self.devices.clone_from(&self.pristine);
             fault::reprogram_noise(&mut self.devices, prog_sigma, seed, self.bank, generation);
             if let Some(stuck) = stuck {
@@ -1197,9 +1316,24 @@ impl AnalogModule for GapModule {
             sim.update_conductances(&self.devices, self.r_on);
             self.devices.len()
         } else {
-            self.drift_gain = 1.0;
             self.memristors
-        }
+        };
+        self.drift_gain = 1.0;
+        self.fault_steps = 0;
+        self.reprograms += 1;
+        self.devices_rewritten = rewritten;
+        rewritten
+    }
+
+    fn drift_stats(&self) -> Option<ModuleDrift> {
+        Some(ModuleDrift {
+            name: self.name.clone(),
+            kind: "GAPool",
+            drift_gain: self.drift_gain,
+            fault_steps: self.fault_steps,
+            reprograms: self.reprograms,
+            devices_rewritten: self.devices_rewritten,
+        })
     }
 }
 
@@ -1345,5 +1479,37 @@ impl AnalogModule for SeModule {
         self.gap.reprogram(prog_sigma, seed, generation)
             + self.fc1.reprogram(prog_sigma, seed, generation)
             + self.fc2.reprogram(prog_sigma, seed, generation)
+    }
+
+    fn drift_stats(&self) -> Option<ModuleDrift> {
+        // one merged record for the branch: device-weighted mean of the
+        // sub-module gains, maxes for the (lock-stepped) counters
+        let parts = [
+            (self.gap.memristors(), self.gap.drift_stats()),
+            (self.fc1.memristors(), self.fc1.drift_stats()),
+            (self.fc2.memristors(), self.fc2.drift_stats()),
+        ];
+        let (mut wsum, mut gsum) = (0.0, 0.0);
+        let (mut steps, mut reps, mut devs) = (0u64, 0u64, 0usize);
+        for (w, s) in parts {
+            let Some(s) = s else { continue };
+            let w = w.max(1) as f64;
+            wsum += w;
+            gsum += w * s.drift_gain;
+            steps = steps.max(s.fault_steps);
+            reps = reps.max(s.reprograms);
+            devs += s.devices_rewritten;
+        }
+        if wsum == 0.0 {
+            return None;
+        }
+        Some(ModuleDrift {
+            name: self.name.clone(),
+            kind: "SE",
+            drift_gain: gsum / wsum,
+            fault_steps: steps,
+            reprograms: reps,
+            devices_rewritten: devs,
+        })
     }
 }

@@ -160,6 +160,69 @@ pub fn energy(net: &MappedNetwork, dev: &DeviceJson, t: &LatencyBreakdown) -> En
     }
 }
 
+/// Measured (time-domain simulated) per-read figures, as produced by
+/// [`crate::netlist::CrossbarSim::tran_read`] — the counterpart of the
+/// per-stage analytical terms in Eq 17/18.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimulatedRead {
+    /// Output settling latency of one read pulse (s).
+    pub settle_s: f64,
+    /// Device energy integrated over the read trajectory (J).
+    pub energy_j: f64,
+}
+
+/// One crossbar read, simulated vs analytical.
+///
+/// Latency: Eq 17's single-stage term `T_m + T_o` against the transient
+/// settling time. Energy: Eq 18's device term (worst-case bias over the
+/// `T_m` window only) against the integrated device dissipation — the
+/// transient keeps devices biased for the *whole* settle, so
+/// `analytical_energy_biased_j` (same worst-case power over the full
+/// `T_m + T_o` window) is the like-for-like analytical column and
+/// [`ReadComparison::energy_ratio`] is measured against it.
+#[derive(Debug, Clone)]
+pub struct ReadComparison {
+    pub analytical_latency_s: f64,
+    pub simulated_latency_s: f64,
+    /// Eq 18 device term: `n_mem · p_memristor · T_m`.
+    pub analytical_energy_j: f64,
+    /// Devices at worst-case bias for the full stage window
+    /// `T_m + T_o`.
+    pub analytical_energy_biased_j: f64,
+    pub simulated_energy_j: f64,
+}
+
+impl ReadComparison {
+    pub fn new(
+        dev: &DeviceJson,
+        mode: MapMode,
+        n_memristors: usize,
+        sim: &SimulatedRead,
+    ) -> ReadComparison {
+        let t_o = dev.t_opamp * mode.opamps_per_port() as f64;
+        let p_worst = n_memristors as f64 * dev.p_memristor;
+        ReadComparison {
+            analytical_latency_s: dev.t_mem + t_o,
+            simulated_latency_s: sim.settle_s,
+            analytical_energy_j: p_worst * dev.t_mem,
+            analytical_energy_biased_j: p_worst * (dev.t_mem + t_o),
+            simulated_energy_j: sim.energy_j,
+        }
+    }
+
+    /// Simulated / analytical settling latency (>1: the analytical
+    /// model is optimistic for this circuit).
+    pub fn latency_ratio(&self) -> f64 {
+        self.simulated_latency_s / self.analytical_latency_s
+    }
+
+    /// Simulated / analytical (full-window) device energy. Typically <1:
+    /// the worst-case `U_max² G_max` bias overestimates real reads.
+    pub fn energy_ratio(&self) -> f64 {
+        self.simulated_energy_j / self.analytical_energy_biased_j
+    }
+}
+
 /// Speedup/savings summary vs the paper's baselines + a measured digital
 /// latency on this host (Fig 8 + §5.2/§5.3 headline ratios).
 #[derive(Debug, Clone)]
@@ -337,6 +400,22 @@ mod tests {
         let e = energy_coverage(&stages, &dev(), &t);
         assert!(e.e_memristors > 0.0 && e.e_opamps > 0.0 && e.e_rest > 0.0);
         assert!((e.total - (e.e_memristors + e.e_opamps + e.e_rest)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn read_comparison_columns() {
+        let d = dev();
+        let sim = SimulatedRead { settle_s: 2.3e-6, energy_j: 1e-9 };
+        let c = ReadComparison::new(&d, MapMode::Inverted, 1000, &sim);
+        assert!((c.analytical_latency_s - (100e-12 + 0.5e-6)).abs() < 1e-18);
+        assert!(c.analytical_energy_biased_j > c.analytical_energy_j);
+        let want_ratio = 2.3e-6 / (100e-12 + 0.5e-6);
+        assert!((c.latency_ratio() - want_ratio).abs() < 1e-9);
+        assert!(c.energy_ratio() > 0.0);
+        // dual mode doubles the op-amp window in both columns
+        let cd = ReadComparison::new(&d, MapMode::Dual, 1000, &sim);
+        assert!(cd.analytical_latency_s > c.analytical_latency_s);
+        assert!(cd.analytical_energy_biased_j > c.analytical_energy_biased_j);
     }
 
     #[test]

@@ -1,15 +1,20 @@
-//! SPICE substrate — DC operating-point simulator for the generated
-//! memristor netlists (the paper validates on SPICE; DESIGN.md §3 maps
-//! their PSpice runs to this MNA engine).
+//! SPICE substrate — DC operating-point and transient simulator for the
+//! generated memristor netlists (the paper validates on SPICE; DESIGN.md §3
+//! maps their PSpice runs to this MNA engine).
 //!
 //! Supported elements (all the generated netlists need):
 //!   R  resistor                      V  independent voltage source
 //!   E  VCVS (op-amp = high-gain E)   I  independent current source
 //!   D  diode (Shockley, solved by Newton-Raphson companion iteration)
+//!   C  capacitor                     L  inductor
 //!
 //! Node 0 is ground. The engine performs Modified Nodal Analysis: node
-//! voltages plus branch currents for V and E elements; diodes are
+//! voltages plus branch currents for V, E and L elements; diodes are
 //! linearized per Newton iteration until max voltage delta < tol.
+//! Capacitors and inductors are open / short circuits at DC and become
+//! companion conductances under [`transient`] integration; V and I sources
+//! optionally carry a time-varying [`transient::Waveform`]
+//! ([`Circuit::set_waveform`]).
 //!
 //! Solves are **factor-once / solve-many**: every [`Circuit`] carries a
 //! cached sparse LU factorization ([`factor`]) keyed on the stamped
@@ -45,10 +50,37 @@
 //! falls back to the direct engine on any failure, so the iterative path
 //! is never less accurate — solutions agree with direct solves within the
 //! 1e-6 pinned test tolerance (typically ~1e-10).
+//!
+//! # Cached-factorization contracts: DC vs transient
+//!
+//! Both analyses ride the same factor-once/solve-many substrate, but they
+//! hold the cached [`factor::Symbolic`] to different promises:
+//!
+//! - **DC** (`dc_op*`): the symbolic analysis is keyed on the stamped
+//!   *topology* and cached on the [`Circuit`]. Newton iterations re-stamp
+//!   values at the same pattern (nonlinear companion entries use
+//!   `add_keep`, so zero coefficients at the initial operating point still
+//!   reserve their slots), value edits trigger a numeric refactor, and
+//!   [`Circuit::set_vsource`] edits are RHS-only pure re-solves. The cache
+//!   survives *across calls* and is invalidated only by topology edits.
+//! - **Transient** ([`transient::tran_batch`]): the companion stamps for C
+//!   and L change *value* with the timestep `h` but never *pattern* —
+//!   capacitor conductances and inductor branch self-terms are stamped
+//!   with `add_keep`, so the DC-initialization stamp (`G_eq = 0`: caps
+//!   open, inductors short) emits the identical triplet stream as every
+//!   timestep at every `h`. One symbolic analysis therefore serves the DC
+//!   init plus *all* timesteps of *all* RHS columns; an `h` change is a
+//!   numeric refactor (for TR-BDF2, the two stage matrices share the one
+//!   `Symbolic` through two `Numeric`s) and a fixed-`h` run after the
+//!   first step is pure multi-RHS substitution. The transient engine owns
+//!   its factorization *locally* for the duration of the sweep — it never
+//!   touches the circuit's DC cache, so interleaving `dc_op` calls with
+//!   transient runs cannot thrash either contract.
 
 pub mod factor;
 pub mod krylov;
 pub mod solve;
+pub mod transient;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering as MemOrdering};
@@ -58,19 +90,38 @@ use anyhow::{bail, Context, Result};
 
 use solve::{solve_dense, SparseSys};
 
-/// Process-wide count of iterative→direct fallback events: an
+/// Process-wide count of **warm** iterative→direct fallback events: an
 /// [`krylov::SolverStrategy::Iterative`] (or `Auto`-promoted) solve that
-/// failed its residual gate, broke down, or did not converge, and was
-/// silently re-run on the direct factor engine. Accuracy is unaffected by
+/// held a cached preconditioner for the current pattern yet still failed
+/// its residual gate, broke down, or did not converge, and was silently
+/// re-run on the direct factor engine. Accuracy is unaffected by
 /// construction, but a climbing count means the preconditioner has gone
 /// stale (e.g. heavy conductance drift) — surfaced by
 /// `coordinator::Snapshot` and `memx report` so the degradation is
-/// observable at serve time.
+/// observable at serve time. Cold-start failures (no cached state yet, the
+/// fresh ILU(0) analysis or sweep failed) land in
+/// [`solver_cold_fallbacks`] instead: earlier versions conflated the two,
+/// so a transient sweep's first-step cold fallback inflated the staleness
+/// signal the watchdog alarms on.
 static SOLVER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 
-/// Current value of the process-wide iterative→direct fallback counter.
+/// Process-wide count of **cold** iterative→direct fallback events: the
+/// solve had no cached preconditioner for this pattern and the fresh
+/// analysis/sweep/solve failed. These are expected on structurally hostile
+/// first solves and say nothing about drift staleness (see
+/// [`solver_fallbacks`]).
+static SOLVER_COLD_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the process-wide warm iterative→direct fallback
+/// counter (cached preconditioner existed but failed mid-sweep).
 pub fn solver_fallbacks() -> u64 {
     SOLVER_FALLBACKS.load(MemOrdering::Relaxed)
+}
+
+/// Current value of the process-wide cold iterative→direct fallback
+/// counter (no cached preconditioner yet; fresh analysis failed).
+pub fn solver_cold_fallbacks() -> u64 {
+    SOLVER_COLD_FALLBACKS.load(MemOrdering::Relaxed)
 }
 
 /// Circuit element.
@@ -90,6 +141,14 @@ pub enum Element {
     /// Behavioural analog multiplier (Gilbert-cell abstraction, Fig 4b);
     /// nonlinear — solved by the same Newton loop as diodes.
     Mult(String, usize, usize, usize, f64),
+    /// name, n+, n-, farads. Open at DC; companion conductance under
+    /// [`transient`] integration (stamped with `add_keep`, so the pattern
+    /// is identical at DC and at every timestep).
+    Capacitor(String, usize, usize, f64),
+    /// name, n+, n-, henries. Short at DC (carries a branch-current
+    /// unknown like a V source); companion branch under [`transient`]
+    /// integration.
+    Inductor(String, usize, usize, f64),
 }
 
 impl Element {
@@ -100,7 +159,9 @@ impl Element {
             | Element::Isource(n, ..)
             | Element::Vcvs(n, ..)
             | Element::Diode(n, ..)
-            | Element::Mult(n, ..) => n,
+            | Element::Mult(n, ..)
+            | Element::Capacitor(n, ..)
+            | Element::Inductor(n, ..) => n,
         }
     }
 }
@@ -128,6 +189,35 @@ enum CacheState {
 struct CacheEntry {
     ordering: solve::Ordering,
     numeric: factor::Numeric,
+}
+
+/// Outcome of one preconditioned-Krylov attempt (see
+/// [`Circuit::solve_krylov_with`]).
+enum KrylovAttempt<R> {
+    /// Solved; the flag records whether a cached preconditioner served.
+    Solved(R, bool),
+    /// A cached preconditioner for this pattern existed but the sweep or
+    /// solve failed — drift-staleness signal.
+    WarmFailure,
+    /// No cached state; the fresh ILU(0) analysis/sweep/solve failed.
+    ColdFailure,
+}
+
+impl<R> KrylovAttempt<R> {
+    /// Bump the process-wide fallback counter matching this failure (no-op
+    /// for `Solved`). Centralized here so every caller that falls back to
+    /// the direct engine reports the same way.
+    fn count_fallback(&self) {
+        match self {
+            KrylovAttempt::Solved(..) => {}
+            KrylovAttempt::WarmFailure => {
+                SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+            }
+            KrylovAttempt::ColdFailure => {
+                SOLVER_COLD_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+            }
+        }
+    }
 }
 
 impl Clone for FactorCache {
@@ -169,6 +259,12 @@ pub struct Circuit {
     names: BTreeMap<String, usize>,
     factor_cache: FactorCache,
     solver: krylov::SolverStrategy,
+    /// Time-varying source waveforms, keyed by element index (V/I sources
+    /// only). DC analyses use the element's static value (kept at the
+    /// waveform's t=0 sample); [`transient`] evaluates the waveform per
+    /// timestep. A side table rather than wider source variants, so every
+    /// existing construction/update site keeps its shape.
+    waves: BTreeMap<usize, transient::Waveform>,
 }
 
 impl Circuit {
@@ -225,6 +321,67 @@ impl Circuit {
 
     pub fn mult(&mut self, name: &str, out: usize, a: usize, b: usize, gain: f64) {
         self.elements.push(Element::Mult(name.into(), out, a, b, gain));
+    }
+
+    pub fn capacitor(&mut self, name: &str, a: usize, b: usize, farads: f64) {
+        self.elements.push(Element::Capacitor(name.into(), a, b, farads));
+    }
+
+    pub fn inductor(&mut self, name: &str, a: usize, b: usize, henries: f64) {
+        self.elements.push(Element::Inductor(name.into(), a, b, henries));
+    }
+
+    /// Attach a time-varying waveform to the V or I source at element
+    /// index `idx` (see [`Circuit::vsource_index`]). The element's static
+    /// value is set to the waveform's t=0 sample so DC analyses see the
+    /// pre-pulse operating point; [`transient`] sweeps evaluate the
+    /// waveform per timestep.
+    pub fn set_waveform(&mut self, idx: usize, wave: transient::Waveform) -> Result<()> {
+        let v0 = wave.eval(0.0);
+        match self.elements.get_mut(idx) {
+            Some(Element::Vsource(_, _, _, v)) | Some(Element::Isource(_, _, _, v)) => {
+                *v = v0;
+            }
+            _ => bail!("element {idx} is not a V or I source"),
+        }
+        self.waves.insert(idx, wave);
+        Ok(())
+    }
+
+    /// Waveform attached to element `idx`, if any.
+    pub fn waveform_at(&self, idx: usize) -> Option<&transient::Waveform> {
+        self.waves.get(&idx)
+    }
+
+    /// Convenience builder: a V source driven by `wave` (static value =
+    /// the t=0 sample). Returns the element index for per-column scaling
+    /// in [`transient::tran_batch`].
+    pub fn vsource_wave(
+        &mut self,
+        name: &str,
+        a: usize,
+        b: usize,
+        wave: transient::Waveform,
+    ) -> usize {
+        let idx = self.elements.len();
+        self.vsource(name, a, b, wave.eval(0.0));
+        self.waves.insert(idx, wave);
+        idx
+    }
+
+    /// Convenience builder: an I source driven by `wave` (see
+    /// [`Circuit::vsource_wave`]).
+    pub fn isource_wave(
+        &mut self,
+        name: &str,
+        a: usize,
+        b: usize,
+        wave: transient::Waveform,
+    ) -> usize {
+        let idx = self.elements.len();
+        self.isource(name, a, b, wave.eval(0.0));
+        self.waves.insert(idx, wave);
+        idx
     }
 
     pub fn diode(&mut self, name: &str, a: usize, k: usize) {
@@ -284,7 +441,13 @@ impl Circuit {
         self.elements
             .iter()
             .filter(|e| {
-                matches!(e, Element::Vsource(..) | Element::Vcvs(..) | Element::Mult(..))
+                matches!(
+                    e,
+                    Element::Vsource(..)
+                        | Element::Vcvs(..)
+                        | Element::Mult(..)
+                        | Element::Inductor(..)
+                )
             })
             .count()
     }
@@ -349,11 +512,9 @@ impl Circuit {
                     match self.solve_krylov(&sys) {
                         Some(r) => r,
                         // iterative failure (non-convergence, structural
-                        // singularity, residual gate): direct semantics
-                        None => {
-                            SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
-                            self.solve_factored(&sys, ordering)?
-                        }
+                        // singularity, residual gate — warm/cold counter
+                        // already bumped): direct semantics
+                        None => self.solve_factored(&sys, ordering)?,
                     }
                 } else {
                     self.solve_factored(&sys, ordering)?
@@ -455,14 +616,17 @@ impl Circuit {
     }
 
     /// Resolve a preconditioner per the module-docs reuse contract and run
-    /// `run` against it under the cache lock. Returns the result plus
-    /// whether a cached preconditioner was reused (vs a fresh analysis);
-    /// `None` means the caller should fall back to the direct engine.
+    /// `run` against it under the cache lock. Failures distinguish the
+    /// warm path (a cached preconditioner for this pattern existed but the
+    /// solve failed mid-sweep — the staleness signal the serving watchdog
+    /// cares about) from the cold path (no cached state yet; the fresh
+    /// ILU(0) analysis/sweep/solve failed) so the process-wide fallback
+    /// counters don't conflate the two.
     fn solve_krylov_with<R>(
         &self,
         sys: &SparseSys,
         run: impl Fn(&dyn krylov::Precond) -> Result<R>,
-    ) -> Option<(R, bool)> {
+    ) -> KrylovAttempt<R> {
         let mut guard = self.factor_cache.0.lock().unwrap_or_else(|p| p.into_inner());
         match guard.as_mut() {
             Some(CacheState::Ready(entry))
@@ -471,7 +635,10 @@ impl Circuit {
                 // warm: the (possibly value-stale) complete LU — no
                 // reassembly, no refactorization; on failure leave the
                 // entry intact so the direct fallback can refactor it
-                return run(&entry.numeric).ok().map(|r| (r, true));
+                return match run(&entry.numeric) {
+                    Ok(r) => KrylovAttempt::Solved(r, true),
+                    Err(_) => KrylovAttempt::WarmFailure,
+                };
             }
             Some(CacheState::Ilu(pre)) if pre.dims_match(sys) => {
                 // assemble performs the full pattern comparison; its Err
@@ -482,11 +649,16 @@ impl Circuit {
                     Err(_) => None,
                 };
                 match swept {
-                    Some(true) => return run(&*pre).ok().map(|r| (r, true)),
+                    Some(true) => {
+                        return match run(&*pre) {
+                            Ok(r) => KrylovAttempt::Solved(r, true),
+                            Err(_) => KrylovAttempt::WarmFailure,
+                        };
+                    }
                     // value-dependent breakdown: keep the analysis (the
                     // pattern is still valid — the next value set may
                     // sweep fine) and fall back to the direct engine
-                    Some(false) => return None,
+                    Some(false) => return KrylovAttempt::WarmFailure,
                     None => {}
                 }
             }
@@ -496,18 +668,24 @@ impl Circuit {
         // cached even when the numeric sweep or the solve fails — those
         // failures are value-dependent, and later solves must retry the
         // cheap sweep, not repeat the O(nnz) pattern analysis.
-        let mut pre = krylov::Ilu0::analyze(sys).ok()?;
+        let Ok(mut pre) = krylov::Ilu0::analyze(sys) else {
+            return KrylovAttempt::ColdFailure;
+        };
         let out = if pre.assemble(sys).is_err() || pre.factor().is_err() {
             None
         } else {
             run(&pre).ok()
         };
         *guard = Some(CacheState::Ilu(pre));
-        out.map(|r| (r, false))
+        match out {
+            Some(r) => KrylovAttempt::Solved(r, false),
+            None => KrylovAttempt::ColdFailure,
+        }
     }
 
     /// One iterative solve of the stamped system (GMRES + cached
-    /// preconditioner), residual-certified. `None` => use the direct path.
+    /// preconditioner), residual-certified. `None` => use the direct path
+    /// (the warm/cold fallback counter has already been bumped).
     fn solve_krylov(&self, sys: &SparseSys) -> Option<(Vec<f64>, solve::SolveStats)> {
         let cfg = self.solver.cfg();
         let run = |pre: &dyn krylov::Precond| -> Result<(Vec<f64>, solve::SolveStats)> {
@@ -517,13 +695,21 @@ impl Circuit {
             }
             Ok((x, st))
         };
-        let ((x, mut st), reused) = self.solve_krylov_with(sys, run)?;
-        st.precond_reused = reused;
-        Some((x, st))
+        match self.solve_krylov_with(sys, run) {
+            KrylovAttempt::Solved((x, mut st), reused) => {
+                st.precond_reused = reused;
+                Some((x, st))
+            }
+            failure => {
+                failure.count_fallback();
+                None
+            }
+        }
     }
 
     /// Iterative multi-RHS solve: one shared preconditioner, Krylov sweeps
-    /// pipelined across RHS columns over `workers` threads.
+    /// pipelined across RHS columns over `workers` threads. `None` => use
+    /// the direct path (fallback counter already bumped).
     fn solve_krylov_batch(
         &self,
         sys: &SparseSys,
@@ -538,7 +724,13 @@ impl Circuit {
             }
             Ok(xs)
         };
-        self.solve_krylov_with(sys, run).map(|(xs, _)| xs)
+        match self.solve_krylov_with(sys, run) {
+            KrylovAttempt::Solved(xs, _) => Some(xs),
+            failure => {
+                failure.count_fallback();
+                None
+            }
+        }
     }
 
     /// Batched DC operating points over a fixed topology. Each batch entry
@@ -605,7 +797,7 @@ impl Circuit {
                     })
                     .collect());
             }
-            SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+            // warm/cold fallback counter bumped inside solve_krylov_batch
         }
 
         let solved = {
@@ -696,7 +888,7 @@ impl Circuit {
         let mut br = n_nodes - 1;
         for e in &self.elements {
             match *e {
-                Element::Resistor(..) | Element::Diode(..) => {}
+                Element::Resistor(..) | Element::Diode(..) | Element::Capacitor(..) => {}
                 Element::Isource(_, a, k, amps) => {
                     if let Some(i) = idx(a) {
                         b[i] -= amps;
@@ -709,7 +901,7 @@ impl Circuit {
                     b[br] += volts;
                     br += 1;
                 }
-                Element::Vcvs(..) | Element::Mult(..) => {
+                Element::Vcvs(..) | Element::Mult(..) | Element::Inductor(..) => {
                     br += 1;
                 }
             }
@@ -717,8 +909,27 @@ impl Circuit {
         b
     }
 
-    /// Build the MNA system around the current diode linearization point.
+    /// Build the MNA system around the current diode linearization point
+    /// (DC view: capacitors open, inductors short).
     fn stamp(&self, dim: usize, n_nodes: usize, v_prev: &[f64]) -> Result<SparseSys> {
+        self.stamp_dyn(dim, n_nodes, v_prev, 0.0, 0.0)
+    }
+
+    /// [`Circuit::stamp`] with companion-model coefficients for the dynamic
+    /// elements: a capacitor contributes conductance `C·cap_g`, an inductor
+    /// a branch self-term `-L·ind_g` (both `add_keep`-stamped so DC init at
+    /// `cap_g = ind_g = 0` and every transient step at every `h` emit the
+    /// identical pattern — see the module docs). The integrators in
+    /// [`transient`] pick the coefficients (e.g. Backward Euler:
+    /// `cap_g = ind_g = 1/h`).
+    pub(crate) fn stamp_dyn(
+        &self,
+        dim: usize,
+        n_nodes: usize,
+        v_prev: &[f64],
+        cap_g: f64,
+        ind_g: f64,
+    ) -> Result<SparseSys> {
         let mut sys = SparseSys::new(dim);
         // node index helper: ground (0) is dropped
         let idx = |node: usize| node.checked_sub(1);
@@ -800,6 +1011,42 @@ impl Circuit {
                         sys.add_keep(br, j, -gain * va0);
                     }
                     sys.add_b(br, -gain * va0 * vb0);
+                    br += 1;
+                }
+                Element::Capacitor(ref name, a, b, cap) => {
+                    if cap <= 0.0 {
+                        bail!("capacitor {name} has non-positive value {cap}");
+                    }
+                    // companion conductance; zero at DC, but the slots are
+                    // reserved so the pattern never changes with h
+                    let g = cap * cap_g;
+                    if let Some(i) = idx(a) {
+                        sys.add_keep(i, i, g);
+                    }
+                    if let Some(j) = idx(b) {
+                        sys.add_keep(j, j, g);
+                    }
+                    if let (Some(i), Some(j)) = (idx(a), idx(b)) {
+                        sys.add_keep(i, j, -g);
+                        sys.add_keep(j, i, -g);
+                    }
+                }
+                Element::Inductor(ref name, a, b, ind) => {
+                    if ind <= 0.0 {
+                        bail!("inductor {name} has non-positive value {ind}");
+                    }
+                    // branch row: v(a) - v(b) - L·ind_g·i = history (RHS);
+                    // ind_g = 0 at DC makes it a short carrying i as an
+                    // unknown, same pattern as every transient step
+                    if let Some(i) = idx(a) {
+                        sys.add(i, br, 1.0);
+                        sys.add(br, i, 1.0);
+                    }
+                    if let Some(j) = idx(b) {
+                        sys.add(j, br, -1.0);
+                        sys.add(br, j, -1.0);
+                    }
+                    sys.add_keep(br, br, -ind * ind_g);
                     br += 1;
                 }
                 Element::Diode(_, a, k, isat, nvt) => {

@@ -1,0 +1,1279 @@
+//! Batched time-domain (transient) analysis on the factor-once/solve-many
+//! substrate.
+//!
+//! Dynamic elements (C, L) are replaced per timestep by companion models —
+//! a conductance plus a history term on the RHS — whose stamp *pattern* is
+//! fixed at analysis time (`add_keep`, see [`super::Circuit::stamp_dyn`]).
+//! One [`factor::Symbolic`] analysis therefore serves the DC
+//! initialization plus every timestep of every RHS column: a timestep-size
+//! change is a numeric refactor, and a fixed-step run after the first step
+//! is pure multi-RHS substitution. Three integrators are provided
+//! ([`Integrator`]): Backward Euler (order 1, L-stable, dissipative),
+//! Trapezoidal (order 2, A-stable, rings on stiff steps), and TR-BDF2
+//! (order 2, L-stable — the trapezoidal/BDF2 composite with
+//! `γ = 2 − √2`); the adaptive controller estimates the local truncation
+//! error against a linear predictor and rejects/retries with a smaller
+//! `h` when it exceeds the tolerance.
+//!
+//! The multi-RHS batch shape of the DC engine carries over: the companion
+//! matrix of a linear circuit is shared by all columns (source values are
+//! RHS-only), so a B-column transient sweep performs one symbolic
+//! analysis, at most one refactor per distinct `h`, and one multi-RHS
+//! substitution per timestep. Under an iterative
+//! [`krylov::SolverStrategy`] (pattern above the monolithic threshold),
+//! each step runs [`krylov::gmres_batch`] off the locally cached ILU(0)
+//! and falls back to the direct factor path on failure, bumping the same
+//! process-wide warm/cold fallback counters as the DC engine.
+//!
+//! Fixed-step batched results are **bit-for-bit identical** to running
+//! each column on its own: the matrix, RHS assembly, and the multi-RHS
+//! substitution are column-independent (adaptive runs share one time grid
+//! across columns — the controller takes the max error over the batch —
+//! so a single-column adaptive rerun may pick a different grid).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering as MemOrdering;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::solve::{self, SparseSys};
+use super::{factor, krylov, residual_ok, Circuit, Element};
+
+/// Time-varying source value, attached to a V or I source via
+/// [`Circuit::set_waveform`] / [`Circuit::vsource_wave`]. DC analyses use
+/// the t=0 sample.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Waveform {
+    /// Constant value (a plain source, expressible for uniformity).
+    Dc(f64),
+    /// SPICE `PULSE(v1 v2 delay rise fall width period)`: `v1` until
+    /// `delay`, linear rise to `v2` over `rise`, hold `width`, linear fall
+    /// over `fall` back to `v1`; repeats every `period` when > 0.
+    Pulse { v1: f64, v2: f64, delay: f64, rise: f64, fall: f64, width: f64, period: f64 },
+    /// SPICE `SIN(offset ampl freq delay damping)`: `offset` until
+    /// `delay`, then `offset + ampl·e^{−damping·(t−delay)}·sin(2πf(t−delay))`.
+    Sin { offset: f64, ampl: f64, freq: f64, delay: f64, damping: f64 },
+    /// Piecewise-linear `(t, v)` points (ascending t); clamps to the end
+    /// values outside the table.
+    Pwl(Vec<(f64, f64)>),
+}
+
+impl Waveform {
+    /// Sample the waveform at time `t` (seconds).
+    pub fn eval(&self, t: f64) -> f64 {
+        match self {
+            Waveform::Dc(v) => *v,
+            Waveform::Pulse { v1, v2, delay, rise, fall, width, period } => {
+                if t <= *delay {
+                    return *v1;
+                }
+                let mut tl = t - *delay;
+                if *period > 0.0 {
+                    tl %= *period;
+                }
+                if tl < *rise {
+                    v1 + (v2 - v1) * tl / *rise
+                } else if tl < *rise + *width {
+                    *v2
+                } else if tl < *rise + *width + *fall {
+                    v2 + (v1 - v2) * (tl - *rise - *width) / *fall
+                } else {
+                    *v1
+                }
+            }
+            Waveform::Sin { offset, ampl, freq, delay, damping } => {
+                if t <= *delay {
+                    return *offset;
+                }
+                let tl = t - *delay;
+                offset
+                    + ampl
+                        * (-damping * tl).exp()
+                        * (2.0 * std::f64::consts::PI * freq * tl).sin()
+            }
+            Waveform::Pwl(points) => {
+                let Some(&(t0, v0)) = points.first() else { return 0.0 };
+                if t <= t0 {
+                    return v0;
+                }
+                for w in points.windows(2) {
+                    let (ta, va) = w[0];
+                    let (tb, vb) = w[1];
+                    if t <= tb {
+                        return if tb > ta { va + (vb - va) * (t - ta) / (tb - ta) } else { vb };
+                    }
+                }
+                points.last().map(|&(_, v)| v).unwrap_or(0.0)
+            }
+        }
+    }
+}
+
+/// Implicit integration scheme for [`tran_batch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Integrator {
+    /// Order 1, L-stable; heavily damped (safe default for settle sims).
+    BackwardEuler,
+    /// Order 2, A-stable but not L-stable: rings on stiff steps.
+    Trapezoidal,
+    /// Order 2, L-stable composite (trapezoidal over `γh`, then BDF2),
+    /// `γ = 2 − √2` — damps what trapezoidal rings on.
+    TrBdf2,
+}
+
+impl Integrator {
+    /// Order of accuracy (the LTE controller uses `err^(-1/(order+1))`).
+    pub fn order(&self) -> usize {
+        match self {
+            Integrator::BackwardEuler => 1,
+            Integrator::Trapezoidal | Integrator::TrBdf2 => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for Integrator {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "be" | "backward-euler" | "euler" => Ok(Integrator::BackwardEuler),
+            "trap" | "trapezoidal" => Ok(Integrator::Trapezoidal),
+            "trbdf2" | "tr-bdf2" => Ok(Integrator::TrBdf2),
+            other => bail!("unknown integrator '{other}' (be|trap|trbdf2)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Integrator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Integrator::BackwardEuler => "be",
+            Integrator::Trapezoidal => "trap",
+            Integrator::TrBdf2 => "trbdf2",
+        })
+    }
+}
+
+/// Transient sweep configuration.
+#[derive(Debug, Clone)]
+pub struct TranConfig {
+    /// Simulation end time (s); the run starts at t = 0 from the DC point.
+    pub t_stop: f64,
+    /// Initial timestep (s).
+    pub h0: f64,
+    /// Smallest timestep the controller may use.
+    pub h_min: f64,
+    /// Largest timestep the controller may use.
+    pub h_max: f64,
+    pub integrator: Integrator,
+    /// Adaptive LTE control (reject/retry). When false the run uses `h0`
+    /// fixed — required for bit-for-bit batch-vs-sequential comparisons.
+    pub adaptive: bool,
+    /// Relative LTE tolerance.
+    pub reltol: f64,
+    /// Absolute LTE floor (volts / amps).
+    pub abstol: f64,
+    /// Hard cap on step attempts (accepted + rejected).
+    pub max_steps: usize,
+    pub ordering: solve::Ordering,
+    /// Worker threads for per-RHS GMRES sweeps on the iterative path
+    /// (the direct multi-RHS substitution is single-pass).
+    pub workers: usize,
+}
+
+impl TranConfig {
+    /// Adaptive TR-BDF2 sweep to `t_stop` starting from step `h0`.
+    pub fn new(t_stop: f64, h0: f64) -> Self {
+        TranConfig {
+            t_stop,
+            h0,
+            h_min: h0 * 1e-4,
+            h_max: t_stop,
+            integrator: Integrator::TrBdf2,
+            adaptive: true,
+            reltol: 1e-5,
+            abstol: 1e-9,
+            max_steps: 2_000_000,
+            ordering: solve::Ordering::Smart,
+            workers: 1,
+        }
+    }
+
+    /// Fixed-step sweep: exactly `h` per step (no LTE control).
+    pub fn fixed_step(t_stop: f64, h: f64) -> Self {
+        TranConfig { h_min: h, h_max: h, adaptive: false, ..TranConfig::new(t_stop, h) }
+    }
+
+    pub fn with_integrator(mut self, integrator: Integrator) -> Self {
+        self.integrator = integrator;
+        self
+    }
+}
+
+/// Work counters of one transient sweep. `symbolic_analyses` is the pinned
+/// contract: a fixed-topology sweep — any number of timesteps, any batch
+/// width, any number of accepted `h` changes — performs exactly one.
+#[derive(Debug, Clone, Default)]
+pub struct TranStats {
+    /// Pattern analyses performed (direct `Symbolic` + iterative ILU(0)).
+    pub symbolic_analyses: usize,
+    /// Numeric refactorizations (one per distinct stage matrix / `h`).
+    pub refactorizations: usize,
+    pub steps_accepted: usize,
+    pub steps_rejected: usize,
+    /// Linear multi-RHS solve calls (a whole batch counts one).
+    pub solves: usize,
+    /// Total GMRES iterations on the iterative path.
+    pub gmres_iterations: u64,
+    /// Iterative→direct fallbacks inside this sweep (also mirrored into
+    /// the process-wide warm/cold counters, see [`super::solver_fallbacks`]).
+    pub fallbacks: u64,
+    /// Peak resident factor/preconditioner entries.
+    pub peak_entries: usize,
+}
+
+impl TranStats {
+    /// Fold another sweep's counters into this one (multi-segment reads
+    /// report one merged record; `peak_entries` takes the max, everything
+    /// else sums).
+    pub fn absorb(&mut self, other: &TranStats) {
+        self.symbolic_analyses += other.symbolic_analyses;
+        self.refactorizations += other.refactorizations;
+        self.steps_accepted += other.steps_accepted;
+        self.steps_rejected += other.steps_rejected;
+        self.solves += other.solves;
+        self.gmres_iterations += other.gmres_iterations;
+        self.fallbacks += other.fallbacks;
+        self.peak_entries = self.peak_entries.max(other.peak_entries);
+    }
+}
+
+/// Result of a transient sweep: a shared time grid plus per-column node
+/// voltage trajectories.
+#[derive(Debug, Clone)]
+pub struct TranResult {
+    /// Accepted time points, starting at 0.0 (the DC init point).
+    pub times: Vec<f64>,
+    /// `voltages[col][step][node]`; node 0 is ground (always 0.0), node
+    /// indices match [`Circuit::node_named`].
+    pub voltages: Vec<Vec<Vec<f64>>>,
+    pub stats: TranStats,
+}
+
+/// Capacitor companion bookkeeping (indices into the unknown vector).
+struct CapEl {
+    p: usize,
+    n: usize,
+    c: f64,
+}
+
+/// Inductor companion bookkeeping; `br` is the branch-current unknown row.
+struct IndEl {
+    p: usize,
+    n: usize,
+    l: f64,
+    br: usize,
+}
+
+/// Per-column integration state at the last accepted time point.
+#[derive(Clone)]
+struct ColState {
+    /// Full unknown vector (node voltages then branch currents).
+    x: Vec<f64>,
+    /// Voltage across each capacitor.
+    cap_v: Vec<f64>,
+    /// Current through each capacitor (trapezoidal/TR-BDF2 history).
+    cap_i: Vec<f64>,
+    /// Current through each inductor.
+    ind_i: Vec<f64>,
+    /// Voltage across each inductor (trapezoidal history).
+    ind_v: Vec<f64>,
+}
+
+/// Intermediate TR-BDF2 stage values (at `t + γh`).
+struct MidVals {
+    cap_v: Vec<f64>,
+    ind_i: Vec<f64>,
+}
+
+/// How the accepted step advanced the dynamic-element history.
+enum Update {
+    Be { h: f64 },
+    Trap { h: f64 },
+    Bdf2 { h: f64, gamma: f64, mids: Vec<MidVals> },
+}
+
+const ILU_MAX_FAILS: u64 = 3;
+
+/// Linear-solver state shared by every stage of a sweep: one `Symbolic`,
+/// one `Numeric` per stage slot (TR-BDF2 uses two stage matrices), and an
+/// optional ILU(0) for the iterative path.
+struct TranSolver {
+    dim: usize,
+    n_nodes: usize,
+    krylov_cfg: Option<krylov::KrylovCfg>,
+    workers: usize,
+    sym: Arc<factor::Symbolic>,
+    nums: [factor::Numeric; 2],
+    /// Stage coefficient currently assembled into each slot (NaN = none).
+    keys: [f64; 2],
+    syss: [Option<SparseSys>; 2],
+    ilu: Option<krylov::Ilu0>,
+    ilu_key: f64,
+    ilu_ever_ok: bool,
+    stats: TranStats,
+}
+
+impl TranSolver {
+    fn new(
+        sys0: &SparseSys,
+        solver: krylov::SolverStrategy,
+        cfg: &TranConfig,
+        dim: usize,
+        n_nodes: usize,
+    ) -> Result<Self> {
+        let sym = Arc::new(
+            factor::analyze(sys0, cfg.ordering).context("transient symbolic analysis")?,
+        );
+        let stats = TranStats { symbolic_analyses: 1, ..Default::default() };
+        let krylov_cfg =
+            if solver.wants_iterative(sys0.nnz()) { Some(solver.cfg()) } else { None };
+        Ok(TranSolver {
+            dim,
+            n_nodes,
+            krylov_cfg,
+            workers: cfg.workers.max(1),
+            nums: [factor::Numeric::new(sym.clone()), factor::Numeric::new(sym.clone())],
+            sym,
+            keys: [f64::NAN, f64::NAN],
+            syss: [None, None],
+            ilu: None,
+            ilu_key: f64::NAN,
+            ilu_ever_ok: false,
+            stats,
+        })
+    }
+
+    /// Ensure slot `slot` holds the stamped system for stage coefficient
+    /// `a` (restamp only on coefficient change).
+    fn ensure_sys(&mut self, c: &Circuit, a: f64, slot: usize) -> Result<()> {
+        if self.syss[slot].is_none() || self.keys[slot] != a {
+            let v0 = vec![0.0; self.n_nodes];
+            self.syss[slot] = Some(c.stamp_dyn(self.dim, self.n_nodes, &v0, a, a)?);
+            self.keys[slot] = a;
+            // force reassembly of the direct factor for this slot
+            self.nums[slot] = factor::Numeric::new(self.sym.clone());
+        }
+        Ok(())
+    }
+
+    /// Iterative attempt: GMRES(m) off the locally cached ILU(0). `None`
+    /// means fall back to direct (fallback counters already bumped).
+    fn solve_iterative(&mut self, slot: usize, rhss: &[Vec<f64>]) -> Option<Vec<Vec<f64>>> {
+        let cfg = self.krylov_cfg?;
+        if self.stats.fallbacks >= ILU_MAX_FAILS {
+            return None; // iterative path repeatedly failed: stay direct
+        }
+        self.syss[slot].as_ref()?;
+        let a = self.keys[slot];
+        let workers = self.workers;
+        // lift the preconditioner out of `self` so the closure below only
+        // borrows locals alongside the `sys` borrow of `self.syss`
+        let had_ilu = self.ilu.is_some();
+        let mut ilu = self.ilu.take();
+        let mut ilu_key = self.ilu_key;
+        let sys = self.syss[slot].as_ref().expect("checked above");
+        let attempt = (|| -> Result<(Vec<Vec<f64>>, solve::SolveStats)> {
+            if ilu.is_none() {
+                ilu = Some(krylov::Ilu0::analyze(sys)?);
+                ilu_key = f64::NAN;
+            }
+            let pre = ilu.as_mut().expect("just ensured");
+            if ilu_key != a {
+                pre.assemble(sys)?;
+                pre.factor()?;
+                ilu_key = a;
+            }
+            let (xs, st) = krylov::gmres_batch(sys, rhss, &*pre, &cfg, workers)?;
+            if !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
+                bail!("transient: batch GMRES solution failed the residual gate");
+            }
+            Ok((xs, st))
+        })();
+        if !had_ilu && ilu.is_some() {
+            self.stats.symbolic_analyses += 1; // ILU(0) pattern analysis
+        }
+        self.ilu = ilu;
+        self.ilu_key = ilu_key;
+        match attempt {
+            Ok((xs, st)) => {
+                self.stats.gmres_iterations += st.iterations as u64;
+                self.stats.peak_entries = self.stats.peak_entries.max(st.peak_entries);
+                self.ilu_ever_ok = true;
+                Some(xs)
+            }
+            Err(_) => {
+                self.stats.fallbacks += 1;
+                // mirror into the process-wide counters with the same
+                // warm/cold distinction as the DC engine: a previously
+                // serving ILU failing mid-sweep is the staleness signal
+                if self.ilu_ever_ok {
+                    super::SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+                } else {
+                    super::SOLVER_COLD_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+                }
+                None
+            }
+        }
+    }
+
+    /// Solve the stage system `(a, slot)` for all RHS columns.
+    fn solve(
+        &mut self,
+        c: &Circuit,
+        a: f64,
+        slot: usize,
+        rhss: &[Vec<f64>],
+        certify: bool,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.ensure_sys(c, a, slot)?;
+        self.stats.solves += 1;
+        if let Some(xs) = self.solve_iterative(slot, rhss) {
+            return Ok(xs);
+        }
+        // direct factor path: refactor only when the slot was restamped
+        let sys = self.syss[slot].as_ref().expect("ensured above");
+        let num = &mut self.nums[slot];
+        let unchanged = num
+            .assemble(sys)
+            .context("transient stamp pattern diverged from the cached symbolic")?;
+        if !unchanged || !num.is_factored() {
+            num.refactor().context("transient numeric refactorization")?;
+            self.stats.refactorizations += 1;
+        }
+        let xs = num.solve_multi(rhss).context("transient multi-RHS substitution")?;
+        self.stats.peak_entries = self.stats.peak_entries.max(num.stats().peak_entries);
+        if certify && !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
+            bail!("transient: factored solution failed the residual gate");
+        }
+        Ok(xs)
+    }
+}
+
+/// Source-only RHS at time `t` for one column: like `Circuit::stamp_rhs`
+/// but evaluating attached [`Waveform`]s at `t` and applying the column's
+/// per-source amplitude multipliers (companion history terms are added by
+/// the integrator stage).
+fn stage_rhs(
+    c: &Circuit,
+    dim: usize,
+    n_nodes: usize,
+    t: f64,
+    scale: &BTreeMap<usize, f64>,
+) -> Vec<f64> {
+    let mut b = vec![0.0; dim];
+    let idx = |node: usize| node.checked_sub(1);
+    let mut br = n_nodes - 1;
+    for (ei, e) in c.elements.iter().enumerate() {
+        let s = scale.get(&ei).copied().unwrap_or(1.0);
+        match *e {
+            Element::Resistor(..) | Element::Diode(..) | Element::Capacitor(..) => {}
+            Element::Isource(_, a, k, amps) => {
+                let v = s * c.waves.get(&ei).map_or(amps, |w| w.eval(t));
+                if let Some(i) = idx(a) {
+                    b[i] -= v;
+                }
+                if let Some(j) = idx(k) {
+                    b[j] += v;
+                }
+            }
+            Element::Vsource(_, _, _, volts) => {
+                b[br] += s * c.waves.get(&ei).map_or(volts, |w| w.eval(t));
+                br += 1;
+            }
+            Element::Vcvs(..) | Element::Mult(..) | Element::Inductor(..) => {
+                br += 1;
+            }
+        }
+    }
+    b
+}
+
+/// Node voltage from an unknown vector (ground folded back in).
+fn node_v(x: &[f64], node: usize) -> f64 {
+    if node == 0 {
+        0.0
+    } else {
+        x[node - 1]
+    }
+}
+
+/// Full node-voltage vector (index = node id) from an unknown vector.
+fn to_node_voltages(x: &[f64], n_nodes: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n_nodes];
+    v[1..].copy_from_slice(&x[..n_nodes - 1]);
+    v
+}
+
+fn add_companions_be(b: &mut [f64], caps: &[CapEl], inds: &[IndEl], st: &ColState, h: f64) {
+    for (k, cap) in caps.iter().enumerate() {
+        let i_hist = cap.c / h * st.cap_v[k];
+        if cap.p > 0 {
+            b[cap.p - 1] += i_hist;
+        }
+        if cap.n > 0 {
+            b[cap.n - 1] -= i_hist;
+        }
+    }
+    for (k, ind) in inds.iter().enumerate() {
+        b[ind.br] += -(ind.l / h) * st.ind_i[k];
+    }
+}
+
+fn add_companions_trap(b: &mut [f64], caps: &[CapEl], inds: &[IndEl], st: &ColState, h: f64) {
+    for (k, cap) in caps.iter().enumerate() {
+        let i_hist = 2.0 * cap.c / h * st.cap_v[k] + st.cap_i[k];
+        if cap.p > 0 {
+            b[cap.p - 1] += i_hist;
+        }
+        if cap.n > 0 {
+            b[cap.n - 1] -= i_hist;
+        }
+    }
+    for (k, ind) in inds.iter().enumerate() {
+        b[ind.br] += -st.ind_v[k] - (2.0 * ind.l / h) * st.ind_i[k];
+    }
+}
+
+fn add_companions_bdf2(
+    b: &mut [f64],
+    caps: &[CapEl],
+    inds: &[IndEl],
+    st: &ColState,
+    mid: &MidVals,
+    h: f64,
+    g: f64,
+) {
+    // BDF2 over the uneven pair (t_n, t_{n+γ}, t_{n+1}):
+    //   dy/dt ≈ a·y_{n+1} − bb·y_{n+γ} + cc·y_n
+    // with a = (2−γ)/((1−γ)h), bb = 1/(γ(1−γ)h), cc = (1−γ)/(γh)
+    let bb = 1.0 / (g * (1.0 - g) * h);
+    let cc = (1.0 - g) / (g * h);
+    for (k, cap) in caps.iter().enumerate() {
+        let i_hist = cap.c * (bb * mid.cap_v[k] - cc * st.cap_v[k]);
+        if cap.p > 0 {
+            b[cap.p - 1] += i_hist;
+        }
+        if cap.n > 0 {
+            b[cap.n - 1] -= i_hist;
+        }
+    }
+    for (k, ind) in inds.iter().enumerate() {
+        b[ind.br] += -ind.l * (bb * mid.ind_i[k] - cc * st.ind_i[k]);
+    }
+}
+
+/// Advance one column's dynamic-element history to the accepted solution.
+fn update_state(
+    st: &mut ColState,
+    x: Vec<f64>,
+    caps: &[CapEl],
+    inds: &[IndEl],
+    upd: &Update,
+    col: usize,
+) {
+    for (k, cap) in caps.iter().enumerate() {
+        let vc_new = node_v(&x, cap.p) - node_v(&x, cap.n);
+        st.cap_i[k] = match upd {
+            Update::Be { h } => cap.c / h * (vc_new - st.cap_v[k]),
+            Update::Trap { h } => 2.0 * cap.c / h * (vc_new - st.cap_v[k]) - st.cap_i[k],
+            Update::Bdf2 { h, gamma: g, mids } => {
+                let a = (2.0 - g) / ((1.0 - g) * h);
+                let bb = 1.0 / (g * (1.0 - g) * h);
+                let cc = (1.0 - g) / (g * h);
+                cap.c * (a * vc_new - bb * mids[col].cap_v[k] + cc * st.cap_v[k])
+            }
+        };
+        st.cap_v[k] = vc_new;
+    }
+    for (k, ind) in inds.iter().enumerate() {
+        st.ind_i[k] = x[ind.br];
+        st.ind_v[k] = node_v(&x, ind.p) - node_v(&x, ind.n);
+    }
+    st.x = x;
+}
+
+/// Transient sweep of a linear circuit over a batch of RHS columns.
+///
+/// Each entry of `scales` describes one column as `(element index,
+/// amplitude multiplier)` pairs (see [`Circuit::vsource_index`] /
+/// [`Circuit::vsource_wave`]): the column's value for that source is
+/// `multiplier × (waveform sample | static value)`; unlisted sources keep
+/// multiplier 1. Pass `&[Vec::new()]` (or use [`Circuit::tran`]) for a
+/// single unscaled column.
+///
+/// The run starts from the batched DC operating point at t = 0 (caps
+/// open, inductors short, waveforms at their t=0 samples) and integrates
+/// to `cfg.t_stop`. Nonlinear elements (D, Mult) are rejected — read
+/// pulses through the memristor fabric are linear RC networks.
+pub fn tran_batch(
+    c: &Circuit,
+    cfg: &TranConfig,
+    scales: &[Vec<(usize, f64)>],
+) -> Result<TranResult> {
+    if scales.is_empty() {
+        return Ok(TranResult {
+            times: Vec::new(),
+            voltages: Vec::new(),
+            stats: TranStats::default(),
+        });
+    }
+    if !(cfg.t_stop > 0.0 && cfg.h0 > 0.0 && cfg.h_min > 0.0 && cfg.h_min <= cfg.h_max) {
+        bail!(
+            "invalid TranConfig: t_stop {} h0 {} h_min {} h_max {}",
+            cfg.t_stop,
+            cfg.h0,
+            cfg.h_min,
+            cfg.h_max
+        );
+    }
+    if let Some(e) = c
+        .elements
+        .iter()
+        .find(|e| matches!(e, Element::Diode(..) | Element::Mult(..)))
+    {
+        bail!(
+            "transient analysis supports linear circuits (R/V/I/E/C/L); found nonlinear element {}",
+            e.name()
+        );
+    }
+
+    let n_nodes = c.node_count();
+    let n_br = c.num_branches();
+    let dim = (n_nodes - 1) + n_br;
+
+    // dynamic elements + their branch rows (same walk order as stamp)
+    let mut caps = Vec::new();
+    let mut inds = Vec::new();
+    {
+        let mut br = n_nodes - 1;
+        for e in &c.elements {
+            match *e {
+                Element::Vsource(..) | Element::Vcvs(..) | Element::Mult(..) => br += 1,
+                Element::Capacitor(_, a, b, farads) => caps.push(CapEl { p: a, n: b, c: farads }),
+                Element::Inductor(_, a, b, henries) => {
+                    inds.push(IndEl { p: a, n: b, l: henries, br });
+                    br += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let col_scales: Vec<BTreeMap<usize, f64>> =
+        scales.iter().map(|ov| ov.iter().copied().collect()).collect();
+    let ncols = col_scales.len();
+
+    // one symbolic analysis on the DC-init stamp serves the whole sweep
+    let v0 = vec![0.0; n_nodes];
+    let sys0 = c.stamp_dyn(dim, n_nodes, &v0, 0.0, 0.0)?;
+    let mut solver = TranSolver::new(&sys0, c.solver(), cfg, dim, n_nodes)?;
+
+    // batched DC operating point at t = 0 (certified: a bad factorization
+    // would poison every step after it)
+    let rhss0: Vec<Vec<f64>> =
+        col_scales.iter().map(|s| stage_rhs(c, dim, n_nodes, 0.0, s)).collect();
+    let xs0 = solver.solve(c, 0.0, 0, &rhss0, true)?;
+
+    let mut states: Vec<ColState> = xs0
+        .into_iter()
+        .map(|x| {
+            let cap_v = caps.iter().map(|cp| node_v(&x, cp.p) - node_v(&x, cp.n)).collect();
+            let ind_i = inds.iter().map(|l| x[l.br]).collect();
+            ColState {
+                cap_v,
+                cap_i: vec![0.0; caps.len()],
+                ind_i,
+                ind_v: vec![0.0; inds.len()],
+                x,
+            }
+        })
+        .collect();
+
+    let mut times = vec![0.0];
+    let mut voltages: Vec<Vec<Vec<f64>>> =
+        states.iter().map(|s| vec![to_node_voltages(&s.x, n_nodes)]).collect();
+
+    // Consistent 0⁺ initialization (the classic trapezoidal startup
+    // problem): the DC point holds the t = 0⁻ histories — zero capacitor
+    // current, zero inductor voltage — but a rise-0 pulse edge jumps the
+    // sources at 0⁺, and trapezoidal/TR-BDF2 would drag that stale
+    // history through the whole sweep as an O(h) startup error. One
+    // backward-Euler micro-step (h → 0 limit, state effectively held)
+    // computes the element currents/voltages just after the jump; only
+    // the integration state advances — the recorded grid keeps the DC
+    // sample at t = 0. The 1e-6 scale keeps the held-state error tiny
+    // without inviting fp cancellation in the C/h·Δv history update.
+    if !caps.is_empty() || !inds.is_empty() {
+        let h_init = cfg.h0.min(cfg.t_stop) * 1e-6;
+        let rhss: Vec<Vec<f64>> = col_scales
+            .iter()
+            .zip(&states)
+            .map(|(s, st)| {
+                let mut b = stage_rhs(c, dim, n_nodes, h_init, s);
+                add_companions_be(&mut b, &caps, &inds, st, h_init);
+                b
+            })
+            .collect();
+        let xs = solver.solve(c, 1.0 / h_init, 0, &rhss, false)?;
+        let upd = Update::Be { h: h_init };
+        for (col, x) in xs.into_iter().enumerate() {
+            update_state(&mut states[col], x, &caps, &inds, &upd, col);
+        }
+    }
+
+    let gamma = 2.0 - std::f64::consts::SQRT_2;
+    let order = cfg.integrator.order() as f64;
+    let mut t = 0.0f64;
+    let mut h = cfg.h0.clamp(cfg.h_min, cfg.h_max);
+    // previous accepted point for the linear LTE predictor
+    let mut prev: Option<(f64, Vec<Vec<f64>>)> = None;
+    let mut attempts = 0usize;
+
+    while t < cfg.t_stop * (1.0 - 1e-12) {
+        attempts += 1;
+        if attempts > cfg.max_steps {
+            bail!(
+                "transient exceeded max_steps {} at t = {t:.3e} (h = {h:.3e})",
+                cfg.max_steps
+            );
+        }
+        let h_eff = h.min(cfg.t_stop - t);
+
+        // one integrator step for every column (state untouched until accept)
+        let (new_xs, upd) = match cfg.integrator {
+            Integrator::BackwardEuler => {
+                let a = 1.0 / h_eff;
+                let rhss: Vec<Vec<f64>> = col_scales
+                    .iter()
+                    .zip(&states)
+                    .map(|(s, st)| {
+                        let mut b = stage_rhs(c, dim, n_nodes, t + h_eff, s);
+                        add_companions_be(&mut b, &caps, &inds, st, h_eff);
+                        b
+                    })
+                    .collect();
+                (solver.solve(c, a, 0, &rhss, false)?, Update::Be { h: h_eff })
+            }
+            Integrator::Trapezoidal => {
+                let a = 2.0 / h_eff;
+                let rhss: Vec<Vec<f64>> = col_scales
+                    .iter()
+                    .zip(&states)
+                    .map(|(s, st)| {
+                        let mut b = stage_rhs(c, dim, n_nodes, t + h_eff, s);
+                        add_companions_trap(&mut b, &caps, &inds, st, h_eff);
+                        b
+                    })
+                    .collect();
+                (solver.solve(c, a, 0, &rhss, false)?, Update::Trap { h: h_eff })
+            }
+            Integrator::TrBdf2 => {
+                // stage 1: trapezoidal over γh
+                let h1 = gamma * h_eff;
+                let a1 = 2.0 / h1;
+                let rhss1: Vec<Vec<f64>> = col_scales
+                    .iter()
+                    .zip(&states)
+                    .map(|(s, st)| {
+                        let mut b = stage_rhs(c, dim, n_nodes, t + h1, s);
+                        add_companions_trap(&mut b, &caps, &inds, st, h1);
+                        b
+                    })
+                    .collect();
+                let xg = solver.solve(c, a1, 0, &rhss1, false)?;
+                let mids: Vec<MidVals> = xg
+                    .iter()
+                    .map(|x| MidVals {
+                        cap_v: caps.iter().map(|cp| node_v(x, cp.p) - node_v(x, cp.n)).collect(),
+                        ind_i: inds.iter().map(|l| x[l.br]).collect(),
+                    })
+                    .collect();
+                // stage 2: BDF2 over (t, t+γh, t+h) — own Numeric slot so a
+                // fixed-h run refactors each stage matrix once, not per step
+                let a2 = (2.0 - gamma) / ((1.0 - gamma) * h_eff);
+                let rhss2: Vec<Vec<f64>> = col_scales
+                    .iter()
+                    .zip(&states)
+                    .zip(&mids)
+                    .map(|((s, st), mid)| {
+                        let mut b = stage_rhs(c, dim, n_nodes, t + h_eff, s);
+                        add_companions_bdf2(&mut b, &caps, &inds, st, mid, h_eff, gamma);
+                        b
+                    })
+                    .collect();
+                (
+                    solver.solve(c, a2, 1, &rhss2, false)?,
+                    Update::Bdf2 { h: h_eff, gamma, mids },
+                )
+            }
+        };
+
+        // LTE estimate against the linear predictor from the last two
+        // accepted points; max over the whole batch so every column shares
+        // one time grid (and one matrix per step)
+        let err = match (&prev, cfg.adaptive) {
+            (Some((h_prev, xs_prev)), true) => {
+                let r = h_eff / h_prev;
+                let mut e = 0.0f64;
+                for (col, new_x) in new_xs.iter().enumerate() {
+                    let x_n = &states[col].x;
+                    let x_p = &xs_prev[col];
+                    for k in 0..dim {
+                        let pred = x_n[k] + (x_n[k] - x_p[k]) * r;
+                        let scale =
+                            cfg.abstol + cfg.reltol * new_x[k].abs().max(x_n[k].abs());
+                        e = e.max((new_x[k] - pred).abs() / scale);
+                    }
+                }
+                e
+            }
+            _ => 0.0,
+        };
+
+        if cfg.adaptive && err > 1.0 && h_eff > cfg.h_min * 1.000001 {
+            // reject: shrink and retry from the same state
+            solver.stats.steps_rejected += 1;
+            let fac = (0.9 * err.powf(-1.0 / (order + 1.0))).clamp(0.1, 0.5);
+            h = (h_eff * fac).max(cfg.h_min);
+            continue;
+        }
+
+        // accept
+        let old_xs: Vec<Vec<f64>> = states.iter().map(|s| s.x.clone()).collect();
+        for (col, x) in new_xs.into_iter().enumerate() {
+            update_state(&mut states[col], x, &caps, &inds, &upd, col);
+        }
+        prev = Some((h_eff, old_xs));
+        t += h_eff;
+        times.push(t);
+        for (col, st) in states.iter().enumerate() {
+            voltages[col].push(to_node_voltages(&st.x, n_nodes));
+        }
+        solver.stats.steps_accepted += 1;
+        if cfg.adaptive && err > 0.0 {
+            let fac = (0.9 * err.powf(-1.0 / (order + 1.0))).clamp(0.2, 5.0);
+            h = (h_eff * fac).clamp(cfg.h_min, cfg.h_max);
+        }
+    }
+
+    debug_assert_eq!(voltages.len(), ncols);
+    Ok(TranResult { times, voltages, stats: solver.stats })
+}
+
+impl Circuit {
+    /// Single-column transient sweep (see [`tran_batch`]).
+    pub fn tran(&self, cfg: &TranConfig) -> Result<TranResult> {
+        tran_batch(self, cfg, &[Vec::new()])
+    }
+
+    /// Batched transient sweep over per-column source amplitude
+    /// multipliers (see [`tran_batch`]).
+    pub fn tran_batch(
+        &self,
+        cfg: &TranConfig,
+        scales: &[Vec<(usize, f64)>],
+    ) -> Result<TranResult> {
+        tran_batch(self, cfg, scales)
+    }
+}
+
+/// Integrated energy (J) dissipated over the sweep in every resistor whose
+/// name starts with `prefix` ("RM" = the memristor devices of an emitted
+/// crossbar netlist), for column `col`: trapezoidal `∫ Σ (Δv)²/R dt` over
+/// the stored trajectory.
+pub fn resistor_energy(c: &Circuit, res: &TranResult, col: usize, prefix: &str) -> f64 {
+    let rs: Vec<(usize, usize, f64)> = c
+        .elements
+        .iter()
+        .filter_map(|e| match e {
+            Element::Resistor(n, a, b, r) if n.starts_with(prefix) => Some((*a, *b, *r)),
+            _ => None,
+        })
+        .collect();
+    if rs.is_empty() || res.times.len() < 2 {
+        return 0.0;
+    }
+    let power = |v: &[f64]| -> f64 {
+        rs.iter()
+            .map(|&(a, b, r)| {
+                let dv = v[a] - v[b];
+                dv * dv / r
+            })
+            .sum()
+    };
+    let traj = &res.voltages[col];
+    let mut e = 0.0;
+    let mut p_prev = power(&traj[0]);
+    for k in 1..res.times.len() {
+        let p = power(&traj[k]);
+        e += 0.5 * (p_prev + p) * (res.times[k] - res.times[k - 1]);
+        p_prev = p;
+    }
+    e
+}
+
+/// Settling time (s) of column `col`: the earliest time after which every
+/// watched node stays within `rtol·|v_final|` (plus a tiny absolute floor)
+/// of its final value. Returns 0.0 if already settled at t = 0.
+pub fn settling_time(res: &TranResult, col: usize, nodes: &[usize], rtol: f64) -> f64 {
+    let traj = &res.voltages[col];
+    let Some(last) = traj.last() else { return 0.0 };
+    let tol: Vec<f64> =
+        nodes.iter().map(|&n| rtol * last[n].abs() + 1e-12).collect();
+    for k in (0..traj.len()).rev() {
+        let outside = nodes
+            .iter()
+            .zip(&tol)
+            .any(|(&n, &tl)| (traj[k][n] - last[n]).abs() > tl);
+        if outside {
+            return res.times[(k + 1).min(res.times.len() - 1)];
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waveform_pulse_golden() {
+        let w = Waveform::Pulse {
+            v1: 0.0,
+            v2: 2.0,
+            delay: 1.0,
+            rise: 0.5,
+            fall: 0.5,
+            width: 2.0,
+            period: 0.0,
+        };
+        assert_eq!(w.eval(0.0), 0.0);
+        assert_eq!(w.eval(1.0), 0.0);
+        assert!((w.eval(1.25) - 1.0).abs() < 1e-12); // mid-rise
+        assert_eq!(w.eval(2.0), 2.0);
+        assert_eq!(w.eval(3.4), 2.0);
+        assert!((w.eval(3.75) - 1.0).abs() < 1e-12); // mid-fall
+        assert_eq!(w.eval(5.0), 0.0);
+        // periodic repeat
+        let wp = Waveform::Pulse {
+            v1: -1.0,
+            v2: 1.0,
+            delay: 0.0,
+            rise: 0.0,
+            fall: 0.0,
+            width: 1.0,
+            period: 2.0,
+        };
+        assert_eq!(wp.eval(0.0), -1.0); // t=0 sample is v1 by convention
+        assert_eq!(wp.eval(0.5), 1.0);
+        assert_eq!(wp.eval(1.5), -1.0);
+        assert_eq!(wp.eval(2.5), 1.0);
+        assert_eq!(wp.eval(3.5), -1.0);
+    }
+
+    #[test]
+    fn waveform_sin_golden() {
+        let w = Waveform::Sin { offset: 0.5, ampl: 2.0, freq: 10.0, delay: 0.1, damping: 0.0 };
+        assert_eq!(w.eval(0.0), 0.5);
+        assert_eq!(w.eval(0.1), 0.5);
+        assert!((w.eval(0.1 + 0.025) - 2.5).abs() < 1e-9); // quarter period peak
+        assert!((w.eval(0.1 + 0.05) - 0.5).abs() < 1e-9); // half period
+        let wd = Waveform::Sin { offset: 0.0, ampl: 1.0, freq: 10.0, delay: 0.0, damping: 10.0 };
+        let peak1 = wd.eval(0.025);
+        let peak2 = wd.eval(0.125);
+        assert!(peak1 > 0.0 && peak2 > 0.0 && peak2 < peak1, "damped envelope");
+    }
+
+    #[test]
+    fn waveform_pwl_golden() {
+        let w = Waveform::Pwl(vec![(0.0, 0.0), (1.0, 1.0), (3.0, -1.0)]);
+        assert_eq!(w.eval(-1.0), 0.0);
+        assert!((w.eval(0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(w.eval(1.0), 1.0);
+        assert!((w.eval(2.0) - 0.0).abs() < 1e-12);
+        assert_eq!(w.eval(10.0), -1.0);
+        // vertical step segment doesn't divide by zero
+        let s = Waveform::Pwl(vec![(0.0, 0.0), (1.0, 0.0), (1.0, 5.0), (2.0, 5.0)]);
+        assert_eq!(s.eval(1.5), 5.0);
+        assert_eq!(Waveform::Pwl(Vec::new()).eval(1.0), 0.0);
+    }
+
+    /// V —R— n1 —C— gnd with a unit step at t=0.
+    fn rc_circuit(r: f64, cap: f64, v: f64) -> (Circuit, usize) {
+        let mut c = Circuit::new("rc");
+        let vin = c.node("in");
+        let n1 = c.node("n1");
+        c.vsource_wave(
+            "V1",
+            vin,
+            0,
+            Waveform::Pulse {
+                v1: 0.0,
+                v2: v,
+                delay: 0.0,
+                rise: 0.0,
+                fall: 0.0,
+                width: 1e9,
+                period: 0.0,
+            },
+        );
+        c.resistor("R1", vin, n1, r);
+        c.capacitor("C1", n1, 0, cap);
+        (c, n1)
+    }
+
+    /// Sup-norm error of the simulated RC charge vs V(1−e^{−t/τ}),
+    /// normalized by the step amplitude.
+    fn rc_max_err(integrator: Integrator, h_over_tau: f64, t_stop_over_tau: f64) -> f64 {
+        let (r, cap, v) = (1000.0, 1e-6, 1.0);
+        let tau = r * cap;
+        let (c, n1) = rc_circuit(r, cap, v);
+        let cfg = TranConfig::fixed_step(t_stop_over_tau * tau, h_over_tau * tau)
+            .with_integrator(integrator);
+        let res = c.tran(&cfg).unwrap();
+        let mut err = 0.0f64;
+        for (k, &t) in res.times.iter().enumerate() {
+            let exact = v * (1.0 - (-t / tau).exp());
+            err = err.max((res.voltages[0][k][n1] - exact).abs() / v);
+        }
+        err
+    }
+
+    #[test]
+    fn rc_step_response_backward_euler_tight() {
+        // order 1: error ~ (h/2τ)·t/τ·e^{−t/τ} — h = τ/2e5 over 0.1τ
+        // lands near 2e-7, comfortably under the 1e-6 acceptance gate
+        let err = rc_max_err(Integrator::BackwardEuler, 5e-6, 0.1);
+        assert!(err <= 1e-6, "BE error {err:.3e}");
+    }
+
+    #[test]
+    fn rc_step_response_trapezoidal_tight() {
+        let err = rc_max_err(Integrator::Trapezoidal, 5e-4, 1.0);
+        assert!(err <= 1e-6, "trapezoidal error {err:.3e}");
+    }
+
+    #[test]
+    fn rc_step_response_trbdf2_tight() {
+        let err = rc_max_err(Integrator::TrBdf2, 5e-4, 1.0);
+        assert!(err <= 1e-6, "TR-BDF2 error {err:.3e}");
+    }
+
+    #[test]
+    fn be_halving_h_reduces_error() {
+        let coarse = rc_max_err(Integrator::BackwardEuler, 1e-2, 1.0);
+        let fine = rc_max_err(Integrator::BackwardEuler, 5e-3, 1.0);
+        assert!(fine < coarse, "halved h must reduce error: {fine:.3e} vs {coarse:.3e}");
+        // order 1: roughly linear in h
+        assert!(fine > coarse * 0.3, "error should shrink ~2x, not collapse");
+    }
+
+    #[test]
+    fn rl_step_response_matches_closed_form() {
+        // V —R— n1 —L— gnd: v(n1) = V·e^{−tR/L}
+        let (r, l, v) = (100.0, 1e-3, 2.0);
+        let tau = l / r;
+        let mut c = Circuit::new("rl");
+        let vin = c.node("in");
+        let n1 = c.node("n1");
+        c.vsource_wave(
+            "V1",
+            vin,
+            0,
+            Waveform::Pulse {
+                v1: 0.0,
+                v2: v,
+                delay: 0.0,
+                rise: 0.0,
+                fall: 0.0,
+                width: 1e9,
+                period: 0.0,
+            },
+        );
+        c.resistor("R1", vin, n1, r);
+        c.inductor("L1", n1, 0, l);
+        let cfg = TranConfig::fixed_step(tau, tau / 2000.0)
+            .with_integrator(Integrator::Trapezoidal);
+        let res = c.tran(&cfg).unwrap();
+        let mut err = 0.0f64;
+        for (k, &t) in res.times.iter().enumerate() {
+            // v(0+) = V (inductor current continuous at 0): skip the DC
+            // init sample, which legitimately holds the t=0⁻ short
+            if k == 0 {
+                continue;
+            }
+            let exact = v * (-t / tau).exp();
+            err = err.max((res.voltages[0][k][n1] - exact).abs() / v);
+        }
+        assert!(err <= 1e-5, "RL error {err:.3e}");
+    }
+
+    #[test]
+    fn trapezoidal_rings_where_trbdf2_damps() {
+        // stiff step: h = 10τ (z = −10). Trapezoidal's amplification
+        // −(1−5)/(1+5) = −2/3 rings slowly around the final value (first
+        // sample overshoots to ~1.67V, |error| still ~4% after 8 steps);
+        // TR-BDF2's R(−10) ≈ −0.204 damps geometrically — one bounded
+        // ~20% excursion, then microvolts.
+        let (r, cap, v) = (1000.0, 1e-6, 1.0);
+        let tau = r * cap;
+        let (c, n1) = rc_circuit(r, cap, v);
+        let h = 10.0 * tau;
+        let run = |integ: Integrator| {
+            let res = c.tran(&TranConfig::fixed_step(8.0 * h, h).with_integrator(integ)).unwrap();
+            let traj: Vec<f64> = res.voltages[0].iter().map(|vs| vs[n1]).collect();
+            let overshoot = traj.iter().fold(0.0f64, |m, &x| m.max(x - v));
+            let ring_samples = traj.iter().filter(|&&x| x > v * 1.05).count();
+            let final_err = (traj.last().unwrap() - v).abs();
+            (overshoot, ring_samples, final_err)
+        };
+
+        let (trap_over, trap_rings, trap_final) = run(Integrator::Trapezoidal);
+        assert!(trap_over > 0.5 * v, "trap first sample must overshoot hard: {trap_over}");
+        assert!(trap_rings >= 3, "trap must keep ringing above +5%: {trap_rings} samples");
+        assert!(trap_final > 1e-2 * v, "trap error persists after 8 steps: {trap_final:e}");
+
+        let (bdf_over, bdf_rings, bdf_final) = run(Integrator::TrBdf2);
+        assert!(bdf_over < 0.25 * v, "TR-BDF2 excursion bounded: {bdf_over}");
+        assert!(bdf_rings <= 1, "TR-BDF2 damps after one excursion: {bdf_rings} samples");
+        assert!(bdf_final < 1e-3 * v, "TR-BDF2 settles: {bdf_final:e}");
+        assert!(bdf_over < trap_over / 2.0, "TR-BDF2 strictly better damped");
+    }
+
+    #[test]
+    fn adaptive_controller_rejects_on_pulse_edge() {
+        let (r, cap, v) = (1000.0, 1e-6, 1.0);
+        let tau = r * cap;
+        let mut c = Circuit::new("adapt");
+        let vin = c.node("in");
+        let n1 = c.node("n1");
+        c.vsource_wave(
+            "V1",
+            vin,
+            0,
+            Waveform::Pulse {
+                v1: 0.0,
+                v2: v,
+                delay: 5.0 * tau,
+                rise: tau / 100.0,
+                fall: tau / 100.0,
+                width: 1e9,
+                period: 0.0,
+            },
+        );
+        c.resistor("R1", vin, n1, r);
+        c.capacitor("C1", n1, 0, cap);
+        let mut cfg = TranConfig::new(15.0 * tau, tau / 2.0);
+        cfg.h_min = tau * 1e-5;
+        cfg.reltol = 1e-5;
+        let res = c.tran(&cfg).unwrap();
+        assert!(res.stats.steps_rejected > 0, "edge must force rejections");
+        assert!(res.stats.steps_accepted > 10);
+        assert_eq!(res.stats.symbolic_analyses, 1, "h changes are refactors only");
+        let end = res.voltages[0].last().unwrap()[n1];
+        assert!((end - v).abs() < 1e-3, "settled to the pulse top: {end}");
+    }
+
+    #[test]
+    fn batched_sweep_one_symbolic_and_bitwise_equal_to_sequential() {
+        // 64-RHS fixed-step sweep: exactly one symbolic analysis, and each
+        // column bit-for-bit equal to its own single-column run
+        let (r, cap, v) = (1000.0, 1e-6, 1.0);
+        let tau = r * cap;
+        let (c, _n1) = rc_circuit(r, cap, v);
+        let src = 0usize; // V1 is element 0
+        let cfg = TranConfig::fixed_step(tau, tau / 100.0)
+            .with_integrator(Integrator::TrBdf2);
+        let scales: Vec<Vec<(usize, f64)>> =
+            (0..64).map(|k| vec![(src, 0.1 + 0.9 * (k as f64) / 63.0)]).collect();
+        let batch = c.tran_batch(&cfg, &scales).unwrap();
+        assert_eq!(batch.stats.symbolic_analyses, 1, "one Symbolic for 64 RHS x all steps");
+        assert_eq!(batch.voltages.len(), 64);
+        for (col, sc) in scales.iter().enumerate() {
+            let single = c.tran_batch(&cfg, std::slice::from_ref(sc)).unwrap();
+            assert_eq!(single.times.len(), batch.times.len());
+            for (k, (bv, sv)) in
+                batch.voltages[col].iter().zip(&single.voltages[0]).enumerate()
+            {
+                for (a, b) in bv.iter().zip(sv) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "col {col} step {k}: batch {a:e} vs sequential {b:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rc_dissipated_energy_matches_half_cv_squared() {
+        // charging a cap through a resistor dissipates exactly ½CV² in the
+        // resistor, independent of R — a physics pin on resistor_energy
+        let (r, cap, v) = (1000.0, 1e-6, 2.0);
+        let tau = r * cap;
+        let (c, _n1) = rc_circuit(r, cap, v);
+        let cfg = TranConfig::fixed_step(12.0 * tau, tau / 500.0)
+            .with_integrator(Integrator::Trapezoidal);
+        let res = c.tran(&cfg).unwrap();
+        let e = resistor_energy(&c, &res, 0, "R");
+        let expect = 0.5 * cap * v * v;
+        assert!(
+            (e - expect).abs() / expect < 1e-2,
+            "energy {e:.4e} vs ½CV² {expect:.4e}"
+        );
+    }
+
+    #[test]
+    fn settling_time_of_rc_charge() {
+        let (r, cap, v) = (1000.0, 1e-6, 1.0);
+        let tau = r * cap;
+        let (c, n1) = rc_circuit(r, cap, v);
+        let cfg = TranConfig::fixed_step(10.0 * tau, tau / 200.0)
+            .with_integrator(Integrator::TrBdf2);
+        let res = c.tran(&cfg).unwrap();
+        // 1% settling of a first-order step is at t = ln(100)·τ ≈ 4.6τ
+        let ts = settling_time(&res, 0, &[n1], 0.01);
+        assert!(
+            ts > 4.0 * tau && ts < 5.5 * tau,
+            "1% settle {:.2}τ",
+            ts / tau
+        );
+    }
+
+    #[test]
+    fn nonlinear_circuits_rejected() {
+        let mut c = Circuit::new("nl");
+        let vin = c.node("in");
+        let mid = c.node("mid");
+        c.vsource("V1", vin, 0, 1.0);
+        c.resistor("R1", vin, mid, 1000.0);
+        c.diode("D1", mid, 0);
+        let err = c.tran(&TranConfig::new(1e-3, 1e-5)).unwrap_err();
+        assert!(err.to_string().contains("linear"), "{err}");
+    }
+
+    #[test]
+    fn dc_cache_untouched_by_transient_run() {
+        // interleaving tran with dc_op must keep the DC factor cache warm:
+        // the second dc_op is still a pure re-solve that matches reference
+        let (c, n1) = rc_circuit(1000.0, 1e-6, 1.0);
+        let mut c = c;
+        c.set_vsource("V1", 1.0).unwrap();
+        let v_before = c.dc_op().unwrap()[n1];
+        let _ = c.tran(&TranConfig::fixed_step(1e-3, 1e-5)).unwrap();
+        let v_after = c.dc_op().unwrap()[n1];
+        assert_eq!(v_before.to_bits(), v_after.to_bits());
+    }
+}

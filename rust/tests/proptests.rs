@@ -925,6 +925,7 @@ fn prop_fault_engine_keeps_devices_in_window() {
             let cfg = FaultConfig {
                 drift_nu: rng.range_f64(0.0, 0.5),
                 nu_sigma: rng.range_f64(0.0, 1.5),
+                nu_g: rng.range_f64(0.0, 2.0),
                 t0_hours: rng.range_f64(0.1, 10.0),
                 read_disturb_rate: rng.range_f64(0.0, 0.1),
                 temp_c: rng.range_f64(-20.0, 120.0),
@@ -951,7 +952,10 @@ fn prop_fault_engine_keeps_devices_in_window() {
                 if !(md > 0.0 && md <= 1.0) {
                     return false;
                 }
-                let ratio = fault::apply_step(&step, *bank, &mut devices, g_min);
+                // pristine-anchored ν(g): the conductance-dependent
+                // exponent must keep the same window contract
+                let ratio =
+                    fault::apply_step_from(&step, *bank, &mut devices, Some(g.as_slice()), g_min);
                 if !(ratio.is_finite() && ratio > 0.0) {
                     return false;
                 }
@@ -977,6 +981,7 @@ fn prop_fault_step_signed_never_flips_sign_or_escapes() {
             let cfg = FaultConfig {
                 drift_nu: rng.range_f64(0.0, 0.4),
                 nu_sigma: rng.range_f64(0.0, 1.0),
+                nu_g: rng.range_f64(0.0, 2.0),
                 stuck_on_frac: rng.range_f64(0.0, 0.3),
                 stuck_off_frac: rng.range_f64(0.0, 0.3),
                 seed: rng.next_u64(),
@@ -987,10 +992,65 @@ fn prop_fault_step_signed_never_flips_sign_or_escapes() {
         |(w, cfg, hours, bank)| {
             let mut drifted = w.clone();
             let step = FaultModel::new(*cfg).advance(*hours, 100_000);
-            fault::apply_step_signed(&step, *bank, &mut drifted);
+            fault::apply_step_signed_from(&step, *bank, &mut drifted, Some(w.as_slice()));
             w.iter()
                 .zip(&drifted)
                 .all(|(&b, &a)| a.is_finite() && (-1.0..=1.0).contains(&a) && a * b >= 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_be_halving_timestep_shrinks_rc_error() {
+    // backward Euler is order 1: halving the fixed step must cut the
+    // sup-norm error of an RC charging curve vs V(1 − e^{−t/τ}) by close
+    // to half — 0.75 leaves slack for the h² correction terms
+    check(
+        "be-halving-rc",
+        25,
+        |rng: &mut Rng, _size: usize| {
+            (
+                rng.range_f64(100.0, 10_000.0),  // R
+                rng.range_f64(1e-9, 1e-6),       // C
+                rng.range_f64(0.5, 5.0),         // step amplitude
+                rng.range_f64(0.02, 0.2),        // h / tau
+            )
+        },
+        |&(r, cap, v, h_over_tau)| {
+            let tau = r * cap;
+            let err = |h: f64| -> f64 {
+                let mut ckt = memx::spice::Circuit::new("rc");
+                let vin = ckt.node("in");
+                let n1 = ckt.node("n1");
+                ckt.vsource_wave(
+                    "V1",
+                    vin,
+                    0,
+                    memx::spice::transient::Waveform::Pulse {
+                        v1: 0.0,
+                        v2: v,
+                        delay: 0.0,
+                        rise: 0.0,
+                        fall: 0.0,
+                        width: 1e9,
+                        period: 0.0,
+                    },
+                );
+                ckt.resistor("R1", vin, n1, r);
+                ckt.capacitor("C1", n1, 0, cap);
+                let cfg = memx::spice::transient::TranConfig::fixed_step(2.0 * tau, h)
+                    .with_integrator(memx::spice::transient::Integrator::BackwardEuler);
+                let res = ckt.tran(&cfg).unwrap();
+                let mut e = 0.0f64;
+                for (k, &t) in res.times.iter().enumerate() {
+                    let exact = v * (1.0 - (-t / tau).exp());
+                    e = e.max((res.voltages[0][k][n1] - exact).abs() / v);
+                }
+                e
+            };
+            let coarse = err(h_over_tau * tau);
+            let fine = err(0.5 * h_over_tau * tau);
+            fine > 0.0 && fine < 0.75 * coarse
         },
     );
 }
