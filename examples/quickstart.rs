@@ -16,6 +16,17 @@
 //! the crossbar layers and the Fig 4 activation circuits — no module falls
 //! back to its exact transfer (`memx report --coverage` prints the
 //! per-stage table; rust/tests/fidelity.rs pins it).
+//!
+//! # Backend selection
+//!
+//! Every dense hot loop behind the SPICE engine — multi-RHS LU
+//! substitution, GMRES matvec/axpy/dot, ILU(0) sweeps, im2col — runs
+//! through a pluggable [`memx::backend::Backend`]. Pick one with
+//! [`PipelineBuilder::backend`] (as below), `--backend scalar|simd|auto`
+//! on the `spice`/`accuracy`/`serve`/`tran` subcommands, or the
+//! `MEMX_BACKEND` environment variable. `auto` (the default) resolves to
+//! the portable-SIMD lane-blocked kernels; `scalar` is the verbatim
+//! reference the parity suite (rust/tests/backend.rs) pins it against.
 
 use std::path::Path;
 
@@ -23,7 +34,8 @@ use memx::fault::{FaultConfig, FaultModel};
 use memx::mapper::{self, MapMode};
 use memx::nn::{Manifest, WeightStore};
 use memx::pipeline::{
-    argmax, default_device, image_to_input, Fidelity, PipelineBuilder, SolverStrategy,
+    argmax, default_device, image_to_input, BackendChoice, Fidelity, PipelineBuilder,
+    SolverStrategy,
 };
 use memx::power;
 use memx::util::bin::Dataset;
@@ -51,10 +63,13 @@ fn synthetic_tour() -> anyhow::Result<()> {
         // SolverStrategy::Auto (the default) keeps small segmented
         // circuits on the direct factor engine and moves giant monolithic
         // crossbars (the paper's 2050x1024 case) onto preconditioned GMRES
-        // — see spice::krylov
+        // — see spice::krylov. BackendChoice::Auto likewise resolves the
+        // dense kernels (SIMD unless MEMX_BACKEND overrides — see
+        // memx::backend)
         let mut pipe = PipelineBuilder::new()
             .fidelity(fidelity)
             .solver(SolverStrategy::Auto)
+            .backend(BackendChoice::Auto)
             .segment(8)
             .build_fc_stack(&dims, &dev, 7)?;
         let logits = pipe.forward_batch(&batch)?;

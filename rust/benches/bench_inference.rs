@@ -9,10 +9,12 @@
 //!
 //!   cargo bench --bench bench_inference
 //!
-//! `MEMX_BENCH_QUICK=1` runs the reduced CI smoke variant: only the
-//! full-chain spice conformance workload (the demo network with every §3
-//! module circuit-simulated — BN pair, GAP column, conv banks, Fig 4
-//! activations — pinned against the behavioural reference).
+//! `MEMX_BENCH_QUICK=1` runs the reduced CI smoke variant: the full-chain
+//! spice conformance workload (the demo network with every §3 module
+//! circuit-simulated — BN pair, GAP column, conv banks, Fig 4
+//! activations — pinned against the behavioural reference) plus the
+//! dense-kernel backend head-to-head, which asserts the SIMD backend has
+//! not regressed more than 10% vs scalar on the batched spice forward.
 
 use memx::pipeline::{default_device, Fidelity, PipelineBuilder};
 use memx::util::bench::{append_json_report, black_box, Bench};
@@ -57,6 +59,60 @@ fn pipeline_workload() -> anyhow::Result<()> {
     }
     b.table("pipeline batched forward");
     match append_json_report("BENCH_pipeline.json", "bench_inference_pipeline", &b.rows, &derived)
+    {
+        Ok(()) => println!("(appended to BENCH_pipeline.json)"),
+        Err(e) => eprintln!("warning: could not append BENCH_pipeline.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Scalar vs portable-SIMD dense kernels on the batched spice forward:
+/// same fc stack, same inputs, backend pinned per pipeline via
+/// [`PipelineBuilder::backend`]. Records `spice_b{N}_simd_speedup` derived
+/// fields in BENCH_pipeline.json; in quick mode (the CI smoke) asserts the
+/// SIMD backend has not regressed more than 10% vs scalar.
+fn backend_workload(quick: bool) -> anyhow::Result<()> {
+    use memx::pipeline::BackendChoice;
+
+    let dev = default_device();
+    let dims = [96usize, 96, 48, 10];
+    let mut rng = Rng::new(13);
+    let inputs: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..dims[0]).map(|_| rng.range_f64(-0.5, 0.5)).collect())
+        .collect();
+
+    println!("\n== spice batched forward: scalar vs simd dense kernels (fc {dims:?}) ==");
+    let mut b = Bench::quick();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let batches: &[usize] = if quick { &[16] } else { &[16, 64] };
+    for &batch in batches {
+        let chunk = &inputs[..batch];
+        let mut medians = Vec::with_capacity(2);
+        for backend in [BackendChoice::Scalar, BackendChoice::Simd] {
+            let mut pipe = PipelineBuilder::new()
+                .fidelity(Fidelity::Spice)
+                .segment(32)
+                .backend(backend)
+                .build_fc_stack(&dims, &dev, 3)?;
+            pipe.forward_batch(chunk)?; // cold pass primes the factor caches
+            let stats = b.run(&format!("pipeline spice b{batch} {backend}"), || {
+                black_box(pipe.forward_batch(chunk).expect("forward_batch"));
+            });
+            medians.push(stats.median.as_secs_f64());
+        }
+        let speedup = medians[0] / medians[1].max(1e-12);
+        println!("    -> b{batch} simd speedup {speedup:.2}x");
+        derived.push((format!("spice_b{batch}_simd_speedup"), speedup));
+        if quick {
+            assert!(
+                speedup >= 0.9,
+                "simd backend regressed >10% vs scalar on the spice batched \
+                 forward (b{batch}): {speedup:.2}x"
+            );
+        }
+    }
+    b.table("spice forward: dense-kernel backends");
+    match append_json_report("BENCH_pipeline.json", "bench_inference_backend", &b.rows, &derived)
     {
         Ok(()) => println!("(appended to BENCH_pipeline.json)"),
         Err(e) => eprintln!("warning: could not append BENCH_pipeline.json: {e}"),
@@ -273,10 +329,12 @@ fn pjrt_workload() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     if std::env::var("MEMX_BENCH_QUICK").is_ok() {
-        // CI smoke: the full-chain spice conformance workload only
-        return fidelity_chain_workload();
+        // CI smoke: full-chain spice conformance + the backend regression gate
+        fidelity_chain_workload()?;
+        return backend_workload(true);
     }
     pipeline_workload()?;
+    backend_workload(false)?;
     serve_workload()?;
     fidelity_chain_workload()?;
     analytical_workload()?;

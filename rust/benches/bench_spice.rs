@@ -4,13 +4,21 @@
 //! monolithic crossbars; Smart stays near-linear), plus the
 //! factor-once/solve-many engine: a sweep/Newton-style repeated-solve
 //! workload (same topology, new source values every iteration) comparing
-//! the seed per-call `solve_with_stats` path against cached re-solves.
+//! the seed per-call `solve_with_stats` path against cached re-solves,
+//! and the dense-kernel backends head-to-head (scalar reference vs the
+//! portable-SIMD lane-blocked kernels) on the cached multi-RHS resolve.
 //!
 //!   cargo bench --bench bench_spice
 //!
-//! Appends a run record (rows + cached-vs-cold speedups) to
-//! BENCH_spice.json at the repo root.
+//! Appends a run record (rows + cached-vs-cold and simd-vs-scalar
+//! speedups) to BENCH_spice.json at the repo root. `MEMX_BENCH_QUICK=1`
+//! runs only the backend head-to-head and *asserts* the SIMD backend has
+//! not regressed more than 10% vs scalar — the CI perf smoke.
 
+use std::sync::Arc;
+
+use memx::backend;
+use memx::spice::factor::{self, Numeric};
 use memx::spice::krylov::SolverStrategy;
 use memx::spice::solve::{solve_dense, Ordering, SparseSys};
 use memx::spice::{synthetic_crossbar_circuit, Circuit, Element};
@@ -28,8 +36,9 @@ fn drift_values(c: &mut Circuit, rm_idx: &[usize], k: usize) {
     }
 }
 
-fn main() {
-    let mut b = Bench::quick();
+/// Dense baseline, sparse orderings on crossbar MNA systems, and the
+/// block-diagonal (segmented limit case) raw sparse system.
+fn scaling_sections(b: &mut Bench) {
     let mut rng = Rng::new(31);
 
     // dense baseline on small systems
@@ -76,13 +85,13 @@ fn main() {
             black_box(s.solve().unwrap());
         });
     }
+}
 
-    // --- factor-once/solve-many: repeated-solve workload ---------------
-    // Sweep/Newton style: same topology every iteration, new source values
-    // (RHS-only edits). Cold = the seed per-call reference elimination;
-    // cached = the factored engine reusing the symbolic factorization
-    // (pure re-solves at O(nnz(L+U))).
-    let mut derived: Vec<(String, f64)> = Vec::new();
+/// Factor-once/solve-many: sweep/Newton style — same topology every
+/// iteration, new source values (RHS-only edits). Cold = the seed per-call
+/// reference elimination; cached = the factored engine reusing the
+/// symbolic factorization (pure re-solves at O(nnz(L+U))).
+fn factor_once_sections(b: &mut Bench, derived: &mut Vec<(String, f64)>) {
     for &(inputs, cols) in &[(128usize, 32usize), (256, 64), (512, 128)] {
         let mut circuit = synthetic_crossbar_circuit(inputs, cols, 100.0, 33 ^ inputs as u64);
         let vidx: Vec<usize> = (0..inputs)
@@ -104,19 +113,20 @@ fn main() {
             bump(&mut circuit, point);
             black_box(circuit.dc_op().unwrap());
         });
-        let speedup =
-            cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
+        let speedup = cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
         println!("    -> cached-resolve median speedup {speedup:.1}x");
         derived.push((format!("sweep_{inputs}x{cols}_median_speedup"), speedup));
     }
+}
 
-    // --- spice::krylov: iterative vs direct on monolithic systems ------
-    // Two workloads per size: (a) value drift — direct must refactor every
-    // point, warm GMRES reuses the stale complete LU as preconditioner
-    // with no refactorization; (b) RHS-only sweep served from the cached
-    // ILU(0) pattern. Iteration counts, final residuals, preconditioner
-    // reuse hits and per-strategy peak entries land in `derived`
-    // (BENCH_spice.json schema).
+/// spice::krylov — iterative vs direct on monolithic systems. Two
+/// workloads per size: (a) value drift — direct must refactor every
+/// point, warm GMRES reuses the stale complete LU as preconditioner
+/// with no refactorization; (b) RHS-only sweep served from the cached
+/// ILU(0) pattern. Iteration counts, final residuals, preconditioner
+/// reuse hits and per-strategy peak entries land in `derived`
+/// (BENCH_spice.json schema).
+fn krylov_sections(b: &mut Bench, derived: &mut Vec<(String, f64)>) {
     let iterative = SolverStrategy::Iterative { restart: 24, tol: 1e-11, max_iter: 600 };
     for &(inputs, cols) in &[(256usize, 64usize), (512, 128)] {
         let mut direct_c = synthetic_crossbar_circuit(inputs, cols, 100.0, 35 ^ inputs as u64);
@@ -156,8 +166,7 @@ fn main() {
             worst_res = worst_res.max(st.residual);
             black_box(x);
         });
-        let warm_speedup =
-            dstats.median.as_secs_f64() / wstats.median.as_secs_f64().max(1e-12);
+        let warm_speedup = dstats.median.as_secs_f64() / wstats.median.as_secs_f64().max(1e-12);
         println!(
             "    -> warm gmres {:.1}x vs refactor; {:.1} iters/solve, {} reuse hits",
             warm_speedup,
@@ -201,6 +210,65 @@ fn main() {
         derived.push((format!("{tag}_peak_entries_direct"), peak_direct as f64));
         derived.push((format!("{tag}_peak_entries_gmres"), peak_gmres as f64));
     }
+}
+
+/// Dense-kernel backends head-to-head on the batched cached-resolve path:
+/// factor once, then multi-RHS forward/backward substitution (the batched
+/// crossbar read inner loop) under the scalar reference and the
+/// portable-SIMD lane-blocked kernels. Records `*_simd_speedup` derived
+/// fields; in quick mode asserts the SIMD backend has not regressed more
+/// than 10% vs scalar on any size.
+fn backend_sections(b: &mut Bench, derived: &mut Vec<(String, f64)>, quick: bool) {
+    let mut rng = Rng::new(41);
+    let sizes: &[(usize, usize)] = if quick { &[(768, 16)] } else { &[(768, 16), (1536, 32)] };
+    for &(n, k) in sizes {
+        let mut sys = SparseSys::new(n);
+        for i in 0..n {
+            sys.add(i, i, 5.0 + rng.f64());
+            for _ in 0..4 {
+                let j = rng.below(n);
+                if i != j {
+                    sys.add(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let sym = Arc::new(factor::analyze(&sys, Ordering::Smart).unwrap());
+        let mut num = Numeric::new(sym);
+        num.assemble(&sys).unwrap();
+        num.refactor().unwrap();
+        let rhss: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let scalar = b.run(&format!("multi-rhs resolve n={n} k={k} scalar"), || {
+            black_box(num.solve_multi_kern(&rhss, backend::scalar()).unwrap());
+        });
+        let simd = b.run(&format!("multi-rhs resolve n={n} k={k} simd"), || {
+            black_box(num.solve_multi_kern(&rhss, backend::simd()).unwrap());
+        });
+        let speedup = scalar.median.as_secs_f64() / simd.median.as_secs_f64().max(1e-12);
+        println!("    -> simd multi-RHS speedup {speedup:.2}x");
+        derived.push((format!("multi_rhs_n{n}_k{k}_simd_speedup"), speedup));
+        if quick {
+            assert!(
+                speedup >= 0.9,
+                "simd backend regressed >10% vs scalar on the cached multi-RHS \
+                 resolve (n={n}, k={k}): {speedup:.2}x"
+            );
+        }
+    }
+}
+
+fn main() {
+    let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
+    let mut b = Bench::quick();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    if !quick {
+        scaling_sections(&mut b);
+        factor_once_sections(&mut b, &mut derived);
+        krylov_sections(&mut b, &mut derived);
+    }
+    backend_sections(&mut b, &mut derived, quick);
 
     b.table("SPICE solver scaling");
     match append_json_report("BENCH_spice.json", "bench_spice", &b.rows, &derived) {

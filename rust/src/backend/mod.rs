@@ -1,0 +1,791 @@
+//! `memx::backend` — pluggable dense-kernel compute backends for the
+//! analog hot loops.
+//!
+//! Every fidelity level, module, the transient engine and the server spend
+//! their wall time in a handful of dense batch kernels: the multi-RHS
+//! forward/backward substitution sweeps of the factored engine
+//! ([`crate::spice::factor::Numeric::solve_multi`]), the GMRES
+//! matvec/axpy/dot/norm primitives and Arnoldi update
+//! ([`crate::spice::krylov::gmres`]), the ILU(0) triangular sweeps
+//! ([`crate::spice::krylov::Ilu0::solve`]), the MNA RHS assembly of
+//! batched crossbar reads, and the conv im2col reorder in
+//! [`crate::nn`]. The [`Backend`] trait extracts exactly those kernels
+//! behind one object-safe interface so implementations can be swapped
+//! end-to-end — `rjwalters__spicier` mirrors this shape with its
+//! `spicier-simd` + `backend-cpu/cuda/metal` crates, and the trait surface
+//! here is deliberately narrow enough for a future GPU crate.
+//!
+//! Two implementations ship today:
+//!
+//! * [`Scalar`] — the reference kernels, extracted verbatim from the
+//!   pre-backend code. The correctness baseline every other backend is
+//!   parity-pinned against (`rust/tests/backend.rs`).
+//! * [`Simd`] — a portable-SIMD CPU backend. The multi-RHS substitution
+//!   sweeps repack the RHS columns into an interleaved
+//!   structure-of-arrays buffer and stream fixed-width lanes (8/4/2
+//!   columns at a time, narrowing with the remaining batch) through the
+//!   factor's row program, so the inner loops are contiguous
+//!   fixed-trip-count `f64` arithmetic that LLVM auto-vectorizes into
+//!   AVX2 on the CI host — no `unsafe`, no nightly features. Per-lane
+//!   operation order is identical to [`Scalar`]'s per-column order
+//!   (including the `/diag` divisions), so multi-RHS substitution results
+//!   are **bit-identical** between the two backends; reduction kernels
+//!   ([`Backend::dot`], [`Backend::norm2`]) use multiple accumulators and
+//!   may differ from `Scalar` by ordinary rounding (pinned to ≤1e-12
+//!   relative by the parity proptests).
+//!
+//! # Kernel contract: pattern-fixed, value-only
+//!
+//! Backends receive borrowed *views* of a factorization's fixed structure
+//! ([`LuLowerParts`]/[`LuUpperParts`]/[`IluParts`]) plus the current value
+//! arrays — the same rule that keeps a cached
+//! [`Symbolic`](crate::spice::factor::Symbolic) valid across value edits.
+//! A kernel must never reorder, dedup or otherwise reinterpret the
+//! structure arrays: the (pivot, target) program encodes the elimination
+//! semantics, and replaying it in program order per RHS column is what
+//! lets the driver swap backends without re-certifying results. Kernels
+//! are pure compute: no allocation visible to the caller beyond the
+//! returned vectors, no retained state, `Sync` so batched sweeps can share
+//! one backend across worker threads.
+//!
+//! # Selection
+//!
+//! [`BackendChoice`] threads end-to-end: `--backend` on the
+//! `spice`/`accuracy`/`serve`/`tran` CLIs → `PipelineBuilder::backend` →
+//! every resident `CrossbarSim`/[`Circuit`](crate::spice::Circuit) → the
+//! transient engine and the server. [`resolve`] maps a choice to the
+//! kernel set: an explicit `Scalar`/`Simd` always wins; `Auto` (the
+//! default everywhere) honours the `MEMX_BACKEND` environment variable
+//! (`scalar`|`simd`) and otherwise picks [`Simd`].
+//!
+//! Process-wide kernel-time counters ([`subst_ns`]/[`matvec_ns`])
+//! accumulate the nanoseconds spent inside substitution sweeps and GMRES
+//! matvecs, so `memx report` and `coordinator::Snapshot` can attribute
+//! wall time to kernels, not just solves.
+//!
+//! Follow-ons (ROADMAP): a GPU backend behind the same trait, and a
+//! matrix-free stamping hook so [`Backend::spmv`] can consume a stamping
+//! closure instead of a materialized triplet list.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::bail;
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// Which kernel set to run the dense batch math on (see [`resolve`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// The reference kernels (pre-backend code, extracted verbatim).
+    Scalar,
+    /// The portable-SIMD CPU kernels (SoA multi-RHS lane blocking).
+    Simd,
+    /// `MEMX_BACKEND` if set, otherwise [`BackendChoice::Simd`].
+    #[default]
+    Auto,
+}
+
+impl FromStr for BackendChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<BackendChoice> {
+        match s {
+            "scalar" => Ok(BackendChoice::Scalar),
+            "simd" => Ok(BackendChoice::Simd),
+            "auto" => Ok(BackendChoice::Auto),
+            other => bail!("unknown backend '{other}' (scalar|simd|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendChoice::Scalar => "scalar",
+            BackendChoice::Simd => "simd",
+            BackendChoice::Auto => "auto",
+        })
+    }
+}
+
+static ENV_CHOICE: OnceLock<Option<BackendChoice>> = OnceLock::new();
+
+/// `MEMX_BACKEND` environment override, parsed once per process. An
+/// unparseable value is reported to stderr and ignored.
+fn env_override() -> Option<BackendChoice> {
+    *ENV_CHOICE.get_or_init(|| match std::env::var("MEMX_BACKEND") {
+        Ok(s) => match s.parse::<BackendChoice>() {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("memx: ignoring MEMX_BACKEND: {e}");
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+static SCALAR: Scalar = Scalar;
+static SIMD: Simd = Simd;
+
+/// The reference kernel set (always available; parity baseline).
+pub fn scalar() -> &'static dyn Backend {
+    &SCALAR
+}
+
+/// The portable-SIMD CPU kernel set.
+pub fn simd() -> &'static dyn Backend {
+    &SIMD
+}
+
+/// Map a [`BackendChoice`] to its kernel set. An explicit
+/// `Scalar`/`Simd` always wins (a CLI flag beats the environment); `Auto`
+/// defers to `MEMX_BACKEND` when set and otherwise runs [`Simd`].
+pub fn resolve(choice: BackendChoice) -> &'static dyn Backend {
+    let effective = match choice {
+        BackendChoice::Auto => env_override().unwrap_or(BackendChoice::Simd),
+        explicit => explicit,
+    };
+    match effective {
+        BackendChoice::Scalar => &SCALAR,
+        BackendChoice::Simd | BackendChoice::Auto => &SIMD,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-time attribution
+// ---------------------------------------------------------------------------
+
+static SUBST_NS: AtomicU64 = AtomicU64::new(0);
+static MATVEC_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide nanoseconds spent inside triangular substitution sweeps
+/// (factored multi-RHS solves + ILU(0) preconditioner applications).
+pub fn subst_ns() -> u64 {
+    SUBST_NS.load(Ordering::Relaxed)
+}
+
+/// Process-wide nanoseconds spent inside GMRES matrix-vector products.
+pub fn matvec_ns() -> u64 {
+    MATVEC_NS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn add_subst_ns(ns: u64) {
+    SUBST_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+pub(crate) fn add_matvec_ns(ns: u64) {
+    MATVEC_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Structure views
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of a complete factor's lower program: for pivot `p`,
+/// targets `l_ptr[p]..l_ptr[p+1]` of `(l_rows, lvals)` eliminate against
+/// pivot row `pivots[p].1` (unit diagonal implicit). The structure arrays
+/// are fixed per [`Symbolic`](crate::spice::factor::Symbolic); only
+/// `lvals` changes across refactors.
+pub struct LuLowerParts<'a> {
+    pub pivots: &'a [(usize, usize)],
+    pub l_ptr: &'a [usize],
+    pub l_rows: &'a [usize],
+    pub lvals: &'a [f64],
+}
+
+/// Borrowed view of a complete factor's upper rows: pivot `p` solves
+/// column `pivots[p].0` from RHS row `pivots[p].1` over U entries
+/// `u_ptr[p]..u_ptr[p+1]` of `(u_cols, u_slots)` — the diagonal slot
+/// first — against the value array `vals`.
+pub struct LuUpperParts<'a> {
+    pub pivots: &'a [(usize, usize)],
+    pub u_ptr: &'a [usize],
+    pub u_cols: &'a [usize],
+    pub u_slots: &'a [usize],
+    pub vals: &'a [f64],
+}
+
+/// Borrowed CSR view of an ILU(0) factor (already row-permuted): row `i`
+/// spans `ptr[i]..ptr[i+1]` of `(cols, vals)`; `diag[i]` is the absolute
+/// index of its diagonal; strictly-lower slots hold the L multipliers.
+pub struct IluParts<'a> {
+    pub ptr: &'a [usize],
+    pub diag: &'a [usize],
+    pub cols: &'a [usize],
+    pub vals: &'a [f64],
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// One set of dense batch kernels (see the module docs for the contract).
+/// Object-safe and `Sync`: one `&'static dyn Backend` is shared by every
+/// solve of a batched sweep across worker threads.
+pub trait Backend: Sync {
+    /// Short label for [`SolveStats`](crate::spice::solve::SolveStats) /
+    /// bench attribution.
+    fn name(&self) -> &'static str;
+
+    /// Single-RHS forward substitution: replay the eliminations on `w` in
+    /// program order.
+    fn subst_lower(&self, lu: &LuLowerParts<'_>, w: &mut [f64]);
+
+    /// Single-RHS backward substitution over the U rows into `x`
+    /// (zero-initialized by the caller). Returns `Some(column)` when a
+    /// diagonal has collapsed below 1e-300 — the caller reports the
+    /// singular column.
+    fn subst_upper(&self, lu: &LuUpperParts<'_>, w: &[f64], x: &mut [f64]) -> Option<usize>;
+
+    /// Multi-RHS forward substitution: one traversal of the lower program
+    /// applied to every column of `w`.
+    fn subst_lower_multi(&self, lu: &LuLowerParts<'_>, w: &mut [Vec<f64>]);
+
+    /// Multi-RHS backward substitution into `xs` (zero-initialized, same
+    /// length as `w`). Returns `Some(column)` on a collapsed diagonal.
+    fn subst_upper_multi(
+        &self,
+        lu: &LuUpperParts<'_>,
+        w: &[Vec<f64>],
+        xs: &mut [Vec<f64>],
+    ) -> Option<usize>;
+
+    /// ILU(0) preconditioner application: unit-lower forward sweep then
+    /// upper backward sweep, in place over the (already permuted) `w`.
+    /// Returns `Some(row)` on a collapsed diagonal.
+    fn ilu_sweep(&self, ilu: &IluParts<'_>, w: &mut [f64]) -> Option<usize>;
+
+    /// Dot product `aᵀb` (the Arnoldi projection kernel).
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// `y += alpha * x` (the Arnoldi update / correction kernel).
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+
+    /// Euclidean norm `‖v‖₂`.
+    fn norm2(&self, v: &[f64]) -> f64;
+
+    /// Sparse matrix-vector product over a triplet stream: `y = A x`
+    /// (`y` is overwritten; duplicate `(row, col)` entries accumulate).
+    fn spmv(&self, rows: &[usize], cols: &[usize], vals: &[f64], x: &[f64], y: &mut [f64]);
+
+    /// Conv-weight im2col reorder: `[k1, k2, cin, cout]` row-major data
+    /// into the `(cin*k1*k2) x cout` matmul layout (`dims` in that order).
+    /// Operates on the weight blob's native `f32` (see
+    /// [`crate::nn::tensor::Tensor::as_matrix`]).
+    fn conv_reorder(&self, data: &[f32], dims: [usize; 4], m: &mut [f32]);
+
+    /// Batched MNA RHS assembly: column `k` is column `k-1` (column 0:
+    /// `base`) with the slot overrides `sets[k]` scattered on top — the
+    /// running-override semantics of
+    /// [`Circuit::dc_op_batch`](crate::spice::Circuit::dc_op_batch), where
+    /// each batch entry inherits the source values of the previous one.
+    fn rhs_columns(&self, base: &[f64], sets: &[Vec<(usize, f64)>]) -> Vec<Vec<f64>> {
+        let mut cur = base.to_vec();
+        let mut out = Vec::with_capacity(sets.len());
+        for set in sets {
+            for &(slot, v) in set {
+                cur[slot] = v;
+            }
+            out.push(cur.clone());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared reference kernels (used by Scalar everywhere, and by Simd where
+// lane blocking has nothing to add)
+// ---------------------------------------------------------------------------
+
+fn ref_subst_lower(lu: &LuLowerParts<'_>, w: &mut [f64]) {
+    for p in 0..lu.pivots.len() {
+        let bp = w[lu.pivots[p].1];
+        if bp != 0.0 {
+            for t in lu.l_ptr[p]..lu.l_ptr[p + 1] {
+                w[lu.l_rows[t]] -= lu.lvals[t] * bp;
+            }
+        }
+    }
+}
+
+fn ref_subst_upper(lu: &LuUpperParts<'_>, w: &[f64], x: &mut [f64]) -> Option<usize> {
+    for p in (0..lu.pivots.len()).rev() {
+        let (col, prow) = lu.pivots[p];
+        let u = lu.u_ptr[p]..lu.u_ptr[p + 1];
+        let mut acc = w[prow];
+        for k in u.clone().skip(1) {
+            acc -= lu.vals[lu.u_slots[k]] * x[lu.u_cols[k]];
+        }
+        let diag = lu.vals[lu.u_slots[u.start]];
+        if diag.abs() < 1e-300 {
+            return Some(col);
+        }
+        x[col] = acc / diag;
+    }
+    None
+}
+
+fn ref_subst_lower_multi(lu: &LuLowerParts<'_>, w: &mut [Vec<f64>]) {
+    for p in 0..lu.pivots.len() {
+        let prow = lu.pivots[p].1;
+        for t in lu.l_ptr[p]..lu.l_ptr[p + 1] {
+            let f = lu.lvals[t];
+            if f == 0.0 {
+                continue;
+            }
+            let r = lu.l_rows[t];
+            for wb in w.iter_mut() {
+                wb[r] -= f * wb[prow];
+            }
+        }
+    }
+}
+
+fn ref_subst_upper_multi(
+    lu: &LuUpperParts<'_>,
+    w: &[Vec<f64>],
+    xs: &mut [Vec<f64>],
+) -> Option<usize> {
+    for p in (0..lu.pivots.len()).rev() {
+        let (col, prow) = lu.pivots[p];
+        let u = lu.u_ptr[p]..lu.u_ptr[p + 1];
+        let diag = lu.vals[lu.u_slots[u.start]];
+        if diag.abs() < 1e-300 {
+            return Some(col);
+        }
+        for (x, wb) in xs.iter_mut().zip(w) {
+            let mut acc = wb[prow];
+            for kk in u.clone().skip(1) {
+                acc -= lu.vals[lu.u_slots[kk]] * x[lu.u_cols[kk]];
+            }
+            x[col] = acc / diag;
+        }
+    }
+    None
+}
+
+fn ref_ilu_sweep(ilu: &IluParts<'_>, w: &mut [f64]) -> Option<usize> {
+    let n = ilu.diag.len();
+    // forward: unit-diagonal L (strictly-lower slots hold multipliers)
+    for i in 0..n {
+        let mut acc = w[i];
+        for t in ilu.ptr[i]..ilu.diag[i] {
+            acc -= ilu.vals[t] * w[ilu.cols[t]];
+        }
+        w[i] = acc;
+    }
+    // backward: U
+    for i in (0..n).rev() {
+        let d = ilu.diag[i];
+        let mut acc = w[i];
+        for t in (d + 1)..ilu.ptr[i + 1] {
+            acc -= ilu.vals[t] * w[ilu.cols[t]];
+        }
+        let dv = ilu.vals[d];
+        if dv.abs() < 1e-300 {
+            return Some(i);
+        }
+        w[i] = acc / dv;
+    }
+    None
+}
+
+fn ref_spmv(rows: &[usize], cols: &[usize], vals: &[f64], x: &[f64], y: &mut [f64]) {
+    for v in y.iter_mut() {
+        *v = 0.0;
+    }
+    for ((&i, &j), &v) in rows.iter().zip(cols).zip(vals) {
+        y[i] += v * x[j];
+    }
+}
+
+fn ref_axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += alpha * *xv;
+    }
+}
+
+fn ref_conv_reorder(data: &[f32], [k1, k2, cin, cout]: [usize; 4], m: &mut [f32]) {
+    for a in 0..k1 {
+        for b in 0..k2 {
+            for c in 0..cin {
+                for o in 0..cout {
+                    let src = ((a * k2 + b) * cin + c) * cout + o;
+                    let dst = ((c * k1 * k2) + a * k2 + b) * cout + o;
+                    m[dst] = data[src];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar — the reference backend
+// ---------------------------------------------------------------------------
+
+/// The reference kernels, extracted verbatim from the pre-backend solver
+/// code. Every other backend is parity-pinned against this one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scalar;
+
+impl Backend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn subst_lower(&self, lu: &LuLowerParts<'_>, w: &mut [f64]) {
+        ref_subst_lower(lu, w);
+    }
+
+    fn subst_upper(&self, lu: &LuUpperParts<'_>, w: &[f64], x: &mut [f64]) -> Option<usize> {
+        ref_subst_upper(lu, w, x)
+    }
+
+    fn subst_lower_multi(&self, lu: &LuLowerParts<'_>, w: &mut [Vec<f64>]) {
+        ref_subst_lower_multi(lu, w);
+    }
+
+    fn subst_upper_multi(
+        &self,
+        lu: &LuUpperParts<'_>,
+        w: &[Vec<f64>],
+        xs: &mut [Vec<f64>],
+    ) -> Option<usize> {
+        ref_subst_upper_multi(lu, w, xs)
+    }
+
+    fn ilu_sweep(&self, ilu: &IluParts<'_>, w: &mut [f64]) -> Option<usize> {
+        ref_ilu_sweep(ilu, w)
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        ref_axpy(alpha, x, y);
+    }
+
+    fn norm2(&self, v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    fn spmv(&self, rows: &[usize], cols: &[usize], vals: &[f64], x: &[f64], y: &mut [f64]) {
+        ref_spmv(rows, cols, vals, x, y);
+    }
+
+    fn conv_reorder(&self, data: &[f32], dims: [usize; 4], m: &mut [f32]) {
+        ref_conv_reorder(data, dims, m);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simd — portable-SIMD CPU backend (SoA multi-RHS lane blocking)
+// ---------------------------------------------------------------------------
+
+/// Portable-SIMD CPU kernels: the multi-RHS substitution sweeps interleave
+/// RHS columns into lane-width blocks (8/4/2, narrowing with the remaining
+/// batch; a final single column runs the reference loop) so the inner
+/// arithmetic is contiguous fixed-width `f64` ops that LLVM
+/// auto-vectorizes. Per-lane operation order matches [`Scalar`]'s
+/// per-column order exactly — multi-RHS results are bit-identical.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Simd;
+
+/// Interleave `cols` (each length `n`) into one `n * L` SoA buffer:
+/// row `r` of lane `l` lives at `buf[r * L + l]`.
+fn pack<const L: usize>(cols: &[Vec<f64>], n: usize) -> Vec<f64> {
+    let mut buf = vec![0.0f64; n * L];
+    for (lane, col) in cols.iter().enumerate() {
+        for (r, &v) in col.iter().enumerate() {
+            buf[r * L + lane] = v;
+        }
+    }
+    buf
+}
+
+/// Scatter an SoA buffer back into per-column vectors.
+fn unpack<const L: usize>(buf: &[f64], cols: &mut [Vec<f64>]) {
+    for (lane, col) in cols.iter_mut().enumerate() {
+        for (r, v) in col.iter_mut().enumerate() {
+            *v = buf[r * L + lane];
+        }
+    }
+}
+
+fn lower_multi_block<const L: usize>(lu: &LuLowerParts<'_>, cols: &mut [Vec<f64>]) {
+    debug_assert_eq!(cols.len(), L);
+    let n = cols[0].len();
+    let mut buf = pack::<L>(cols, n);
+    for p in 0..lu.pivots.len() {
+        let (t0, t1) = (lu.l_ptr[p], lu.l_ptr[p + 1]);
+        if t0 == t1 {
+            continue;
+        }
+        // elimination targets never alias the pivot row, so its lanes can
+        // be hoisted once per pivot
+        let prow = lu.pivots[p].1;
+        let mut piv = [0.0f64; L];
+        piv.copy_from_slice(&buf[prow * L..prow * L + L]);
+        for t in t0..t1 {
+            let f = lu.lvals[t];
+            if f == 0.0 {
+                continue;
+            }
+            let r = lu.l_rows[t];
+            let dst = &mut buf[r * L..r * L + L];
+            for (d, pv) in dst.iter_mut().zip(&piv) {
+                *d -= f * *pv;
+            }
+        }
+    }
+    unpack::<L>(&buf, cols);
+}
+
+fn upper_multi_block<const L: usize>(
+    lu: &LuUpperParts<'_>,
+    w: &[Vec<f64>],
+    xs: &mut [Vec<f64>],
+) -> Option<usize> {
+    debug_assert_eq!(w.len(), L);
+    let n = w[0].len();
+    let wbuf = pack::<L>(w, n);
+    let mut xbuf = vec![0.0f64; n * L];
+    for p in (0..lu.pivots.len()).rev() {
+        let (col, prow) = lu.pivots[p];
+        let (u0, u1) = (lu.u_ptr[p], lu.u_ptr[p + 1]);
+        let diag = lu.vals[lu.u_slots[u0]];
+        if diag.abs() < 1e-300 {
+            return Some(col);
+        }
+        let mut acc = [0.0f64; L];
+        acc.copy_from_slice(&wbuf[prow * L..prow * L + L]);
+        for k in (u0 + 1)..u1 {
+            let v = lu.vals[lu.u_slots[k]];
+            let xc = lu.u_cols[k];
+            let xrow = &xbuf[xc * L..xc * L + L];
+            for (a, xv) in acc.iter_mut().zip(xrow) {
+                *a -= v * *xv;
+            }
+        }
+        let dst = &mut xbuf[col * L..col * L + L];
+        for (d, a) in dst.iter_mut().zip(&acc) {
+            *d = *a / diag;
+        }
+    }
+    unpack::<L>(&xbuf, xs);
+    None
+}
+
+/// Widest lane block not exceeding the remaining batch (8 → 4 → 2 → 1).
+fn lane_width(remaining: usize) -> usize {
+    match remaining {
+        0 | 1 => remaining,
+        2 | 3 => 2,
+        4..=7 => 4,
+        _ => 8,
+    }
+}
+
+impl Backend for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn subst_lower(&self, lu: &LuLowerParts<'_>, w: &mut [f64]) {
+        // one RHS has no lanes to fill — the reference sweep is optimal
+        ref_subst_lower(lu, w);
+    }
+
+    fn subst_upper(&self, lu: &LuUpperParts<'_>, w: &[f64], x: &mut [f64]) -> Option<usize> {
+        ref_subst_upper(lu, w, x)
+    }
+
+    fn subst_lower_multi(&self, lu: &LuLowerParts<'_>, w: &mut [Vec<f64>]) {
+        let mut rest = w;
+        while !rest.is_empty() {
+            let width = lane_width(rest.len());
+            let (head, tail) = rest.split_at_mut(width);
+            match width {
+                8 => lower_multi_block::<8>(lu, head),
+                4 => lower_multi_block::<4>(lu, head),
+                2 => lower_multi_block::<2>(lu, head),
+                // a leftover single column replays the multi loop (not the
+                // single-RHS one) so its zero-skip pattern — and therefore
+                // its bit pattern — matches the lane blocks exactly
+                _ => ref_subst_lower_multi(lu, head),
+            }
+            rest = tail;
+        }
+    }
+
+    fn subst_upper_multi(
+        &self,
+        lu: &LuUpperParts<'_>,
+        w: &[Vec<f64>],
+        xs: &mut [Vec<f64>],
+    ) -> Option<usize> {
+        let mut done = 0;
+        while done < w.len() {
+            let width = lane_width(w.len() - done);
+            let wb = &w[done..done + width];
+            let xb = &mut xs[done..done + width];
+            let bad = match width {
+                8 => upper_multi_block::<8>(lu, wb, xb),
+                4 => upper_multi_block::<4>(lu, wb, xb),
+                2 => upper_multi_block::<2>(lu, wb, xb),
+                _ => ref_subst_upper_multi(lu, wb, xb),
+            };
+            if bad.is_some() {
+                return bad;
+            }
+            done += width;
+        }
+        None
+    }
+
+    fn ilu_sweep(&self, ilu: &IluParts<'_>, w: &mut [f64]) -> Option<usize> {
+        // the ILU sweep is a single-RHS dependence chain; lane blocking has
+        // nothing to add, so run the reference sweep (bit-identical)
+        ref_ilu_sweep(ilu, w)
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        // 4 independent accumulators break the serial-add dependence chain
+        // (reassociated vs Scalar: differs by ordinary rounding only)
+        let mut acc = [0.0f64; 4];
+        let mut chunks_a = a.chunks_exact(4);
+        let mut chunks_b = b.chunks_exact(4);
+        for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+            for ((s, x), y) in acc.iter_mut().zip(ca).zip(cb) {
+                *s += x * y;
+            }
+        }
+        let mut tail: f64 = chunks_a
+            .remainder()
+            .iter()
+            .zip(chunks_b.remainder())
+            .map(|(x, y)| x * y)
+            .sum();
+        for s in acc {
+            tail += s;
+        }
+        tail
+    }
+
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        // elementwise with no reduction: the reference loop already
+        // auto-vectorizes, and keeping it shared preserves bit-identity
+        ref_axpy(alpha, x, y);
+    }
+
+    fn norm2(&self, v: &[f64]) -> f64 {
+        self.dot(v, v).sqrt()
+    }
+
+    fn spmv(&self, rows: &[usize], cols: &[usize], vals: &[f64], x: &[f64], y: &mut [f64]) {
+        // scatter over an unsorted triplet stream (duplicates accumulate);
+        // kept identical to the reference until the matrix-free stamping
+        // hook lands a CSR-normalized path
+        ref_spmv(rows, cols, vals, x, y);
+    }
+
+    fn conv_reorder(&self, data: &[f32], [k1, k2, cin, cout]: [usize; 4], m: &mut [f32]) {
+        // both layouts are contiguous over the cout axis: copy whole lanes
+        for a in 0..k1 {
+            for b in 0..k2 {
+                for c in 0..cin {
+                    let src = ((a * k2 + b) * cin + c) * cout;
+                    let dst = ((c * k1 * k2) + a * k2 + b) * cout;
+                    m[dst..dst + cout].copy_from_slice(&data[src..src + cout]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parse_display_roundtrip() {
+        for s in ["scalar", "simd", "auto"] {
+            let parsed: BackendChoice = s.parse().unwrap();
+            assert_eq!(parsed.to_string(), s);
+        }
+        assert!("avx".parse::<BackendChoice>().is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn explicit_choice_resolves_regardless_of_env() {
+        assert_eq!(resolve(BackendChoice::Scalar).name(), "scalar");
+        assert_eq!(resolve(BackendChoice::Simd).name(), "simd");
+        // Auto lands on one of the two (env-dependent), never panics
+        let auto = resolve(BackendChoice::Auto).name();
+        assert!(auto == "scalar" || auto == "simd");
+    }
+
+    #[test]
+    fn dot_and_norm_agree_across_backends() {
+        let a: Vec<f64> = (0..37).map(|i| (i as f64 * 0.61).sin()).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64 * 0.23).cos()).collect();
+        let ds = scalar().dot(&a, &b);
+        let dv = simd().dot(&a, &b);
+        assert!((ds - dv).abs() <= 1e-12 * ds.abs().max(1.0), "{ds} vs {dv}");
+        let ns = scalar().norm2(&a);
+        let nv = simd().norm2(&a);
+        assert!((ns - nv).abs() <= 1e-12 * ns, "{ns} vs {nv}");
+    }
+
+    #[test]
+    fn conv_reorder_backends_identical() {
+        let dims = [3usize, 2, 4, 5];
+        let len = dims.iter().product::<usize>();
+        let data: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut ms = vec![0.0f32; len];
+        let mut mv = vec![1.0f32; len];
+        scalar().conv_reorder(&data, dims, &mut ms);
+        simd().conv_reorder(&data, dims, &mut mv);
+        assert_eq!(ms, mv);
+    }
+
+    #[test]
+    fn rhs_columns_running_override_semantics() {
+        let base = vec![1.0, 2.0, 3.0];
+        let sets = vec![vec![(0usize, 9.0)], vec![(2usize, 7.0)], vec![]];
+        let cols = scalar().rhs_columns(&base, &sets);
+        assert_eq!(cols[0], vec![9.0, 2.0, 3.0]);
+        // column 1 inherits column 0's override
+        assert_eq!(cols[1], vec![9.0, 2.0, 7.0]);
+        assert_eq!(cols[2], cols[1]);
+    }
+
+    #[test]
+    fn spmv_accumulates_duplicates() {
+        // y = A x with a duplicated (0,1) entry
+        let rows = [0usize, 0, 1];
+        let cols = [1usize, 1, 0];
+        let vals = [2.0, 3.0, 4.0];
+        let x = [10.0, 100.0];
+        let mut y = vec![1.0; 2];
+        simd().spmv(&rows, &cols, &vals, &x, &mut y);
+        assert_eq!(y, vec![500.0, 40.0]);
+    }
+
+    #[test]
+    fn lane_width_narrowing() {
+        assert_eq!(lane_width(64), 8);
+        assert_eq!(lane_width(8), 8);
+        assert_eq!(lane_width(7), 4);
+        assert_eq!(lane_width(3), 2);
+        assert_eq!(lane_width(1), 1);
+        assert_eq!(lane_width(0), 0);
+    }
+}

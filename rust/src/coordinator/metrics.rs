@@ -113,6 +113,12 @@ pub struct Snapshot {
     /// iterative-solver direct-factorization fallbacks (process-wide,
     /// read from [`crate::spice::solver_fallbacks`] at snapshot time)
     pub solver_fallbacks: u64,
+    /// nanoseconds spent in triangular-substitution kernels (process-wide,
+    /// read from [`crate::backend::subst_ns`] at snapshot time)
+    pub kernel_subst_ns: u64,
+    /// nanoseconds spent in GMRES matvec kernels (process-wide,
+    /// read from [`crate::backend::matvec_ns`] at snapshot time)
+    pub kernel_matvec_ns: u64,
     /// per-stage wall time in chain order (pipeline executors only)
     pub stages: Vec<StageStat>,
     /// per-module drift telemetry in chain order (fault-capable modules
@@ -197,6 +203,8 @@ impl Metrics {
             drift_detections: self.drift_detections.load(Ordering::Relaxed),
             recalibrations: self.recalibrations.load(Ordering::Relaxed),
             solver_fallbacks: crate::spice::solver_fallbacks(),
+            kernel_subst_ns: crate::backend::subst_ns(),
+            kernel_matvec_ns: crate::backend::matvec_ns(),
             stages,
             drift_modules: locked(&self.drift).clone(),
         }
@@ -237,6 +245,13 @@ impl Snapshot {
         }
         if self.solver_fallbacks > 0 {
             println!("  solver        {} iterative->direct fallbacks", self.solver_fallbacks);
+        }
+        if self.kernel_subst_ns > 0 || self.kernel_matvec_ns > 0 {
+            println!(
+                "  kernels       substitution {:?}  matvec {:?}",
+                Duration::from_nanos(self.kernel_subst_ns),
+                Duration::from_nanos(self.kernel_matvec_ns)
+            );
         }
         if !self.stages.is_empty() {
             // heaviest stages first; the chain is long, keep the tail quiet

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::BackendChoice;
 use crate::fault::FaultModel;
 use crate::pipeline::{image_to_input, Fidelity, ModuleDrift, Pipeline, PipelineBuilder, StageStat};
 use crate::util::argmax_rows;
@@ -221,6 +222,7 @@ impl PipelineExecutor {
         dir: &Path,
         fidelity: Fidelity,
         workers: usize,
+        backend: BackendChoice,
     ) -> Result<PipelineExecutor> {
         let m = crate::nn::Manifest::load(dir)?;
         let ws = crate::nn::WeightStore::load(dir, &m)?;
@@ -230,6 +232,7 @@ impl PipelineExecutor {
         // (0 = builder auto)
         let pipeline = PipelineBuilder::new()
             .fidelity(fidelity)
+            .backend(backend)
             .workers(if sched > 1 { 1 } else { 0 })
             .build(&m, &ws)?;
         Self::new(pipeline, (m.img, m.img, 3), &m.batch_sizes, sched)
@@ -443,6 +446,8 @@ pub enum Backend {
         fidelity: Fidelity,
         /// pipelined-scheduler width (0 = auto)
         workers: usize,
+        /// dense-kernel backend for the SPICE engine ([`crate::backend`])
+        backend: BackendChoice,
     },
     /// The PJRT engine ([`EngineExecutor`]).
     #[cfg(feature = "runtime-xla")]
@@ -452,8 +457,8 @@ pub enum Backend {
 impl Backend {
     fn build(self, dir: &Path) -> Result<Box<dyn InferenceExecutor>> {
         match self {
-            Backend::Analog { fidelity, workers } => {
-                Ok(Box::new(PipelineExecutor::from_artifacts(dir, fidelity, workers)?))
+            Backend::Analog { fidelity, workers, backend } => {
+                Ok(Box::new(PipelineExecutor::from_artifacts(dir, fidelity, workers, backend)?))
             }
             #[cfg(feature = "runtime-xla")]
             Backend::Pjrt { model } => Ok(Box::new(EngineExecutor::new(dir, model)?)),
@@ -558,7 +563,11 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
-            backend: Backend::Analog { fidelity: Fidelity::Behavioural, workers: 0 },
+            backend: Backend::Analog {
+                fidelity: Fidelity::Behavioural,
+                workers: 0,
+                backend: BackendChoice::Auto,
+            },
             max_wait: batcher::default_max_wait(),
         }
     }

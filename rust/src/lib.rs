@@ -11,6 +11,7 @@
 //! [`coordinator`] queue (`InferenceExecutor`: analog pipeline offline,
 //! PJRT engine under `runtime-xla`).
 pub mod analog;
+pub mod backend;
 pub mod coordinator;
 pub mod dataset;
 pub mod fault;

@@ -3,19 +3,21 @@
 //! Subcommands:
 //!   info                         artifact + manifest summary
 //!   accuracy [--model analog|digital] [--n N] [--fidelity F]
-//!            [--solver direct|iterative|auto]        Table 1 row
+//!            [--solver direct|iterative|auto]
+//!            [--backend scalar|simd|auto]            Table 1 row
 //!            (analog runs offline through the crossbar pipeline;
 //!             digital needs the PJRT runtime)
 //!   serve    [--n N] [--model ...] [--max-wait-us U] [--fidelity F]
-//!            [--workers W]          demo serving run (analog serves the
-//!            crossbar pipeline offline, with a synthetic demo network
+//!            [--workers W] [--backend B]  demo serving run (analog serves
+//!            the crossbar pipeline offline, with a synthetic demo network
 //!            when no artifacts exist; digital needs the PJRT runtime)
 //!   verify                       runtime vs python expected logits
 //!   map      [--mode inverted|dual]                Table 4 resources
 //!   netlist  --layer NAME [--outdir DIR] [--segment N]   emit SPICE
 //!            (FC/PConv crossbars, §3.3 BN pairs, §3.5 GAP columns)
 //!   spice    --layer NAME [--segment N] [--n N]
-//!            [--solver direct|iterative|auto]        simulate a layer
+//!            [--solver direct|iterative|auto]
+//!            [--backend scalar|simd|auto]            simulate a layer
 //!   report   --table4|--fig4|--fig7|--fig8|--fig9|--coverage  paper
 //!            artifacts (--coverage [--fidelity F]: per-stage module
 //!            fidelity/resource table + stage-hook Eq 17/18 — at spice
@@ -34,7 +36,7 @@
 //!            sweep for CI)
 //!   tran     [--rows R] [--cols C] [--mode inverted|dual]
 //!            [--integrators be,trap,trbdf2] [--rise-ns T] [--seed S]
-//!            [--out FILE]   time-domain read-pulse sweep on a synthetic
+//!            [--backend B] [--out FILE]   time-domain read-pulse sweep on a synthetic
 //!            FC crossbar: settle each integrator to the DC operating
 //!            point and compare simulated settling latency / device energy
 //!            against the closed-form Eq 17/18 columns; appends
@@ -47,6 +49,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Result};
 
+use memx::backend::BackendChoice;
 use memx::coordinator::{
     self, Backend, InferenceExecutor, PipelineExecutor, Server, ServerConfig,
 };
@@ -150,19 +153,21 @@ fn cmd_info(rest: &[String]) -> Result<()> {
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
     let a = Args::parse(
         rest,
-        &["artifacts", "model", "n", "fidelity", "mode", "segment", "solver"],
+        &["artifacts", "model", "n", "fidelity", "mode", "segment", "solver", "backend"],
     )?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     match parse_model(a.get_or("model", "analog"))? {
         ModelChoice::Analog => accuracy_analog(dir, &a),
         ModelChoice::Digital => {
             // the PJRT engine runs pre-compiled executables — the SPICE
-            // engine's linear-solver knob does not apply to it
-            if a.get("solver").is_some() {
-                bail!(
-                    "--solver selects the analog SPICE engine's linear solver and does \
-                     not apply to the digital PJRT model; drop it or use --model analog"
-                );
+            // engine's linear-solver / dense-kernel knobs do not apply to it
+            for flag in ["solver", "backend"] {
+                if a.get(flag).is_some() {
+                    bail!(
+                        "--{flag} configures the analog SPICE engine and does not apply \
+                         to the digital PJRT model; drop it or use --model analog"
+                    );
+                }
             }
             accuracy_digital(dir, &a)
         }
@@ -176,19 +181,21 @@ fn accuracy_analog(dir: &Path, a: &Args) -> Result<()> {
     let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
     let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
+    let backend: BackendChoice = a.get_or("backend", "auto").parse()?;
     let m = memx::nn::Manifest::load(dir)?;
     let ws = memx::nn::WeightStore::load(dir, &m)?;
     let mut pipe = PipelineBuilder::new()
         .mode(mode)
         .fidelity(fidelity)
         .solver(solver)
+        .backend(backend)
         .segment(a.get_usize("segment", 64)?)
         .build(&m, &ws)?;
     let ds = Dataset::load(&dir.join(&m.dataset_file))?;
     let n = a.get_usize("n", ds.n)?;
     println!(
         "classifying {n} images through the analog pipeline ({fidelity} fidelity, mode {mode}, \
-         solver {solver}): {}",
+         solver {solver}, backend {backend}): {}",
         pipe.describe()
     );
     let (labels, wall) = coordinator::classify_dataset_analog(&mut pipe, &ds, n, &m.batch_sizes)?;
@@ -231,7 +238,10 @@ fn accuracy_digital(_dir: &Path, _a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "model", "n", "max-wait-us", "fidelity", "workers"])?;
+    let a = Args::parse(
+        rest,
+        &["artifacts", "model", "n", "max-wait-us", "fidelity", "workers", "backend"],
+    )?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let n = a.get_usize("n", 256)?;
     let max_wait = std::time::Duration::from_micros(a.get_usize("max-wait-us", 2000)? as u64);
@@ -239,12 +249,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         ModelChoice::Analog => {
             let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
             let workers = a.get_usize("workers", 0)?;
-            serve_analog(dir, n, max_wait, fidelity, workers)
+            let backend: BackendChoice = a.get_or("backend", "auto").parse()?;
+            serve_analog(dir, n, max_wait, fidelity, workers, backend)
         }
         ModelChoice::Digital => {
             // the PJRT engine serves fixed pre-compiled executables — the
-            // analog pipeline's fidelity/worker knobs do not apply to it
-            for flag in ["fidelity", "workers"] {
+            // analog pipeline's fidelity/worker/kernel knobs do not apply
+            for flag in ["fidelity", "workers", "backend"] {
                 if a.get(flag).is_some() {
                     bail!(
                         "--{flag} configures the analog pipeline executor and does not \
@@ -299,15 +310,17 @@ fn serve_analog(
     max_wait: std::time::Duration,
     fidelity: Fidelity,
     workers: usize,
+    backend: BackendChoice,
 ) -> Result<()> {
     let synthetic = !dir.join("manifest.json").exists();
     let (server, ds) = if synthetic {
         println!("no artifacts at {dir:?} — serving the synthetic FC-stack demo network");
-        synthetic_server(n, max_wait, fidelity, workers)?
+        synthetic_server(n, max_wait, fidelity, workers, backend)?
     } else {
         let m = memx::nn::Manifest::load(dir)?;
         let ds = Dataset::load(&dir.join(&m.dataset_file))?;
-        let cfg = ServerConfig { backend: Backend::Analog { fidelity, workers }, max_wait };
+        let cfg =
+            ServerConfig { backend: Backend::Analog { fidelity, workers, backend }, max_wait };
         (Server::start(dir, cfg)?, ds)
     };
     let n = n.min(ds.n);
@@ -335,6 +348,7 @@ fn synthetic_server(
     max_wait: std::time::Duration,
     fidelity: Fidelity,
     workers: usize,
+    backend: BackendChoice,
 ) -> Result<(Server, Dataset)> {
     const SEED: u64 = 0xC1F0;
     let (h, w, c, classes) = (8usize, 8usize, 3usize, 10usize);
@@ -347,8 +361,10 @@ fn synthetic_server(
     let mut ds = Dataset { n, h, w, c, data, labels: vec![0; n] };
 
     // ground truth = the sequential reference path
-    let mut reference =
-        PipelineBuilder::new().fidelity(fidelity).build_fc_stack(&dims, &dev, SEED)?;
+    let mut reference = PipelineBuilder::new()
+        .fidelity(fidelity)
+        .backend(backend)
+        .build_fc_stack(&dims, &dev, SEED)?;
     for i in 0..n {
         let x = image_to_input(ds.image(i), h, w, c);
         // round through f32 exactly like the serving executor's logits do,
@@ -363,6 +379,7 @@ fn synthetic_server(
         // scheduler (PipelineExecutor workers) owns the thread budget
         let pipeline = PipelineBuilder::new()
             .fidelity(fidelity)
+            .backend(backend)
             .workers(1)
             .build_fc_stack(&dims, &default_device(), SEED)?;
         Ok(Box::new(PipelineExecutor::new(pipeline, (h, w, c), &[1, 4, 8], workers)?)
@@ -483,14 +500,16 @@ fn cmd_netlist(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_spice(rest: &[String]) -> Result<()> {
-    let a = Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode", "solver"])?;
+    let a =
+        Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode", "solver", "backend"])?;
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let layer = a.get("layer").unwrap_or("cls.fc2");
     let segment = a.get_usize("segment", 64)?;
     let n = a.get_usize("n", 4)?;
     let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
-    memx::report::spice_layer_demo(dir, layer, mode, segment, n, solver)
+    let backend: BackendChoice = a.get_or("backend", "auto").parse()?;
+    memx::report::spice_layer_demo(dir, layer, mode, segment, n, solver, backend)
 }
 
 fn cmd_report(rest: &[String]) -> Result<()> {
@@ -716,7 +735,7 @@ fn cmd_tran(rest: &[String]) -> Result<()> {
 
     let a = Args::parse(
         rest,
-        &["rows", "cols", "mode", "integrators", "rise-ns", "seed", "out"],
+        &["rows", "cols", "mode", "integrators", "rise-ns", "seed", "backend", "out"],
     )?;
     let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
     let rows = a.get_usize("rows", if quick { 8 } else { 24 })?;
@@ -732,6 +751,7 @@ fn cmd_tran(rest: &[String]) -> Result<()> {
     let dev = default_device();
     let cb = memx::mapper::build_synthetic_fc(rows, cols, dev.levels, mode, seed);
     let mut sim = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto)?;
+    sim.set_backend(a.get_or("backend", "auto").parse::<BackendChoice>()?);
     let mut rng = memx::util::prng::Rng::new(seed ^ 0x7A4);
     let inputs: Vec<f64> = (0..rows).map(|_| (rng.f64() * 2.0 - 1.0) * 0.4).collect();
     let dc = sim.solve(&inputs)?;

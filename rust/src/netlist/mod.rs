@@ -28,6 +28,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::BackendChoice;
 use crate::mapper::layout::Placed;
 use crate::mapper::{build_fc_crossbar, Crossbar, MapMode};
 use crate::nn::{DeviceJson, Manifest, WeightStore};
@@ -311,6 +312,17 @@ impl CrossbarSim {
 
     pub fn n_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Select the dense-kernel backend for every resident segment circuit.
+    /// Value-only, like [`CrossbarSim::update_conductances`]: cached
+    /// factorizations stay valid, only the substitution/Krylov kernels
+    /// change. Transient twins cloned by [`CrossbarSim::tran_read`] inherit
+    /// the choice with the circuit.
+    pub fn set_backend(&mut self, backend: BackendChoice) {
+        for seg in &mut self.segments {
+            seg.circuit.set_backend(backend);
+        }
     }
 
     /// Value-only conductance update: rewrite every placed device's

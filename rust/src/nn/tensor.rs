@@ -1,5 +1,7 @@
 //! Borrowed tensor view over the weights blob.
 
+use crate::backend::{self, BackendChoice};
+
 /// A read-only tensor slice of weights.bin with its manifest metadata.
 #[derive(Debug, Clone)]
 pub struct Tensor<'a> {
@@ -27,17 +29,8 @@ impl<'a> Tensor<'a> {
                 let (k1, k2, cin, cout) = (*k1, *k2, *cin, *cout);
                 let rows = cin * k1 * k2;
                 let mut m = vec![0f32; rows * cout];
-                for c in 0..cin {
-                    for a in 0..k1 {
-                        for b in 0..k2 {
-                            for o in 0..cout {
-                                let src = ((a * k2 + b) * cin + c) * cout + o;
-                                let dst = ((c * k1 * k2) + a * k2 + b) * cout + o;
-                                m[dst] = self.data[src];
-                            }
-                        }
-                    }
-                }
+                backend::resolve(BackendChoice::Auto)
+                    .conv_reorder(self.data, [k1, k2, cin, cout], &mut m);
                 (rows, cout, m)
             }
             [cin, cout] => (*cin, *cout, self.data.to_vec()),

@@ -17,6 +17,7 @@ use crate::mapper::{
     weight_q, Crossbar, MapMode,
 };
 use crate::nn::{ActKind, ConvGeom, DeviceJson, Layer, Manifest, WeightStore};
+use crate::backend::BackendChoice;
 use crate::spice::krylov::SolverStrategy;
 use crate::spice::solve::Ordering;
 use crate::util::pool;
@@ -110,6 +111,7 @@ pub struct PipelineBuilder {
     workers: usize,
     ordering: Ordering,
     solver: SolverStrategy,
+    backend: BackendChoice,
 }
 
 impl Default for PipelineBuilder {
@@ -130,6 +132,7 @@ impl PipelineBuilder {
             workers: 0,
             ordering: Ordering::Smart,
             solver: SolverStrategy::Auto,
+            backend: BackendChoice::Auto,
         }
     }
 
@@ -187,6 +190,14 @@ impl PipelineBuilder {
         self
     }
 
+    /// Dense-kernel backend for the SPICE engine (default
+    /// [`BackendChoice::Auto`]: honour the `MEMX_BACKEND` env override,
+    /// else the portable-SIMD kernels — see [`crate::backend`]).
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+
     fn resolved_workers(&self) -> usize {
         if self.workers == 0 {
             pool::default_workers()
@@ -207,6 +218,7 @@ impl PipelineBuilder {
             segment: self.segment,
             ordering: self.ordering,
             solver: self.solver,
+            backend: self.backend,
             workers: self.resolved_workers(),
             prog_sigma: self.prog_sigma,
         }
@@ -357,6 +369,7 @@ impl PipelineBuilder {
             self.segment,
             self.ordering,
             self.solver,
+            self.backend,
             self.resolved_workers(),
         )
     }
@@ -380,6 +393,7 @@ impl PipelineBuilder {
             self.segment,
             self.ordering,
             self.solver,
+            self.backend,
             self.resolved_workers(),
         )
     }
@@ -437,6 +451,7 @@ impl PipelineBuilder {
                 segment: self.segment,
                 ordering: self.ordering,
                 solver: self.solver,
+                backend: self.backend,
                 workers: self.resolved_workers(),
             },
             &m.device,

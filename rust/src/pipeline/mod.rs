@@ -101,6 +101,7 @@ pub use modules::{
 };
 /// Re-exported for builder callers: the SPICE engine's direct-vs-GMRES
 /// selection ([`PipelineBuilder::solver`]).
+pub use crate::backend::BackendChoice;
 pub use crate::spice::krylov::SolverStrategy;
 
 /// Execution fidelity of a compiled [`Pipeline`] (see the module docs).

@@ -74,6 +74,7 @@
 use anyhow::{bail, Result};
 
 use crate::analog::{self, ActCircuit};
+use crate::backend::BackendChoice;
 use crate::fault::{self, FaultStep};
 use crate::mapper::layout::{p_pos, place_conv_kernel, ConvXbarGeom, Placed};
 use crate::mapper::{apply_prog_noise_analog, BnFold, Crossbar, MapMode};
@@ -107,6 +108,7 @@ pub struct ModuleCfg<'a> {
     pub segment: usize,
     pub ordering: Ordering,
     pub solver: SolverStrategy,
+    pub backend: BackendChoice,
     pub workers: usize,
     pub prog_sigma: f64,
 }
@@ -217,6 +219,7 @@ pub(crate) struct ConvModuleCfg {
     pub segment: usize,
     pub ordering: Ordering,
     pub solver: SolverStrategy,
+    pub backend: BackendChoice,
     pub workers: usize,
 }
 
@@ -360,10 +363,15 @@ impl CrossbarModule {
         segment: usize,
         ordering: Ordering,
         solver: SolverStrategy,
+        backend: BackendChoice,
         workers: usize,
     ) -> Result<CrossbarModule> {
         let sim = match fidelity {
-            Fidelity::Spice => Some(CrossbarSim::new(&cb, dev, segment, ordering, solver)?),
+            Fidelity::Spice => {
+                let mut sim = CrossbarSim::new(&cb, dev, segment, ordering, solver)?;
+                sim.set_backend(backend);
+                Some(sim)
+            }
             _ => None,
         };
         let bank = fault::bank_seed(&name);
@@ -431,8 +439,9 @@ impl CrossbarModule {
                         rf_scale: cfg.scale,
                         mode: cfg.mode,
                     };
-                    let sim =
+                    let mut sim =
                         CrossbarSim::new(&cb, dev, cfg.segment, cfg.ordering, cfg.solver)?;
+                    sim.set_backend(cfg.backend);
                     banks.sims.push(BankSim {
                         ci,
                         co,
@@ -750,9 +759,12 @@ impl BatchNormModule {
                 analog::build_bn_crossbars(&name, c, 1, &fold.k, &fold.mean, &fold.beta, mode);
             apply_prog_noise_analog(&mut sub.devices, cfg.prog_sigma, rng);
             apply_prog_noise_analog(&mut scale.devices, cfg.prog_sigma, rng);
-            let sub_sim = CrossbarSim::new(&sub, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
-            let scale_sim =
+            let mut sub_sim =
+                CrossbarSim::new(&sub, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
+            sub_sim.set_backend(cfg.backend);
+            let mut scale_sim =
                 CrossbarSim::new(&scale, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
+            scale_sim.set_backend(cfg.backend);
             Some(BnSims {
                 memristors: sub.devices.len() + scale.devices.len(),
                 opamps: (sub.cols + scale.cols) * mode.opamps_per_port(),
@@ -1199,11 +1211,9 @@ impl GapModule {
             let mut cb = analog::build_gap_crossbar(&name, c, spatial, mode);
             apply_prog_noise_analog(&mut cb.devices, cfg.prog_sigma, rng);
             let placed = cb.devices.len();
-            (
-                Some(CrossbarSim::new(&cb, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?),
-                cb.devices,
-                placed,
-            )
+            let mut sim = CrossbarSim::new(&cb, cfg.dev, cfg.segment, cfg.ordering, cfg.solver)?;
+            sim.set_backend(cfg.backend);
+            (Some(sim), cb.devices, placed)
         } else {
             (None, Vec::new(), spatial * c) // Eq 12
         };

@@ -329,6 +329,14 @@ pub fn report_coverage(
              this process"
         );
     }
+    let (subst, matvec) = (crate::backend::subst_ns(), crate::backend::matvec_ns());
+    if subst > 0 || matvec > 0 {
+        println!(
+            "kernel time: substitution {:?}, matvec {:?} this process",
+            std::time::Duration::from_nanos(subst),
+            std::time::Duration::from_nanos(matvec)
+        );
+    }
     Ok(())
 }
 
@@ -337,6 +345,7 @@ pub fn report_coverage(
 /// [`netlist::CrossbarSim`], segments in parallel), batch-read a few input
 /// vectors through `forward_batch` (one multi-RHS substitution pass per
 /// segment) and compare against the same layer at ideal fidelity.
+#[allow(clippy::too_many_arguments)]
 pub fn spice_layer_demo(
     dir: &Path,
     layer: &str,
@@ -344,14 +353,17 @@ pub fn spice_layer_demo(
     segment: usize,
     n_vectors: usize,
     solver: SolverStrategy,
+    backend: crate::backend::BackendChoice,
 ) -> Result<()> {
     let m = Manifest::load(dir)?;
     let ws = WeightStore::load(dir, &m)?;
-    let base = PipelineBuilder::new().mode(mode).segment(segment).solver(solver);
+    let base =
+        PipelineBuilder::new().mode(mode).segment(segment).solver(solver).backend(backend);
     let t0 = Instant::now();
     let mut spice = base.clone().fidelity(Fidelity::Spice).build_layer(&m, &ws, layer)?;
     println!(
-        "layer {layer} (mode {mode}, solver {solver}): {}; compiled for SPICE in {:?}",
+        "layer {layer} (mode {mode}, solver {solver}, backend {backend}): {}; \
+         compiled for SPICE in {:?}",
         spice.describe(),
         t0.elapsed()
     );

@@ -30,8 +30,11 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
+
+use crate::backend::{self, Backend, LuLowerParts, LuUpperParts};
 
 use super::solve::{Ordering, SolveStats, SparseSys};
 
@@ -360,9 +363,39 @@ impl Numeric {
         Ok(())
     }
 
+    /// Borrowed view of the lower program + current multipliers for the
+    /// [`Backend`] substitution kernels.
+    fn lower_parts(&self) -> LuLowerParts<'_> {
+        let s = &*self.sym;
+        LuLowerParts {
+            pivots: &s.pivots,
+            l_ptr: &s.l_ptr,
+            l_rows: &s.l_rows,
+            lvals: &self.lvals,
+        }
+    }
+
+    /// Borrowed view of the U rows + current values for the [`Backend`]
+    /// substitution kernels.
+    fn upper_parts(&self) -> LuUpperParts<'_> {
+        let s = &*self.sym;
+        LuUpperParts {
+            pivots: &s.pivots,
+            u_ptr: &s.u_ptr,
+            u_cols: &s.u_cols,
+            u_slots: &s.u_slots,
+            vals: &self.vals,
+        }
+    }
+
     /// Substitute one right-hand side (indexed by row, like `SparseSys::b`).
     /// Returns x (indexed by column). O(nnz(L+U)).
     pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        self.solve_kern(b, backend::scalar())
+    }
+
+    /// [`Numeric::solve`] on an explicit [`Backend`] kernel set.
+    pub fn solve_kern(&self, b: &[f64], kern: &dyn Backend) -> Result<Vec<f64>> {
         if !self.factored {
             bail!("factor: solve before refactor");
         }
@@ -370,30 +403,16 @@ impl Numeric {
         if b.len() != s.n {
             bail!("factor: rhs has {} entries, system has {}", b.len(), s.n);
         }
-        let mut w = b.to_vec();
+        let t0 = Instant::now();
         // forward: replay eliminations on the RHS
-        for p in 0..s.pivots.len() {
-            let bp = w[s.pivots[p].1];
-            if bp != 0.0 {
-                for t in s.l_ptr[p]..s.l_ptr[p + 1] {
-                    w[s.l_rows[t]] -= self.lvals[t] * bp;
-                }
-            }
-        }
+        let mut w = b.to_vec();
+        kern.subst_lower(&self.lower_parts(), &mut w);
         // backward: reverse elimination order over the U rows
         let mut x = vec![0.0; s.n];
-        for p in (0..s.pivots.len()).rev() {
-            let (col, prow) = s.pivots[p];
-            let u = s.u_ptr[p]..s.u_ptr[p + 1];
-            let mut acc = w[prow];
-            for k in u.clone().skip(1) {
-                acc -= self.vals[s.u_slots[k]] * x[s.u_cols[k]];
-            }
-            let diag = self.vals[s.u_slots[u.start]];
-            if diag.abs() < 1e-300 {
-                bail!("factor: zero diagonal in back-substitution at column {col}");
-            }
-            x[col] = acc / diag;
+        let bad = kern.subst_upper(&self.upper_parts(), &w, &mut x);
+        backend::add_subst_ns(t0.elapsed().as_nanos() as u64);
+        if let Some(col) = bad {
+            bail!("factor: zero diagonal in back-substitution at column {col}");
         }
         Ok(x)
     }
@@ -403,6 +422,13 @@ impl Numeric {
     /// programs regardless of the batch size — the batched crossbar
     /// column-read path).
     pub fn solve_multi(&self, bs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        self.solve_multi_kern(bs, backend::scalar())
+    }
+
+    /// [`Numeric::solve_multi`] on an explicit [`Backend`] kernel set. The
+    /// Simd backend streams lane-width column blocks through one program
+    /// traversal; results are bit-identical per column across backends.
+    pub fn solve_multi_kern(&self, bs: &[Vec<f64>], kern: &dyn Backend) -> Result<Vec<Vec<f64>>> {
         if !self.factored {
             bail!("factor: solve before refactor");
         }
@@ -416,35 +442,14 @@ impl Numeric {
                 bail!("factor: rhs has {} entries, system has {}", b.len(), s.n);
             }
         }
+        let t0 = Instant::now();
         let mut w: Vec<Vec<f64>> = bs.to_vec();
-        for p in 0..s.pivots.len() {
-            let prow = s.pivots[p].1;
-            for t in s.l_ptr[p]..s.l_ptr[p + 1] {
-                let f = self.lvals[t];
-                if f == 0.0 {
-                    continue;
-                }
-                let r = s.l_rows[t];
-                for wb in w.iter_mut() {
-                    wb[r] -= f * wb[prow];
-                }
-            }
-        }
+        kern.subst_lower_multi(&self.lower_parts(), &mut w);
         let mut xs: Vec<Vec<f64>> = vec![vec![0.0; s.n]; k];
-        for p in (0..s.pivots.len()).rev() {
-            let (col, prow) = s.pivots[p];
-            let u = s.u_ptr[p]..s.u_ptr[p + 1];
-            let diag = self.vals[s.u_slots[u.start]];
-            if diag.abs() < 1e-300 {
-                bail!("factor: zero diagonal in back-substitution at column {col}");
-            }
-            for (x, wb) in xs.iter_mut().zip(&w) {
-                let mut acc = wb[prow];
-                for kk in u.clone().skip(1) {
-                    acc -= self.vals[s.u_slots[kk]] * x[s.u_cols[kk]];
-                }
-                x[col] = acc / diag;
-            }
+        let bad = kern.subst_upper_multi(&self.upper_parts(), &w, &mut xs);
+        backend::add_subst_ns(t0.elapsed().as_nanos() as u64);
+        if let Some(col) = bad {
+            bail!("factor: zero diagonal in back-substitution at column {col}");
         }
         Ok(xs)
     }
@@ -457,11 +462,20 @@ impl Numeric {
 /// One-shot convenience: analyze + assemble + refactor + solve. The
 /// factored equivalent of [`SparseSys::solve_with_stats`].
 pub fn factor_solve(sys: &SparseSys, ordering: Ordering) -> Result<(Vec<f64>, Numeric)> {
+    factor_solve_kern(sys, ordering, backend::scalar())
+}
+
+/// [`factor_solve`] on an explicit [`Backend`] kernel set.
+pub fn factor_solve_kern(
+    sys: &SparseSys,
+    ordering: Ordering,
+    kern: &dyn Backend,
+) -> Result<(Vec<f64>, Numeric)> {
     let sym = Arc::new(analyze(sys, ordering)?);
     let mut num = Numeric::new(sym);
     num.assemble(sys)?;
     num.refactor()?;
-    let x = num.solve(&sys.b)?;
+    let x = num.solve_kern(&sys.b, kern)?;
     Ok((x, num))
 }
 

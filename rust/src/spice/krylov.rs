@@ -34,12 +34,15 @@
 //! back to the direct engine, so enabling the iterative path can never
 //! make results worse — only cheaper.
 
+use std::cell::Cell;
 use std::collections::HashSet;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::factor::Numeric;
 use super::solve::{SolveStats, SparseSys};
+use crate::backend::{self, Backend, IluParts};
 use crate::util::pool;
 
 /// `Auto` switches to GMRES at this many raw stamped triplets. Pattern
@@ -144,6 +147,13 @@ impl Default for KrylovCfg {
 pub trait Precond: Sync {
     /// Solve `M z = r`.
     fn apply(&self, r: &[f64]) -> Result<Vec<f64>>;
+    /// [`Precond::apply`] on an explicit [`Backend`] kernel set.
+    /// Implementations whose application is a substitution sweep route it
+    /// through the backend; the default ignores `kern`.
+    fn apply_kern(&self, r: &[f64], kern: &dyn Backend) -> Result<Vec<f64>> {
+        let _ = kern;
+        self.apply(r)
+    }
     /// Resident value slots backing this preconditioner (the peak-memory
     /// proxy reported in [`SolveStats::peak_entries`]).
     fn entries(&self) -> usize;
@@ -155,6 +165,10 @@ pub trait Precond: Sync {
 impl Precond for Numeric {
     fn apply(&self, r: &[f64]) -> Result<Vec<f64>> {
         self.solve(r)
+    }
+
+    fn apply_kern(&self, r: &[f64], kern: &dyn Backend) -> Result<Vec<f64>> {
+        self.solve_kern(r, kern)
     }
 
     fn entries(&self) -> usize {
@@ -417,6 +431,11 @@ impl Ilu0 {
 
     /// Solve `(LU) z = P r` (the preconditioner application).
     pub fn solve(&self, r: &[f64]) -> Result<Vec<f64>> {
+        self.solve_kern(r, backend::scalar())
+    }
+
+    /// [`Ilu0::solve`] on an explicit [`Backend`] kernel set.
+    pub fn solve_kern(&self, r: &[f64], kern: &dyn Backend) -> Result<Vec<f64>> {
         if !self.factored {
             bail!("ilu0: solve before factor");
         }
@@ -424,27 +443,18 @@ impl Ilu0 {
         if r.len() != n {
             bail!("ilu0: rhs has {} entries, system has {n}", r.len());
         }
+        let t0 = Instant::now();
         let mut w: Vec<f64> = self.perm.iter().map(|&p| r[p]).collect();
-        // forward: unit-diagonal L (strictly-lower slots hold multipliers)
-        for i in 0..n {
-            let mut acc = w[i];
-            for t in self.ptr[i]..self.diag[i] {
-                acc -= self.vals[t] * w[self.cols[t]];
-            }
-            w[i] = acc;
-        }
-        // backward: U
-        for i in (0..n).rev() {
-            let d = self.diag[i];
-            let mut acc = w[i];
-            for t in (d + 1)..self.ptr[i + 1] {
-                acc -= self.vals[t] * w[self.cols[t]];
-            }
-            let dv = self.vals[d];
-            if dv.abs() < 1e-300 {
-                bail!("ilu0: zero diagonal in back-substitution at column {i}");
-            }
-            w[i] = acc / dv;
+        let parts = IluParts {
+            ptr: &self.ptr,
+            diag: &self.diag,
+            cols: &self.cols,
+            vals: &self.vals,
+        };
+        let bad = kern.ilu_sweep(&parts, &mut w);
+        backend::add_subst_ns(t0.elapsed().as_nanos() as u64);
+        if let Some(i) = bad {
+            bail!("ilu0: zero diagonal in back-substitution at column {i}");
         }
         Ok(w)
     }
@@ -455,6 +465,10 @@ impl Precond for Ilu0 {
         self.solve(r)
     }
 
+    fn apply_kern(&self, r: &[f64], kern: &dyn Backend) -> Result<Vec<f64>> {
+        self.solve_kern(r, kern)
+    }
+
     fn entries(&self) -> usize {
         self.cols.len()
     }
@@ -462,10 +476,6 @@ impl Precond for Ilu0 {
     fn label(&self) -> &'static str {
         "ilu0"
     }
-}
-
-fn norm2(v: &[f64]) -> f64 {
-    v.iter().map(|x| x * x).sum::<f64>().sqrt()
 }
 
 /// Restarted, right-preconditioned GMRES(m) over the triplet stream of
@@ -483,26 +493,51 @@ pub fn gmres<P: Precond + ?Sized>(
     pre: &P,
     cfg: &KrylovCfg,
 ) -> Result<(Vec<f64>, SolveStats)> {
+    gmres_kern(sys, b, pre, cfg, backend::scalar())
+}
+
+/// [`gmres`] on an explicit [`Backend`] kernel set: the matvec, Arnoldi
+/// dot/axpy/norm kernels and every preconditioner application run on
+/// `kern`. Reduction kernels may reassociate, so iterative solutions can
+/// differ between backends by ordinary rounding inside the residual
+/// tolerance (unlike the bit-identical direct substitution path).
+pub fn gmres_kern<P: Precond + ?Sized>(
+    sys: &SparseSys,
+    b: &[f64],
+    pre: &P,
+    cfg: &KrylovCfg,
+    kern: &dyn Backend,
+) -> Result<(Vec<f64>, SolveStats)> {
     let n = sys.n;
     if b.len() != n {
         bail!("krylov: rhs has {} entries, system has {n}", b.len());
     }
-    for &(i, j, _) in sys.iter_triplets() {
+    // SoA triplet stream: validated once, then streamed by the backend
+    // spmv on every Arnoldi step
+    let mut t_rows = Vec::with_capacity(sys.nnz());
+    let mut t_cols = Vec::with_capacity(sys.nnz());
+    let mut t_vals = Vec::with_capacity(sys.nnz());
+    for &(i, j, v) in sys.iter_triplets() {
         if i >= n || j >= n {
             bail!("krylov: triplet ({i},{j}) out of range for n={n}");
         }
+        t_rows.push(i);
+        t_cols.push(j);
+        t_vals.push(v);
     }
     let m = cfg.restart.clamp(1, n.max(1));
     let mut stats = SolveStats::direct(pre.entries() + (m + 1) * n, n);
-    let bnorm = norm2(b);
+    stats.backend = kern.name();
+    let bnorm = kern.norm2(b);
     if bnorm == 0.0 {
         return Ok((vec![0.0; n], stats));
     }
+    let matvec_ns = Cell::new(0u64);
     let matvec = |x: &[f64]| {
+        let t0 = Instant::now();
         let mut y = vec![0.0; n];
-        for &(i, j, v) in sys.iter_triplets() {
-            y[i] += v * x[j];
-        }
+        kern.spmv(&t_rows, &t_cols, &t_vals, x, &mut y);
+        matvec_ns.set(matvec_ns.get() + t0.elapsed().as_nanos() as u64);
         y
     };
     let mut x = vec![0.0; n];
@@ -510,10 +545,12 @@ pub fn gmres<P: Precond + ?Sized>(
     while iters < cfg.max_iter {
         let ax = matvec(&x);
         let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
-        let beta = norm2(&r);
+        let beta = kern.norm2(&r);
         if beta <= cfg.tol * bnorm {
             stats.iterations = iters;
             stats.residual = beta / bnorm;
+            stats.matvec_ns = matvec_ns.get();
+            backend::add_matvec_ns(stats.matvec_ns);
             return Ok((x, stats));
         }
         // Arnoldi (modified Gram-Schmidt) with Givens-rotated Hessenberg:
@@ -531,17 +568,15 @@ pub fn gmres<P: Precond + ?Sized>(
                 break;
             }
             iters += 1;
-            let z = pre.apply(&v_basis[k])?;
+            let z = pre.apply_kern(&v_basis[k], kern)?;
             let mut w = matvec(&z);
             let mut hk = vec![0.0f64; k + 2];
             for (i, vb) in v_basis.iter().enumerate().take(k + 1) {
-                let hik: f64 = w.iter().zip(vb).map(|(a, c)| a * c).sum();
+                let hik = kern.dot(&w, vb);
                 hk[i] = hik;
-                for (wv, vv) in w.iter_mut().zip(vb) {
-                    *wv -= hik * vv;
-                }
+                kern.axpy(-hik, vb, &mut w);
             }
-            let wnorm = norm2(&w);
+            let wnorm = kern.norm2(&w);
             hk[k + 1] = wnorm;
             if wnorm > 1e-300 {
                 for wv in w.iter_mut() {
@@ -595,18 +630,16 @@ pub fn gmres<P: Precond + ?Sized>(
         // x += M⁻¹ (V y)  (right preconditioning)
         let mut corr = vec![0.0f64; n];
         for (yi, vb) in y.iter().zip(&v_basis) {
-            for (c, vv) in corr.iter_mut().zip(vb) {
-                *c += yi * vv;
-            }
+            kern.axpy(*yi, vb, &mut corr);
         }
-        let zc = pre.apply(&corr)?;
-        for (xv, zv) in x.iter_mut().zip(&zc) {
-            *xv += zv;
-        }
+        let zc = pre.apply_kern(&corr, kern)?;
+        kern.axpy(1.0, &zc, &mut x);
     }
     let ax = matvec(&x);
     let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
-    let relres = norm2(&r) / bnorm;
+    let relres = kern.norm2(&r) / bnorm;
+    stats.matvec_ns = matvec_ns.get();
+    backend::add_matvec_ns(stats.matvec_ns);
     // the rotated-residual estimate can be slightly optimistic; accept a
     // small slack against the true residual before declaring failure
     if relres <= cfg.tol * 10.0 {
@@ -638,18 +671,35 @@ pub fn gmres_batch<P: Precond + ?Sized>(
     cfg: &KrylovCfg,
     workers: usize,
 ) -> Result<(Vec<Vec<f64>>, SolveStats)> {
+    gmres_batch_kern(sys, bs, pre, cfg, workers, backend::scalar())
+}
+
+/// [`gmres_batch`] on an explicit [`Backend`] kernel set (shared by every
+/// per-column sweep across the worker threads — the trait is `Sync`).
+pub fn gmres_batch_kern<P: Precond + ?Sized>(
+    sys: &SparseSys,
+    bs: &[Vec<f64>],
+    pre: &P,
+    cfg: &KrylovCfg,
+    workers: usize,
+    kern: &dyn Backend,
+) -> Result<(Vec<Vec<f64>>, SolveStats)> {
     if bs.is_empty() {
-        return Ok((Vec::new(), SolveStats::direct(pre.entries(), sys.n)));
+        let mut stats = SolveStats::direct(pre.entries(), sys.n);
+        stats.backend = kern.name();
+        return Ok((Vec::new(), stats));
     }
-    let results = pool::par_map(bs, workers.max(1), |b| gmres(sys, b, pre, cfg));
+    let results = pool::par_map(bs, workers.max(1), |b| gmres_kern(sys, b, pre, cfg, kern));
     let m = cfg.restart.clamp(1, sys.n.max(1));
     let concurrency = workers.max(1).min(bs.len());
     let mut stats = SolveStats::direct(pre.entries() + concurrency * (m + 1) * sys.n, sys.n);
+    stats.backend = kern.name();
     let mut xs = Vec::with_capacity(bs.len());
     for r in results {
         let (x, st) = r?;
         stats.iterations += st.iterations;
         stats.residual = stats.residual.max(st.residual);
+        stats.matvec_ns += st.matvec_ns;
         xs.push(x);
     }
     Ok((xs, stats))

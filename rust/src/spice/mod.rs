@@ -85,9 +85,11 @@ pub mod transient;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering as MemOrdering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{self, BackendChoice};
 use solve::{solve_dense, SparseSys};
 
 /// Process-wide count of **warm** iterative→direct fallback events: an
@@ -259,6 +261,7 @@ pub struct Circuit {
     names: BTreeMap<String, usize>,
     factor_cache: FactorCache,
     solver: krylov::SolverStrategy,
+    backend: BackendChoice,
     /// Time-varying source waveforms, keyed by element index (V/I sources
     /// only). DC analyses use the element's static value (kept at the
     /// waveform's t=0 sample); [`transient`] evaluates the waveform per
@@ -437,6 +440,17 @@ impl Circuit {
         self.solver
     }
 
+    /// Select the dense-kernel [`crate::backend`] for subsequent solves
+    /// (default [`BackendChoice::Auto`]: `MEMX_BACKEND` env override, else
+    /// the portable-SIMD CPU kernels).
+    pub fn set_backend(&mut self, backend: BackendChoice) {
+        self.backend = backend;
+    }
+
+    pub fn backend(&self) -> BackendChoice {
+        self.backend
+    }
+
     fn num_branches(&self) -> usize {
         self.elements
             .iter()
@@ -565,15 +579,20 @@ impl Circuit {
         sys: &SparseSys,
         ordering: solve::Ordering,
     ) -> Result<(Vec<f64>, solve::SolveStats)> {
+        let kern = backend::resolve(self.backend);
         let mut guard = self.factor_cache.0.lock().unwrap_or_else(|p| p.into_inner());
         match guard.as_mut() {
             Some(CacheState::Ready(entry)) if entry.ordering == ordering => {
                 if let Ok(unchanged) = entry.numeric.assemble(sys) {
                     let factored = unchanged || entry.numeric.refactor().is_ok();
                     if factored {
-                        if let Ok(x) = entry.numeric.solve(&sys.b) {
+                        let t0 = Instant::now();
+                        if let Ok(x) = entry.numeric.solve_kern(&sys.b, kern) {
+                            let subst_ns = t0.elapsed().as_nanos() as u64;
                             if residual_ok(sys, &sys.b, &x) {
-                                let st = entry.numeric.stats();
+                                let mut st = entry.numeric.stats();
+                                st.backend = kern.name();
+                                st.subst_ns = subst_ns;
                                 return Ok((x, st));
                             }
                         }
@@ -590,10 +609,11 @@ impl Circuit {
             _ => {}
         }
         // cache miss or stale pivots: fresh analysis with the current values
-        match factor::factor_solve(sys, ordering) {
+        match factor::factor_solve_kern(sys, ordering, kern) {
             Ok((x, numeric)) => {
                 if residual_ok(sys, &sys.b, &x) {
-                    let st = numeric.stats();
+                    let mut st = numeric.stats();
+                    st.backend = kern.name();
                     *guard = Some(CacheState::Ready(CacheEntry { ordering, numeric }));
                     return Ok((x, st));
                 }
@@ -688,8 +708,9 @@ impl Circuit {
     /// (the warm/cold fallback counter has already been bumped).
     fn solve_krylov(&self, sys: &SparseSys) -> Option<(Vec<f64>, solve::SolveStats)> {
         let cfg = self.solver.cfg();
+        let kern = backend::resolve(self.backend);
         let run = |pre: &dyn krylov::Precond| -> Result<(Vec<f64>, solve::SolveStats)> {
-            let (x, st) = krylov::gmres(sys, &sys.b, pre, &cfg)?;
+            let (x, st) = krylov::gmres_kern(sys, &sys.b, pre, &cfg, kern)?;
             if !residual_ok(sys, &sys.b, &x) {
                 bail!("krylov: converged solution failed the residual gate");
             }
@@ -717,8 +738,9 @@ impl Circuit {
         workers: usize,
     ) -> Option<Vec<Vec<f64>>> {
         let cfg = self.solver.cfg();
+        let kern = backend::resolve(self.backend);
         let run = |pre: &dyn krylov::Precond| -> Result<Vec<Vec<f64>>> {
-            let (xs, _st) = krylov::gmres_batch(sys, rhss, pre, &cfg, workers)?;
+            let (xs, _st) = krylov::gmres_batch_kern(sys, rhss, pre, &cfg, workers, kern)?;
             if !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
                 bail!("krylov: batch solution failed the residual gate");
             }
@@ -778,13 +800,37 @@ impl Circuit {
         // the matrix of a linear MNA system is independent of source
         // values: stamp once, rebuild only the RHS per batch entry
         let sys = self.stamp(dim, n_nodes, &v0)?;
-        let mut rhss = Vec::with_capacity(overrides.len());
-        for ov in overrides {
-            for &(idx, v) in ov {
-                self.set_vsource_at(idx, v)?;
+        let kern = backend::resolve(self.backend);
+        // batched RHS assembly: V-source branch slots are uniquely owned
+        // (I sources only touch node rows, which sit below the branch
+        // block), so an override is a single-slot scatter onto the base
+        // stamp — the backend builds each column from the previous one in
+        // O(overrides) instead of re-walking the element list per entry
+        let mut vsource_slot = vec![usize::MAX; self.elements.len()];
+        let mut br = n_nodes - 1;
+        for (k, e) in self.elements.iter().enumerate() {
+            match e {
+                Element::Vsource(..) => {
+                    vsource_slot[k] = br;
+                    br += 1;
+                }
+                Element::Vcvs(..) | Element::Mult(..) | Element::Inductor(..) => br += 1,
+                _ => {}
             }
-            rhss.push(self.stamp_rhs(dim, n_nodes));
         }
+        let base = self.stamp_rhs(dim, n_nodes);
+        let mut slot_sets = Vec::with_capacity(overrides.len());
+        for ov in overrides {
+            let mut set = Vec::with_capacity(ov.len());
+            for &(idx, v) in ov {
+                // keeps the documented semantics: the circuit is left
+                // holding the last entry's source values
+                self.set_vsource_at(idx, v)?;
+                set.push((vsource_slot[idx], v));
+            }
+            slot_sets.push(set);
+        }
+        let rhss = kern.rhs_columns(&base, &slot_sets);
 
         if self.solver.wants_iterative(sys.nnz()) {
             if let Some(xs) = self.solve_krylov_batch(&sys, &rhss, workers) {
@@ -827,7 +873,7 @@ impl Circuit {
                 let Some(CacheState::Ready(entry)) = guard.as_ref() else {
                     unreachable!("entry just ensured");
                 };
-                match entry.numeric.solve_multi(&rhss) {
+                match entry.numeric.solve_multi_kern(&rhss, kern) {
                     // certify every batch entry — a near-zero first RHS must
                     // not vacuously vouch for the rest of the batch
                     Ok(xs)

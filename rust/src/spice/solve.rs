@@ -96,12 +96,29 @@ pub struct SolveStats {
     /// a warm iterative solve reused a cached preconditioner (complete-LU
     /// or ILU pattern) without any fresh analysis/refactorization
     pub precond_reused: bool,
+    /// which [`crate::backend`] kernel set ran the dense batch math
+    pub backend: &'static str,
+    /// nanoseconds inside triangular substitution sweeps for this solve
+    /// (0 when the path predates the backend extraction, e.g. the
+    /// reference eliminator)
+    pub subst_ns: u64,
+    /// nanoseconds inside GMRES matrix-vector products for this solve
+    pub matvec_ns: u64,
 }
 
 impl SolveStats {
     /// Counters of a direct (non-Krylov) solve.
     pub fn direct(peak_entries: usize, unknowns: usize) -> SolveStats {
-        SolveStats { peak_entries, unknowns, iterations: 0, residual: 0.0, precond_reused: false }
+        SolveStats {
+            peak_entries,
+            unknowns,
+            iterations: 0,
+            residual: 0.0,
+            precond_reused: false,
+            backend: "scalar",
+            subst_ns: 0,
+            matvec_ns: 0,
+        }
     }
 }
 

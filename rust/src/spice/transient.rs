@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use super::solve::{self, SparseSys};
 use super::{factor, krylov, residual_ok, Circuit, Element};
+use crate::backend::{self, Backend};
 
 /// Time-varying source value, attached to a V or I source via
 /// [`Circuit::set_waveform`] / [`Circuit::vsource_wave`]. DC analyses use
@@ -313,6 +314,8 @@ struct TranSolver {
     n_nodes: usize,
     krylov_cfg: Option<krylov::KrylovCfg>,
     workers: usize,
+    /// Dense-kernel backend inherited from the circuit at sweep start.
+    kern: &'static dyn Backend,
     sym: Arc<factor::Symbolic>,
     nums: [factor::Numeric; 2],
     /// Stage coefficient currently assembled into each slot (NaN = none).
@@ -328,6 +331,7 @@ impl TranSolver {
     fn new(
         sys0: &SparseSys,
         solver: krylov::SolverStrategy,
+        choice: backend::BackendChoice,
         cfg: &TranConfig,
         dim: usize,
         n_nodes: usize,
@@ -343,6 +347,7 @@ impl TranSolver {
             n_nodes,
             krylov_cfg,
             workers: cfg.workers.max(1),
+            kern: backend::resolve(choice),
             nums: [factor::Numeric::new(sym.clone()), factor::Numeric::new(sym.clone())],
             sym,
             keys: [f64::NAN, f64::NAN],
@@ -377,6 +382,7 @@ impl TranSolver {
         self.syss[slot].as_ref()?;
         let a = self.keys[slot];
         let workers = self.workers;
+        let kern = self.kern;
         // lift the preconditioner out of `self` so the closure below only
         // borrows locals alongside the `sys` borrow of `self.syss`
         let had_ilu = self.ilu.is_some();
@@ -394,7 +400,7 @@ impl TranSolver {
                 pre.factor()?;
                 ilu_key = a;
             }
-            let (xs, st) = krylov::gmres_batch(sys, rhss, &*pre, &cfg, workers)?;
+            let (xs, st) = krylov::gmres_batch_kern(sys, rhss, &*pre, &cfg, workers, kern)?;
             if !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
                 bail!("transient: batch GMRES solution failed the residual gate");
             }
@@ -451,7 +457,8 @@ impl TranSolver {
             num.refactor().context("transient numeric refactorization")?;
             self.stats.refactorizations += 1;
         }
-        let xs = num.solve_multi(rhss).context("transient multi-RHS substitution")?;
+        let xs =
+            num.solve_multi_kern(rhss, self.kern).context("transient multi-RHS substitution")?;
         self.stats.peak_entries = self.stats.peak_entries.max(num.stats().peak_entries);
         if certify && !xs.iter().zip(rhss).all(|(x, b)| residual_ok(sys, b, x)) {
             bail!("transient: factored solution failed the residual gate");
@@ -677,7 +684,7 @@ pub fn tran_batch(
     // one symbolic analysis on the DC-init stamp serves the whole sweep
     let v0 = vec![0.0; n_nodes];
     let sys0 = c.stamp_dyn(dim, n_nodes, &v0, 0.0, 0.0)?;
-    let mut solver = TranSolver::new(&sys0, c.solver(), cfg, dim, n_nodes)?;
+    let mut solver = TranSolver::new(&sys0, c.solver(), c.backend(), cfg, dim, n_nodes)?;
 
     // batched DC operating point at t = 0 (certified: a bad factorization
     // would poison every step after it)

@@ -4,9 +4,74 @@
 //! segmented SPICE scheduler only need a static work-split map
 //! ([`par_map`]/[`par_map_mut`]) and a streamed stage chain
 //! ([`pipeline_stream`]), which std::thread::scope provides without
-//! unsafe.
+//! unsafe. Nested map calls share a process-wide worker budget
+//! ([`set_thread_budget`]) so an outer fan-out that itself fans out does
+//! not oversubscribe the host.
 
-/// Parallel map over `items` with up to `workers` OS threads.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide worker budget for [`par_map`]/[`par_map_mut`].
+/// 0 means "auto": [`default_workers`]. See [`set_thread_budget`].
+static BUDGET: AtomicUsize = AtomicUsize::new(0);
+/// Workers currently leased to in-flight [`par_map`]/[`par_map_mut`] calls.
+static IN_FLIGHT: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the total number of worker threads that [`par_map`] and
+/// [`par_map_mut`] may have running at once, process-wide. `0` restores
+/// the default (one budget's worth per host core). Nested calls — the
+/// batched-solve shape where an outer per-segment `par_map_mut` fans out
+/// into per-RHS `par_map` workers — are the reason this exists: each call
+/// leases workers from the shared budget and inner calls degrade toward
+/// serial instead of oversubscribing the host `outer × inner` threads.
+///
+/// Every call is always granted at least one worker (the serial inline
+/// path), so progress never blocks on the budget. [`pipeline_stream`] is
+/// deliberately exempt: its groups communicate through capacity-1
+/// rendezvous channels and capping them would deadlock the chain.
+pub fn set_thread_budget(n: usize) {
+    BUDGET.store(n, Ordering::Relaxed);
+}
+
+/// The effective process-wide worker budget ([`set_thread_budget`], with
+/// 0 resolving to [`default_workers`]).
+pub fn thread_budget() -> usize {
+    match BUDGET.load(Ordering::Relaxed) {
+        0 => default_workers(),
+        n => n,
+    }
+}
+
+/// A lease of worker slots against the global budget; returned to the
+/// pool on drop (including on panic unwind out of a worker scope).
+struct Lease(usize);
+
+impl Lease {
+    /// Grant `min(want, budget - in_flight)`, but never less than 1:
+    /// a saturated budget degrades callers to the serial path rather
+    /// than blocking them.
+    fn take(want: usize) -> Lease {
+        let budget = thread_budget();
+        loop {
+            let used = IN_FLIGHT.load(Ordering::Relaxed);
+            let grant = want.min(budget.saturating_sub(used)).max(1);
+            if IN_FLIGHT
+                .compare_exchange(used, used + grant, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Lease(grant);
+            }
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        IN_FLIGHT.fetch_sub(self.0, Ordering::Relaxed);
+    }
+}
+
+/// Parallel map over `items` with up to `workers` OS threads (further
+/// capped by the global [`set_thread_budget`] lease).
 /// Results are returned in input order. Panics in workers propagate.
 pub fn par_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
 where
@@ -16,6 +81,11 @@ where
 {
     let workers = workers.max(1).min(items.len().max(1));
     if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let lease = Lease::take(workers);
+    let workers = lease.0;
+    if workers <= 1 {
         return items.iter().map(&f).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
@@ -39,8 +109,8 @@ where
 
 /// Parallel map over mutable items (e.g. per-segment circuits whose cached
 /// factorizations update during the solve). Items are split into contiguous
-/// chunks, one worker per chunk; results return in input order. Panics in
-/// workers propagate.
+/// chunks, one worker per chunk (capped by the global [`set_thread_budget`]
+/// lease); results return in input order. Panics in workers propagate.
 pub fn par_map_mut<T, R, F>(items: &mut [T], workers: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -50,6 +120,11 @@ where
     let n = items.len();
     let workers = workers.max(1).min(n.max(1));
     if workers <= 1 || n <= 1 {
+        return items.iter_mut().map(f).collect();
+    }
+    let lease = Lease::take(workers);
+    let workers = lease.0;
+    if workers <= 1 {
         return items.iter_mut().map(f).collect();
     }
     let chunk = n.div_ceil(workers);
@@ -203,6 +278,36 @@ mod tests {
         assert!(par_map_mut(&mut xs, 4, |x| *x).is_empty());
         let mut one = vec![7u32];
         assert_eq!(par_map_mut(&mut one, 8, |x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn thread_budget_caps_nested_parallelism() {
+        // 4 outer workers each wanting 6 inner workers would put 24 leaf
+        // closures in flight unbudgeted; with a budget of 3 the outer map
+        // leases 3 workers and every inner call degrades to the serial
+        // path, so at most 3 leaf closures ever run concurrently.
+        set_thread_budget(3);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let outer: Vec<u64> = (0..4).collect();
+        let got = par_map(&outer, 4, |&o| {
+            let inner: Vec<u64> = (0..6).collect();
+            par_map(&inner, 6, |&i| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                o * 10 + i
+            })
+            .into_iter()
+            .sum::<u64>()
+        });
+        set_thread_budget(0);
+        let want: Vec<u64> =
+            outer.iter().map(|o| (0..6).map(|i| o * 10 + i).sum()).collect();
+        assert_eq!(got, want);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 3, "peak concurrency {peak} exceeded budget 3");
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Backend-parity suite: pins the portable-SIMD kernels against the
+//! scalar reference on every dense hot loop the `memx::backend` trait
+//! covers — multi-RHS LU substitution (bit-identical by contract), ILU(0)
+//! triangular sweeps (shared reference code, bit-identical), GMRES
+//! (reduction kernels reassociate, so parity is pinned to ≤1e-12 relative
+//! on well-conditioned MNA-like systems), and the full demo-network chain
+//! at `Fidelity::Spice` under both backends.
+
+use std::sync::Arc;
+
+use memx::backend::{self, BackendChoice};
+use memx::netlist::CrossbarSim;
+use memx::pipeline::{default_device, demo_network, Fidelity, PipelineBuilder};
+use memx::spice::factor::{self, Numeric};
+use memx::spice::krylov::{self, Ilu0, KrylovCfg};
+use memx::spice::solve::{Ordering, SparseSys};
+use memx::util::prng::Rng;
+use memx::util::prop::check;
+
+/// A random MNA-like system: strong 5.0-ish diagonal plus a few unit-scale
+/// couplings per row (strictly diagonally dominant, so both the direct
+/// factorization and ILU(0)-preconditioned GMRES are well behaved). With
+/// `zero_diag_pair`, rows 0/1 instead carry only an anti-diagonal entry
+/// pair, forcing the eliminator through an off-diagonal pivot.
+fn mna_system(rng: &mut Rng, n: usize, zero_diag_pair: bool) -> SparseSys {
+    let mut sys = SparseSys::new(n);
+    let pair = zero_diag_pair && n >= 2;
+    let start = if pair { 2 } else { 0 };
+    if pair {
+        sys.add(0, 1, 2.0 + rng.f64());
+        sys.add(1, 0, 2.0 + rng.f64());
+    }
+    for i in start..n {
+        sys.add(i, i, 5.0 + rng.f64());
+    }
+    for i in 0..n {
+        for _ in 0..3 {
+            let j = rng.below(n);
+            // keep the anti-diagonal block isolated so it stays nonsingular
+            if pair && (i < 2 || j < 2) {
+                continue;
+            }
+            if i != j {
+                sys.add(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        sys.add_b(i, rng.range_f64(-1.0, 1.0));
+    }
+    sys
+}
+
+fn factor_sys(sys: &SparseSys) -> Numeric {
+    let sym = Arc::new(factor::analyze(sys, Ordering::Smart).expect("symbolic analysis"));
+    let mut num = Numeric::new(sym);
+    num.assemble(sys).expect("assemble");
+    num.refactor().expect("refactor");
+    num
+}
+
+fn ilu(sys: &SparseSys) -> Ilu0 {
+    let mut p = Ilu0::analyze(sys).expect("ilu analyze");
+    p.assemble(sys).expect("ilu assemble");
+    p.factor().expect("ilu factor");
+    p
+}
+
+fn rhs_batch(rng: &mut Rng, n: usize, k: usize) -> Vec<Vec<f64>> {
+    (0..k).map(|_| (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()).collect()
+}
+
+/// Tight tolerance so reassociation-induced GMRES differences stay well
+/// inside the 1e-12 parity gate.
+fn tight_cfg() -> KrylovCfg {
+    KrylovCfg { restart: 64, tol: 1e-13, max_iter: 2000 }
+}
+
+fn rel_close(a: &[f64], b: &[f64], tol: f64) -> bool {
+    let scale = a.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol * scale)
+}
+
+#[test]
+fn multi_rhs_substitution_bit_identical_across_backends() {
+    check(
+        "multi-rhs-backend-parity",
+        40,
+        |rng: &mut Rng, size: usize| {
+            let n = 2 + rng.below(3 * size + 6);
+            let pair = rng.below(3) == 0; // every ~third case pivots 0/1
+            let sys = mna_system(rng, n, pair);
+            let k = 1 + rng.below(18); // spans every SIMD lane width 8/4/2/1
+            let rhss = rhs_batch(rng, n, k);
+            (sys, rhss)
+        },
+        |(sys, rhss)| {
+            let num = factor_sys(sys);
+            let xs = num.solve_multi_kern(rhss, backend::scalar()).expect("scalar solve");
+            let ys = num.solve_multi_kern(rhss, backend::simd()).expect("simd solve");
+            // bit-identical by contract: the SIMD lane blocks replay the
+            // scalar per-pivot operation order exactly
+            xs == ys
+        },
+    );
+}
+
+#[test]
+fn zero_diagonal_pivot_pair_parity() {
+    let mut rng = Rng::new(0xA171);
+    let sys = mna_system(&mut rng, 9, true);
+    let num = factor_sys(&sys);
+    let rhss = rhs_batch(&mut rng, 9, 11);
+    let xs = num.solve_multi_kern(&rhss, backend::scalar()).unwrap();
+    let ys = num.solve_multi_kern(&rhss, backend::simd()).unwrap();
+    assert_eq!(xs, ys);
+    // the single-RHS path agrees with the batched columns
+    for (k, rhs) in rhss.iter().enumerate() {
+        let x1 = num.solve_kern(rhs, backend::simd()).unwrap();
+        assert!(rel_close(&xs[k], &x1, 1e-12), "column {k} disagrees with single-RHS solve");
+    }
+}
+
+#[test]
+fn ilu0_sweep_bit_identical_across_backends() {
+    check(
+        "ilu0-backend-parity",
+        30,
+        |rng: &mut Rng, size: usize| {
+            let n = 2 + rng.below(3 * size + 6);
+            let sys = mna_system(rng, n, false);
+            let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            (sys, r)
+        },
+        |(sys, r)| {
+            let pre = ilu(sys);
+            let a = pre.solve_kern(r, backend::scalar()).expect("scalar sweep");
+            let b = pre.solve_kern(r, backend::simd()).expect("simd sweep");
+            a == b // the sweep itself is shared reference code
+        },
+    );
+}
+
+#[test]
+fn gmres_parity_within_1e12_on_mna_systems() {
+    check(
+        "gmres-backend-parity",
+        25,
+        |rng: &mut Rng, size: usize| {
+            let n = 3 + rng.below(3 * size + 8);
+            mna_system(rng, n, false)
+        },
+        |sys| {
+            let pre = ilu(sys);
+            let cfg = tight_cfg();
+            let (xs, st_s) =
+                krylov::gmres_kern(sys, &sys.b, &pre, &cfg, backend::scalar()).expect("scalar");
+            let (xv, st_v) =
+                krylov::gmres_kern(sys, &sys.b, &pre, &cfg, backend::simd()).expect("simd");
+            st_s.backend == "scalar" && st_v.backend == "simd" && rel_close(&xs, &xv, 1e-12)
+        },
+    );
+}
+
+#[test]
+fn gmres_batch_parity_and_backend_attribution() {
+    let mut rng = Rng::new(0x6B47);
+    let sys = mna_system(&mut rng, 40, false);
+    let rhss = rhs_batch(&mut rng, 40, 6);
+    let pre = ilu(&sys);
+    let cfg = tight_cfg();
+    let (xs, st_s) =
+        krylov::gmres_batch_kern(&sys, &rhss, &pre, &cfg, 2, backend::scalar()).unwrap();
+    let (xv, st_v) =
+        krylov::gmres_batch_kern(&sys, &rhss, &pre, &cfg, 2, backend::simd()).unwrap();
+    assert_eq!(st_s.backend, "scalar");
+    assert_eq!(st_v.backend, "simd");
+    for (k, (a, b)) in xs.iter().zip(&xv).enumerate() {
+        assert!(rel_close(a, b, 1e-12), "batch column {k} exceeded 1e-12 relative parity");
+    }
+}
+
+#[test]
+fn crossbar_sim_batch_identical_across_backends() {
+    let dev = default_device();
+    let cb = memx::mapper::build_synthetic_fc(
+        10,
+        6,
+        dev.levels,
+        memx::mapper::MapMode::Inverted,
+        0xCB5,
+    );
+    let mut rng = Rng::new(0xCB51);
+    let inputs: Vec<Vec<f64>> =
+        (0..8).map(|_| (0..10).map(|_| rng.range_f64(-0.4, 0.4)).collect()).collect();
+    let mut solve = |choice: BackendChoice| {
+        let mut sim = CrossbarSim::new(
+            &cb,
+            &dev,
+            4,
+            Ordering::Smart,
+            memx::spice::krylov::SolverStrategy::Auto,
+        )
+        .unwrap();
+        sim.set_backend(choice);
+        sim.solve_batch(&inputs, 2).unwrap()
+    };
+    let a = solve(BackendChoice::Scalar);
+    let b = solve(BackendChoice::Simd);
+    assert_eq!(a, b, "direct-path crossbar reads must be bit-identical across backends");
+}
+
+#[test]
+fn demo_network_spice_agrees_across_backends() {
+    let (m, ws) = demo_network(7).unwrap();
+    let mut build = |choice: BackendChoice| {
+        PipelineBuilder::new()
+            .fidelity(Fidelity::Spice)
+            .segment(8)
+            .backend(choice)
+            .build(&m, &ws)
+            .unwrap()
+    };
+    let mut scalar_pipe = build(BackendChoice::Scalar);
+    let mut simd_pipe = build(BackendChoice::Simd);
+    let mut rng = Rng::new(0xBACC);
+    let x: Vec<f64> =
+        (0..scalar_pipe.in_dim()).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let a = scalar_pipe.forward(&x).unwrap();
+    let b = simd_pipe.forward(&x).unwrap();
+    assert!(
+        rel_close(&a, &b, 1e-9),
+        "full-chain spice logits diverged across backends: {a:?} vs {b:?}"
+    );
+}
+
+#[test]
+fn backend_choice_cli_contract() {
+    assert_eq!("scalar".parse::<BackendChoice>().unwrap(), BackendChoice::Scalar);
+    assert_eq!("simd".parse::<BackendChoice>().unwrap(), BackendChoice::Simd);
+    assert_eq!("auto".parse::<BackendChoice>().unwrap(), BackendChoice::Auto);
+    assert!("gpu".parse::<BackendChoice>().is_err());
+    assert_eq!(BackendChoice::Simd.to_string(), "simd");
+    assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    assert_eq!(backend::resolve(BackendChoice::Scalar).name(), "scalar");
+    assert_eq!(backend::resolve(BackendChoice::Simd).name(), "simd");
+}
+
+#[test]
+fn kernel_time_counters_accumulate() {
+    let mut rng = Rng::new(0x7311);
+    let sys = mna_system(&mut rng, 120, false);
+    let num = factor_sys(&sys);
+    let rhss = rhs_batch(&mut rng, 120, 32);
+    let before = backend::subst_ns();
+    num.solve_multi_kern(&rhss, backend::simd()).unwrap();
+    assert!(
+        backend::subst_ns() > before,
+        "a 120x32 substitution pass must land in the process-wide kernel-time counter"
+    );
+    let pre = ilu(&sys);
+    let matvec_before = backend::matvec_ns();
+    let (_, st) = krylov::gmres_kern(&sys, &sys.b, &pre, &tight_cfg(), backend::simd()).unwrap();
+    assert_eq!(st.backend, "simd");
+    assert!(backend::matvec_ns() >= matvec_before + st.matvec_ns);
+}

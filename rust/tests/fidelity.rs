@@ -13,6 +13,7 @@
 use memx::analog::{self, KNEE_TOL};
 use memx::mapper::{self, BnFold, MapMode, BN_EPS};
 use memx::nn::{ActKind, DeviceJson};
+use memx::backend::BackendChoice;
 use memx::pipeline::{
     default_device, demo_network, ActivationModule, AnalogModule, BatchNormModule, Fidelity,
     GapModule, ModuleCfg, PipelineBuilder,
@@ -29,6 +30,7 @@ fn cfg(dev: &DeviceJson, solver: SolverStrategy) -> ModuleCfg<'_> {
         segment: 8,
         ordering: Ordering::Smart,
         solver,
+        backend: BackendChoice::Auto,
         workers: 2,
         prog_sigma: 0.0,
     }

@@ -572,6 +572,7 @@ fn prop_bn_spice_netlists_match_affine_fold() {
                 segment: 3,
                 ordering: Ordering::Smart,
                 solver: SolverStrategy::Auto,
+                backend: memx::backend::BackendChoice::Auto,
                 workers: 1,
                 prog_sigma: 0.0,
             };
@@ -691,6 +692,7 @@ fn build_random_unit_pipeline(
         segment: 4,
         ordering: Ordering::Smart,
         solver: SolverStrategy::Auto,
+        backend: memx::backend::BackendChoice::Auto,
         workers: 1,
         prog_sigma: 0.0,
     };
