@@ -27,6 +27,23 @@
 //! `MEMX_BACKEND` environment variable. `auto` (the default) resolves to
 //! the portable-SIMD lane-blocked kernels; `scalar` is the verbatim
 //! reference the parity suite (rust/tests/backend.rs) pins it against.
+//!
+//! # Observability
+//!
+//! The whole stack is span-instrumented through [`memx::telemetry`]:
+//! serve request -> batch -> executor forward -> execution unit -> module
+//! -> segment solve -> factor/GMRES/transient kernels, plus typed instant
+//! events for drift detections, recalibrations, solver fallbacks and
+//! executor errors. Tracing is off by default (one relaxed atomic load per
+//! span site); the `serve`/`accuracy`/`spice`/`drift`/`tran` subcommands
+//! enable it with `--trace-out trace.json` (a chrome://tracing /
+//! ui.perfetto.dev file) or `--trace-jsonl trace.jsonl` (grep/jq-friendly).
+//! `memx serve` additionally takes `--metrics-addr HOST:PORT` to serve the
+//! metrics registry as Prometheus text exposition (`/metrics`) and JSON
+//! (`/metrics.json`) — request/latency/drift/fallback series — and
+//! `--linger-ms N` to hold the endpoint open after the demo drive so an
+//! external scraper can read the final counters. The tour below records a
+//! trace of one SPICE forward in-process.
 
 use std::path::Path;
 
@@ -138,6 +155,25 @@ fn synthetic_tour() -> anyhow::Result<()> {
         cmp.analytical_latency_s * 1e6,
         read.energy_j * 1e9,
         read.stats.steps_accepted
+    );
+
+    // observability: rerun one spice forward with span tracing enabled —
+    // the drained events are the same hierarchy `--trace-out` writes for
+    // chrome://tracing (unit -> module -> segment solve -> kernel spans)
+    memx::telemetry::set_level(memx::telemetry::Level::Spans);
+    let mut traced = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(8)
+        .build_fc_stack(&dims, &dev, 7)?;
+    traced.forward_batch(&batch)?;
+    memx::telemetry::set_level(memx::telemetry::Level::Off);
+    let events = memx::telemetry::drain();
+    let kernels = events.iter().filter(|e| e.cat == "kernel").count();
+    println!(
+        "telemetry    {} spans from one spice forward ({kernels} kernel-level) — \
+         `memx serve --metrics-addr 127.0.0.1:9095 --trace-out trace.json` exports \
+         the live equivalent",
+        events.len()
     );
     Ok(())
 }

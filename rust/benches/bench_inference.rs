@@ -127,6 +127,7 @@ fn serve_workload() -> anyhow::Result<()> {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     use memx::coordinator::{InferenceExecutor, PipelineExecutor, Server};
+    use memx::telemetry::{self, Level, Ph};
 
     let (h, w, c, classes) = (8usize, 8usize, 3usize, 10usize);
     let dims = [h * w * c, 96, 48, classes];
@@ -139,6 +140,11 @@ fn serve_workload() -> anyhow::Result<()> {
     let mut derived: Vec<(String, f64)> = Vec::new();
     let mut thr_w1 = 0.0f64;
     for &workers in &[1usize, 2, 4] {
+        // span tracing stays on through the run so the BENCH_serve.json
+        // record carries the per-stage wall-time breakdown of this exact
+        // workload (queue wait / executor forward / crossbar solve)
+        telemetry::set_level(Level::Spans);
+        telemetry::clear();
         let server = Server::start_with(std::time::Duration::from_millis(2), move || {
             // scheduler width is the knob under test; module solves stay
             // single-threaded so thread counts don't multiply
@@ -186,6 +192,35 @@ fn serve_workload() -> anyhow::Result<()> {
             derived.push((format!("serve_speedup_w{workers}_vs_w1"), thr / thr_w1.max(1e-9)));
         }
         server.shutdown();
+
+        // shutdown joined the serve thread (which flushes its span buffer),
+        // so the drain below sees the whole run
+        telemetry::set_level(Level::Off);
+        let events = telemetry::drain();
+        let span_secs = |cat: &str| {
+            events
+                .iter()
+                .filter(|e| e.cat == cat && e.ph == Ph::Span)
+                .map(|e| e.dur_ns)
+                .sum::<u64>() as f64
+                / 1e9
+        };
+        let queue_s = events
+            .iter()
+            .filter(|e| e.name == "request")
+            .flat_map(|e| e.args.iter())
+            .filter(|(k, _)| *k == "queue_us")
+            .map(|(_, v)| *v)
+            .sum::<f64>()
+            / 1e6;
+        let (forward_s, solve_s) = (span_secs("forward"), span_secs("solve"));
+        println!(
+            "    -> span breakdown: queue {queue_s:.3}s, forward {forward_s:.3}s, \
+             solve {solve_s:.3}s (summed across requests/batches)"
+        );
+        derived.push((format!("serve_w{workers}_span_queue_s"), queue_s));
+        derived.push((format!("serve_w{workers}_span_forward_s"), forward_s));
+        derived.push((format!("serve_w{workers}_span_solve_s"), solve_s));
     }
     b.table("serve path (batcher + pipelined scheduler)");
     match append_json_report("BENCH_serve.json", "bench_inference_serve", &b.rows, &derived) {

@@ -258,6 +258,64 @@ fn backend_sections(b: &mut Bench, derived: &mut Vec<(String, f64)>, quick: bool
     }
 }
 
+/// telemetry overhead contract on the cached multi-RHS resolve (the
+/// hottest instrumented kernel): the same workload is timed with tracing
+/// off and with tracing fully enabled. Enabled overhead < 2% subsumes the
+/// disabled (`Level::Off`) contract, which is one relaxed atomic load per
+/// span site. Compared on min-of-iters (noise-robust); quick mode asserts.
+fn span_overhead_section(b: &mut Bench, derived: &mut Vec<(String, f64)>, quick: bool) {
+    use memx::telemetry::{self, Level};
+
+    let (n, k) = (768usize, 16usize);
+    let mut rng = Rng::new(43);
+    let mut sys = SparseSys::new(n);
+    for i in 0..n {
+        sys.add(i, i, 5.0 + rng.f64());
+        for _ in 0..4 {
+            let j = rng.below(n);
+            if i != j {
+                sys.add(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    let sym = Arc::new(factor::analyze(&sys, Ordering::Smart).unwrap());
+    let mut num = Numeric::new(sym);
+    num.assemble(&sys).unwrap();
+    num.refactor().unwrap();
+    let rhss: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
+
+    telemetry::set_level(Level::Off);
+    let off = b.run(&format!("multi-rhs resolve n={n} k={k} spans off"), || {
+        black_box(num.solve_multi_kern(&rhss, backend::simd()).unwrap());
+    });
+    telemetry::set_level(Level::Spans);
+    let on = b.run(&format!("multi-rhs resolve n={n} k={k} spans on"), || {
+        black_box(num.solve_multi_kern(&rhss, backend::simd()).unwrap());
+    });
+    telemetry::set_level(Level::Off);
+    let events = telemetry::drain().len();
+    telemetry::clear();
+
+    let frac = on.min.as_secs_f64() / off.min.as_secs_f64().max(1e-12) - 1.0;
+    println!(
+        "    -> span overhead {:.3}% on the cached multi-RHS resolve \
+         ({events} events collected while enabled)",
+        frac * 100.0
+    );
+    derived.push(("span_overhead_frac".into(), frac));
+    if quick {
+        assert!(events > 0, "enabled tracing recorded no spans on the instrumented kernel");
+        assert!(
+            frac < 0.02,
+            "telemetry span overhead exceeded 2% on the cached multi-RHS resolve \
+             (n={n}, k={k}): {:.3}%",
+            frac * 100.0
+        );
+    }
+}
+
 fn main() {
     let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
     let mut b = Bench::quick();
@@ -269,6 +327,7 @@ fn main() {
         krylov_sections(&mut b, &mut derived);
     }
     backend_sections(&mut b, &mut derived, quick);
+    span_overhead_section(&mut b, &mut derived, quick);
 
     b.table("SPICE solver scaling");
     match append_json_report("BENCH_spice.json", "bench_spice", &b.rows, &derived) {

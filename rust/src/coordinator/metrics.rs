@@ -1,42 +1,53 @@
 //! Serving metrics: request counters, latency histogram, throughput,
 //! executor utilization and per-stage wall time.
 //!
+//! Since the `memx::telemetry` registry landed, this module is a **view**:
+//! every counter and histogram lives in a per-server
+//! [`Registry`](crate::telemetry::metrics::Registry) (exported over HTTP by
+//! `memx serve --metrics-addr` as Prometheus text / JSON), and [`Snapshot`]
+//! is a point-in-time read of that registry plus the process-wide solver /
+//! kernel counters. The printed output is unchanged from the pre-registry
+//! implementation, with p99.9 and the log2-bucket quantization bounds
+//! appended to the latency section.
+//!
 //! The batcher thread records queue/end-to-end latencies and how long the
 //! executor itself was busy per dispatched batch; pipeline-backed executors
 //! additionally surface the scheduler's per-unit wall-time accounting
 //! ([`StageStat`]) which is merged here and printed with the snapshot.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::pipeline::{ModuleDrift, StageStat};
-
-/// Fixed log-scale latency histogram from 1 µs to ~67 s.
-const BUCKETS: usize = 27;
+use crate::telemetry::metrics::{Counter, Gauge, Histogram, Registry};
 
 /// Poison-tolerant lock: a panicking batcher thread must not take the
-/// metrics down with it — a poisoned histogram is still a histogram, so
+/// metrics down with it — a poisoned stage table is still a table, so
 /// recover the guard and keep serving reads.
 fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-#[derive(Default)]
+/// The server's metrics surface — counter/histogram handles into its
+/// [`Registry`]. Handles are lock-free on the record path; the registry is
+/// what `--metrics-addr` exports.
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub completed: AtomicU64,
-    pub errors: AtomicU64,
-    pub batches: AtomicU64,
-    pub padded_slots: AtomicU64,
+    registry: Arc<Registry>,
+    pub requests: Counter,
+    pub completed: Counter,
+    pub errors: Counter,
+    pub batches: Counter,
+    pub padded_slots: Counter,
     /// batches whose logit-margin EWMA crossed the drift threshold
-    pub drift_detections: AtomicU64,
+    pub drift_detections: Counter,
     /// successful executor recalibrations (crossbar reprogram cycles)
-    pub recalibrations: AtomicU64,
+    pub recalibrations: Counter,
+    /// current depth of the request queue (sampled by the batcher loop)
+    pub queue_depth: Gauge,
     /// nanoseconds the executor spent inside `run_batch`
-    exec_busy_ns: AtomicU64,
-    lat: Mutex<Hist>,
-    queue_lat: Mutex<Hist>,
+    exec_busy_ns: Counter,
+    lat: Histogram,
+    queue_lat: Histogram,
     /// per-stage (unit) wall time merged from the scheduler, chain order
     stages: Mutex<Vec<StageCell>>,
     /// latest per-module drift telemetry (cumulative state, so each
@@ -50,45 +61,9 @@ struct StageCell {
     calls: u64,
 }
 
-#[derive(Default, Clone)]
-struct Hist {
-    counts: [u64; BUCKETS],
-    sum_us: u128,
-    max_us: u64,
-    n: u64,
-}
-
-impl Hist {
-    fn record(&mut self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let b = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        self.counts[b] += 1;
-        self.sum_us += us as u128;
-        self.max_us = self.max_us.max(us);
-        self.n += 1;
-    }
-
-    fn quantile(&self, q: f64) -> Duration {
-        if self.n == 0 {
-            return Duration::ZERO;
-        }
-        let target = (self.n as f64 * q).ceil() as u64;
-        let mut acc = 0u64;
-        for (b, &c) in self.counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                // upper edge of bucket b
-                return Duration::from_micros(1u64 << (b + 1));
-            }
-        }
-        Duration::from_micros(self.max_us)
-    }
-
-    fn mean(&self) -> Duration {
-        if self.n == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_micros((self.sum_us / self.n as u128) as u64)
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
     }
 }
 
@@ -103,6 +78,11 @@ pub struct Snapshot {
     pub lat_p50: Duration,
     pub lat_p95: Duration,
     pub lat_p99: Duration,
+    pub lat_p999: Duration,
+    /// log2-bucket edges bracketing the true p99 — the quantization error
+    /// bar of `lat_p99` (which reports the conservative upper edge), so
+    /// benches can state `p99 ∈ [lo, hi]` instead of over-claiming a point
+    pub lat_p99_bounds: (Duration, Duration),
     pub lat_max: Duration,
     pub queue_mean: Duration,
     /// total time the executor spent answering batches
@@ -127,18 +107,87 @@ pub struct Snapshot {
 }
 
 impl Metrics {
+    /// Build the metrics surface over a fresh registry, wiring in the
+    /// process-wide solver/kernel/trace series as render-time views.
+    pub fn new() -> Metrics {
+        let registry = Arc::new(Registry::default());
+        let m = Metrics {
+            requests: registry.counter("memx_requests_total", "classification requests submitted"),
+            completed: registry.counter("memx_requests_completed_total", "requests answered"),
+            errors: registry.counter("memx_request_errors_total", "requests failed"),
+            batches: registry.counter("memx_batches_total", "executor batches dispatched"),
+            padded_slots: registry
+                .counter("memx_padded_slots_total", "padding slots in dispatched batches"),
+            drift_detections: registry
+                .counter("memx_drift_detections_total", "drift-watchdog EWMA threshold crossings"),
+            recalibrations: registry
+                .counter("memx_recalibrations_total", "successful crossbar reprogram cycles"),
+            queue_depth: registry
+                .gauge("memx_queue_depth", "request queue depth sampled by the batcher"),
+            exec_busy_ns: registry
+                .counter("memx_executor_busy_ns_total", "nanoseconds inside run_batch"),
+            lat: registry
+                .histogram("memx_request_latency_seconds", "end-to-end request latency"),
+            queue_lat: registry.histogram("memx_queue_wait_seconds", "request queue wait"),
+            stages: Mutex::new(Vec::new()),
+            drift: Mutex::new(Vec::new()),
+            registry,
+        };
+        let r = &m.registry;
+        r.register_fn(
+            "memx_solver_fallbacks_total",
+            "iterative-solver direct-factorization fallbacks (process-wide)",
+            || crate::spice::solver_fallbacks() as f64,
+        );
+        r.register_fn(
+            "memx_solver_cold_fallbacks_total",
+            "cold-start iterative-solver fallbacks (process-wide)",
+            || crate::spice::solver_cold_fallbacks() as f64,
+        );
+        r.register_fn(
+            "memx_gmres_iterations_total",
+            "GMRES inner iterations across all solves (process-wide)",
+            || crate::spice::gmres_iterations() as f64,
+        );
+        r.register_fn(
+            "memx_precond_reuses_total",
+            "warm-preconditioner reuses across iterative solves (process-wide)",
+            || crate::spice::precond_reuses() as f64,
+        );
+        r.register_fn(
+            "memx_kernel_subst_seconds",
+            "wall seconds in triangular-substitution kernels (process-wide)",
+            || crate::backend::subst_ns() as f64 * 1e-9,
+        );
+        r.register_fn(
+            "memx_kernel_matvec_seconds",
+            "wall seconds in GMRES matvec kernels (process-wide)",
+            || crate::backend::matvec_ns() as f64 * 1e-9,
+        );
+        r.register_fn(
+            "memx_trace_events_dropped_total",
+            "trace events lost to the collector cap (process-wide)",
+            || crate::telemetry::dropped_events() as f64,
+        );
+        m
+    }
+
+    /// The backing registry — what `--metrics-addr` exports.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
     pub fn record_latency(&self, d: Duration) {
-        locked(&self.lat).record(d);
+        self.lat.record(d);
     }
 
     pub fn record_queue(&self, d: Duration) {
-        locked(&self.queue_lat).record(d);
+        self.queue_lat.record(d);
     }
 
     /// Account one executor dispatch (time spent inside `run_batch`).
     pub fn record_exec(&self, d: Duration) {
-        self.exec_busy_ns
-            .fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        self.exec_busy_ns.add(d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
     /// Merge a scheduler stage-time drain into the per-stage table
@@ -177,8 +226,8 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let lat = locked(&self.lat).clone();
-        let q = locked(&self.queue_lat).clone();
+        let lat = self.lat.snapshot();
+        let q = self.queue_lat.snapshot();
         let stages = locked(&self.stages)
             .iter()
             .map(|c| StageStat {
@@ -188,20 +237,22 @@ impl Metrics {
             })
             .collect();
         Snapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            requests: self.requests.get(),
+            completed: self.completed.get(),
+            errors: self.errors.get(),
+            batches: self.batches.get(),
+            padded_slots: self.padded_slots.get(),
             lat_mean: lat.mean(),
             lat_p50: lat.quantile(0.50),
             lat_p95: lat.quantile(0.95),
             lat_p99: lat.quantile(0.99),
-            lat_max: Duration::from_micros(lat.max_us),
+            lat_p999: lat.quantile(0.999),
+            lat_p99_bounds: lat.quantile_bounds(0.99),
+            lat_max: lat.max(),
             queue_mean: q.mean(),
-            exec_busy: Duration::from_nanos(self.exec_busy_ns.load(Ordering::Relaxed)),
-            drift_detections: self.drift_detections.load(Ordering::Relaxed),
-            recalibrations: self.recalibrations.load(Ordering::Relaxed),
+            exec_busy: Duration::from_nanos(self.exec_busy_ns.get()),
+            drift_detections: self.drift_detections.get(),
+            recalibrations: self.recalibrations.get(),
             solver_fallbacks: crate::spice::solver_fallbacks(),
             kernel_subst_ns: crate::backend::subst_ns(),
             kernel_matvec_ns: crate::backend::matvec_ns(),
@@ -228,9 +279,17 @@ impl Snapshot {
         println!("  batches       {} (padded slots {})", self.batches, self.padded_slots);
         println!("  throughput    {thr:.1} img/s");
         println!(
-            "  latency       mean {:?}  p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
-            self.lat_mean, self.lat_p50, self.lat_p95, self.lat_p99, self.lat_max
+            "  latency       mean {:?}  p50 {:?}  p95 {:?}  p99 {:?}  p999 {:?}  max {:?}",
+            self.lat_mean, self.lat_p50, self.lat_p95, self.lat_p99, self.lat_p999, self.lat_max
         );
+        if self.completed > 0 {
+            // quantiles above are quantized to log2 bucket edges — state
+            // the p99 bracket so downstream benches don't over-claim
+            println!(
+                "                (log2 buckets: p99 in [{:?}, {:?}])",
+                self.lat_p99_bounds.0, self.lat_p99_bounds.1
+            );
+        }
         println!("  queue wait    mean {:?}", self.queue_mean);
         println!(
             "  executor busy {:?} ({:.1}% of wall)",
@@ -307,8 +366,15 @@ mod tests {
         let s = m.snapshot();
         assert!(s.lat_p50 <= s.lat_p95);
         assert!(s.lat_p95 <= s.lat_p99);
+        assert!(s.lat_p99 <= s.lat_p999);
         assert!(s.lat_p99 <= Duration::from_micros(s.lat_max.as_micros() as u64 * 2));
         assert!(s.lat_mean > Duration::ZERO);
+        // the quantization bracket is honest: it contains the true p99
+        // (9.9 ms for this uniform 10µs..10ms sweep) and the point value
+        // is its conservative upper edge
+        let (lo, hi) = s.lat_p99_bounds;
+        assert!(lo <= Duration::from_micros(9900) && Duration::from_micros(9900) <= hi);
+        assert_eq!(s.lat_p99, hi);
     }
 
     #[test]
@@ -316,6 +382,7 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.lat_mean, Duration::ZERO);
         assert_eq!(s.lat_p99, Duration::ZERO);
+        assert_eq!(s.lat_p999, Duration::ZERO);
         assert_eq!(s.exec_busy, Duration::ZERO);
         assert!(s.stages.is_empty());
     }
@@ -381,5 +448,24 @@ mod tests {
         // empty reports keep the last table instead of wiping it
         m.record_drift(Vec::new());
         assert_eq!(m.snapshot().drift_modules.len(), 1);
+    }
+
+    #[test]
+    fn registry_view_exports_serving_series() {
+        let m = Metrics::default();
+        m.requests.add(3);
+        m.completed.add(2);
+        m.record_latency(Duration::from_micros(500));
+        m.queue_depth.set(4.0);
+        let text = m.registry().render_prometheus();
+        assert!(text.contains("memx_requests_total 3"), "{text}");
+        assert!(text.contains("memx_requests_completed_total 2"), "{text}");
+        assert!(text.contains("memx_request_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("memx_queue_depth 4"), "{text}");
+        // process-wide views are present even before any solve ran
+        assert!(text.contains("memx_solver_fallbacks_total"), "{text}");
+        assert!(text.contains("memx_gmres_iterations_total"), "{text}");
+        // and the snapshot's counts agree with the registry's
+        assert_eq!(m.snapshot().requests, 3);
     }
 }

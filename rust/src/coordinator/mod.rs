@@ -42,6 +42,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::backend::BackendChoice;
 use crate::fault::FaultModel;
 use crate::pipeline::{image_to_input, Fidelity, ModuleDrift, Pipeline, PipelineBuilder, StageStat};
+use crate::telemetry;
 use crate::util::argmax_rows;
 use crate::util::bin::Dataset;
 use metrics::Metrics;
@@ -425,7 +426,7 @@ impl Client {
         if image.len() != self.img_elems {
             return Err(anyhow!("image has {} floats, expected {}", image.len(), self.img_elems));
         }
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.inc();
         let (tx, rx) = channel();
         self.tx
             .send(Request { image, enqueued: Instant::now(), resp: tx })
@@ -644,6 +645,12 @@ impl Server {
         self.client.metrics.clone()
     }
 
+    /// Expose this server's metrics registry over HTTP (Prometheus text at
+    /// `/metrics`, JSON at `/metrics.json`) — the `--metrics-addr` seam.
+    pub fn serve_metrics(&self, addr: &str) -> Result<telemetry::http::MetricsServer> {
+        telemetry::http::MetricsServer::serve(addr, self.client.metrics.registry())
+    }
+
     /// The one stop/join sequence (shared by [`Server::shutdown`] and
     /// `Drop`): raise the stop flag and wait for the service thread.
     fn stop_and_join(&mut self) {
@@ -707,12 +714,17 @@ fn serve_thread<F>(
     let largest = *sizes.last().expect("non-empty batch sizes");
     let mut input = vec![0f32; largest * img_elems];
     let mut watch = DriftWatch::new(policy);
+    // chrome-trace track for request lifetimes (allocated on first use:
+    // they start on client threads and close here, so they get their own
+    // track to keep this thread's batch/forward spans strictly nested)
+    let mut req_track: Option<u64> = None;
 
     while !stop.load(Ordering::Relaxed) {
         // drain everything currently queued
         while let Ok(r) = rx.try_recv() {
             queue.push(r);
         }
+        metrics.queue_depth.set(queue.len() as f64);
         let waited_out = queue
             .first()
             .map(|r| r.enqueued.elapsed() >= max_wait)
@@ -732,24 +744,36 @@ fn serve_thread<F>(
         };
 
         let batch: Vec<Request> = queue.drain(..plan.real).collect();
+        let t_deq = Instant::now();
+        let enq: Vec<Instant> = if telemetry::enabled() {
+            batch.iter().map(|r| r.enqueued).collect()
+        } else {
+            Vec::new()
+        };
         let buf = &mut input[..plan.size * img_elems];
         for (i, r) in batch.iter().enumerate() {
             buf[i * img_elems..(i + 1) * img_elems].copy_from_slice(&r.image);
-            metrics.record_queue(r.enqueued.elapsed());
+            metrics.record_queue(t_deq.saturating_duration_since(r.enqueued));
         }
         // pad by replicating the last real image
         for i in plan.real..plan.size {
             let (head, tail) = buf.split_at_mut(i * img_elems);
             tail[..img_elems].copy_from_slice(&head[(plan.real - 1) * img_elems..plan.real * img_elems]);
         }
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .padded_slots
-            .fetch_add((plan.size - plan.real) as u64, Ordering::Relaxed);
+        metrics.batches.inc();
+        metrics.padded_slots.add((plan.size - plan.real) as u64);
 
         let t_run = Instant::now();
         let run = exec.run_batch(buf);
-        metrics.record_exec(t_run.elapsed());
+        let t_done = Instant::now();
+        metrics.record_exec(t_done.saturating_duration_since(t_run));
+        telemetry::span_closed_args(
+            "forward",
+            "forward",
+            t_run,
+            t_done,
+            &[("batch", plan.size as f64), ("real", plan.real as f64)],
+        );
         metrics.record_stage_stats(&exec.take_stage_stats());
         metrics.record_drift(exec.drift_telemetry());
         let run = run.and_then(|logits| {
@@ -764,7 +788,7 @@ fn serve_thread<F>(
                 for (i, r) in batch.into_iter().enumerate() {
                     let latency = r.enqueued.elapsed();
                     metrics.record_latency(latency);
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.completed.inc();
                     let pred = Prediction {
                         label: labels[i],
                         logits: logits[i * classes..(i + 1) * classes].to_vec(),
@@ -775,26 +799,30 @@ fn serve_thread<F>(
                 // drift watchdog: a collapsing top1-top2 margin over the
                 // real (unpadded) rows is the online symptom of conductance
                 // decay — recalibrate between batches, never mid-batch
-                if watch.policy.enabled
-                    && classes >= 2
-                    && watch.observe(mean_margin(&logits, classes, plan.real))
-                {
-                    metrics.drift_detections.fetch_add(1, Ordering::Relaxed);
-                    match exec.recalibrate() {
-                        Ok(n) if n > 0 => {
-                            metrics.recalibrations.fetch_add(1, Ordering::Relaxed);
-                            watch.reset();
+                if watch.policy.enabled && classes >= 2 {
+                    let margin = mean_margin(&logits, classes, plan.real);
+                    if watch.observe(margin) {
+                        metrics.drift_detections.inc();
+                        telemetry::event(telemetry::Event::DriftDetected { margin });
+                        let _rsp = telemetry::span("recalibrate", "serve");
+                        match exec.recalibrate() {
+                            Ok(n) if n > 0 => {
+                                metrics.recalibrations.inc();
+                                telemetry::event(telemetry::Event::Recalibrated { devices: n });
+                                watch.reset();
+                            }
+                            // nothing reprogrammable, or the attempt failed:
+                            // the cooldown stops the watchdog from spinning
+                            _ => {}
                         }
-                        // nothing reprogrammable, or the attempt failed:
-                        // the cooldown stops the watchdog from spinning
-                        _ => {}
                     }
                 }
             }
             Err(e) => {
-                let batch_no = metrics.batches.load(Ordering::Relaxed);
+                let batch_no = metrics.batches.get();
+                telemetry::event(telemetry::Event::ExecutorError { batch: batch_no });
                 for r in batch {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    metrics.errors.inc();
                     r.resp
                         .send(Err(anyhow::Error::new(ExecuteError {
                             batch: batch_no,
@@ -805,7 +833,35 @@ fn serve_thread<F>(
                 }
             }
         }
+        if telemetry::enabled() {
+            // close the batch interval (this thread's track: it strictly
+            // contains the forward span) and each request's lifetime (the
+            // "requests" virtual track: lifetimes start on client threads
+            // and can straddle batch boundaries)
+            let t_end = Instant::now();
+            telemetry::span_closed_args(
+                "batch",
+                "serve",
+                t_deq,
+                t_end,
+                &[("size", plan.size as f64), ("real", plan.real as f64)],
+            );
+            let track = *req_track.get_or_insert_with(|| telemetry::virtual_track("requests"));
+            for e in &enq {
+                let queue_us =
+                    t_deq.saturating_duration_since(*e).as_nanos() as f64 / 1e3;
+                telemetry::span_closed_on(
+                    track,
+                    "request",
+                    "serve",
+                    *e,
+                    t_end,
+                    &[("queue_us", queue_us)],
+                );
+            }
+        }
     }
+    telemetry::flush_thread();
 }
 
 /// Mean top1−top2 logit margin over the first `rows` rows of a row-major

@@ -149,6 +149,7 @@ impl FaultModel {
         let t2 = self.hours + hours.max(0.0);
         self.hours = t2;
         self.reads = self.reads.saturating_add(reads);
+        crate::telemetry::event(crate::telemetry::Event::FaultStep { hours: t2 });
         let nu_base = (self.cfg.drift_nu
             * (1.0 + self.cfg.temp_coeff * (self.cfg.temp_c - self.cfg.temp_ref_c)))
         .max(0.0);

@@ -26,4 +26,5 @@ pub mod report;
 #[cfg(feature = "runtime-xla")]
 pub mod runtime;
 pub mod spice;
+pub mod telemetry;
 pub mod util;

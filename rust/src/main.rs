@@ -42,6 +42,14 @@
 //!            against the closed-form Eq 17/18 columns; appends
 //!            BENCH_transient.json (MEMX_BENCH_QUICK=1 shrinks the run)
 //!
+//! Observability (memx::telemetry):
+//!   accuracy/serve/spice/drift/tran all take [--trace-out FILE] (chrome://
+//!   tracing JSON) and [--trace-jsonl FILE] (one event per line); either
+//!   flag enables span tracing for the run. serve additionally takes
+//!   [--metrics-addr HOST:PORT] (Prometheus text at /metrics, JSON at
+//!   /metrics.json) and [--linger-ms MS] to keep the exporter up for
+//!   scrapes after the demo drive finishes.
+//!
 //! Flags are parsed by util::cli (clap is not in the offline crate cache).
 
 use std::path::Path;
@@ -113,6 +121,52 @@ fn parse_model(s: &str) -> Result<ModelChoice> {
     s.parse()
 }
 
+/// The shared `--trace-out` / `--trace-jsonl` profile flags: constructing
+/// this from parsed args enables span tracing when either is present;
+/// [`TraceFlags::finish`] drains the collector and writes the file(s).
+struct TraceFlags {
+    chrome: Option<String>,
+    jsonl: Option<String>,
+}
+
+impl TraceFlags {
+    fn from_args(a: &Args) -> TraceFlags {
+        let t = TraceFlags {
+            chrome: a.get("trace-out").map(str::to_string),
+            jsonl: a.get("trace-jsonl").map(str::to_string),
+        };
+        if t.chrome.is_some() || t.jsonl.is_some() {
+            memx::telemetry::set_level(memx::telemetry::Level::Spans);
+        }
+        t
+    }
+
+    /// Write the collected trace. Call after every worker/server thread has
+    /// joined so their span buffers have flushed to the collector.
+    fn finish(&self) -> Result<()> {
+        if self.chrome.is_none() && self.jsonl.is_none() {
+            return Ok(());
+        }
+        memx::telemetry::set_level(memx::telemetry::Level::Off);
+        let events = memx::telemetry::drain();
+        let dropped = memx::telemetry::dropped_events();
+        let lost = if dropped > 0 { format!(", {dropped} dropped") } else { String::new() };
+        if let Some(p) = &self.chrome {
+            memx::telemetry::write_chrome_trace(p, &events)?;
+            println!(
+                "wrote chrome trace ({} events{lost}) to {p} — load in chrome://tracing or \
+                 ui.perfetto.dev",
+                events.len()
+            );
+        }
+        if let Some(p) = &self.jsonl {
+            memx::telemetry::write_jsonl(p, &events)?;
+            println!("wrote trace event log ({} lines{lost}) to {p}", events.len());
+        }
+        Ok(())
+    }
+}
+
 fn run(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "info" => cmd_info(rest),
@@ -153,10 +207,14 @@ fn cmd_info(rest: &[String]) -> Result<()> {
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
     let a = Args::parse(
         rest,
-        &["artifacts", "model", "n", "fidelity", "mode", "segment", "solver", "backend"],
+        &[
+            "artifacts", "model", "n", "fidelity", "mode", "segment", "solver", "backend",
+            "trace-out", "trace-jsonl",
+        ],
     )?;
+    let trace = TraceFlags::from_args(&a);
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
-    match parse_model(a.get_or("model", "analog"))? {
+    let result = match parse_model(a.get_or("model", "analog"))? {
         ModelChoice::Analog => accuracy_analog(dir, &a),
         ModelChoice::Digital => {
             // the PJRT engine runs pre-compiled executables — the SPICE
@@ -171,7 +229,9 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
             }
             accuracy_digital(dir, &a)
         }
-    }
+    };
+    trace.finish()?;
+    result
 }
 
 /// Analog Table 1 row through the crossbar pipeline — the offline path:
@@ -240,17 +300,24 @@ fn accuracy_digital(_dir: &Path, _a: &Args) -> Result<()> {
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = Args::parse(
         rest,
-        &["artifacts", "model", "n", "max-wait-us", "fidelity", "workers", "backend"],
+        &[
+            "artifacts", "model", "n", "max-wait-us", "fidelity", "workers", "backend",
+            "metrics-addr", "linger-ms", "trace-out", "trace-jsonl",
+        ],
     )?;
+    let trace = TraceFlags::from_args(&a);
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let n = a.get_usize("n", 256)?;
     let max_wait = std::time::Duration::from_micros(a.get_usize("max-wait-us", 2000)? as u64);
-    match parse_model(a.get_or("model", "analog"))? {
+    let metrics_addr = a.get("metrics-addr").map(str::to_string);
+    let linger = std::time::Duration::from_millis(a.get_usize("linger-ms", 0)? as u64);
+    let export = ExportCfg { metrics_addr, linger };
+    let result = match parse_model(a.get_or("model", "analog"))? {
         ModelChoice::Analog => {
             let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
             let workers = a.get_usize("workers", 0)?;
             let backend: BackendChoice = a.get_or("backend", "auto").parse()?;
-            serve_analog(dir, n, max_wait, fidelity, workers, backend)
+            serve_analog(dir, n, max_wait, fidelity, workers, backend, &export)
         }
         ModelChoice::Digital => {
             // the PJRT engine serves fixed pre-compiled executables — the
@@ -263,8 +330,40 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                     );
                 }
             }
-            serve_digital(dir, n, max_wait)
+            serve_digital(dir, n, max_wait, &export)
         }
+    };
+    // the serve thread has joined by now, so its spans are all collected
+    trace.finish()?;
+    result
+}
+
+/// `memx serve`'s export knobs: the optional metrics HTTP endpoint and how
+/// long to keep it up after the demo drive (so external scrapers — the CI
+/// smoke's curl — can observe the final counters).
+struct ExportCfg {
+    metrics_addr: Option<String>,
+    linger: std::time::Duration,
+}
+
+impl ExportCfg {
+    /// Start the exporter over the server's registry (no-op without
+    /// `--metrics-addr`).
+    fn start(&self, server: &Server) -> Result<Option<memx::telemetry::http::MetricsServer>> {
+        let Some(addr) = &self.metrics_addr else { return Ok(None) };
+        let exporter = server.serve_metrics(addr)?;
+        println!("metrics exporter on http://{}/metrics", exporter.addr());
+        Ok(Some(exporter))
+    }
+
+    /// Hold the endpoint open for `--linger-ms`, then stop it.
+    fn finish(&self, exporter: Option<memx::telemetry::http::MetricsServer>) {
+        let Some(exporter) = exporter else { return };
+        if !self.linger.is_zero() {
+            println!("metrics exporter lingering {:?} for scrapes", self.linger);
+            std::thread::sleep(self.linger);
+        }
+        exporter.shutdown();
     }
 }
 
@@ -311,6 +410,7 @@ fn serve_analog(
     fidelity: Fidelity,
     workers: usize,
     backend: BackendChoice,
+    export: &ExportCfg,
 ) -> Result<()> {
     let synthetic = !dir.join("manifest.json").exists();
     let (server, ds) = if synthetic {
@@ -323,6 +423,7 @@ fn serve_analog(
             ServerConfig { backend: Backend::Analog { fidelity, workers, backend }, max_wait };
         (Server::start(dir, cfg)?, ds)
     };
+    let exporter = export.start(&server)?;
     let n = n.min(ds.n);
     println!(
         "server up (analog pipeline, {fidelity} fidelity, workers {}), warmup {:?}",
@@ -332,6 +433,7 @@ fn serve_analog(
     let (wall, acc) = drive_requests(&server, &ds, n);
     println!("served {n} requests in {wall:?}  accuracy {acc:.4}");
     server.metrics().snapshot().print(wall);
+    export.finish(exporter);
     server.shutdown();
     if synthetic && n > 0 && acc < 1.0 {
         bail!("synthetic serve smoke: served labels diverged from the sequential forward ({acc:.4})");
@@ -389,7 +491,12 @@ fn synthetic_server(
 }
 
 #[cfg(feature = "runtime-xla")]
-fn serve_digital(dir: &Path, n: usize, max_wait: std::time::Duration) -> Result<()> {
+fn serve_digital(
+    dir: &Path,
+    n: usize,
+    max_wait: std::time::Duration,
+    export: &ExportCfg,
+) -> Result<()> {
     let manifest = memx::nn::Manifest::load(dir)?;
     let ds = Dataset::load(&dir.join(&manifest.dataset_file))?;
     let n = n.min(ds.n);
@@ -397,16 +504,23 @@ fn serve_digital(dir: &Path, n: usize, max_wait: std::time::Duration) -> Result<
         dir,
         ServerConfig { backend: Backend::Pjrt { model: Model::Digital }, max_wait },
     )?;
+    let exporter = export.start(&server)?;
     println!("server up (pjrt digital), warmup {:?}", server.warmup);
     let (wall, acc) = drive_requests(&server, &ds, n);
     println!("served {n} requests in {wall:?}  accuracy {acc:.4}");
     server.metrics().snapshot().print(wall);
+    export.finish(exporter);
     server.shutdown();
     Ok(())
 }
 
 #[cfg(not(feature = "runtime-xla"))]
-fn serve_digital(_dir: &Path, _n: usize, _max_wait: std::time::Duration) -> Result<()> {
+fn serve_digital(
+    _dir: &Path,
+    _n: usize,
+    _max_wait: std::time::Duration,
+    _export: &ExportCfg,
+) -> Result<()> {
     no_runtime("serve --model digital")
 }
 
@@ -500,8 +614,14 @@ fn cmd_netlist(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_spice(rest: &[String]) -> Result<()> {
-    let a =
-        Args::parse(rest, &["artifacts", "layer", "segment", "n", "mode", "solver", "backend"])?;
+    let a = Args::parse(
+        rest,
+        &[
+            "artifacts", "layer", "segment", "n", "mode", "solver", "backend", "trace-out",
+            "trace-jsonl",
+        ],
+    )?;
+    let trace = TraceFlags::from_args(&a);
     let dir = Path::new(a.get_or("artifacts", "artifacts"));
     let layer = a.get("layer").unwrap_or("cls.fc2");
     let segment = a.get_usize("segment", 64)?;
@@ -509,7 +629,9 @@ fn cmd_spice(rest: &[String]) -> Result<()> {
     let mode: memx::mapper::MapMode = a.get_or("mode", "inverted").parse()?;
     let solver: SolverStrategy = a.get_or("solver", "auto").parse()?;
     let backend: BackendChoice = a.get_or("backend", "auto").parse()?;
-    memx::report::spice_layer_demo(dir, layer, mode, segment, n, solver, backend)
+    let result = memx::report::spice_layer_demo(dir, layer, mode, segment, n, solver, backend);
+    trace.finish()?;
+    result
 }
 
 fn cmd_report(rest: &[String]) -> Result<()> {
@@ -571,9 +693,10 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
         rest,
         &[
             "hours", "n", "fidelity", "nu", "nu-sigma", "nu-g", "stuck-on", "stuck-off",
-            "read-rate", "prog-sigma", "seed", "out", "tran!",
+            "read-rate", "prog-sigma", "seed", "out", "tran!", "trace-out", "trace-jsonl",
         ],
     )?;
+    let trace = TraceFlags::from_args(&a);
     let fidelity: Fidelity = a.get_or("fidelity", "behavioural").parse()?;
     let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
     let hours_spec = a.get_or("hours", if quick { "0,10" } else { "0,1,10,100,1000" });
@@ -718,6 +841,7 @@ fn cmd_drift(rest: &[String]) -> Result<()> {
     let out = a.get_or("out", "BENCH_drift.json");
     memx::util::bench::append_json_report(out, "drift", &rows, &derived)?;
     println!("appended drift trajectory to {out}");
+    trace.finish()?;
     Ok(())
 }
 
@@ -735,8 +859,12 @@ fn cmd_tran(rest: &[String]) -> Result<()> {
 
     let a = Args::parse(
         rest,
-        &["rows", "cols", "mode", "integrators", "rise-ns", "seed", "backend", "out"],
+        &[
+            "rows", "cols", "mode", "integrators", "rise-ns", "seed", "backend", "out",
+            "trace-out", "trace-jsonl",
+        ],
     )?;
+    let trace = TraceFlags::from_args(&a);
     let quick = std::env::var("MEMX_BENCH_QUICK").is_ok();
     let rows = a.get_usize("rows", if quick { 8 } else { 24 })?;
     let cols = a.get_usize("cols", if quick { 4 } else { 12 })?;
@@ -810,5 +938,6 @@ fn cmd_tran(rest: &[String]) -> Result<()> {
     let out = a.get_or("out", "BENCH_transient.json");
     memx::util::bench::append_json_report(out, "transient", &bench_rows, &derived)?;
     println!("appended transient sweep to {out}");
+    trace.finish()?;
     Ok(())
 }

@@ -371,6 +371,8 @@ impl CrossbarSim {
         let mut out = Vec::with_capacity(self.cols);
         let mut stats = Vec::with_capacity(self.segments.len());
         for seg in &mut self.segments {
+            let _sp = crate::telemetry::span("segment_solve", "solve")
+                .arg("cols", seg.out_nodes.len() as f64);
             for &(idx, r) in &seg.vin {
                 seg.circuit
                     .set_vsource_at(idx, input_voltage_region(region, r, Some(inputs)))?;
@@ -396,6 +398,8 @@ impl CrossbarSim {
         }
         let (region, ordering) = (self.region, self.ordering);
         let results = par_map_mut(&mut self.segments, workers, |seg| -> Result<Vec<f64>> {
+            let _sp = crate::telemetry::span("segment_solve", "solve")
+                .arg("cols", seg.out_nodes.len() as f64);
             for &(idx, r) in &seg.vin {
                 seg.circuit
                     .set_vsource_at(idx, input_voltage_region(region, r, Some(inputs)))?;
@@ -425,9 +429,14 @@ impl CrossbarSim {
                 bail!("crossbar sim: {} inputs, region is {}", iv.len(), self.region);
             }
         }
+        let _sp = crate::telemetry::span("crossbar_solve_batch", "solve")
+            .arg("batch", inputs.len() as f64)
+            .arg("segments", self.segments.len() as f64);
         let inner_workers = if self.segments.len() == 1 { workers.max(1) } else { 1 };
         let (region, ordering, cols) = (self.region, self.ordering, self.cols);
         let per_seg = par_map_mut(&mut self.segments, workers, |seg| -> Result<Vec<Vec<f64>>> {
+            let _sp = crate::telemetry::span("segment_solve", "solve")
+                .arg("cols", seg.out_nodes.len() as f64);
             let overrides: Vec<Vec<(usize, f64)>> = inputs
                 .iter()
                 .map(|iv| {
@@ -471,6 +480,8 @@ impl CrossbarSim {
         if pulse.r_out <= 0.0 || pulse.c_load <= 0.0 {
             bail!("read pulse: r_out and c_load must be positive");
         }
+        let _sp = crate::telemetry::span("tran_read", "solve")
+            .arg("segments", self.segments.len() as f64);
         let tau = pulse.r_out * pulse.c_load;
         let t_stop = if pulse.t_stop > 0.0 { pulse.t_stop } else { pulse.rise + 12.0 * tau };
         // resolve the input edge; the LTE controller grows h after it

@@ -392,12 +392,17 @@ impl ExecUnit {
     /// Run the whole batch through this unit's stages (checkpoint + modules
     /// + residual add). Exactly the per-unit slice of the sequential path.
     fn forward_batch(&mut self, batch: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        // the span is the per-call trace view; self.ns/self.calls stay the
+        // aggregated StageStat view of the same interval
+        let _sp = crate::telemetry::span_owned(&self.name, "pipeline")
+            .arg("batch", batch.len() as f64);
         let t0 = Instant::now();
         let unit_input: Vec<Vec<f64>> = if self.checkpoint { batch.clone() } else { Vec::new() };
         let mut cur = batch;
         for stage in self.stages.iter_mut() {
             match stage {
                 Stage::Module { module, .. } => {
+                    let _msp = crate::telemetry::span_owned(module.name(), "module");
                     cur = module.forward_batch(&cur)?;
                 }
                 Stage::Residual { name, dim, .. } => {

@@ -329,6 +329,13 @@ pub fn report_coverage(
              this process"
         );
     }
+    let (iters, reuses) = (crate::spice::gmres_iterations(), crate::spice::precond_reuses());
+    if iters > 0 {
+        println!(
+            "solver work: {iters} GMRES iteration(s), {reuses} warm preconditioner reuse(s) \
+             this process"
+        );
+    }
     let (subst, matvec) = (crate::backend::subst_ns(), crate::backend::matvec_ns());
     if subst > 0 || matvec > 0 {
         println!(

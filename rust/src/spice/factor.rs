@@ -335,6 +335,7 @@ impl Numeric {
     /// no hashing, O(program length) = O(flops of the analysis-time
     /// elimination). Errors if a pivot collapsed for the current values.
     pub fn refactor(&mut self) -> Result<()> {
+        let _sp = crate::span!("lu_refactor", n = self.sym.n);
         let s = &self.sym;
         self.vals.copy_from_slice(&self.assembled);
         for p in 0..s.pivots.len() {
@@ -403,6 +404,7 @@ impl Numeric {
         if b.len() != s.n {
             bail!("factor: rhs has {} entries, system has {}", b.len(), s.n);
         }
+        let _sp = crate::span!("subst", n = s.n);
         let t0 = Instant::now();
         // forward: replay eliminations on the RHS
         let mut w = b.to_vec();
@@ -442,6 +444,7 @@ impl Numeric {
                 bail!("factor: rhs has {} entries, system has {}", b.len(), s.n);
             }
         }
+        let _sp = crate::span!("subst_multi", n = s.n, k = k);
         let t0 = Instant::now();
         let mut w: Vec<Vec<f64>> = bs.to_vec();
         kern.subst_lower_multi(&self.lower_parts(), &mut w);

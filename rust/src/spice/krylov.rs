@@ -528,6 +528,8 @@ pub fn gmres_kern<P: Precond + ?Sized>(
     let m = cfg.restart.clamp(1, n.max(1));
     let mut stats = SolveStats::direct(pre.entries() + (m + 1) * n, n);
     stats.backend = kern.name();
+    let mut sp = crate::telemetry::span("gmres", "kernel");
+    sp.set_arg("n", n as f64);
     let bnorm = kern.norm2(b);
     if bnorm == 0.0 {
         return Ok((vec![0.0; n], stats));
@@ -551,6 +553,8 @@ pub fn gmres_kern<P: Precond + ?Sized>(
             stats.residual = beta / bnorm;
             stats.matvec_ns = matvec_ns.get();
             backend::add_matvec_ns(stats.matvec_ns);
+            super::add_gmres_iterations(iters as u64);
+            sp.set_arg("iters", iters as f64);
             return Ok((x, stats));
         }
         // Arnoldi (modified Gram-Schmidt) with Givens-rotated Hessenberg:
@@ -640,6 +644,9 @@ pub fn gmres_kern<P: Precond + ?Sized>(
     let relres = kern.norm2(&r) / bnorm;
     stats.matvec_ns = matvec_ns.get();
     backend::add_matvec_ns(stats.matvec_ns);
+    // iterations were genuinely spent even when the solve fails below
+    super::add_gmres_iterations(iters as u64);
+    sp.set_arg("iters", iters as f64);
     // the rotated-residual estimate can be slightly optimistic; accept a
     // small slack against the true residual before declaring failure
     if relres <= cfg.tol * 10.0 {

@@ -114,6 +114,20 @@ static SOLVER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 /// [`solver_fallbacks`]).
 static SOLVER_COLD_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 
+/// Process-wide count of GMRES inner iterations. Bumped **inside**
+/// [`krylov::gmres_kern`] — i.e. on the `pool::par_map` worker threads of
+/// a batched solve — rather than from the sequentially-aggregated
+/// [`solve::SolveStats`], so the count is exact under `workers >= 2`
+/// (the aggregation path once lost per-column stats when a later column
+/// errored; the atomic never does).
+static GMRES_ITERATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of iterative solves served by a *cached* (warm)
+/// preconditioner — the global twin of the per-solve
+/// [`solve::SolveStats::precond_reused`] flag, kept as an explicit atomic
+/// so multi-threaded batch solves can't under-report it.
+static PRECOND_REUSES: AtomicU64 = AtomicU64::new(0);
+
 /// Current value of the process-wide warm iterative→direct fallback
 /// counter (cached preconditioner existed but failed mid-sweep).
 pub fn solver_fallbacks() -> u64 {
@@ -124,6 +138,24 @@ pub fn solver_fallbacks() -> u64 {
 /// counter (no cached preconditioner yet; fresh analysis failed).
 pub fn solver_cold_fallbacks() -> u64 {
     SOLVER_COLD_FALLBACKS.load(MemOrdering::Relaxed)
+}
+
+/// Current value of the process-wide GMRES inner-iteration counter.
+pub fn gmres_iterations() -> u64 {
+    GMRES_ITERATIONS.load(MemOrdering::Relaxed)
+}
+
+/// Current value of the process-wide warm-preconditioner reuse counter.
+pub fn precond_reuses() -> u64 {
+    PRECOND_REUSES.load(MemOrdering::Relaxed)
+}
+
+/// Worker-thread-safe bump of the process iteration counter (called from
+/// inside the GMRES kernel, possibly on `par_map` workers).
+pub(crate) fn add_gmres_iterations(n: u64) {
+    if n > 0 {
+        GMRES_ITERATIONS.fetch_add(n, MemOrdering::Relaxed);
+    }
 }
 
 /// Circuit element.
@@ -208,15 +240,18 @@ enum KrylovAttempt<R> {
 impl<R> KrylovAttempt<R> {
     /// Bump the process-wide fallback counter matching this failure (no-op
     /// for `Solved`). Centralized here so every caller that falls back to
-    /// the direct engine reports the same way.
+    /// the direct engine reports the same way — including the typed trace
+    /// event, so a fallback shows up inline in the span timeline.
     fn count_fallback(&self) {
         match self {
             KrylovAttempt::Solved(..) => {}
             KrylovAttempt::WarmFailure => {
                 SOLVER_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+                crate::telemetry::event(crate::telemetry::Event::SolverFallback { cold: false });
             }
             KrylovAttempt::ColdFailure => {
                 SOLVER_COLD_FALLBACKS.fetch_add(1, MemOrdering::Relaxed);
+                crate::telemetry::event(crate::telemetry::Event::SolverFallback { cold: true });
             }
         }
     }
@@ -580,6 +615,8 @@ impl Circuit {
         ordering: solve::Ordering,
     ) -> Result<(Vec<f64>, solve::SolveStats)> {
         let kern = backend::resolve(self.backend);
+        let mut sp = crate::telemetry::span("solve_factored", "kernel");
+        sp.set_arg("n", sys.n as f64);
         let mut guard = self.factor_cache.0.lock().unwrap_or_else(|p| p.into_inner());
         match guard.as_mut() {
             Some(CacheState::Ready(entry)) if entry.ordering == ordering => {
@@ -656,7 +693,10 @@ impl Circuit {
                 // reassembly, no refactorization; on failure leave the
                 // entry intact so the direct fallback can refactor it
                 return match run(&entry.numeric) {
-                    Ok(r) => KrylovAttempt::Solved(r, true),
+                    Ok(r) => {
+                        PRECOND_REUSES.fetch_add(1, MemOrdering::Relaxed);
+                        KrylovAttempt::Solved(r, true)
+                    }
                     Err(_) => KrylovAttempt::WarmFailure,
                 };
             }
@@ -671,7 +711,10 @@ impl Circuit {
                 match swept {
                     Some(true) => {
                         return match run(&*pre) {
-                            Ok(r) => KrylovAttempt::Solved(r, true),
+                            Ok(r) => {
+                                PRECOND_REUSES.fetch_add(1, MemOrdering::Relaxed);
+                                KrylovAttempt::Solved(r, true)
+                            }
                             Err(_) => KrylovAttempt::WarmFailure,
                         };
                     }

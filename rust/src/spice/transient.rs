@@ -655,6 +655,8 @@ pub fn tran_batch(
         );
     }
 
+    let mut sp = crate::span!("tran_batch", cols = scales.len());
+
     let n_nodes = c.node_count();
     let n_br = c.num_branches();
     let dim = (n_nodes - 1) + n_br;
@@ -875,6 +877,8 @@ pub fn tran_batch(
     }
 
     debug_assert_eq!(voltages.len(), ncols);
+    sp.set_arg("steps", solver.stats.steps_accepted as f64);
+    sp.set_arg("solves", solver.stats.solves as f64);
     Ok(TranResult { times, voltages, stats: solver.stats })
 }
 

@@ -1,0 +1,175 @@
+//! Tiny HTTP metrics exporter (std-only: no async runtime, no HTTP crate
+//! in the offline cache — a blocking accept loop on its own thread is
+//! plenty for a scrape endpoint).
+//!
+//! Routes:
+//! * `GET /metrics`      → Prometheus text exposition 0.0.4
+//! * `GET /metrics.json` → the same registry rendered as JSON
+//! * `GET /`             → a one-line index
+//!
+//! Started by `memx serve --metrics-addr HOST:PORT` (see
+//! `Server::serve_metrics`), or directly over any
+//! [`Registry`](crate::telemetry::metrics::Registry).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::metrics::Registry;
+
+/// A running metrics endpoint; the listener thread stops on drop or
+/// [`MetricsServer::shutdown`].
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9095`; port 0 picks a free port) and
+    /// serve `registry` until shutdown.
+    pub fn serve(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind metrics listener on {addr}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("memx-metrics".into())
+            .spawn(move || accept_loop(listener, registry, stop2))
+            .context("spawn metrics listener thread")?;
+        Ok(MetricsServer { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            j.join().ok();
+        }
+    }
+
+    /// Stop the listener and wait for its thread (also performed on drop).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: Arc<Registry>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // one scrape at a time: a scrape endpoint has no
+                // concurrency requirements, and inline handling keeps the
+                // exporter to a single thread
+                handle(stream, &registry).ok();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // read the request head (we only route on the request line)
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let path = line.split_whitespace().nth(1).unwrap_or("/");
+
+    let (status, ctype, body) = match path {
+        "/metrics" => {
+            ("200 OK", "text/plain; version=0.0.4; charset=utf-8", registry.render_prometheus())
+        }
+        "/metrics.json" | "/json" => {
+            ("200 OK", "application/json; charset=utf-8", registry.render_json())
+        }
+        "/" => (
+            "200 OK",
+            "text/plain; charset=utf-8",
+            "memx metrics exporter — GET /metrics (prometheus) or /metrics.json\n".to_string(),
+        ),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        out
+    }
+
+    #[test]
+    fn serves_prometheus_and_json() {
+        let registry = Arc::new(Registry::default());
+        let c = registry.counter("memx_http_test_total", "exporter test counter");
+        c.add(5);
+        registry.histogram("memx_http_test_seconds", "exporter test histogram")
+            .record(Duration::from_micros(100));
+        let server = MetricsServer::serve("127.0.0.1:0", registry).expect("exporter up");
+        let addr = server.addr();
+
+        let prom = get(addr, "/metrics");
+        assert!(prom.starts_with("HTTP/1.1 200 OK"), "{prom}");
+        assert!(prom.contains("text/plain; version=0.0.4"), "{prom}");
+        assert!(prom.contains("memx_http_test_total 5"), "{prom}");
+        assert!(prom.contains("memx_http_test_seconds_bucket{le=\"+Inf\"} 1"), "{prom}");
+
+        let json = get(addr, "/metrics.json");
+        assert!(json.starts_with("HTTP/1.1 200 OK"), "{json}");
+        let body = json.split("\r\n\r\n").nth(1).expect("body");
+        let parsed = crate::util::json::Json::parse(body).expect("json body parses");
+        assert_eq!(
+            parsed.get("memx_http_test_total").and_then(|v| v.as_f64()),
+            Some(5.0),
+            "{body}"
+        );
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,412 @@
+//! Metrics registry: counters, gauges and log-scale histograms with
+//! Prometheus text exposition and JSON rendering.
+//!
+//! This generalizes the histogram that used to live privately in
+//! `coordinator/metrics.rs`: the serving [`Metrics`]
+//! (`crate::coordinator::metrics::Metrics`) is now a *view* over a
+//! [`Registry`] — every counter/histogram it records lands here and is
+//! exported over HTTP by [`crate::telemetry::http::MetricsServer`].
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`-backed and
+//! lock-free on the record path (relaxed atomics); the registry mutex is
+//! only taken at registration and render time. Registries are instantiable
+//! (not a process singleton) so parallel test servers never collide on
+//! series names; process-wide series (solver fallbacks, kernel wall time)
+//! are attached as [`Registry::register_fn`] callbacks read at render time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Fixed log2-scale histogram bucket count: 1 µs up to ~67 s.
+pub const BUCKETS: usize = 27;
+
+/// Poison-tolerant lock (a panicking recorder must not take exports down).
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Handles
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter handle (cheap to clone; all clones share the cell).
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (an f64 stored as bits).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free log2-scale duration histogram: bucket `b` holds samples with
+/// `floor(log2(µs)) == b`, i.e. the interval `[2^b, 2^(b+1))` µs. Reads
+/// ([`Histogram::snapshot`]) are collected bucket-by-bucket with relaxed
+/// loads — statistically consistent, never blocking a recorder.
+#[derive(Clone, Default)]
+pub struct Histogram(Arc<HistCore>);
+
+pub struct HistCore {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for HistCore {
+    fn default() -> HistCore {
+        HistCore {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128).max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        let c = &self.0;
+        c.counts[b].fetch_add(1, Ordering::Relaxed);
+        c.sum_us.fetch_add(us, Ordering::Relaxed);
+        c.max_us.fetch_max(us, Ordering::Relaxed);
+        c.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let c = &self.0;
+        HistSnapshot {
+            counts: std::array::from_fn(|b| c.counts[b].load(Ordering::Relaxed)),
+            sum_us: c.sum_us.load(Ordering::Relaxed),
+            max_us: c.max_us.load(Ordering::Relaxed),
+            n: c.n.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A consistent point-in-time read of a [`Histogram`] with the quantile
+/// arithmetic. Quantiles are quantized to the log2 bucket edges:
+/// [`HistSnapshot::quantile`] reports the conservative *upper* edge, and
+/// [`HistSnapshot::quantile_bounds`] exposes the full bucket `[lo, hi)` so
+/// benches can report the error bar instead of over-claiming a point p99.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub n: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { counts: [0; BUCKETS], sum_us: 0, max_us: 0, n: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Bucket index holding the q-quantile sample, if any were recorded.
+    fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        if self.n == 0 {
+            return None;
+        }
+        let target = ((self.n as f64 * q).ceil() as u64).clamp(1, self.n);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(b);
+            }
+        }
+        Some(BUCKETS - 1)
+    }
+
+    /// Conservative q-quantile: the *upper* edge of the bucket holding the
+    /// target sample (the true quantile is ≤ this, but may be up to one
+    /// bucket width lower — see [`HistSnapshot::quantile_bounds`]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        match self.quantile_bucket(q) {
+            None => Duration::ZERO,
+            Some(b) if b == BUCKETS - 1 => Duration::from_micros(self.max_us),
+            Some(b) => Duration::from_micros(1u64 << (b + 1)),
+        }
+    }
+
+    /// The `[lower, upper]` bucket edges bracketing the q-quantile — the
+    /// quantization error bar of [`HistSnapshot::quantile`]. The true
+    /// quantile lies inside this interval; its width doubles every bucket,
+    /// so a 10 ms p99 carries a ~5 ms error bar.
+    pub fn quantile_bounds(&self, q: f64) -> (Duration, Duration) {
+        match self.quantile_bucket(q) {
+            None => (Duration::ZERO, Duration::ZERO),
+            Some(b) => (
+                Duration::from_micros(1u64 << b),
+                if b == BUCKETS - 1 {
+                    Duration::from_micros(self.max_us)
+                } else {
+                    Duration::from_micros(1u64 << (b + 1))
+                },
+            ),
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Kind {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+    /// Read-at-render-time view over state owned elsewhere (process-wide
+    /// atomics like solver fallbacks); rendered as a gauge.
+    Func(Box<dyn Fn() -> f64 + Send + Sync>),
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    kind: Kind,
+}
+
+/// A named collection of metrics. Instantiable — each `Server` owns one —
+/// and rendered as Prometheus text exposition (`render_prometheus`) or
+/// JSON (`render_json`).
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    /// Register (or fetch the existing handle of) a counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut es = locked(&self.entries);
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            if let Kind::Counter(c) = &e.kind {
+                return c.clone();
+            }
+        }
+        let c = Counter::default();
+        es.push(Entry { name: name.into(), help: help.into(), kind: Kind::Counter(c.clone()) });
+        c
+    }
+
+    /// Register (or fetch the existing handle of) a gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut es = locked(&self.entries);
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            if let Kind::Gauge(g) = &e.kind {
+                return g.clone();
+            }
+        }
+        let g = Gauge::default();
+        es.push(Entry { name: name.into(), help: help.into(), kind: Kind::Gauge(g.clone()) });
+        g
+    }
+
+    /// Register (or fetch the existing handle of) a log2-scale histogram.
+    /// The series is exported with bucket edges in **seconds**.
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        let mut es = locked(&self.entries);
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            if let Kind::Histogram(h) = &e.kind {
+                return h.clone();
+            }
+        }
+        let h = Histogram::default();
+        es.push(Entry { name: name.into(), help: help.into(), kind: Kind::Histogram(h.clone()) });
+        h
+    }
+
+    /// Register a render-time callback series (view over external state).
+    pub fn register_fn(
+        &self,
+        name: &str,
+        help: &str,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        let mut es = locked(&self.entries);
+        if es.iter().any(|e| e.name == name) {
+            return;
+        }
+        es.push(Entry { name: name.into(), help: help.into(), kind: Kind::Func(Box::new(f)) });
+    }
+
+    /// Prometheus text exposition format 0.0.4. Histogram `le` edges are in
+    /// seconds; bucket counts are cumulative; `_sum` is in seconds.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for e in locked(&self.entries).iter() {
+            let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+            match &e.kind {
+                Kind::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {} counter", e.name);
+                    let _ = writeln!(out, "{} {}", e.name, c.get());
+                }
+                Kind::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {} gauge", e.name);
+                    let _ = writeln!(out, "{} {}", e.name, g.get());
+                }
+                Kind::Func(f) => {
+                    let _ = writeln!(out, "# TYPE {} gauge", e.name);
+                    let _ = writeln!(out, "{} {}", e.name, f());
+                }
+                Kind::Histogram(h) => {
+                    let s = h.snapshot();
+                    let _ = writeln!(out, "# TYPE {} histogram", e.name);
+                    let mut acc = 0u64;
+                    for (b, &c) in s.counts.iter().enumerate() {
+                        acc += c;
+                        let le = (1u64 << (b + 1)) as f64 / 1e6;
+                        let _ = writeln!(out, "{}_bucket{{le=\"{le}\"}} {acc}", e.name);
+                    }
+                    let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", e.name, s.n);
+                    let _ = writeln!(out, "{}_sum {}", e.name, s.sum_us as f64 / 1e6);
+                    let _ = writeln!(out, "{}_count {}", e.name, s.n);
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON rendering: scalar series map to numbers, histograms to an
+    /// object with count/sum/quantiles (upper bucket edges, seconds).
+    pub fn render_json(&self) -> String {
+        let mut pairs: Vec<(String, Json)> = Vec::new();
+        for e in locked(&self.entries).iter() {
+            let v = match &e.kind {
+                Kind::Counter(c) => Json::num(c.get() as f64),
+                Kind::Gauge(g) => Json::num(g.get()),
+                Kind::Func(f) => Json::num(f()),
+                Kind::Histogram(h) => {
+                    let s = h.snapshot();
+                    Json::obj(vec![
+                        ("count", Json::num(s.n as f64)),
+                        ("sum_seconds", Json::num(s.sum_us as f64 / 1e6)),
+                        ("mean_seconds", Json::num(s.mean().as_secs_f64())),
+                        ("p50_seconds", Json::num(s.quantile(0.50).as_secs_f64())),
+                        ("p95_seconds", Json::num(s.quantile(0.95).as_secs_f64())),
+                        ("p99_seconds", Json::num(s.quantile(0.99).as_secs_f64())),
+                        ("p999_seconds", Json::num(s.quantile(0.999).as_secs_f64())),
+                        ("max_seconds", Json::num(s.max().as_secs_f64())),
+                    ])
+                }
+            };
+            pairs.push((e.name.clone(), v));
+        }
+        Json::Obj(pairs.into_iter().collect()).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let r = Registry::default();
+        let c = r.counter("memx_test_total", "test counter");
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // re-registration returns the same cell
+        let c2 = r.counter("memx_test_total", "test counter");
+        c2.inc();
+        assert_eq!(c.get(), 4);
+        let g = r.gauge("memx_test_gauge", "test gauge");
+        g.set(2.5);
+        assert!((g.get() - 2.5).abs() < 1e-12);
+        let text = r.render_prometheus();
+        assert!(text.contains("memx_test_total 4"), "{text}");
+        assert!(text.contains("# TYPE memx_test_total counter"), "{text}");
+        assert!(text.contains("memx_test_gauge 2.5"), "{text}");
+    }
+
+    #[test]
+    fn histogram_quantile_bounds_bracket_quantile() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.n, 1000);
+        let p99 = s.quantile(0.99);
+        let (lo, hi) = s.quantile_bounds(0.99);
+        assert!(lo < hi);
+        assert_eq!(p99, hi, "point quantile is the conservative upper edge");
+        // the true p99 (9900 µs) lies inside the reported bucket
+        let truth = Duration::from_micros(9900);
+        assert!(lo <= truth && truth <= hi, "{lo:?} <= {truth:?} <= {hi:?}");
+        // bucket width is one octave
+        assert_eq!(hi.as_micros(), lo.as_micros() * 2);
+        assert!(s.quantile(0.50) <= s.quantile(0.95));
+        assert!(s.quantile(0.95) <= s.quantile(0.999));
+        // the top bucket reports the observed max, not a 2x edge
+        assert!(s.quantile(1.0) <= Duration::from_micros(s.max_us) * 2);
+    }
+
+    #[test]
+    fn prometheus_histogram_is_cumulative() {
+        let r = Registry::default();
+        let h = r.histogram("memx_lat_seconds", "latency");
+        h.record(Duration::from_micros(3)); // bucket 1 [2,4)
+        h.record(Duration::from_micros(100)); // bucket 6 [64,128)
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE memx_lat_seconds histogram"), "{text}");
+        assert!(text.contains("memx_lat_seconds_bucket{le=\"0.000004\"} 1"), "{text}");
+        assert!(text.contains("memx_lat_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("memx_lat_seconds_count 2"), "{text}");
+        let json = r.render_json();
+        assert!(json.contains("\"memx_lat_seconds\""), "{json}");
+        assert!(json.contains("\"count\":2"), "{json}");
+    }
+
+    #[test]
+    fn fn_series_reads_live_state() {
+        let r = Registry::default();
+        let c = Counter::default();
+        let view = c.clone();
+        r.register_fn("memx_view_total", "external view", move || view.get() as f64);
+        c.add(7);
+        assert!(r.render_prometheus().contains("memx_view_total 7"));
+    }
+}

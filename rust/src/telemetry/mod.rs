@@ -1,0 +1,717 @@
+//! Hierarchical span tracing, typed events, and the metrics registry —
+//! the observability substrate for the whole serving stack.
+//!
+//! # Spans
+//!
+//! A span is an RAII guard ([`SpanGuard`]) over a named interval of work:
+//!
+//! ```
+//! {
+//!     let _sp = memx::telemetry::span("lu_refactor", "kernel");
+//!     // ... work ...
+//! } // span recorded on drop
+//! ```
+//!
+//! or, for kernels, the [`span!`](crate::span) macro with numeric payload
+//! args: `let mut sp = span!("gmres", restarts = m); sp.set_arg("iters",
+//! n as f64);`. Guards record into **thread-local buffers** that flush to a
+//! global collector when full and when the owning thread exits — worker
+//! threads spawned by `util::pool` are scoped and join before their caller
+//! returns, so a [`drain`] after a parallel region observes every event.
+//!
+//! # Overhead contract
+//!
+//! * **Disabled** (the default, [`Level::Off`]): creating a span is one
+//!   relaxed atomic load and returns an inert guard — no clock read, no
+//!   allocation, no locking. The quick-mode `bench_spice` section
+//!   `span_overhead` pins the end-to-end cost on the cached multi-RHS
+//!   resolve workload to < 2%.
+//! * **Enabled** ([`Level::Spans`]): each span costs two monotonic clock
+//!   reads and a thread-local `Vec` push; the global mutex is touched once
+//!   per `FLUSH_AT` events per thread. The collector is capped at
+//!   [`MAX_EVENTS`]; overflow increments [`dropped_events`] instead of
+//!   growing without bound.
+//!
+//! # Views over legacy structs
+//!
+//! The bespoke timing structs that predate this module are retained as
+//! *views* so their printed output is unchanged:
+//!
+//! * `spice::solve::SolveStats` (`subst_ns`/`matvec_ns`) — per-solve view
+//!   of the kernel wall time also recorded process-wide by
+//!   [`crate::backend::subst_ns`]/[`crate::backend::matvec_ns`] and spans.
+//! * `pipeline::StageStat` (`Pipeline::take_stage_stats`) — aggregated view
+//!   of the per-unit spans (cat `"pipeline"`).
+//! * `coordinator::metrics::Snapshot` — a read of the server's
+//!   [`metrics::Registry`], which is what `--metrics-addr` exports.
+//!
+//! # Typed events
+//!
+//! Operational state changes ([`Event`]: drift detection, recalibration,
+//! solver fallback, executor error, fault-clock steps) are recorded as
+//! chrome-trace *instant* events so a saturation run's timeline shows when
+//! the watchdog fired, not just how often.
+//!
+//! # Export
+//!
+//! [`drain`] takes the collected events; [`write_chrome_trace`] writes a
+//! chrome://tracing / Perfetto-loadable `trace_event` JSON file and
+//! [`write_jsonl`] a line-per-event log. Every CLI accepts
+//! `--trace-out FILE` / `--trace-jsonl FILE`.
+
+pub mod http;
+pub mod metrics;
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Level gate
+// ---------------------------------------------------------------------------
+
+/// Global tracing level. `Off` makes every span/event call a no-op behind
+/// one relaxed atomic load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Off = 0,
+    Spans = 1,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Set the global tracing level (also pins the trace epoch on first call,
+/// so spans started right after enabling get positive timestamps).
+pub fn set_level(l: Level) {
+    let _ = epoch();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    if enabled() {
+        Level::Spans
+    } else {
+        Level::Off
+    }
+}
+
+/// Cheap hot-path gate: one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) != 0
+}
+
+/// Process trace epoch — all event timestamps are nanoseconds since this.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ns_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos().min(u64::MAX as u128) as u64
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// Chrome trace_event phase: complete spans (`"X"`) or instants (`"i"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    Span,
+    Instant,
+}
+
+impl Ph {
+    pub fn code(self) -> &'static str {
+        match self {
+            Ph::Span => "X",
+            Ph::Instant => "i",
+        }
+    }
+}
+
+/// One recorded trace event (span or instant).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: Cow<'static, str>,
+    /// category: "serve" | "queue" | "forward" | "pipeline" | "module"
+    /// | "solve" | "kernel" | "event"
+    pub cat: &'static str,
+    pub ph: Ph,
+    /// nanoseconds since the process trace epoch
+    pub ts_ns: u64,
+    /// span duration (0 for instants)
+    pub dur_ns: u64,
+    /// trace-local thread id (dense, assigned at first event per thread)
+    pub tid: u64,
+    /// numeric payload args (`iters`, `batch`, ...)
+    pub args: Vec<(&'static str, f64)>,
+    /// optional free-form payload (error details)
+    pub detail: Option<String>,
+}
+
+/// Typed operational events: recorded as instant events (cat `"event"`)
+/// when tracing is enabled, so timelines show *when* the serving stack
+/// changed state.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The serving drift watchdog flagged a collapsed logit margin.
+    DriftDetected { margin: f64 },
+    /// A recalibration cycle rewrote `devices` crossbar cells.
+    Recalibrated { devices: u64 },
+    /// An iterative solve fell back to the direct factorization.
+    SolverFallback { cold: bool },
+    /// An executor failed a served batch.
+    ExecutorError { batch: u64 },
+    /// The device-lifetime fault clock advanced to `hours`.
+    FaultStep { hours: f64 },
+}
+
+/// Record a typed instant event (no-op when tracing is disabled).
+pub fn event(e: Event) {
+    if !enabled() {
+        return;
+    }
+    let (name, args): (&'static str, Vec<(&'static str, f64)>) = match e {
+        Event::DriftDetected { margin } => ("drift_detected", vec![("margin", margin)]),
+        Event::Recalibrated { devices } => ("recalibrated", vec![("devices", devices as f64)]),
+        Event::SolverFallback { cold } => {
+            ("solver_fallback", vec![("cold", if cold { 1.0 } else { 0.0 })])
+        }
+        Event::ExecutorError { batch } => ("executor_error", vec![("batch", batch as f64)]),
+        Event::FaultStep { hours } => ("fault_step", vec![("hours", hours)]),
+    };
+    push_event(TraceEvent {
+        name: Cow::Borrowed(name),
+        cat: "event",
+        ph: Ph::Instant,
+        ts_ns: ns_since_epoch(Instant::now()),
+        dur_ns: 0,
+        tid: 0,
+        args,
+        detail: None,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Span guards
+// ---------------------------------------------------------------------------
+
+/// RAII span: records a complete event from construction to drop. Inert
+/// (no clock reads, no allocation) when tracing is disabled.
+pub struct SpanGuard {
+    /// `None` = tracing disabled at construction; fully inert.
+    start: Option<Instant>,
+    name: Cow<'static, str>,
+    cat: &'static str,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl SpanGuard {
+    /// Attach a numeric payload arg (builder style).
+    pub fn arg(mut self, k: &'static str, v: f64) -> SpanGuard {
+        self.set_arg(k, v);
+        self
+    }
+
+    /// Attach a numeric payload arg known only mid-span (e.g. iteration
+    /// counts at solver exit).
+    pub fn set_arg(&mut self, k: &'static str, v: f64) {
+        if self.start.is_some() {
+            self.args.push((k, v));
+        }
+    }
+
+    /// Whether this guard is live (tracing was enabled at construction).
+    pub fn active(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let end = Instant::now();
+        push_event(TraceEvent {
+            name: std::mem::replace(&mut self.name, Cow::Borrowed("")),
+            cat: self.cat,
+            ph: Ph::Span,
+            ts_ns: ns_since_epoch(start),
+            dur_ns: end.saturating_duration_since(start).as_nanos().min(u64::MAX as u128) as u64,
+            tid: 0,
+            args: std::mem::take(&mut self.args),
+            detail: None,
+        });
+    }
+}
+
+/// Open a span with a static name.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { start: None, name: Cow::Borrowed(""), cat, args: Vec::new() };
+    }
+    SpanGuard { start: Some(Instant::now()), name: Cow::Borrowed(name), cat, args: Vec::new() }
+}
+
+/// Open a span with a runtime name (unit/module names); the name is only
+/// cloned when tracing is enabled.
+#[inline]
+pub fn span_owned(name: &str, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { start: None, name: Cow::Borrowed(""), cat, args: Vec::new() };
+    }
+    SpanGuard {
+        start: Some(Instant::now()),
+        name: Cow::Owned(name.to_string()),
+        cat,
+        args: Vec::new(),
+    }
+}
+
+/// Record an already-elapsed interval as a span (e.g. request latency
+/// measured from its enqueue instant). Instants before the trace epoch
+/// saturate to it.
+pub fn span_closed(name: &'static str, cat: &'static str, start: Instant, end: Instant) {
+    span_closed_args(name, cat, start, end, &[]);
+}
+
+/// [`span_closed`] with numeric payload args.
+pub fn span_closed_args(
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    end: Instant,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent {
+        name: Cow::Borrowed(name),
+        cat,
+        ph: Ph::Span,
+        ts_ns: ns_since_epoch(start),
+        dur_ns: end.saturating_duration_since(start).as_nanos().min(u64::MAX as u128) as u64,
+        tid: 0,
+        args: args.to_vec(),
+        detail: None,
+    });
+}
+
+/// Allocate a named virtual track (a chrome `tid` that belongs to no OS
+/// thread) for interval spans that don't follow one thread's call stack —
+/// e.g. per-request lifetimes, which start on client threads and close on
+/// the serve thread, and may overlap each other across batch boundaries.
+/// Keeping them off the real threads' tracks preserves strict span nesting
+/// there.
+pub fn virtual_track(name: &str) -> u64 {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    locked(&THREAD_NAMES).push((tid, name.to_string()));
+    tid
+}
+
+/// [`span_closed_args`] recorded onto a [`virtual_track`] instead of the
+/// calling thread's track.
+pub fn span_closed_on(
+    track: u64,
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    end: Instant,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent {
+        name: Cow::Borrowed(name),
+        cat,
+        ph: Ph::Span,
+        ts_ns: ns_since_epoch(start),
+        dur_ns: end.saturating_duration_since(start).as_nanos().min(u64::MAX as u128) as u64,
+        tid: track,
+        args: args.to_vec(),
+        detail: None,
+    });
+}
+
+/// Kernel span with optional numeric payload args:
+/// `span!("gmres")`, `span!("gmres", cols = bs.len())`,
+/// `span!("subst", k = nrhs, n = unknowns)`. Expands to a
+/// [`telemetry::span`](crate::telemetry::span) guard in category
+/// `"kernel"` — bind it (`let _sp = span!(..);`) so it lives to the end of
+/// the scope being measured.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::telemetry::span($name, "kernel")
+    };
+    ($name:expr $(, $k:ident = $v:expr)+ $(,)?) => {{
+        let mut __sp = $crate::telemetry::span($name, "kernel");
+        $( __sp.set_arg(stringify!($k), ($v) as f64); )+
+        __sp
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local buffers → global collector
+// ---------------------------------------------------------------------------
+
+/// Per-thread buffer size that triggers a flush to the global collector.
+const FLUSH_AT: usize = 1024;
+/// Global collector cap; beyond this events are counted as dropped.
+pub const MAX_EVENTS: usize = 4_000_000;
+
+static COLLECTOR: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static THREAD_NAMES: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+
+struct ThreadBuf {
+    tid: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        locked(&THREAD_NAMES).push((tid, name));
+        ThreadBuf { tid, events: Vec::new() }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        flush_into_collector(&mut self.events);
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn flush_into_collector(events: &mut Vec<TraceEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    let mut g = locked(&COLLECTOR);
+    let room = MAX_EVENTS.saturating_sub(g.len());
+    if events.len() > room {
+        DROPPED.fetch_add((events.len() - room) as u64, Ordering::Relaxed);
+        events.truncate(room);
+    }
+    g.append(events);
+}
+
+fn push_event(ev: TraceEvent) {
+    let mut ev = Some(ev);
+    let _ = TLS.try_with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let mut e = ev.take().expect("event present on first use");
+        if e.tid == 0 {
+            // tid 0 = "the recording thread"; nonzero = a virtual track
+            e.tid = buf.tid;
+        }
+        buf.events.push(e);
+        if buf.events.len() >= FLUSH_AT {
+            let mut full = std::mem::take(&mut buf.events);
+            drop(buf); // don't hold the TLS borrow across the global lock
+            flush_into_collector(&mut full);
+        }
+    });
+    if ev.is_some() {
+        // thread is tearing down and its TLS slot is gone — count, don't lose silently
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Flush the calling thread's buffered events to the global collector.
+pub fn flush_thread() {
+    let _ = TLS.try_with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let mut full = std::mem::take(&mut buf.events);
+        drop(buf);
+        flush_into_collector(&mut full);
+    });
+}
+
+/// Take every collected event, sorted by timestamp. Flushes the calling
+/// thread first; other *live* threads' buffers are only visible after they
+/// flush or exit (`util::pool` workers are scoped, so they have always
+/// exited by the time their caller can drain).
+pub fn drain() -> Vec<TraceEvent> {
+    flush_thread();
+    let mut v = std::mem::take(&mut *locked(&COLLECTOR));
+    v.sort_by_key(|e| e.ts_ns);
+    v
+}
+
+/// Discard all collected events and the dropped-event count (test helper).
+pub fn clear() {
+    flush_thread();
+    locked(&COLLECTOR).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Events lost to the collector cap or thread teardown since the last
+/// [`clear`].
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Snapshot of the trace-local thread-id → thread-name table.
+pub fn thread_names() -> Vec<(u64, String)> {
+    locked(&THREAD_NAMES).clone()
+}
+
+// ---------------------------------------------------------------------------
+// Export: chrome://tracing JSON and JSONL
+// ---------------------------------------------------------------------------
+
+fn json_escaped(s: &str) -> String {
+    crate::util::json::Json::str(s).to_string()
+}
+
+/// Render events as a chrome://tracing / Perfetto `trace_event` JSON
+/// document (`{"traceEvents": [...]}`; `ts`/`dur` in microseconds with
+/// nanosecond fraction, one `pid`, trace-local `tid`s with thread-name
+/// metadata).
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(events.len() * 96 + 256);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for (tid, name) in thread_names() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":{}}}}}",
+            json_escaped(&name)
+        );
+    }
+    for e in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{}",
+            json_escaped(&e.name),
+            e.cat,
+            e.ph.code(),
+            e.tid,
+            e.ts_ns as f64 / 1e3,
+        );
+        if e.ph == Ph::Span {
+            let _ = write!(out, ",\"dur\":{}", e.dur_ns as f64 / 1e3);
+        } else {
+            // instant events: thread scope
+            out.push_str(",\"s\":\"t\"");
+        }
+        if !e.args.is_empty() || e.detail.is_some() {
+            out.push_str(",\"args\":{");
+            let mut afirst = true;
+            for (k, v) in &e.args {
+                if !afirst {
+                    out.push(',');
+                }
+                afirst = false;
+                let _ = write!(out, "\"{k}\":{}", crate::util::json::Json::num(*v));
+            }
+            if let Some(d) = &e.detail {
+                if !afirst {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"detail\":{}", json_escaped(d));
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path` (atomically: tmp + rename).
+pub fn write_chrome_trace(path: impl AsRef<Path>, events: &[TraceEvent]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(chrome_trace_json(events).as_bytes())?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Write one JSON object per event (nanosecond timestamps preserved) —
+/// the grep/jq-friendly log form of the same trace.
+pub fn write_jsonl(path: impl AsRef<Path>, events: &[TraceEvent]) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        for e in events {
+            let mut line = String::with_capacity(96);
+            let _ = write!(
+                line,
+                "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"{}\",\"tid\":{},\"ts_ns\":{},\"dur_ns\":{}",
+                json_escaped(&e.name),
+                e.cat,
+                e.ph.code(),
+                e.tid,
+                e.ts_ns,
+                e.dur_ns,
+            );
+            for (k, v) in &e.args {
+                let _ = write!(line, ",\"{k}\":{}", crate::util::json::Json::num(*v));
+            }
+            if let Some(d) = &e.detail {
+                let _ = write!(line, ",\"detail\":{}", json_escaped(d));
+            }
+            line.push('}');
+            writeln!(f, "{line}")?;
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Global tracing state is process-wide; serialize the tests that
+    /// toggle it (other lib tests never enable tracing, so they only ever
+    /// see the disabled fast path).
+    fn lock_telemetry() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = lock_telemetry();
+        set_level(Level::Off);
+        clear();
+        {
+            let _sp = span("tele_test_disabled", "kernel");
+            event(Event::SolverFallback { cold: true });
+        }
+        let evs = drain();
+        assert!(
+            !evs.iter().any(|e| e.name == "tele_test_disabled" || e.name == "solver_fallback"),
+            "disabled level must add zero events"
+        );
+    }
+
+    #[test]
+    fn spans_nest_and_carry_args() {
+        let _g = lock_telemetry();
+        set_level(Level::Spans);
+        clear();
+        {
+            let _outer = span("tele_test_outer", "serve").arg("batch", 4.0);
+            std::thread::sleep(Duration::from_millis(2));
+            {
+                let mut inner = crate::span!("tele_test_inner", iters = 3usize);
+                inner.set_arg("resid", 0.5);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        event(Event::DriftDetected { margin: 0.25 });
+        set_level(Level::Off);
+        let evs = drain();
+        let outer = evs.iter().find(|e| e.name == "tele_test_outer").expect("outer span");
+        let inner = evs.iter().find(|e| e.name == "tele_test_inner").expect("inner span");
+        let drift = evs.iter().find(|e| e.name == "drift_detected").expect("drift event");
+        assert_eq!(outer.ph, Ph::Span);
+        assert_eq!(drift.ph, Ph::Instant);
+        assert_eq!(outer.tid, inner.tid, "same thread, same track");
+        // strict containment on the shared monotonic clock
+        assert!(inner.ts_ns >= outer.ts_ns);
+        assert!(inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns);
+        assert!(inner.dur_ns >= 1_000_000, "slept 1ms inside");
+        assert_eq!(outer.args, vec![("batch", 4.0)]);
+        assert_eq!(inner.args, vec![("iters", 3.0), ("resid", 0.5)]);
+    }
+
+    #[test]
+    fn worker_thread_events_flush_on_exit() {
+        let _g = lock_telemetry();
+        set_level(Level::Spans);
+        clear();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let _sp = span("tele_test_worker", "kernel");
+                });
+            }
+        });
+        set_level(Level::Off);
+        let evs = drain();
+        let workers: Vec<_> = evs.iter().filter(|e| e.name == "tele_test_worker").collect();
+        assert_eq!(workers.len(), 2, "joined workers' buffers are drained");
+        assert_ne!(workers[0].tid, workers[1].tid, "distinct trace tids");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let _g = lock_telemetry();
+        set_level(Level::Spans);
+        clear();
+        {
+            let _sp = span_owned("tele \"quoted\" name", "module").arg("k", 1.5);
+        }
+        event(Event::ExecutorError { batch: 7 });
+        set_level(Level::Off);
+        let evs = drain();
+        let evs: Vec<TraceEvent> = evs
+            .into_iter()
+            .filter(|e| e.name.contains("tele") || e.name == "executor_error")
+            .collect();
+        let doc = chrome_trace_json(&evs);
+        let parsed = crate::util::json::Json::parse(&doc).expect("valid json");
+        let arr = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+        // metadata rows + our two events
+        assert!(arr.len() >= 2, "{doc}");
+        for ev in arr {
+            let ph = ev.get("ph").and_then(|v| v.as_str()).expect("ph");
+            assert!(matches!(ph, "X" | "i" | "M"), "unexpected ph {ph}");
+            if ph == "X" {
+                assert!(ev.get("dur").and_then(|v| v.as_f64()).expect("dur") >= 0.0);
+                assert!(ev.get("ts").and_then(|v| v.as_f64()).expect("ts") >= 0.0);
+            }
+        }
+        // JSONL: one parseable object per line
+        let tmp = std::env::temp_dir().join(format!("memx_tele_{}.jsonl", std::process::id()));
+        write_jsonl(&tmp, &evs).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(text.lines().count(), evs.len());
+        for line in text.lines() {
+            crate::util::json::Json::parse(line).expect("jsonl line parses");
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! End-to-end telemetry contracts: a Spice-fidelity `demo_network` forward
+//! emits a well-formed, strictly-nested chrome trace; disabled-level
+//! tracing adds zero events; and the GMRES iteration counter is exact when
+//! the Krylov sweeps run on `pool` worker threads.
+
+use std::sync::Mutex;
+
+use memx::mapper::{build_synthetic_fc, MapMode};
+use memx::netlist::CrossbarSim;
+use memx::pipeline::{default_device, demo_network, Fidelity, PipelineBuilder, SolverStrategy};
+use memx::spice::solve::Ordering;
+use memx::telemetry::{self, Level, Ph, TraceEvent};
+use memx::util::json::Json;
+use memx::util::prng::Rng;
+
+/// The tracing level and collector are process-global; serialize the tests
+/// in this binary so one test's drain never swallows another's spans.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock_telemetry() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn demo_inputs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..dim).map(|_| rng.f32() as f64 * 0.5).collect()).collect()
+}
+
+/// Spans on one trace tid must form a laminar family: any two either nest
+/// or are disjoint (shared endpoints allowed — a child may close in the
+/// same nanosecond tick its parent does). Virtual tracks (request
+/// lifetimes) are exempt by construction; none exist in these tests.
+fn assert_strictly_nested(events: &[TraceEvent]) {
+    use std::collections::BTreeMap;
+    let mut by_tid: BTreeMap<u64, Vec<(u64, u64)>> = BTreeMap::new();
+    for e in events {
+        if e.ph == Ph::Span {
+            by_tid.entry(e.tid).or_default().push((e.ts_ns, e.ts_ns + e.dur_ns));
+        }
+    }
+    assert!(!by_tid.is_empty(), "no spans recorded");
+    for (tid, mut spans) in by_tid {
+        // parents first: by start ascending, then longest first
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<(u64, u64)> = Vec::new();
+        for (s, t) in spans {
+            while let Some(&(_, pe)) = stack.last() {
+                if s >= pe {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(ps, pe)) = stack.last() {
+                assert!(
+                    s >= ps && t <= pe,
+                    "tid {tid}: span [{s}, {t}] partially overlaps enclosing [{ps}, {pe}]"
+                );
+            }
+            stack.push((s, t));
+        }
+    }
+}
+
+/// The golden-file contract: a Spice-fidelity forward through the demo
+/// network produces chrome-trace JSON that parses, uses only valid phases,
+/// carries non-negative microsecond timestamps, and whose spans nest
+/// strictly per thread across the whole hierarchy (execution unit ->
+/// module -> segment solve -> factor/substitution kernel).
+#[test]
+fn spice_forward_emits_wellformed_nested_chrome_trace() {
+    let _g = lock_telemetry();
+    telemetry::set_level(Level::Spans);
+    telemetry::clear();
+
+    let (m, ws) = demo_network(0x7E1E).unwrap();
+    // workers(1) keeps every solve inline on this thread, so hierarchy
+    // containment is checkable on a single track
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(8)
+        .workers(1)
+        .build(&m, &ws)
+        .unwrap();
+    let batch = demo_inputs(2, p.in_dim(), 0x7E1E2);
+    p.forward_batch(&batch).unwrap();
+
+    telemetry::set_level(Level::Off);
+    let events = telemetry::drain();
+    assert!(!events.is_empty(), "an instrumented forward must record spans");
+    for cat in ["pipeline", "module", "solve", "kernel"] {
+        assert!(events.iter().any(|e| e.cat == cat), "missing span category {cat}");
+    }
+    assert_strictly_nested(&events);
+
+    // hierarchy: some kernel span sits inside a solve span, which sits
+    // inside a module span, which sits inside a unit (pipeline) span
+    let contains = |outer: &TraceEvent, inner: &TraceEvent| {
+        outer.tid == inner.tid
+            && inner.ts_ns >= outer.ts_ns
+            && inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns
+    };
+    let chain_found = events.iter().filter(|e| e.cat == "kernel").any(|k| {
+        events.iter().filter(|s| s.cat == "solve" && contains(s, k)).any(|s| {
+            events.iter().filter(|mo| mo.cat == "module" && contains(mo, s)).any(|mo| {
+                events.iter().any(|u| u.cat == "pipeline" && contains(u, mo))
+            })
+        })
+    });
+    assert!(chain_found, "no kernel span nested under solve under module under unit");
+
+    // chrome-trace JSON well-formedness
+    let doc = telemetry::chrome_trace_json(&events);
+    let parsed = Json::parse(&doc).expect("chrome trace must be valid JSON");
+    let arr = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    assert!(arr.len() >= events.len(), "metadata rows + one row per event");
+    for ev in arr {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).expect("ph");
+        assert!(matches!(ph, "X" | "i" | "M"), "unexpected ph {ph:?}");
+        if ph == "M" {
+            continue;
+        }
+        assert!(ev.get("ts").and_then(|v| v.as_f64()).expect("ts") >= 0.0);
+        match ph {
+            "X" => {
+                assert!(ev.get("dur").and_then(|v| v.as_f64()).expect("dur") >= 0.0);
+            }
+            _ => {
+                // instants carry a thread scope instead of a duration
+                assert_eq!(ev.get("s").and_then(|v| v.as_str()), Some("t"));
+            }
+        }
+    }
+}
+
+/// The zero-cost contract's observable half: at [`Level::Off`] the same
+/// instrumented forward records nothing at all.
+#[test]
+fn disabled_tracing_adds_zero_events() {
+    let _g = lock_telemetry();
+    telemetry::set_level(Level::Off);
+    telemetry::clear();
+
+    let (m, ws) = demo_network(0x0FF1).unwrap();
+    let mut p = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(8)
+        .workers(1)
+        .build(&m, &ws)
+        .unwrap();
+    let batch = demo_inputs(1, p.in_dim(), 0x0FF2);
+    p.forward_batch(&batch).unwrap();
+
+    let events = telemetry::drain();
+    assert!(events.is_empty(), "disabled level recorded {} event(s)", events.len());
+    assert_eq!(telemetry::dropped_events(), 0);
+}
+
+/// Regression for the `precond_reused`-style plumbing: the process-wide
+/// GMRES iteration counter is bumped inside the kernel itself, so it must
+/// advance when the per-RHS Krylov sweeps run on `pool::par_map` worker
+/// threads (`workers >= 2`), not just on the caller.
+#[test]
+fn gmres_iteration_counter_advances_across_worker_threads() {
+    let _g = lock_telemetry();
+    let dev = default_device();
+    let cb = build_synthetic_fc(24, 12, dev.levels, MapMode::Inverted, 0x6E50);
+    let solver = SolverStrategy::Iterative { restart: 16, tol: 1e-11, max_iter: 600 };
+    // monolithic (segment 0): solve_batch hands the whole worker budget to
+    // the per-RHS GMRES sweeps, the exact cross-thread path under test
+    let mut sim = CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, solver).unwrap();
+    let mut rng = Rng::new(0x6E51);
+    let inputs: Vec<Vec<f64>> =
+        (0..4).map(|_| (0..24).map(|_| (rng.f64() * 2.0 - 1.0) * 0.4).collect()).collect();
+
+    let before = memx::spice::gmres_iterations();
+    let out = sim.solve_batch(&inputs, 2).unwrap();
+    assert_eq!(out.len(), inputs.len());
+    assert!(out.iter().flatten().all(|v| v.is_finite()));
+    let after = memx::spice::gmres_iterations();
+    assert!(
+        after > before,
+        "GMRES iterations spent on worker threads must be counted (before {before}, after {after})"
+    );
+    // a second identical batch rides the cached preconditioner
+    let reuse_before = memx::spice::precond_reuses();
+    sim.solve_batch(&inputs, 2).unwrap();
+    assert!(
+        memx::spice::precond_reuses() > reuse_before,
+        "warm preconditioner reuse must be counted"
+    );
+}
