@@ -17,6 +17,16 @@
 //! back to its exact transfer (`memx report --coverage` prints the
 //! per-stage table; rust/tests/fidelity.rs pins it).
 //!
+//! # Interchange and validation
+//!
+//! Every resident circuit also exports as a standard `.SUBCKT` deck
+//! (`memx::netlist::interchange`) that external SPICE tooling — or
+//! `parse_deck` itself — can read back. `memx validate [--quick]` proves
+//! emit -> parse -> sim matches every resident solve and cross-checks the
+//! production engine against an independent dense MNA reference plus
+//! fuzzed corpora (`memx::netlist::validate`); the tour below round-trips
+//! one crossbar deck.
+//!
 //! # Backend selection
 //!
 //! Every dense hot loop behind the SPICE engine — multi-RHS LU
@@ -155,6 +165,27 @@ fn synthetic_tour() -> anyhow::Result<()> {
         cmp.analytical_latency_s * 1e6,
         read.energy_j * 1e9,
         read.stats.steps_accepted
+    );
+
+    // interchange: every resident circuit also speaks the standard
+    // .SUBCKT dialect — emit a deck for external SPICE tooling, parse it
+    // back (memx::netlist::interchange::parse_deck reads external decks
+    // the same way), and prove the re-simulated operating point matches
+    // the resident solve. `memx validate [--quick]` sweeps the whole demo
+    // network plus generated differential/fuzz corpora through this
+    // contract; rust/tests/interchange.rs pins it
+    let decks = sim.decks("quickstart_fc");
+    let deck = &decks[0];
+    let text = memx::netlist::interchange::emit_deck(deck);
+    let parsed = memx::netlist::interchange::parse_deck(&text)?;
+    let report = memx::netlist::validate::check_deck(deck)?;
+    println!(
+        "interchange  {} -> {} deck lines, parsed back to {} elements, \
+         round-trip rel {:.1e} (`memx validate --quick` sweeps every deck)",
+        deck.name,
+        text.lines().count(),
+        parsed.elements.len(),
+        report.roundtrip_rel
     );
 
     // observability: rerun one spice forward with span tracing enabled —

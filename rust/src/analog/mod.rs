@@ -275,6 +275,34 @@ pub fn build_gap_crossbar(name: &str, c: usize, spatial: usize, mode: MapMode) -
     }
 }
 
+/// Residual summing-amplifier stage as a crossbar: one op-amp adder column
+/// per channel, `y[j] = a[j] + b[j]` with the two branch activations
+/// presented as the concatenated input vector `[a, b]` (region =
+/// `2 * dim` lines). Both unit weights land through
+/// [`place_affine_device`], so the differential sign convention and the
+/// per-column inverter in dual mode work exactly like the FC/BN builders —
+/// the "Add" stages the coverage report marks spice-exempt now have a
+/// first-class netlist too.
+pub fn build_residual_crossbar(name: &str, dim: usize, mode: MapMode) -> Crossbar {
+    assert!(dim > 0, "residual crossbar needs channels");
+    let region = 2 * dim;
+    let inverted = mode.inverted();
+    let mut devices = Vec::with_capacity(region);
+    for j in 0..dim {
+        place_affine_device(&mut devices, region, inverted, j, Some(j), 1.0, 1.0);
+        place_affine_device(&mut devices, region, inverted, j, Some(dim + j), 1.0, 1.0);
+    }
+    Crossbar {
+        name: name.to_string(),
+        rows: 2 * region + 2,
+        cols: dim,
+        region,
+        devices,
+        rf_scale: 1.0,
+        mode,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +403,37 @@ mod tests {
                     .unwrap();
             for (ch, o) in outs.iter().enumerate() {
                 assert!((o - mean(ch)).abs() < 1e-4, "{mode} ch {ch}: {o} vs {}", mean(ch));
+            }
+        }
+    }
+
+    #[test]
+    fn residual_crossbar_sums_branches() {
+        let dim = 3usize;
+        let a = [0.4, -0.2, 0.15];
+        let b = [-0.1, 0.3, 0.05];
+        let x: Vec<f64> = a.iter().chain(&b).copied().collect();
+        for mode in [MapMode::Inverted, MapMode::Dual] {
+            let cb = build_residual_crossbar("t.add", dim, mode);
+            assert_eq!(cb.devices.len(), 2 * dim);
+            assert_eq!(cb.cols, dim);
+            let got = cb.eval_ideal(&x);
+            for j in 0..dim {
+                let want = a[j] + b[j];
+                assert!((got[j] - want).abs() < 1e-12, "{mode} j={j}");
+            }
+            let seg = &plan_segments(dim, 0)[0];
+            let text = emit_crossbar(&cb, &test_device(), seg, Some(&x), 1);
+            let outs = solve_segment_outputs(
+                &parse(&text).unwrap(),
+                seg,
+                mode.inverted(),
+                Ordering::Smart,
+            )
+            .unwrap();
+            for (j, o) in outs.iter().enumerate() {
+                let want = a[j] + b[j];
+                assert!((o - want).abs() < 1e-4, "{mode} j={j}: spice {o} vs {want}");
             }
         }
     }

@@ -41,6 +41,14 @@
 //!            point and compare simulated settling latency / device energy
 //!            against the closed-form Eq 17/18 columns; appends
 //!            BENCH_transient.json (MEMX_BENCH_QUICK=1 shrinks the run)
+//!   validate [--n N] [--fuzz N] [--seed S] [--segment N] [--quick]
+//!            differential validation harness: sweep every resident
+//!            interchange deck of the spice-fidelity demo network (plus the
+//!            residual summing-amplifier netlists) through the emit → parse
+//!            → simulate round-trip and the independent dense MNA reference
+//!            / Krylov cross-checks, then a generated differential corpus
+//!            and a fuzzed-deck parser sweep; --quick (or
+//!            MEMX_BENCH_QUICK=1) shrinks the corpora for CI
 //!
 //! Observability (memx::telemetry):
 //!   accuracy/serve/spice/drift/tran all take [--trace-out FILE] (chrome://
@@ -89,7 +97,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "memx — memristor crossbar computing paradigm for MobileNetV3\n\
-         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report|drift|tran> [flags]\n\
+         usage: memx <info|accuracy|serve|verify|map|netlist|spice|report|drift|tran|validate> [flags]\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
 }
@@ -179,6 +187,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "report" => cmd_report(rest),
         "drift" => cmd_drift(rest),
         "tran" => cmd_tran(rest),
+        "validate" => cmd_validate(rest),
         _ => {
             usage();
             bail!("unknown command '{cmd}'")
@@ -938,6 +947,94 @@ fn cmd_tran(rest: &[String]) -> Result<()> {
     let out = a.get_or("out", "BENCH_transient.json");
     memx::util::bench::append_json_report(out, "transient", &bench_rows, &derived)?;
     println!("appended transient sweep to {out}");
+    trace.finish()?;
+    Ok(())
+}
+
+/// Differential validation harness (`memx::netlist::validate`): the
+/// spice-fidelity demo network's resident interchange decks through the
+/// emit → parse → simulate round-trip plus the independent dense MNA
+/// reference and Krylov cross-checks, then a generated MNA corpus and a
+/// fuzzed-deck parser sweep. Any contract violation is a hard error.
+fn cmd_validate(rest: &[String]) -> Result<()> {
+    use anyhow::Context;
+    use memx::netlist::validate::{
+        check_deck, differential_sweep, fuzz_sweep, REFERENCE_TOL, ROUNDTRIP_TOL,
+    };
+    use memx::spice::solve::Ordering;
+
+    let a = Args::parse(
+        rest,
+        &["n", "fuzz", "seed", "segment", "quick!", "trace-out", "trace-jsonl"],
+    )?;
+    let trace = TraceFlags::from_args(&a);
+    let quick = a.has("quick") || std::env::var("MEMX_BENCH_QUICK").is_ok();
+    let seed = a.get_usize("seed", 0x5EED)? as u64;
+    let diff_cases = a.get_usize("n", if quick { 20 } else { 80 })?;
+    let fuzz_cases = a.get_usize("fuzz", if quick { 200 } else { 1000 })?;
+
+    // leg 1: every resident deck of the demo network, snapshotted at a
+    // nontrivial operating point (one deterministic batch drives the
+    // sources away from their all-zero build state first)
+    let (m, ws) = memx::pipeline::demo_network(seed)?;
+    let mut pipe = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(a.get_usize("segment", 8)?)
+        .build(&m, &ws)?;
+    let in_dim = pipe.in_dim();
+    let mut rng = memx::util::prng::Rng::new(seed ^ 0xDECC);
+    let batch: Vec<Vec<f64>> = (0..2)
+        .map(|_| (0..in_dim).map(|_| (rng.f64() - 0.5) * 0.6).collect())
+        .collect();
+    pipe.forward_batch(&batch)?;
+    let mut decks = pipe.spice_decks();
+    // the residual adders run exact at forward time; their offline
+    // summing-amplifier netlists join the sweep explicitly
+    let dev = default_device();
+    for row in pipe.stage_coverage().iter().filter(|r| r.kind == "Add") {
+        let cb = memx::analog::build_residual_crossbar(
+            &row.name,
+            row.in_dim,
+            memx::mapper::MapMode::Inverted,
+        );
+        let sim =
+            memx::netlist::CrossbarSim::new(&cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto)?;
+        decks.extend(sim.decks(&row.name));
+    }
+    if decks.is_empty() {
+        bail!("demo network produced no resident decks at spice fidelity");
+    }
+    println!(
+        "validate: {} decks (round-trip <= {ROUNDTRIP_TOL:.0e}, reference/krylov <= {REFERENCE_TOL:.0e})",
+        decks.len()
+    );
+    let (mut worst_rt, mut worst_ref, mut worst_kry) = (0.0f64, 0.0f64, 0.0f64);
+    for d in &decks {
+        let rep = check_deck(d).with_context(|| format!("deck '{}'", d.name))?;
+        worst_rt = worst_rt.max(rep.roundtrip_rel);
+        worst_kry = worst_kry.max(rep.krylov_rel);
+        let ref_str = match rep.reference_rel {
+            Some(r) => {
+                worst_ref = worst_ref.max(r);
+                format!("{r:.3e}")
+            }
+            None => "skipped (dim cap)".to_string(),
+        };
+        println!(
+            "  {:<30} {:>4} nodes {:>5} elems  roundtrip {:.3e}  reference {ref_str}  krylov {:.3e}",
+            rep.name, rep.nodes, rep.elements, rep.roundtrip_rel, rep.krylov_rel
+        );
+    }
+    println!("  worst: roundtrip {worst_rt:.3e}  reference {worst_ref:.3e}  krylov {worst_kry:.3e}");
+
+    // leg 2: generated MNA corpus (TIA zero-diagonal pivots included) vs
+    // the independent dense reference
+    let worst = differential_sweep(seed ^ 0xD1FF, diff_cases)?;
+    println!("differential corpus: {diff_cases} generated circuits, worst rel {worst:.3e}");
+
+    // leg 3: fuzzed decks — the parser must accept or cleanly reject
+    let (ok, rejected) = fuzz_sweep(seed ^ 0xF022, fuzz_cases);
+    println!("fuzz corpus: {fuzz_cases} decks -> {ok} parsed, {rejected} rejected, 0 panics");
     trace.finish()?;
     Ok(())
 }

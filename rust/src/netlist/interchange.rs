@@ -1,0 +1,765 @@
+//! Standard-dialect SPICE interchange: `.SUBCKT`-structured deck emission
+//! and a round-tripping parser.
+//!
+//! The flat emitter in the parent module ([`super::emit_crossbar`]) writes
+//! netlists only this crate reads. This module speaks the ecosystem
+//! dialect instead, so every resident circuit can be handed to (and read
+//! back from) external SPICE tooling, and the differential harness in
+//! [`super::validate`] can prove emit → parse → sim equals the resident
+//! solve.
+//!
+//! # Dialect
+//!
+//! One deck is a title line, optional `.SUBCKT <name> <ports...>` /
+//! `.ENDS` definitions, element / `X` instantiation cards, and a final
+//! `.END`:
+//!
+//! ```text
+//! * memx interchange deck: fc1.seg0
+//! .SUBCKT fc1.seg0 in0 in1 vout0
+//! Vin0 in0 0 DC 0.25
+//! RM0_0 in0 vcol0 2520.3
+//! RF0 vcol0 vout0 50
+//! EOP0 vout0 0 0 vcol0 1000000
+//! .ENDS fc1.seg0
+//! X1 in0 in1 vout0 fc1.seg0
+//! .END
+//! ```
+//!
+//! Supported element cards (first letter selects the type, the full first
+//! token is the element name):
+//!
+//! | card | element | form |
+//! |------|---------|------|
+//! | `R`  | resistor | `Rxx n+ n- ohms` |
+//! | `V`  | voltage source | `Vxx n+ n- [DC] volts` |
+//! | `I`  | current source | `Ixx n+ n- [DC] amps` |
+//! | `E`  | VCVS | `Exx out+ out- ctrl+ ctrl- gain` |
+//! | `G`  | VCCS | `Gxx out+ out- ctrl+ ctrl- gm` |
+//! | `C`  | capacitor | `Cxx n+ n- farads` |
+//! | `L`  | inductor | `Lxx n+ n- henries` |
+//! | `D`  | diode | `Dxx anode cathode [isat n·Vt]` |
+//! | `B`  | behavioural multiplier | `Bxx out ctrl_a ctrl_b gain` |
+//! | `X`  | subcircuit instance | `Xxx n1 ... nK subckt_name` |
+//!
+//! Values accept engineering suffixes (`f p n u m k meg g t`, case
+//! insensitive, trailing unit letters ignored: `10kohm` = `1e4`).
+//! Comments start with `*`; a leading `+` continues the previous card;
+//! node `0`/`gnd` is global ground (also inside subcircuits). Instantiation
+//! expands recursively: port nodes map to the instance's connection nodes,
+//! internal nodes and element names are prefixed `<instance>.`. Unknown
+//! dot-cards (`.op`, `.model`, ...) are ignored; `.END` stops parsing.
+//!
+//! Every syntax failure is a structured [`ParseError`] carrying the
+//! 1-based line and column of the offending token — the parser never
+//! panics, and expansion is budgeted (recursion depth, total elements) so
+//! hostile decks are rejected rather than exhausting memory.
+//!
+//! # Round-trip contract
+//!
+//! [`emit_cards`] serializes values with Rust's shortest-round-trip `f64`
+//! formatting, so `parse` of an emitted card reconstructs bit-identical
+//! element values; `emit_cards(parse(emit_cards(c))) == emit_cards(c)`
+//! holds byte-for-byte (pinned by the interchange proptests). Subcircuit
+//! expansion renames internal nodes, which would permute MNA unknown
+//! ordering and let LU rounding drift — [`emit_deck`] therefore leads the
+//! subcircuit body with inert zero-current `Ipin` sources that pin the
+//! node interning order, making emit → parse → sim reproduce the resident
+//! solve bit-for-bit. The conformance suite ([`super::validate`])
+//! nonetheless only pins ≤ 1e-12 relative, the contract external decks
+//! without pins are held to.
+
+use std::collections::BTreeMap;
+
+use crate::spice::{Circuit, Element};
+
+/// One emittable circuit plus its interface: the node names that become
+/// the `.SUBCKT` port list. `inputs` are the driven source nodes,
+/// `outputs` the read nodes — kept separate so validation knows what to
+/// compare after a round trip.
+#[derive(Debug, Clone)]
+pub struct Deck {
+    /// Subcircuit name (also names the deck in reports).
+    pub name: String,
+    /// The resident circuit, current element values included.
+    pub circuit: Circuit,
+    /// Driven interface node names (input sources).
+    pub inputs: Vec<String>,
+    /// Read interface node names (column outputs, activation output).
+    pub outputs: Vec<String>,
+}
+
+impl Deck {
+    /// The `.SUBCKT` port list: inputs then outputs, deduplicated, ground
+    /// and names not present in the circuit dropped (a port the cards
+    /// never touch would parse into a floating — singular — node).
+    pub fn ports(&self) -> Vec<String> {
+        let mut seen = std::collections::BTreeSet::new();
+        self.inputs
+            .iter()
+            .chain(self.outputs.iter())
+            .filter(|p| {
+                !is_ground(p)
+                    && self.circuit.node_named(p).is_some_and(|n| n != 0)
+                    && seen.insert(p.as_str().to_string())
+            })
+            .cloned()
+            .collect()
+    }
+}
+
+fn is_ground(name: &str) -> bool {
+    name == "0" || name.eq_ignore_ascii_case("gnd")
+}
+
+/// Prefix `name` with the card-type letter unless it already starts with
+/// it (`"RM0_1"` stays, `"XMUL"` becomes `"BXMUL"` on a multiplier card).
+/// The parser keeps the full card token as the element name, so a renamed
+/// element stays renamed across round trips — [`super::validate`] compares
+/// against the canonicalized resident names for exactly this reason.
+pub fn card_name(kind: char, name: &str) -> String {
+    if name.chars().next().is_some_and(|c| c.eq_ignore_ascii_case(&kind)) {
+        name.to_string()
+    } else {
+        format!("{kind}{name}")
+    }
+}
+
+/// Serialize every element of `c` as one card per line (no title, no
+/// terminator) using the circuit's node names. Values use Rust's shortest
+/// round-trip `f64` formatting, so a parse of the output reconstructs the
+/// exact same numbers.
+pub fn emit_cards(c: &Circuit) -> String {
+    let names = c.node_names();
+    let n = |id: usize| names[id].as_str();
+    let mut s = String::with_capacity(64 * c.elements.len());
+    for e in &c.elements {
+        match e {
+            Element::Resistor(name, a, b, v) => {
+                s.push_str(&format!("{} {} {} {v}\n", card_name('R', name), n(*a), n(*b)));
+            }
+            Element::Vsource(name, a, b, v) => {
+                s.push_str(&format!("{} {} {} DC {v}\n", card_name('V', name), n(*a), n(*b)));
+            }
+            Element::Isource(name, a, b, v) => {
+                s.push_str(&format!("{} {} {} DC {v}\n", card_name('I', name), n(*a), n(*b)));
+            }
+            Element::Vcvs(name, op, om, cp, cm, g) => {
+                s.push_str(&format!(
+                    "{} {} {} {} {} {g}\n",
+                    card_name('E', name),
+                    n(*op),
+                    n(*om),
+                    n(*cp),
+                    n(*cm)
+                ));
+            }
+            Element::Vccs(name, op, om, cp, cm, g) => {
+                s.push_str(&format!(
+                    "{} {} {} {} {} {g}\n",
+                    card_name('G', name),
+                    n(*op),
+                    n(*om),
+                    n(*cp),
+                    n(*cm)
+                ));
+            }
+            Element::Diode(name, a, k, isat, nvt) => {
+                s.push_str(&format!(
+                    "{} {} {} {isat} {nvt}\n",
+                    card_name('D', name),
+                    n(*a),
+                    n(*k)
+                ));
+            }
+            Element::Mult(name, out, a, b, g) => {
+                s.push_str(&format!(
+                    "{} {} {} {} {g}\n",
+                    card_name('B', name),
+                    n(*out),
+                    n(*a),
+                    n(*b)
+                ));
+            }
+            Element::Capacitor(name, a, b, v) => {
+                s.push_str(&format!("{} {} {} {v}\n", card_name('C', name), n(*a), n(*b)));
+            }
+            Element::Inductor(name, a, b, v) => {
+                s.push_str(&format!("{} {} {} {v}\n", card_name('L', name), n(*a), n(*b)));
+            }
+        }
+    }
+    s
+}
+
+/// Render a circuit as a flat (subcircuit-free) deck: title comment,
+/// cards, `.END`.
+pub fn emit_flat(c: &Circuit) -> String {
+    format!("* {}\n{}.END\n", c.title, emit_cards(c))
+}
+
+/// Render one deck in the interchange dialect: the circuit as a single
+/// `.SUBCKT` definition with the deck's interface as its port list, one
+/// `X1` instantiation wiring the ports to identically named top-level
+/// nodes, `.END`-terminated.
+///
+/// The subcircuit body opens with one zero-current `Ipin` source per node
+/// in resident node-id order. They are electrically inert (a 0 A source
+/// stamps nothing into the matrix and adds exactly `±0.0` to the RHS) but
+/// force the parser to intern nodes in the same order the resident
+/// circuit numbered them — so the re-simulated deck assembles the
+/// bit-identical MNA system and emit → parse → sim reproduces the
+/// resident solve exactly, not merely to solver precision. The `Ipin`
+/// element-name prefix is reserved for this purpose.
+pub fn emit_deck(d: &Deck) -> String {
+    let ports = d.ports().join(" ");
+    let names = d.circuit.node_names();
+    let mut pins =
+        String::from("* node-order pins (0 A): fix MNA unknown ordering for exact round-trip\n");
+    for (id, name) in names.iter().enumerate().skip(1) {
+        pins.push_str(&format!("Ipin{id} {name} 0 DC 0\n"));
+    }
+    format!(
+        "* memx interchange deck: {name}\n.SUBCKT {name} {ports}\n{pins}{cards}.ENDS {name}\nX1 {ports} {name}\n.END\n",
+        name = d.name,
+        cards = emit_cards(&d.circuit),
+    )
+}
+
+/// Structured parse failure: 1-based line and column of the offending
+/// token in the source text (for continued cards the column indexes the
+/// joined logical line).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("netlist parse error at line {line}, col {col}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+fn perr<T>(line: usize, col: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, col, msg: msg.into() })
+}
+
+/// Parse a token as a value, honouring engineering suffixes (`f p n u m k
+/// meg g t`, case-insensitive) with trailing unit letters ignored
+/// (`100nF`, `10kohm`). Returns `None` for malformed or non-finite input.
+pub fn parse_value(tok: &str) -> Option<f64> {
+    // longest numeric prefix that parses as f64 (reject inf/nan spellings)
+    let mut num: Option<(f64, usize)> = None;
+    for i in (1..=tok.len()).rev() {
+        if !tok.is_char_boundary(i) {
+            continue;
+        }
+        let head = &tok[..i];
+        if head.chars().any(|c| c.is_ascii_alphabetic() && !matches!(c, 'e' | 'E')) {
+            continue;
+        }
+        if let Ok(v) = head.parse::<f64>() {
+            num = Some((v, i));
+            break;
+        }
+    }
+    let (v, used) = num?;
+    if !v.is_finite() {
+        return None;
+    }
+    let rest = tok[used..].to_ascii_lowercase();
+    if rest.is_empty() {
+        return Some(v);
+    }
+    if !rest.chars().all(|c| c.is_ascii_alphabetic()) {
+        return None;
+    }
+    let mul = if rest.starts_with("meg") {
+        1e6
+    } else {
+        match rest.as_bytes()[0] {
+            b'f' => 1e-15,
+            b'p' => 1e-12,
+            b'n' => 1e-9,
+            b'u' => 1e-6,
+            b'm' => 1e-3,
+            b'k' => 1e3,
+            b'g' => 1e9,
+            b't' => 1e12,
+            // bare unit ("10ohm", "5v"): no scaling
+            _ => 1.0,
+        }
+    };
+    Some(v * mul)
+}
+
+/// One logical card: joined continuation lines, the 1-based source line of
+/// its first physical line, and its tokens with 1-based columns.
+#[derive(Debug, Clone)]
+struct Card {
+    line: usize,
+    text: String,
+}
+
+impl Card {
+    fn tokens(&self) -> Vec<(usize, &str)> {
+        let mut out = Vec::new();
+        let mut col = 1usize;
+        for piece in self.text.split(' ') {
+            if !piece.is_empty() {
+                out.push((col, piece));
+            }
+            col += piece.chars().count() + 1;
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SubcktDef {
+    line: usize,
+    ports: Vec<String>,
+    cards: Vec<Card>,
+}
+
+/// Maximum subcircuit nesting depth during expansion.
+const MAX_DEPTH: usize = 32;
+/// Total element budget across the whole expansion — a recursion-free
+/// guard against "billion-laughs" style deck blowup.
+const MAX_ELEMENTS: usize = 4_000_000;
+
+/// Route one finished logical card: open/close `.SUBCKT` scopes, collect
+/// element and `X` cards into the innermost open scope (or the top level),
+/// ignore unknown dot-directives, honour `.END`.
+fn dispatch_card(
+    card: Card,
+    open: &mut Vec<(String, SubcktDef)>,
+    subckts: &mut BTreeMap<String, SubcktDef>,
+    top: &mut Vec<Card>,
+    ended: &mut bool,
+) -> Result<(), ParseError> {
+    if *ended {
+        return Ok(()); // everything after .END is ignored
+    }
+    let toks = card.tokens();
+    let Some(&(col0, first)) = toks.first() else {
+        return Ok(());
+    };
+    if let Some(directive) = first.strip_prefix('.') {
+        match directive.to_ascii_lowercase().as_str() {
+            "subckt" => {
+                if toks.len() < 2 {
+                    return perr(card.line, col0, ".SUBCKT needs a name");
+                }
+                let name = toks[1].1.to_string();
+                let mut ports = Vec::new();
+                for &(c, p) in &toks[2..] {
+                    if is_ground(p) {
+                        return perr(
+                            card.line,
+                            c,
+                            format!("ground node '{p}' cannot be a .SUBCKT port"),
+                        );
+                    }
+                    if ports.iter().any(|q: &String| q == p) {
+                        return perr(
+                            card.line,
+                            c,
+                            format!("duplicate node '{p}' in .SUBCKT port list"),
+                        );
+                    }
+                    ports.push(p.to_string());
+                }
+                open.push((name, SubcktDef { line: card.line, ports, cards: Vec::new() }));
+            }
+            "ends" => {
+                let Some((name, def)) = open.pop() else {
+                    return perr(card.line, col0, ".ENDS without an open .SUBCKT");
+                };
+                if let Some(&(c, given)) = toks.get(1) {
+                    if given != name {
+                        return perr(
+                            card.line,
+                            c,
+                            format!(".ENDS '{given}' closes .SUBCKT '{name}'"),
+                        );
+                    }
+                }
+                if subckts.insert(name.clone(), def).is_some() {
+                    return perr(
+                        card.line,
+                        col0,
+                        format!("duplicate .SUBCKT definition '{name}'"),
+                    );
+                }
+            }
+            "end" => {
+                if let Some((name, def)) = open.last() {
+                    return perr(
+                        card.line,
+                        col0,
+                        format!(
+                            "truncated deck: .SUBCKT '{name}' (line {}) is unterminated",
+                            def.line
+                        ),
+                    );
+                }
+                *ended = true;
+            }
+            // harmless analysis/config directives are ignored
+            _ => {}
+        }
+    } else if let Some((_, def)) = open.last_mut() {
+        def.cards.push(card);
+    } else {
+        top.push(card);
+    }
+    Ok(())
+}
+
+/// Parse an interchange-dialect deck (see the module docs) into a flat
+/// [`Circuit`], expanding every subcircuit instantiation. Never panics;
+/// every failure is a [`ParseError`] with source position.
+pub fn parse_deck(text: &str) -> Result<Circuit, ParseError> {
+    // ---- pass 1: logical lines -> title, subckt defs, top-level cards ----
+    let mut title = String::new();
+    let mut subckts: BTreeMap<String, SubcktDef> = BTreeMap::new();
+    // stack of open .SUBCKT scopes: (name, def)
+    let mut open: Vec<(String, SubcktDef)> = Vec::new();
+    let mut top: Vec<Card> = Vec::new();
+    let mut logical: Option<Card> = None;
+    let mut ended = false;
+
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let t = raw.replace('\t', " ");
+        let t = t.trim();
+        if t.starts_with('*') {
+            if lineno == 1 {
+                title = t.trim_start_matches('*').trim().to_string();
+            }
+            continue;
+        }
+        if let Some(cont) = t.strip_prefix('+') {
+            match logical.as_mut() {
+                Some(card) => {
+                    card.text.push(' ');
+                    card.text.push_str(cont.trim());
+                }
+                None => return perr(lineno, 1, "continuation line '+' with no card to continue"),
+            }
+            continue;
+        }
+        // a fresh line terminates any pending logical card
+        if let Some(card) = logical.take() {
+            dispatch_card(card, &mut open, &mut subckts, &mut top, &mut ended)?;
+        }
+        if t.is_empty() {
+            continue;
+        }
+        let leading = t.chars().next().map_or('?', |c| c.to_ascii_uppercase());
+        if lineno == 1
+            && !matches!(
+                leading,
+                'R' | 'V' | 'I' | 'E' | 'G' | 'C' | 'L' | 'D' | 'B' | 'X' | '.'
+            )
+        {
+            // classic SPICE: an unrecognizable first line is the title
+            title = t.to_string();
+            continue;
+        }
+        logical = Some(Card { line: lineno, text: t.to_string() });
+    }
+    if let Some(card) = logical.take() {
+        dispatch_card(card, &mut open, &mut subckts, &mut top, &mut ended)?;
+    }
+    if let Some((name, def)) = open.last() {
+        let total = text.lines().count().max(1);
+        return perr(
+            total,
+            1,
+            format!("truncated deck: .SUBCKT '{name}' (line {}) has no .ENDS", def.line),
+        );
+    }
+
+    // ---- pass 2: expand top-level cards into a flat circuit ----
+    let mut c = Circuit::new(&title);
+    for card in &top {
+        stamp_card(&mut c, card, &subckts, "", &BTreeMap::new(), 0)?;
+    }
+    Ok(c)
+}
+
+/// Resolve one node token under an instantiation scope: ground is global,
+/// ports map through `bind`, everything else is prefixed by the instance
+/// path.
+fn resolve_node(tok: &str, prefix: &str, bind: &BTreeMap<String, String>) -> String {
+    if is_ground(tok) {
+        "0".to_string()
+    } else if let Some(mapped) = bind.get(tok) {
+        mapped.clone()
+    } else {
+        format!("{prefix}{tok}")
+    }
+}
+
+/// Parse + stamp one element or `X` card into `c`, expanding subcircuits
+/// recursively. `prefix` is the instance path (`""` at top level,
+/// `"X1."` inside instance `X1`, nesting concatenates); `bind` maps this
+/// scope's port names to parent-scope node names.
+fn stamp_card(
+    c: &mut Circuit,
+    card: &Card,
+    subckts: &BTreeMap<String, SubcktDef>,
+    prefix: &str,
+    bind: &BTreeMap<String, String>,
+    depth: usize,
+) -> Result<(), ParseError> {
+    let toks = card.tokens();
+    let Some(&(col0, first)) = toks.first() else {
+        return Ok(());
+    };
+    let kind = first.chars().next().map_or('?', |ch| ch.to_ascii_uppercase());
+    if c.elements.len() >= MAX_ELEMENTS {
+        return perr(card.line, col0, "deck expansion exceeds the element budget");
+    }
+    let name = format!("{prefix}{first}");
+    let line = card.line;
+
+    // helpers over the token list
+    let need = |n: usize, what: &str| -> Result<(), ParseError> {
+        if toks.len() == n {
+            Ok(())
+        } else {
+            perr(line, col0, format!("{what} needs {n} tokens, got {}", toks.len()))
+        }
+    };
+    let value = |i: usize, what: &str| -> Result<f64, ParseError> {
+        let &(col, tok) = toks
+            .get(i)
+            .ok_or(ParseError { line, col: col0, msg: format!("{what}: missing value") })?;
+        parse_value(tok)
+            .ok_or(ParseError { line, col, msg: format!("{what}: bad value '{tok}'") })
+    };
+    macro_rules! node {
+        ($i:expr) => {{
+            let resolved = resolve_node(toks[$i].1, prefix, bind);
+            c.node(&resolved)
+        }};
+    }
+
+    match kind {
+        'R' => {
+            need(4, "resistor")?;
+            let (a, b) = (node!(1), node!(2));
+            let v = value(3, "resistor")?;
+            c.resistor(&name, a, b, v);
+        }
+        'C' => {
+            need(4, "capacitor")?;
+            let (a, b) = (node!(1), node!(2));
+            let v = value(3, "capacitor")?;
+            c.capacitor(&name, a, b, v);
+        }
+        'L' => {
+            need(4, "inductor")?;
+            let (a, b) = (node!(1), node!(2));
+            let v = value(3, "inductor")?;
+            c.inductor(&name, a, b, v);
+        }
+        'V' | 'I' => {
+            let what = if kind == 'V' { "voltage source" } else { "current source" };
+            let vi = if toks.len() >= 5 && toks[3].1.eq_ignore_ascii_case("dc") { 4 } else { 3 };
+            if toks.len() != vi + 1 {
+                return perr(line, col0, format!("{what} needs 'name n+ n- [DC] value'"));
+            }
+            let (a, b) = (node!(1), node!(2));
+            let v = value(vi, what)?;
+            if kind == 'V' {
+                c.vsource(&name, a, b, v);
+            } else {
+                c.isource(&name, a, b, v);
+            }
+        }
+        'E' | 'G' => {
+            let what = if kind == 'E' { "VCVS" } else { "VCCS" };
+            need(6, what)?;
+            let (op, om, cp, cm) = (node!(1), node!(2), node!(3), node!(4));
+            let g = value(5, what)?;
+            if kind == 'E' {
+                c.vcvs(&name, op, om, cp, cm, g);
+            } else {
+                c.vccs(&name, op, om, cp, cm, g);
+            }
+        }
+        'D' => {
+            if toks.len() != 3 && toks.len() != 5 {
+                return perr(line, col0, "diode needs 'name anode cathode [isat nvt]'");
+            }
+            let (a, k) = (node!(1), node!(2));
+            if toks.len() == 5 {
+                let isat = value(3, "diode isat")?;
+                let nvt = value(4, "diode nvt")?;
+                c.elements.push(Element::Diode(name, a, k, isat, nvt));
+            } else {
+                c.diode(&name, a, k);
+            }
+        }
+        'B' => {
+            need(5, "behavioural multiplier")?;
+            let (out, a, b) = (node!(1), node!(2), node!(3));
+            let g = value(4, "behavioural multiplier")?;
+            c.mult(&name, out, a, b, g);
+        }
+        'X' => {
+            if toks.len() < 2 {
+                return perr(line, col0, "subcircuit instance needs 'Xname [nodes...] subckt'");
+            }
+            if depth >= MAX_DEPTH {
+                return perr(line, col0, "subcircuit nesting exceeds the depth budget");
+            }
+            let (scol, sub_name) = *toks.last().unwrap_or(&(col0, ""));
+            let Some(def) = subckts.get(sub_name) else {
+                return perr(line, scol, format!("undefined subcircuit '{sub_name}'"));
+            };
+            let args = &toks[1..toks.len() - 1];
+            if args.len() != def.ports.len() {
+                return perr(
+                    line,
+                    col0,
+                    format!(
+                        "subcircuit '{sub_name}' has {} ports, instance connects {}",
+                        def.ports.len(),
+                        args.len()
+                    ),
+                );
+            }
+            let inner_prefix = format!("{name}.");
+            let mut inner_bind = BTreeMap::new();
+            for (port, &(_, arg)) in def.ports.iter().zip(args) {
+                inner_bind.insert(port.clone(), resolve_node(arg, prefix, bind));
+            }
+            for inner in &def.cards {
+                stamp_card(c, inner, subckts, &inner_prefix, &inner_bind, depth + 1)?;
+            }
+        }
+        other => {
+            return perr(line, col0, format!("unsupported element '{other}'"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_suffixes() {
+        assert_eq!(parse_value("10k"), Some(1e4));
+        assert_eq!(parse_value("1meg"), Some(1e6));
+        assert_eq!(parse_value("100n"), Some(1e-7));
+        assert_eq!(parse_value("2.5u"), Some(2.5e-6));
+        assert_eq!(parse_value("10kohm"), Some(1e4));
+        assert_eq!(parse_value("1e6"), Some(1e6));
+        assert_eq!(parse_value("-0.5"), Some(-0.5));
+        assert_eq!(parse_value("3p"), Some(3e-12));
+        assert_eq!(parse_value("notanumber"), None);
+        assert_eq!(parse_value("1..2"), None);
+        assert_eq!(parse_value("nan"), None);
+        assert_eq!(parse_value("inf"), None);
+    }
+
+    #[test]
+    fn flat_cards_roundtrip_bytes() {
+        let mut c = Circuit::new("flat");
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vsource("V1", a, 0, 2.5);
+        c.resistor("R1", a, b, 1234.5678901234);
+        c.resistor("R2", b, 0, 1e6);
+        c.vccs("G1", b, 0, a, 0, 1e-4);
+        let t1 = emit_cards(&c);
+        let c2 = parse_deck(&format!("* flat\n{t1}.END\n")).unwrap();
+        assert_eq!(emit_cards(&c2), t1);
+        assert_eq!(c2.elements, c.elements);
+    }
+
+    #[test]
+    fn subckt_divider_solves() {
+        let deck = "\
+* divider via subckt
+.SUBCKT div top mid
+V1 top 0 DC 10
+R1 top mid 10k
+R2 mid gnd 10k
+.ENDS div
+X1 t m div
+.END
+";
+        let c = parse_deck(deck).unwrap();
+        let sol = c.dc_op().unwrap();
+        let mid = c.node_named("m").unwrap();
+        assert!((sol[mid] - 5.0).abs() < 1e-9, "divider mid = {}", sol[mid]);
+    }
+
+    #[test]
+    fn continuation_and_suffix() {
+        let deck = "* cont\nR1 a 0\n+ 10k\nV1 a 0 DC 1\n.END\n";
+        let c = parse_deck(deck).unwrap();
+        match &c.elements[0] {
+            Element::Resistor(_, _, _, v) => assert_eq!(*v, 1e4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_subckts_expand() {
+        let deck = "\
+* nested
+.SUBCKT leaf p
+R1 p 0 1k
+.ENDS leaf
+.SUBCKT branch q
+Xa q leaf
+Xb q leaf
+.ENDS branch
+V1 n 0 DC 1
+Xtop n branch
+.END
+";
+        let c = parse_deck(deck).unwrap();
+        // V1 + two expanded leaf resistors
+        assert_eq!(c.elements.len(), 3);
+        let sol = c.dc_op().unwrap();
+        let n = c.node_named("n").unwrap();
+        assert!((sol[n] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn structured_errors_carry_position() {
+        let e = parse_deck("* t\nR1 a b\n.END\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_deck("* t\nV1 a 0 DC nope\n.END\n").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 11));
+        let e = parse_deck("* t\nX1 a nosuch\n.END\n").unwrap_err();
+        assert!(e.msg.contains("undefined subcircuit"), "{e}");
+        let e = parse_deck("* t\n.SUBCKT s p p\nR1 p 0 1\n.ENDS s\n.END\n").unwrap_err();
+        assert!(e.msg.contains("duplicate node"), "{e}");
+        let e = parse_deck("* t\n.SUBCKT s p\nR1 p 0 1\n.END\n").unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+        let e = parse_deck("* t\n.SUBCKT s p\nR1 p 0 1\n").unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn deck_ports_filter_ground_and_unknowns() {
+        let mut c = Circuit::new("p");
+        let a = c.node("a");
+        c.resistor("R1", a, 0, 50.0);
+        let d = Deck {
+            name: "p".into(),
+            circuit: c,
+            inputs: vec!["a".into(), "0".into(), "missing".into()],
+            outputs: vec!["a".into()],
+        };
+        assert_eq!(d.ports(), vec!["a".to_string()]);
+    }
+}

@@ -23,6 +23,35 @@
 //! factorization for every input vector (parallel across segments, with a
 //! multi-RHS batch path) instead of re-emitting, re-parsing and
 //! re-eliminating per read.
+//!
+//! # Interchange dialect and validation
+//!
+//! The flat cards above predate the structured [`interchange`] dialect,
+//! which is what external tooling should target:
+//!
+//! * [`interchange`] — `.SUBCKT`-structured decks for every resident
+//!   module kind (crossbar segments, batch-norm pairs, GAP columns, Fig-4
+//!   activation cells), plus a full parser: element cards
+//!   `R/V/I/E/G/C/L/D/B`, engineering suffixes (`10k`, `4.7u`, `1meg`),
+//!   `+` continuation lines, comments, nested subcircuit expansion, and
+//!   structured [`interchange::ParseError`]s carrying line/column. See the
+//!   module docs for the card table and subcircuit conventions.
+//! * [`validate`] — the differential harness behind `memx validate`: a
+//!   deliberately independent dense MNA reference solver cross-checked
+//!   against the production engine, the emit → parse → simulate
+//!   round-trip contract, and deck fuzzing.
+//!
+//! Tolerance contract: decks emitted by [`interchange::emit_deck`] carry
+//! node-order pins, so re-simulating the parsed deck is *bit-identical*
+//! to the resident circuit under the deterministic reference engine
+//! (enforced at [`validate::ROUNDTRIP_TOL`] = 1e-12); the independent
+//! dense reference and the Krylov engine agree with the production
+//! factored path to [`validate::REFERENCE_TOL`] = 1e-6. Run
+//! `memx validate` (or `--quick` in CI) to sweep the demo network's
+//! decks through all three legs.
+
+pub mod interchange;
+pub mod validate;
 
 use std::path::{Path, PathBuf};
 
@@ -312,6 +341,39 @@ impl CrossbarSim {
 
     pub fn n_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Snapshot every resident segment as a structured interchange deck
+    /// ([`interchange::Deck`]): the segment circuit at its current
+    /// operating point (sources, conductance edits and all), with the
+    /// input-line source nodes as deck inputs and the per-column read
+    /// nodes as outputs. Deck names are `{prefix}.seg{i}`. These are what
+    /// `memx validate` sweeps through the round-trip and differential
+    /// checks.
+    pub fn decks(&self, prefix: &str) -> Vec<interchange::Deck> {
+        self.segments
+            .iter()
+            .enumerate()
+            .map(|(i, seg)| {
+                let names = seg.circuit.node_names();
+                let inputs: Vec<String> = seg
+                    .vin
+                    .iter()
+                    .filter_map(|&(idx, _)| match seg.circuit.elements.get(idx) {
+                        Some(Element::Vsource(_, a, _, _)) => Some(names[*a].clone()),
+                        _ => None,
+                    })
+                    .collect();
+                let outputs: Vec<String> =
+                    seg.out_nodes.iter().map(|&n| names[n].clone()).collect();
+                interchange::Deck {
+                    name: format!("{prefix}.seg{i}"),
+                    circuit: seg.circuit.clone(),
+                    inputs,
+                    outputs,
+                }
+            })
+            .collect()
     }
 
     /// Select the dense-kernel backend for every resident segment circuit.
@@ -679,6 +741,10 @@ pub fn emit_layer_netlists(
         }
         crate::nn::Layer::GaPool { c, h_in, w_in, .. } => {
             let cb = crate::analog::build_gap_crossbar(layer, *c, h_in * w_in, mode);
+            emit_crossbar_files(&cb, &m.device, segment, outdir)
+        }
+        crate::nn::Layer::Residual { c, .. } => {
+            let cb = crate::analog::build_residual_crossbar(layer, *c, mode);
             emit_crossbar_files(&cb, &m.device, segment, outdir)
         }
         _ => {

@@ -1,0 +1,820 @@
+//! `spicier-validate`-style differential harness for the SPICE substrate.
+//!
+//! Three independent legs, each deliberately sharing no code with the
+//! production engine in [`crate::spice`]:
+//!
+//! 1. **Round-trip conformance** ([`check_deck`]): every resident module
+//!    deck is emitted through [`super::interchange::emit_deck`], re-parsed,
+//!    proven to capture the element list losslessly (bit-equal values
+//!    after name/node normalization), and re-simulated — outputs must
+//!    match the resident solve to ≤ [`ROUNDTRIP_TOL`] relative (the
+//!    node-order pins in the emitter make the match exact in practice).
+//! 2. **Independent reference MNA** ([`reference_dc_op`]): a dense
+//!    Gaussian-elimination solver with its own stamping walk and its own
+//!    Newton loop — no [`crate::spice::factor`], no
+//!    [`crate::spice::solve`], no shared elimination code — checked
+//!    against the production engine on the same circuits to
+//!    ≤ [`REFERENCE_TOL`] relative. Only the *device models* (diode
+//!    companion constants, multiplier linearization) are mirrored, since
+//!    they define the circuit semantics being cross-checked.
+//! 3. **Generated corpora**: [`fuzz_deck`] produces grammar-shaped (and
+//!    deliberately malformed) deck text that the parser must accept or
+//!    reject without panicking, and [`gen_mna_circuit`] produces random
+//!    MNA systems — including the zero-diagonal V-source / VCVS pivot
+//!    pairs that stress the pivoting paths in `factor` and `krylov`.
+//!
+//! Tolerance contract: `rel_diff` is worst-case node-voltage difference
+//! divided by `max(1 V, |V|_max)` — relative for rail-scale signals,
+//! absolute below one volt. [`ROUNDTRIP_TOL`] = 1e-12 (same engine, same
+//! bits on both sides); [`REFERENCE_TOL`] = 1e-6 (two different
+//! elimination algorithms on TIA-style systems whose conditioning is set
+//! by the 1e6 op-amp gain).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::interchange::{card_name, emit_deck, parse_deck, Deck};
+use crate::spice::krylov::SolverStrategy;
+use crate::spice::{Circuit, Element};
+use crate::util::prng::Rng;
+
+/// Emit → parse → sim must match the resident solve this tightly.
+pub const ROUNDTRIP_TOL: f64 = 1e-12;
+/// Independent dense reference (and the Krylov engine) must agree with the
+/// production direct engine this tightly.
+pub const REFERENCE_TOL: f64 = 1e-6;
+/// Reference-solver size cutoff: dense O(n³) elimination above this MNA
+/// dimension is skipped (reported as `None`), not attempted.
+pub const REFERENCE_DIM_CAP: usize = 800;
+
+/// Worst node-voltage difference scaled by `max(1 V, |V|_max)`.
+pub fn rel_diff(a: &[f64], b: &[f64]) -> f64 {
+    let mut scale = 1.0f64;
+    for v in a.iter().chain(b.iter()) {
+        scale = scale.max(v.abs());
+    }
+    let mut worst = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        worst = worst.max((x - y).abs());
+    }
+    worst / scale
+}
+
+// ---------------------------------------------------------------------------
+// independent dense reference MNA
+// ---------------------------------------------------------------------------
+
+/// DC operating point from the independent dense reference solver.
+///
+/// Same MNA formulation as the production engine — node voltages with
+/// ground dropped, one branch-current unknown per V source / VCVS /
+/// multiplier / inductor in element order — but its own stamping walk,
+/// its own partial-pivot Gaussian elimination and its own damped Newton
+/// loop. Returns the full node-voltage vector (index = node id, ground
+/// included as 0 V).
+pub fn reference_dc_op(c: &Circuit) -> Result<Vec<f64>> {
+    let n_nodes = c.node_count();
+    let n_br = c
+        .elements
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                Element::Vsource(..)
+                    | Element::Vcvs(..)
+                    | Element::Mult(..)
+                    | Element::Inductor(..)
+            )
+        })
+        .count();
+    let dim = (n_nodes - 1) + n_br;
+    if dim == 0 {
+        return Ok(vec![0.0; n_nodes]);
+    }
+    let nonlinear = c
+        .elements
+        .iter()
+        .any(|e| matches!(e, Element::Diode(..) | Element::Mult(..)));
+
+    let mut v = vec![0.0; n_nodes];
+    let max_iter = if nonlinear { 400 } else { 1 };
+    for _ in 0..max_iter {
+        let (a, b) = assemble_dense(c, dim, n_nodes, &v)?;
+        let x = gauss_solve(a, b)?;
+        let mut next = vec![0.0; n_nodes];
+        next[1..].copy_from_slice(&x[..n_nodes - 1]);
+        if !nonlinear {
+            return Ok(next);
+        }
+        let mut delta = 0.0f64;
+        for i in 0..n_nodes {
+            delta = delta.max((next[i] - v[i]).abs());
+        }
+        for i in 0..n_nodes {
+            // damped update: junction voltages move at most half a volt
+            v[i] += (next[i] - v[i]).clamp(-0.5, 0.5);
+        }
+        if delta < 1e-11 {
+            return Ok(v);
+        }
+    }
+    bail!("reference Newton loop did not converge")
+}
+
+/// Dense MNA assembly around the linearization point `v_prev`. DC view:
+/// capacitors open, inductors short. The diode companion constants and
+/// the multiplier linearization mirror the production device models —
+/// they are the semantics under test, not solver code.
+fn assemble_dense(
+    c: &Circuit,
+    dim: usize,
+    n_nodes: usize,
+    v_prev: &[f64],
+) -> Result<(Vec<Vec<f64>>, Vec<f64>)> {
+    let mut a = vec![vec![0.0f64; dim]; dim];
+    let mut b = vec![0.0f64; dim];
+    let nd = |node: usize| node.checked_sub(1);
+    let mut br = n_nodes - 1;
+    for e in &c.elements {
+        match *e {
+            Element::Resistor(ref name, p, q, r) => {
+                if r <= 0.0 {
+                    bail!("resistor {name} has non-positive value {r}");
+                }
+                let g = 1.0 / r;
+                if let Some(i) = nd(p) {
+                    a[i][i] += g;
+                }
+                if let Some(j) = nd(q) {
+                    a[j][j] += g;
+                }
+                if let (Some(i), Some(j)) = (nd(p), nd(q)) {
+                    a[i][j] -= g;
+                    a[j][i] -= g;
+                }
+            }
+            Element::Isource(_, p, q, amps) => {
+                if let Some(i) = nd(p) {
+                    b[i] -= amps;
+                }
+                if let Some(j) = nd(q) {
+                    b[j] += amps;
+                }
+            }
+            Element::Vsource(_, p, q, volts) => {
+                if let Some(i) = nd(p) {
+                    a[i][br] += 1.0;
+                    a[br][i] += 1.0;
+                }
+                if let Some(j) = nd(q) {
+                    a[j][br] -= 1.0;
+                    a[br][j] -= 1.0;
+                }
+                b[br] += volts;
+                br += 1;
+            }
+            Element::Vccs(_, op, om, cp, cm, gm) => {
+                if let (Some(i), Some(k)) = (nd(op), nd(cp)) {
+                    a[i][k] += gm;
+                }
+                if let (Some(i), Some(l)) = (nd(op), nd(cm)) {
+                    a[i][l] -= gm;
+                }
+                if let (Some(j), Some(k)) = (nd(om), nd(cp)) {
+                    a[j][k] -= gm;
+                }
+                if let (Some(j), Some(l)) = (nd(om), nd(cm)) {
+                    a[j][l] += gm;
+                }
+            }
+            Element::Vcvs(_, op, om, cp, cm, gain) => {
+                if let Some(i) = nd(op) {
+                    a[i][br] += 1.0;
+                    a[br][i] += 1.0;
+                }
+                if let Some(j) = nd(om) {
+                    a[j][br] -= 1.0;
+                    a[br][j] -= 1.0;
+                }
+                if let Some(i) = nd(cp) {
+                    a[br][i] -= gain;
+                }
+                if let Some(j) = nd(cm) {
+                    a[br][j] += gain;
+                }
+                br += 1;
+            }
+            Element::Mult(_, out, ca, cb, gain) => {
+                // V(out) = gain·Va·Vb linearized at (Va0, Vb0):
+                // V(out) - gain·Vb0·Va - gain·Va0·Vb = -gain·Va0·Vb0
+                let va0 = v_prev[ca];
+                let vb0 = v_prev[cb];
+                if let Some(i) = nd(out) {
+                    a[i][br] += 1.0;
+                    a[br][i] += 1.0;
+                }
+                if let Some(i) = nd(ca) {
+                    a[br][i] -= gain * vb0;
+                }
+                if let Some(j) = nd(cb) {
+                    a[br][j] -= gain * va0;
+                }
+                b[br] -= gain * va0 * vb0;
+                br += 1;
+            }
+            Element::Capacitor(ref name, _, _, cap) => {
+                if cap <= 0.0 {
+                    bail!("capacitor {name} has non-positive value {cap}");
+                }
+                // open at DC
+            }
+            Element::Inductor(ref name, p, q, ind) => {
+                if ind <= 0.0 {
+                    bail!("inductor {name} has non-positive value {ind}");
+                }
+                // short at DC, branch current as unknown
+                if let Some(i) = nd(p) {
+                    a[i][br] += 1.0;
+                    a[br][i] += 1.0;
+                }
+                if let Some(j) = nd(q) {
+                    a[j][br] -= 1.0;
+                    a[br][j] -= 1.0;
+                }
+                br += 1;
+            }
+            Element::Diode(_, p, q, isat, nvt) => {
+                // shared device model: clamped-junction Newton companion
+                let v0 = (v_prev[p] - v_prev[q]).clamp(-5.0, 0.9);
+                let ex = (v0 / nvt).exp();
+                let g_eq = (isat / nvt * ex).max(1e-12);
+                let i_eq = isat * (ex - 1.0) - g_eq * v0;
+                if let Some(i) = nd(p) {
+                    a[i][i] += g_eq;
+                    b[i] -= i_eq;
+                }
+                if let Some(j) = nd(q) {
+                    a[j][j] += g_eq;
+                    b[j] += i_eq;
+                }
+                if let (Some(i), Some(j)) = (nd(p), nd(q)) {
+                    a[i][j] -= g_eq;
+                    a[j][i] -= g_eq;
+                }
+            }
+        }
+    }
+    Ok((a, b))
+}
+
+/// Dense Gaussian elimination with partial pivoting — the reference
+/// solver's own elimination, no code shared with `spice::solve` or
+/// `spice::factor`.
+fn gauss_solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    for k in 0..n {
+        let mut piv = k;
+        let mut best = a[k][k].abs();
+        for r in k + 1..n {
+            let cand = a[r][k].abs();
+            if cand > best {
+                best = cand;
+                piv = r;
+            }
+        }
+        if best <= f64::MIN_POSITIVE {
+            bail!("reference MNA matrix is singular at column {k}");
+        }
+        if piv != k {
+            a.swap(piv, k);
+            b.swap(piv, k);
+        }
+        let prow = a[k].clone();
+        let bk = b[k];
+        let d = prow[k];
+        for r in k + 1..n {
+            let f = a[r][k] / d;
+            if f == 0.0 {
+                continue;
+            }
+            let row = &mut a[r];
+            row[k] = 0.0;
+            for j in k + 1..n {
+                row[j] -= f * prow[j];
+            }
+            b[r] -= f * bk;
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for k in (0..n).rev() {
+        let mut s = b[k];
+        for j in k + 1..n {
+            s -= a[k][j] * x[j];
+        }
+        x[k] = s / a[k][k];
+    }
+    Ok(x)
+}
+
+/// Solve `c` on the production engine and on the independent reference;
+/// return their [`rel_diff`]. Does not enforce a tolerance — callers pick
+/// the contract.
+pub fn reference_vs_production(c: &Circuit) -> Result<f64> {
+    let prod = c.dc_op().context("production dc_op")?;
+    let reference = reference_dc_op(c).context("reference dc_op")?;
+    Ok(rel_diff(&prod, &reference))
+}
+
+// ---------------------------------------------------------------------------
+// deck conformance
+// ---------------------------------------------------------------------------
+
+/// Per-deck conformance result (all checks already enforced by
+/// [`check_deck`]; the numbers are for reporting).
+#[derive(Debug, Clone)]
+pub struct DeckReport {
+    pub name: String,
+    pub nodes: usize,
+    pub elements: usize,
+    /// emit → parse → sim vs resident sim ([`rel_diff`]).
+    pub roundtrip_rel: f64,
+    /// worst independent-reference disagreement over resident + parsed
+    /// circuit; `None` when the MNA dimension exceeds
+    /// [`REFERENCE_DIM_CAP`].
+    pub reference_rel: Option<f64>,
+    /// Krylov-strategy solve vs direct solve on the resident circuit.
+    pub krylov_rel: f64,
+}
+
+fn strip_inst(name: &str) -> String {
+    name.strip_prefix("X1.").unwrap_or(name).to_string()
+}
+
+/// Map the parsed deck back onto the resident circuit's namespace: strip
+/// the `X1.` instance prefix from element names, translate node ids via
+/// node names, and drop the inert `Ipin` node-order pins. The result is
+/// directly comparable to [`canonical_cards`] of the resident circuit —
+/// equality proves the deck captured the circuit losslessly (values
+/// bit-equal included). The comparison runs against card names rather
+/// than raw resident names because the emitter prepends the type letter
+/// to names that lack it (`XMUL` → `BXMUL`) and the parser keeps the full
+/// card token.
+pub fn normalize_parsed(parsed: &Circuit, resident: &Circuit) -> Result<Vec<Element>> {
+    let pnames = parsed.node_names();
+    let mut map = vec![0usize; pnames.len()];
+    for (pid, pname) in pnames.iter().enumerate().skip(1) {
+        let bare = pname.strip_prefix("X1.").unwrap_or(pname);
+        map[pid] = resident
+            .node_named(bare)
+            .ok_or_else(|| anyhow!("round trip invented node '{pname}'"))?;
+    }
+    let m = |n: usize| map[n];
+    Ok(parsed
+        .elements
+        .iter()
+        .filter(|e| !e.name().contains("Ipin"))
+        .map(|e| match e {
+            Element::Resistor(n, p, q, v) => Element::Resistor(strip_inst(n), m(*p), m(*q), *v),
+            Element::Vsource(n, p, q, v) => Element::Vsource(strip_inst(n), m(*p), m(*q), *v),
+            Element::Isource(n, p, q, v) => Element::Isource(strip_inst(n), m(*p), m(*q), *v),
+            Element::Vcvs(n, op, om, cp, cm, g) => {
+                Element::Vcvs(strip_inst(n), m(*op), m(*om), m(*cp), m(*cm), *g)
+            }
+            Element::Vccs(n, op, om, cp, cm, g) => {
+                Element::Vccs(strip_inst(n), m(*op), m(*om), m(*cp), m(*cm), *g)
+            }
+            Element::Diode(n, p, q, isat, nvt) => {
+                Element::Diode(strip_inst(n), m(*p), m(*q), *isat, *nvt)
+            }
+            Element::Mult(n, out, ca, cb, g) => {
+                Element::Mult(strip_inst(n), m(*out), m(*ca), m(*cb), *g)
+            }
+            Element::Capacitor(n, p, q, v) => Element::Capacitor(strip_inst(n), m(*p), m(*q), *v),
+            Element::Inductor(n, p, q, v) => Element::Inductor(strip_inst(n), m(*p), m(*q), *v),
+        })
+        .collect())
+}
+
+/// The emitter's view of a resident element list: names mapped through
+/// the [`card_name`] type-letter rule, nodes and values untouched. This
+/// is what [`normalize_parsed`] output must equal exactly.
+pub fn canonical_cards(c: &Circuit) -> Vec<Element> {
+    c.elements
+        .iter()
+        .map(|e| match e {
+            Element::Resistor(n, p, q, v) => Element::Resistor(card_name('R', n), *p, *q, *v),
+            Element::Vsource(n, p, q, v) => Element::Vsource(card_name('V', n), *p, *q, *v),
+            Element::Isource(n, p, q, v) => Element::Isource(card_name('I', n), *p, *q, *v),
+            Element::Vcvs(n, op, om, cp, cm, g) => {
+                Element::Vcvs(card_name('E', n), *op, *om, *cp, *cm, *g)
+            }
+            Element::Vccs(n, op, om, cp, cm, g) => {
+                Element::Vccs(card_name('G', n), *op, *om, *cp, *cm, *g)
+            }
+            Element::Diode(n, p, q, isat, nvt) => {
+                Element::Diode(card_name('D', n), *p, *q, *isat, *nvt)
+            }
+            Element::Mult(n, out, ca, cb, g) => {
+                Element::Mult(card_name('B', n), *out, *ca, *cb, *g)
+            }
+            Element::Capacitor(n, p, q, v) => Element::Capacitor(card_name('C', n), *p, *q, *v),
+            Element::Inductor(n, p, q, v) => Element::Inductor(card_name('L', n), *p, *q, *v),
+        })
+        .collect()
+}
+
+/// Run the full conformance contract on one deck:
+///
+/// 1. emit → parse succeeds and captures the element list losslessly;
+/// 2. the parsed deck re-simulates to the resident solution
+///    (≤ [`ROUNDTRIP_TOL`]);
+/// 3. the independent dense reference agrees with the production engine
+///    on both the resident and the parsed circuit (≤ [`REFERENCE_TOL`],
+///    skipped above [`REFERENCE_DIM_CAP`] unknowns);
+/// 4. an explicitly iterative (Krylov) solve agrees with the direct solve
+///    (≤ [`REFERENCE_TOL`]).
+///
+/// Any violation is an `Err`; the returned report carries the measured
+/// margins.
+pub fn check_deck(deck: &Deck) -> Result<DeckReport> {
+    let name = &deck.name;
+    let resident = deck
+        .circuit
+        .dc_op()
+        .with_context(|| format!("deck '{name}': resident solve"))?;
+
+    // 1. lossless capture
+    let text = emit_deck(deck);
+    let parsed = parse_deck(&text)
+        .map_err(|e| anyhow!("deck '{name}': emitted deck failed to parse: {e}"))?;
+    let norm = normalize_parsed(&parsed, &deck.circuit).with_context(|| format!("deck '{name}'"))?;
+    if norm != canonical_cards(&deck.circuit) {
+        bail!("deck '{name}': round trip altered the element list");
+    }
+
+    // 2. re-simulate and compare every node (interface nodes keep their
+    // names; internals come back with the X1. instance prefix). Both
+    // sides run the deterministic pre-factorization engine: the node-order
+    // pins make the parsed deck assemble the bit-identical MNA system, so
+    // this comparison is exact by construction — the factored/cached
+    // engine (whose pivot order may legitimately differ between a warm
+    // resident circuit and a cold parsed one) is cross-checked separately
+    // in steps 3 and 4.
+    let (det_resident, _) = deck
+        .circuit
+        .dc_op_stats_reference(crate::spice::solve::Ordering::Smart)
+        .with_context(|| format!("deck '{name}': resident deterministic solve"))?;
+    let (det_parsed, _) = parsed
+        .dc_op_stats_reference(crate::spice::solve::Ordering::Smart)
+        .with_context(|| format!("deck '{name}': parsed solve"))?;
+    let names = deck.circuit.node_names();
+    let mut resident_by_name = Vec::with_capacity(names.len());
+    let mut parsed_by_name = Vec::with_capacity(names.len());
+    for (id, nm) in names.iter().enumerate().skip(1) {
+        let pid = parsed
+            .node_named(nm)
+            .or_else(|| parsed.node_named(&format!("X1.{nm}")))
+            .ok_or_else(|| anyhow!("deck '{name}': round trip lost node '{nm}'"))?;
+        resident_by_name.push(det_resident[id]);
+        parsed_by_name.push(det_parsed[pid]);
+    }
+    let roundtrip_rel = rel_diff(&resident_by_name, &parsed_by_name);
+    if roundtrip_rel > ROUNDTRIP_TOL {
+        bail!("deck '{name}': round-trip sim diverged ({roundtrip_rel:.3e} > {ROUNDTRIP_TOL:.0e})");
+    }
+    // factored engine vs its own pre-factorization engine on the resident
+    let factored_rel = rel_diff(&resident, &det_resident);
+    if factored_rel > REFERENCE_TOL {
+        bail!(
+            "deck '{name}': factored vs pre-factorization engines diverged ({factored_rel:.3e})"
+        );
+    }
+
+    // 3. independent reference on both sides of the round trip
+    let dim = (deck.circuit.node_count() - 1)
+        + deck
+            .circuit
+            .elements
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    Element::Vsource(..)
+                        | Element::Vcvs(..)
+                        | Element::Mult(..)
+                        | Element::Inductor(..)
+                )
+            })
+            .count();
+    let reference_rel = if dim <= REFERENCE_DIM_CAP {
+        let r1 = reference_vs_production(&deck.circuit)
+            .with_context(|| format!("deck '{name}': resident vs reference"))?;
+        let r2 = reference_vs_production(&parsed)
+            .with_context(|| format!("deck '{name}': parsed vs reference"))?;
+        let worst = r1.max(r2);
+        if worst > REFERENCE_TOL {
+            bail!(
+                "deck '{name}': independent reference disagrees ({worst:.3e} > {REFERENCE_TOL:.0e})"
+            );
+        }
+        Some(worst)
+    } else {
+        None
+    };
+
+    // 4. Krylov engine vs direct on the resident circuit
+    let mut kc = deck.circuit.clone();
+    kc.set_solver(SolverStrategy::Iterative { restart: 48, tol: 1e-12, max_iter: 600 });
+    let ksol = kc
+        .dc_op()
+        .with_context(|| format!("deck '{name}': krylov solve"))?;
+    let krylov_rel = rel_diff(&resident, &ksol);
+    if krylov_rel > REFERENCE_TOL {
+        bail!("deck '{name}': krylov vs direct diverged ({krylov_rel:.3e} > {REFERENCE_TOL:.0e})");
+    }
+
+    Ok(DeckReport {
+        name: name.clone(),
+        nodes: deck.circuit.node_count(),
+        elements: deck.circuit.elements.len(),
+        roundtrip_rel,
+        reference_rel,
+        krylov_rel,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// generated corpora
+// ---------------------------------------------------------------------------
+
+const FUZZ_NODES: [&str; 9] = ["0", "gnd", "a", "b", "c", "d", "e", "n1", "n2"];
+
+fn fuzz_node(rng: &mut Rng) -> &'static str {
+    FUZZ_NODES[rng.below(FUZZ_NODES.len())]
+}
+
+fn fuzz_value(rng: &mut Rng) -> String {
+    match rng.below(7) {
+        0 => format!("{}", rng.range_f64(-10.0, 10.0)),
+        1 => format!("{:.3}k", rng.range_f64(0.1, 99.0)),
+        2 => format!("{:.1}meg", rng.range_f64(0.1, 9.0)),
+        3 => format!("{}u", rng.below(1000)),
+        4 => "garbage".to_string(),
+        5 => format!("{:.2}ohm", rng.range_f64(1.0, 99.0)),
+        _ => format!("{:.4}", rng.range_f64(0.0, 5.0)),
+    }
+}
+
+fn fuzz_card(rng: &mut Rng) -> String {
+    const KINDS: [&str; 12] = ["R", "V", "I", "E", "G", "C", "L", "D", "B", "Q", "Z", "W"];
+    let kind = KINDS[rng.below(KINDS.len())];
+    let mut toks = vec![format!("{kind}{}", rng.below(100))];
+    for _ in 0..rng.below(7) {
+        toks.push(fuzz_node(rng).to_string());
+    }
+    if rng.below(4) > 0 {
+        toks.push(fuzz_value(rng));
+    }
+    toks.join(" ")
+}
+
+fn push_fuzz_card(out: &mut String, rng: &mut Rng) {
+    if rng.below(8) == 0 {
+        out.push_str("* interleaved comment\n");
+    }
+    let card = fuzz_card(rng);
+    let toks: Vec<&str> = card.split(' ').collect();
+    if rng.below(4) == 0 && toks.len() > 2 {
+        // split into a continuation pair
+        let cut = 1 + rng.below(toks.len() - 1);
+        out.push_str(&toks[..cut].join(" "));
+        out.push_str("\n+ ");
+        out.push_str(&toks[cut..].join(" "));
+        out.push('\n');
+    } else {
+        out.push_str(&card);
+        out.push('\n');
+    }
+}
+
+/// Grammar-shaped deck fuzzer: emits mostly-plausible interchange decks
+/// with deliberate corruption — bad values, wrong arities, unknown cards,
+/// duplicate or ground ports, unterminated `.SUBCKT` blocks, dangling
+/// instantiations. The parser must return `Ok` or a structured `Err` on
+/// every output; panicking or runaway expansion is a bug.
+pub fn fuzz_deck(rng: &mut Rng, size: usize) -> String {
+    let mut out = String::from("* fuzz corpus deck\n");
+    let n_sub = rng.below(3);
+    for s in 0..n_sub {
+        out.push_str(&format!(".SUBCKT sub{s}"));
+        for p in 0..rng.below(4) {
+            let port = match rng.below(6) {
+                0 => "p0".to_string(),          // collides when p > 0
+                1 => fuzz_node(rng).to_string(), // may be ground
+                _ => format!("p{p}"),
+            };
+            out.push(' ');
+            out.push_str(&port);
+        }
+        out.push('\n');
+        for _ in 0..rng.below(5) {
+            push_fuzz_card(&mut out, rng);
+        }
+        if rng.below(8) > 0 {
+            out.push_str(&format!(".ENDS sub{s}\n"));
+        }
+    }
+    for _ in 0..2 + rng.below(4 + size.min(24)) {
+        push_fuzz_card(&mut out, rng);
+    }
+    for i in 0..rng.below(3) {
+        let target = if n_sub > 0 && rng.bool() {
+            format!("sub{}", rng.below(n_sub))
+        } else {
+            "nosuch".to_string()
+        };
+        out.push_str(&format!("X{i} {} {} {target}\n", fuzz_node(rng), fuzz_node(rng)));
+    }
+    if rng.below(5) > 0 {
+        out.push_str(".END\n");
+    }
+    out
+}
+
+/// Random solvable MNA system for the differential sweep. A spanning tree
+/// of resistors over ground keeps the resistive core nonsingular; V
+/// sources tie distinct nodes to ground (no source loops); every source
+/// branch row has a zero diagonal, and each ideal-op-amp TIA cell adds an
+/// output node whose only conductance arrives through its feedback
+/// resistor — the zero-diagonal VCVS pivot pattern the production
+/// `factor`/`krylov` paths must permute around. VCCS transconductances
+/// stay below the smallest resistor conductance so the perturbed system
+/// remains safely nonsingular.
+pub fn gen_mna_circuit(rng: &mut Rng, size: usize) -> Circuit {
+    let mut c = Circuit::new("fuzz-mna");
+    let n = 2 + rng.below(2 + size.min(18));
+    let mut ids = vec![0usize];
+    for i in 0..n {
+        ids.push(c.node(&format!("n{i}")));
+    }
+    // spanning tree to ground
+    for i in 1..=n {
+        let j = ids[rng.below(i)];
+        c.resistor(&format!("Rt{i}"), ids[i], j, rng.range_f64(50.0, 2e4));
+    }
+    // extra cross links
+    for k in 0..rng.below(n + 1) {
+        let p = ids[1 + rng.below(n)];
+        let q = ids[rng.below(n + 1)];
+        if p != q {
+            c.resistor(&format!("Rx{k}"), p, q, rng.range_f64(50.0, 2e4));
+        }
+    }
+    // V sources on distinct nodes vs ground
+    let mut vnodes: Vec<usize> = (1..=n).collect();
+    rng.shuffle(&mut vnodes);
+    let nv = 1 + rng.below(n.min(3));
+    for (k, &vi) in vnodes.iter().take(nv).enumerate() {
+        c.vsource(&format!("Vs{k}"), ids[vi], 0, rng.range_f64(-5.0, 5.0));
+    }
+    // current sources
+    for k in 0..rng.below(3) {
+        let p = ids[1 + rng.below(n)];
+        c.isource(&format!("Is{k}"), p, 0, rng.range_f64(-1e-3, 1e-3));
+    }
+    // ideal-op-amp TIA cells: zero-diagonal VCVS pivot pairs
+    for k in 0..1 + rng.below(3) {
+        let out = c.node(&format!("op{k}"));
+        let inn = ids[1 + rng.below(n)];
+        c.resistor(&format!("Rf{k}"), inn, out, rng.range_f64(1e3, 1e5));
+        c.vcvs(&format!("Eop{k}"), out, 0, 0, inn, 1e6);
+    }
+    // weak transconductances (gm well under the min tree conductance 5e-5)
+    for k in 0..rng.below(3) {
+        let op = ids[1 + rng.below(n)];
+        let cp = ids[1 + rng.below(n)];
+        c.vccs(&format!("Gm{k}"), op, 0, cp, 0, rng.range_f64(1e-7, 1e-5));
+    }
+    c
+}
+
+/// Sweep `cases` generated MNA circuits through production-vs-reference;
+/// returns the worst observed [`rel_diff`]. Errors if any case exceeds
+/// [`REFERENCE_TOL`].
+pub fn differential_sweep(seed: u64, cases: usize) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut worst = 0.0f64;
+    for i in 0..cases {
+        let c = gen_mna_circuit(&mut rng, 1 + i % 16);
+        let rel = reference_vs_production(&c)
+            .with_context(|| format!("differential sweep case {i} (seed {seed})"))?;
+        if rel > REFERENCE_TOL {
+            bail!(
+                "differential sweep case {i} (seed {seed}): production vs reference {rel:.3e} > {REFERENCE_TOL:.0e}"
+            );
+        }
+        worst = worst.max(rel);
+    }
+    Ok(worst)
+}
+
+/// Parse `cases` fuzzed decks; returns `(accepted, rejected)`. Any panic
+/// propagates — the point of the sweep.
+pub fn fuzz_sweep(seed: u64, cases: usize) -> (usize, usize) {
+    let mut rng = Rng::new(seed);
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    for i in 0..cases {
+        let deck = fuzz_deck(&mut rng, 1 + i % 24);
+        match parse_deck(&deck) {
+            Ok(_) => ok += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    (ok, rejected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn divider() -> Circuit {
+        let mut c = Circuit::new("div");
+        let top = c.node("top");
+        let mid = c.node("mid");
+        c.vsource("V1", top, 0, 6.0);
+        c.resistor("R1", top, mid, 1000.0);
+        c.resistor("R2", mid, 0, 2000.0);
+        c
+    }
+
+    #[test]
+    fn reference_matches_hand_solution() {
+        let c = divider();
+        let sol = reference_dc_op(&c).unwrap();
+        let mid = c.node_named("mid").unwrap();
+        assert!((sol[mid] - 4.0).abs() < 1e-12, "mid = {}", sol[mid]);
+    }
+
+    #[test]
+    fn reference_agrees_with_production_on_divider() {
+        let rel = reference_vs_production(&divider()).unwrap();
+        assert!(rel < 1e-12, "rel = {rel:.3e}");
+    }
+
+    #[test]
+    fn reference_handles_zero_diagonal_pivots() {
+        // TIA: virtual-ground input node + ideal op-amp row — the
+        // classic zero-diagonal pivot pair
+        let mut c = Circuit::new("tia");
+        let inn = c.node("inn");
+        let out = c.node("out");
+        c.isource("Iin", 0, inn, 1e-4);
+        c.resistor("Rf", inn, out, 1e4);
+        c.vcvs("Eop", out, 0, 0, inn, 1e6);
+        let sol = reference_dc_op(&c).unwrap();
+        // I flows into inn, through Rf: V(out) ≈ -Rf * I = -1.0
+        assert!((sol[out] + 1.0).abs() < 1e-4, "out = {}", sol[out]);
+        let rel = reference_vs_production(&c).unwrap();
+        assert!(rel < REFERENCE_TOL, "rel = {rel:.3e}");
+    }
+
+    #[test]
+    fn reference_rejects_singular() {
+        let mut c = Circuit::new("floating");
+        let a = c.node("a");
+        let b = c.node("b");
+        c.resistor("R1", a, b, 100.0);
+        // no path to ground: singular
+        assert!(reference_dc_op(&c).is_err());
+    }
+
+    #[test]
+    fn generated_corpus_agrees() {
+        let worst = differential_sweep(0xA11CE, 25).unwrap();
+        assert!(worst < REFERENCE_TOL, "worst = {worst:.3e}");
+    }
+
+    #[test]
+    fn fuzz_corpus_never_panics() {
+        let (ok, rejected) = fuzz_sweep(0xF00D, 150);
+        // the generator emits both valid and corrupt decks; both outcomes
+        // must occur, proving the sweep exercises accept and reject paths
+        assert!(ok > 0, "no deck parsed ({rejected} rejected)");
+        assert!(rejected > 0, "no deck rejected ({ok} accepted)");
+    }
+
+    #[test]
+    fn check_deck_on_divider() {
+        let c = divider();
+        let deck = Deck {
+            name: "div".into(),
+            circuit: c,
+            inputs: vec!["top".into()],
+            outputs: vec!["mid".into()],
+        };
+        let report = check_deck(&deck).unwrap();
+        assert!(report.roundtrip_rel <= ROUNDTRIP_TOL);
+        assert!(report.reference_rel.unwrap() <= REFERENCE_TOL);
+        assert!(report.krylov_rel <= REFERENCE_TOL);
+        assert_eq!(report.elements, 3);
+    }
+}

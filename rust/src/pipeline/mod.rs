@@ -208,6 +208,18 @@ pub trait AnalogModule: Send {
         0
     }
 
+    /// Structured interchange decks for every resident simulated circuit
+    /// of this module ([`crate::netlist::interchange::Deck`]) — one deck
+    /// per crossbar segment / activation cell, at the current operating
+    /// point. Empty when the module holds no resident circuits (exact or
+    /// behavioural fidelity, or CMOS-by-design modules). `memx validate`
+    /// sweeps these through the emit → parse → simulate round-trip and the
+    /// differential reference checks; the count matches
+    /// [`AnalogModule::spice_circuits`] at [`Fidelity::Spice`].
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        Vec::new()
+    }
+
     /// Auxiliary CMOS processing elements of this module — the per-element
     /// activation circuit instances (and, for the SE branch, its squeezed
     /// activations plus the per-channel trunk multipliers). Feeds the
@@ -625,6 +637,21 @@ impl Pipeline {
                 Stage::Residual { .. } => 0,
             })
             .sum()
+    }
+
+    /// Structured interchange decks for every resident simulated circuit
+    /// in the pipeline, in chain order ([`AnalogModule::spice_decks`]).
+    /// Non-empty only at [`Fidelity::Spice`]; residual adders contribute
+    /// nothing here (their summing-amplifier netlist is emitted offline by
+    /// [`crate::netlist::emit_layer_netlists`]). This is the corpus
+    /// `memx validate` sweeps.
+    pub fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        self.stages()
+            .flat_map(|s| match s {
+                Stage::Module { module, .. } => module.spice_decks(),
+                Stage::Residual { .. } => Vec::new(),
+            })
+            .collect()
     }
 
     /// Per-stage fidelity/resource coverage, in chain order — the record

@@ -559,6 +559,18 @@ impl AnalogModule for CrossbarModule {
         }
     }
 
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        match &self.inner {
+            Inner::Fc { sim: Some(sim), .. } => sim.decks(&self.name),
+            Inner::Fc { .. } => Vec::new(),
+            Inner::Conv(cv) => cv
+                .sims
+                .iter()
+                .flat_map(|b| b.sim.decks(&format!("{}_ci{}co{}", self.name, b.ci, b.co)))
+                .collect(),
+        }
+    }
+
     fn inject_faults(&mut self, step: &FaultStep) {
         self.last_step = Some(*step);
         self.fault_steps += 1;
@@ -908,6 +920,17 @@ impl AnalogModule for BatchNormModule {
         }
     }
 
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        match &self.sims {
+            Some(sims) => {
+                let mut decks = sims.sub.decks(&format!("{}.sub", self.name));
+                decks.extend(sims.scale.decks(&format!("{}.scale", self.name)));
+                decks
+            }
+            None => Vec::new(),
+        }
+    }
+
     fn inject_faults(&mut self, step: &FaultStep) {
         self.last_step = Some(*step);
         self.fault_steps += 1;
@@ -1147,6 +1170,23 @@ impl AnalogModule for ActivationModule {
         usize::from(self.circuit.is_some())
     }
 
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        let Some(ac) = &self.circuit else { return Vec::new() };
+        let names = ac.circuit.node_names();
+        let input = ac.circuit.elements.iter().find_map(|e| match e {
+            crate::spice::Element::Vsource(n, a, _, _) if *n == ac.vin_name => {
+                Some(names[*a].clone())
+            }
+            _ => None,
+        });
+        vec![crate::netlist::interchange::Deck {
+            name: format!("{}.act", self.name),
+            circuit: ac.circuit.clone(),
+            inputs: input.into_iter().collect(),
+            outputs: vec![ac.out_node.clone()],
+        }]
+    }
+
     fn cmos_elements(&self) -> usize {
         // every element passes through its own activation instance
         self.dim
@@ -1299,6 +1339,10 @@ impl AnalogModule for GapModule {
 
     fn spice_circuits(&self) -> usize {
         usize::from(self.sim.is_some())
+    }
+
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        self.sim.as_ref().map_or_else(Vec::new, |sim| sim.decks(&self.name))
     }
 
     fn inject_faults(&mut self, step: &FaultStep) {
@@ -1468,6 +1512,15 @@ impl AnalogModule for SeModule {
             + self.act1.spice_circuits()
             + self.fc2.spice_circuits()
             + self.act2.spice_circuits()
+    }
+
+    fn spice_decks(&self) -> Vec<crate::netlist::interchange::Deck> {
+        let mut decks = self.gap.spice_decks();
+        decks.extend(self.fc1.spice_decks());
+        decks.extend(self.act1.spice_decks());
+        decks.extend(self.fc2.spice_decks());
+        decks.extend(self.act2.spice_decks());
+        decks
     }
 
     fn cmos_elements(&self) -> usize {

@@ -169,6 +169,12 @@ pub enum Element {
     Isource(String, usize, usize, f64),
     /// name, out+, out-, ctrl+, ctrl-, gain
     Vcvs(String, usize, usize, usize, usize, f64),
+    /// name, out+, out-, ctrl+, ctrl-, transconductance (S): a current
+    /// `gm * (V(ctrl+) - V(ctrl-))` flows out+ -> out-. Stamps into the
+    /// node rows only — no branch unknown, so a VCCS whose output nodes
+    /// carry no other conductance produces the zero-diagonal pattern the
+    /// pivoting tests in `netlist::validate` hammer.
+    Vccs(String, usize, usize, usize, usize, f64),
     /// name, anode, cathode, saturation current, emission*Vt
     Diode(String, usize, usize, f64, f64),
     /// name, out (vs ground), ctrl_a, ctrl_b, gain: V(out) = gain*V(a)*V(b).
@@ -192,6 +198,7 @@ impl Element {
             | Element::Vsource(n, ..)
             | Element::Isource(n, ..)
             | Element::Vcvs(n, ..)
+            | Element::Vccs(n, ..)
             | Element::Diode(n, ..)
             | Element::Mult(n, ..)
             | Element::Capacitor(n, ..)
@@ -341,6 +348,26 @@ impl Circuit {
         self.names.get(name).copied()
     }
 
+    /// Node id -> name table (index = node id). Every node has at least one
+    /// name ([`Circuit::node`] interns, [`Circuit::fresh`] synthesizes
+    /// `_n<id>`); aliased ids keep the lexicographically first name, so
+    /// ground renders as `"0"`. This is the inverse map the interchange
+    /// emitter ([`crate::netlist::interchange`]) serializes cards from.
+    pub fn node_names(&self) -> Vec<String> {
+        let mut out = vec![String::new(); self.next_node.max(1)];
+        for (name, &id) in &self.names {
+            if out[id].is_empty() {
+                out[id] = name.clone();
+            }
+        }
+        for (id, name) in out.iter_mut().enumerate() {
+            if name.is_empty() {
+                *name = format!("_n{id}");
+            }
+        }
+        out
+    }
+
     pub fn resistor(&mut self, name: &str, a: usize, b: usize, ohms: f64) {
         self.elements.push(Element::Resistor(name.into(), a, b, ohms));
     }
@@ -355,6 +382,10 @@ impl Circuit {
 
     pub fn vcvs(&mut self, name: &str, op: usize, om: usize, cp: usize, cm: usize, gain: f64) {
         self.elements.push(Element::Vcvs(name.into(), op, om, cp, cm, gain));
+    }
+
+    pub fn vccs(&mut self, name: &str, op: usize, om: usize, cp: usize, cm: usize, gm: f64) {
+        self.elements.push(Element::Vccs(name.into(), op, om, cp, cm, gm));
     }
 
     pub fn mult(&mut self, name: &str, out: usize, a: usize, b: usize, gain: f64) {
@@ -977,7 +1008,10 @@ impl Circuit {
         let mut br = n_nodes - 1;
         for e in &self.elements {
             match *e {
-                Element::Resistor(..) | Element::Diode(..) | Element::Capacitor(..) => {}
+                Element::Resistor(..)
+                | Element::Diode(..)
+                | Element::Capacitor(..)
+                | Element::Vccs(..) => {}
                 Element::Isource(_, a, k, amps) => {
                     if let Some(i) = idx(a) {
                         b[i] -= amps;
@@ -1061,6 +1095,23 @@ impl Circuit {
                     }
                     sys.add_b(br, volts);
                     br += 1;
+                }
+                Element::Vccs(_, op, om, cp, cm, gm) => {
+                    // current gm*(v(cp) - v(cm)) flows op -> om: pure node
+                    // stamps, no branch unknown — the transconductance
+                    // analogue of a resistor between controlled ports
+                    if let (Some(i), Some(k)) = (idx(op), idx(cp)) {
+                        sys.add(i, k, gm);
+                    }
+                    if let (Some(i), Some(l)) = (idx(op), idx(cm)) {
+                        sys.add(i, l, -gm);
+                    }
+                    if let (Some(j), Some(k)) = (idx(om), idx(cp)) {
+                        sys.add(j, k, -gm);
+                    }
+                    if let (Some(j), Some(l)) = (idx(om), idx(cm)) {
+                        sys.add(j, l, gm);
+                    }
                 }
                 Element::Vcvs(_, op, om, cp, cm, gain) => {
                     // v(op) - v(om) = gain * (v(cp) - v(cm))

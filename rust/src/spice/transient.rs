@@ -484,7 +484,10 @@ fn stage_rhs(
     for (ei, e) in c.elements.iter().enumerate() {
         let s = scale.get(&ei).copied().unwrap_or(1.0);
         match *e {
-            Element::Resistor(..) | Element::Diode(..) | Element::Capacitor(..) => {}
+            Element::Resistor(..)
+            | Element::Diode(..)
+            | Element::Capacitor(..)
+            | Element::Vccs(..) => {}
             Element::Isource(_, a, k, amps) => {
                 let v = s * c.waves.get(&ei).map_or(amps, |w| w.eval(t));
                 if let Some(i) = idx(a) {

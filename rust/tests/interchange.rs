@@ -1,0 +1,352 @@
+//! Interchange-dialect conformance suite: golden deck snapshots per
+//! module kind, the emit → parse → sim round-trip contract over the full
+//! demo network at SPICE fidelity, parser error-path coverage, and
+//! property tests (util::prop mini-harness) over fuzzed decks, random MNA
+//! systems with zero-diagonal pivot pairs, and the emit/parse fixpoint.
+
+use memx::analog::{
+    build_bn_crossbars, build_gap_crossbar, build_hard_sigmoid, build_hard_swish,
+    build_residual_crossbar,
+};
+use memx::mapper::{build_synthetic_fc, MapMode};
+use memx::netlist::interchange::{emit_cards, emit_deck, emit_flat, parse_deck, Deck};
+use memx::netlist::validate::{
+    check_deck, differential_sweep, fuzz_deck, fuzz_sweep, gen_mna_circuit, rel_diff,
+    reference_vs_production, REFERENCE_TOL, ROUNDTRIP_TOL,
+};
+use memx::netlist::CrossbarSim;
+use memx::pipeline::{default_device, demo_network, Fidelity, PipelineBuilder, SolverStrategy};
+use memx::spice::solve::Ordering;
+use memx::spice::Circuit;
+use memx::util::prng::Rng;
+use memx::util::prop::check;
+
+// ---------------------------------------------------------------------------
+// golden decks
+// ---------------------------------------------------------------------------
+
+/// The emitted dialect is part of the interchange contract: a hand-built
+/// divider must serialize to exactly this deck, byte for byte.
+#[test]
+fn golden_divider_deck() {
+    let mut c = Circuit::new("div");
+    let top = c.node("top");
+    let mid = c.node("mid");
+    c.vsource("V1", top, 0, 6.0);
+    c.resistor("R1", top, mid, 1000.0);
+    c.resistor("R2", mid, 0, 2000.0);
+    let deck = Deck {
+        name: "div".into(),
+        circuit: c,
+        inputs: vec!["top".into()],
+        outputs: vec!["mid".into()],
+    };
+    let expected = "\
+* memx interchange deck: div
+.SUBCKT div top mid
+* node-order pins (0 A): fix MNA unknown ordering for exact round-trip
+Ipin1 top 0 DC 0
+Ipin2 mid 0 DC 0
+V1 top 0 DC 6
+R1 top mid 1000
+R2 mid 0 2000
+.ENDS div
+X1 top mid div
+.END
+";
+    assert_eq!(emit_deck(&deck), expected);
+}
+
+/// Every resident module kind — FC crossbar, BN subtract + scale pair,
+/// GAP averaging columns, residual summer, Fig-4 activation cells — must
+/// emit a structurally well-formed `.SUBCKT` deck that passes the full
+/// conformance contract ([`check_deck`]: lossless capture, exact
+/// round-trip sim, independent reference, Krylov cross-check).
+#[test]
+fn module_decks_emit_and_conform() {
+    let dev = default_device();
+    let mut decks: Vec<Deck> = Vec::new();
+
+    // FC crossbar at a solved operating point
+    let fc = build_synthetic_fc(4, 3, 16, MapMode::Inverted, 0x5EED);
+    let mut sim = CrossbarSim::new(&fc, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
+    sim.solve(&[0.1, -0.2, 0.05, 0.3]).unwrap();
+    decks.extend(sim.decks("fc"));
+
+    // BN subtraction + scale/offset crossbar pair
+    let (sub, scale) = build_bn_crossbars(
+        "bn",
+        3,
+        1,
+        &[1.1, 0.9, 1.3],
+        &[0.2, -0.1, 0.0],
+        &[0.05, 0.0, -0.02],
+        MapMode::Inverted,
+    );
+    for cb in [&sub, &scale] {
+        let s = CrossbarSim::new(cb, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
+        decks.extend(s.decks(&cb.name));
+    }
+
+    // GAP averaging columns
+    let gap = build_gap_crossbar("gap", 2, 4, MapMode::Inverted);
+    let s = CrossbarSim::new(&gap, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
+    decks.extend(s.decks("gap"));
+
+    // residual summing stage (dual mode, for mapping-scheme coverage)
+    let res = build_residual_crossbar("res", 3, MapMode::Dual);
+    let s = CrossbarSim::new(&res, &dev, 0, Ordering::Smart, SolverStrategy::Auto).unwrap();
+    decks.extend(s.decks("res"));
+
+    // Fig-4 activation cells at a nonzero operating point
+    for (label, mut ac) in
+        [("hsig", build_hard_sigmoid()), ("hswish", build_hard_swish())]
+    {
+        ac.eval(0.7).unwrap();
+        decks.push(Deck {
+            name: format!("{label}.act"),
+            circuit: ac.circuit.clone(),
+            inputs: vec!["vin".into()],
+            outputs: vec![ac.out_node.clone()],
+        });
+    }
+
+    assert_eq!(decks.len(), 7, "one deck per module kind (bn contributes two)");
+    for deck in &decks {
+        let text = emit_deck(deck);
+        assert!(
+            text.starts_with(&format!("* memx interchange deck: {}\n", deck.name)),
+            "deck '{}' lost its title",
+            deck.name
+        );
+        assert!(text.contains(&format!(".SUBCKT {} ", deck.name)), "deck '{}'", deck.name);
+        assert!(text.contains("\nIpin1 "), "deck '{}' lost its node-order pins", deck.name);
+        assert!(text.contains(&format!("\n.ENDS {}\nX1 ", deck.name)), "deck '{}'", deck.name);
+        assert!(text.ends_with(".END\n"), "deck '{}' unterminated", deck.name);
+        let rep = check_deck(deck).unwrap_or_else(|e| panic!("deck '{}': {e:#}", deck.name));
+        assert!(rep.roundtrip_rel <= ROUNDTRIP_TOL, "deck '{}'", deck.name);
+        assert!(rep.krylov_rel <= REFERENCE_TOL, "deck '{}'", deck.name);
+        assert!(rep.reference_rel.is_some(), "module decks are under the reference dim cap");
+    }
+
+    // the hard-swish multiplier is named XMUL; the emitter must prepend
+    // the card-type letter and validation must still prove lossless capture
+    let swish = decks.iter().find(|d| d.name == "hswish.act").unwrap();
+    assert!(emit_deck(swish).contains("\nBXMUL "), "multiplier card lost its type letter");
+}
+
+// ---------------------------------------------------------------------------
+// demo network contract
+// ---------------------------------------------------------------------------
+
+/// Every deck the demo network exposes at SPICE fidelity — crossbar
+/// segments, BN pairs, GAP, SE internals, activation cells — must pass
+/// the full round-trip + differential contract at its live operating
+/// point (after a forward pass).
+#[test]
+fn demo_network_decks_roundtrip() {
+    let (m, ws) = demo_network(0x5EED).unwrap();
+    let mut pipe = PipelineBuilder::new()
+        .fidelity(Fidelity::Spice)
+        .segment(8)
+        .build(&m, &ws)
+        .unwrap();
+    let in_dim = pipe.in_dim();
+    let mut rng = Rng::new(0xDECC);
+    let batch = vec![(0..in_dim).map(|_| (rng.f64() - 0.5) * 0.6).collect::<Vec<f64>>()];
+    pipe.forward_batch(&batch).unwrap();
+
+    let decks = pipe.spice_decks();
+    assert!(decks.len() >= 4, "demo network exposed only {} decks", decks.len());
+    let mut worst_rt = 0.0f64;
+    for deck in &decks {
+        let rep = check_deck(deck).unwrap_or_else(|e| panic!("deck '{}': {e:#}", deck.name));
+        worst_rt = worst_rt.max(rep.roundtrip_rel);
+    }
+    assert!(worst_rt <= ROUNDTRIP_TOL, "worst round-trip {worst_rt:.3e}");
+}
+
+// ---------------------------------------------------------------------------
+// parser error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parser_errors_are_structured() {
+    // truncated deck: unterminated .SUBCKT, with and without .END
+    let e = parse_deck("* t\n.SUBCKT s p\nR1 p 0 1\n.END\n").unwrap_err();
+    assert!(e.msg.contains("truncated"), "{e}");
+    let e = parse_deck("* t\n.SUBCKT s p\nR1 p 0 1\n").unwrap_err();
+    assert!(e.msg.contains("truncated"), "{e}");
+
+    // undefined subcircuit
+    let e = parse_deck("* t\nX1 a nosuch\n.END\n").unwrap_err();
+    assert!(e.msg.contains("undefined subcircuit 'nosuch'"), "{e}");
+    assert_eq!(e.line, 2);
+
+    // duplicate / ground ports
+    let e = parse_deck("* t\n.SUBCKT s p p\n.ENDS s\n.END\n").unwrap_err();
+    assert!(e.msg.contains("duplicate node 'p'"), "{e}");
+    let e = parse_deck("* t\n.SUBCKT s gnd\n.ENDS s\n.END\n").unwrap_err();
+    assert!(e.msg.contains("ground node"), "{e}");
+
+    // malformed cards carry the offending token's position
+    let e = parse_deck("* t\nV1 a 0 DC nope\n.END\n").unwrap_err();
+    assert_eq!((e.line, e.col), (2, 11), "{e}");
+    let e = parse_deck("* t\nR1 a b\n.END\n").unwrap_err();
+    assert!(e.msg.contains("4 tokens"), "{e}");
+    let e = parse_deck("* t\nQ1 a b c\n.END\n").unwrap_err();
+    assert!(e.msg.contains("unsupported element"), "{e}");
+
+    // mismatched .ENDS name, orphan .ENDS, orphan continuation
+    let e = parse_deck("* t\n.SUBCKT a\nR1 x 0 1\n.ENDS b\n.END\n").unwrap_err();
+    assert!(e.msg.contains(".ENDS 'b' closes .SUBCKT 'a'"), "{e}");
+    let e = parse_deck("* t\n.ENDS s\n.END\n").unwrap_err();
+    assert!(e.msg.contains(".ENDS without"), "{e}");
+    let e = parse_deck("* t\n+ 10k\n.END\n").unwrap_err();
+    assert!(e.msg.contains("continuation"), "{e}");
+
+    // instance/port arity mismatch
+    let e = parse_deck("* t\n.SUBCKT s p q\nR1 p q 1k\n.ENDS s\nX1 a s\n.END\n").unwrap_err();
+    assert!(e.msg.contains("2 ports, instance connects 1"), "{e}");
+
+    // every error renders with its source position
+    let e = parse_deck("* t\nR1 a b\n.END\n").unwrap_err();
+    assert!(format!("{e}").contains("line 2"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// property tests
+// ---------------------------------------------------------------------------
+
+/// Fuzzed (partially corrupted) decks must parse or reject cleanly — a
+/// structured error with a real source position — and never panic.
+#[test]
+fn prop_fuzzed_decks_parse_or_reject() {
+    check(
+        "fuzz-decks",
+        300,
+        |rng: &mut Rng, size: usize| fuzz_deck(rng, size),
+        |deck| match parse_deck(deck) {
+            Ok(_) => true,
+            Err(e) => e.line >= 1 && e.col >= 1 && !e.msg.is_empty(),
+        },
+    );
+}
+
+/// The independent dense reference must agree with the production engine
+/// on random MNA systems, including the zero-diagonal V-source / VCVS
+/// pivot pairs every generated circuit contains.
+#[test]
+fn prop_reference_agrees_on_random_mna() {
+    check(
+        "mna-reference",
+        40,
+        |rng: &mut Rng, size: usize| gen_mna_circuit(rng, size),
+        |c| match reference_vs_production(c) {
+            Ok(rel) => rel < REFERENCE_TOL,
+            Err(e) => {
+                eprintln!("reference solve failed: {e:#}");
+                false
+            }
+        },
+    );
+}
+
+/// The Krylov engine must match the direct solve on the same systems.
+#[test]
+fn prop_krylov_matches_direct_on_random_mna() {
+    check(
+        "mna-krylov",
+        30,
+        |rng: &mut Rng, size: usize| gen_mna_circuit(rng, size),
+        |c| {
+            let direct = c.dc_op().unwrap();
+            let mut kc = c.clone();
+            kc.set_solver(memx::spice::krylov::SolverStrategy::Iterative {
+                restart: 48,
+                tol: 1e-12,
+                max_iter: 600,
+            });
+            rel_diff(&direct, &kc.dc_op().unwrap()) < REFERENCE_TOL
+        },
+    );
+}
+
+/// `emit(parse(emit(x)))` is a fixpoint: one emit canonicalizes names,
+/// after which parse/emit round-trips byte-identically.
+#[test]
+fn prop_emit_parse_emit_fixpoint() {
+    check(
+        "emit-fixpoint",
+        40,
+        |rng: &mut Rng, size: usize| gen_mna_circuit(rng, size),
+        |c| {
+            let t1 = emit_cards(c);
+            match parse_deck(&emit_flat(c)) {
+                Ok(c2) => emit_cards(&c2) == t1,
+                Err(e) => {
+                    eprintln!("emitted deck failed to parse: {e}");
+                    false
+                }
+            }
+        },
+    );
+}
+
+/// Full conformance on generated circuits wrapped as decks: lossless
+/// capture, exact round-trip sim, independent reference, Krylov agreement.
+#[test]
+fn prop_generated_decks_pass_check_deck() {
+    check(
+        "deck-conformance",
+        25,
+        |rng: &mut Rng, size: usize| gen_mna_circuit(rng, size),
+        |c| {
+            let deck = Deck {
+                name: "gen".into(),
+                circuit: c.clone(),
+                inputs: Vec::new(),
+                outputs: Vec::new(),
+            };
+            match check_deck(&deck) {
+                Ok(rep) => rep.roundtrip_rel <= ROUNDTRIP_TOL,
+                Err(e) => {
+                    eprintln!("check_deck failed: {e:#}");
+                    false
+                }
+            }
+        },
+    );
+}
+
+/// A renamed element (multiplier `XMUL` → card `BXMUL`) converges to the
+/// fixpoint after one emit and keeps simulating identically.
+#[test]
+fn renamed_mult_reaches_fixpoint() {
+    let mut c = Circuit::new("ren");
+    let a = c.node("a");
+    let b = c.node("b");
+    let out = c.node("out");
+    c.vsource("V1", a, 0, 0.5);
+    c.vsource("V2", b, 0, -0.25);
+    c.resistor("R1", out, 0, 1e3);
+    c.mult("XMUL", out, a, b, 2.0);
+    let t1 = emit_cards(&c);
+    assert!(t1.contains("BXMUL "), "type letter not prepended: {t1}");
+    let c2 = parse_deck(&emit_flat(&c)).unwrap();
+    assert_eq!(emit_cards(&c2), t1, "fixpoint after one emit");
+    let rel = rel_diff(&c.dc_op().unwrap(), &c2.dc_op().unwrap());
+    assert!(rel < 1e-12, "renamed round trip diverged: {rel:.3e}");
+}
+
+// ---------------------------------------------------------------------------
+// sweep smoke (the CI `memx validate --quick` path in miniature)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweeps_run_clean() {
+    let worst = differential_sweep(0xD1FF, 30).unwrap();
+    assert!(worst < REFERENCE_TOL, "worst = {worst:.3e}");
+    let (ok, rejected) = fuzz_sweep(0xF0, 300);
+    assert!(ok > 0 && rejected > 0, "fuzzer must exercise both paths ({ok}/{rejected})");
+}
